@@ -1,0 +1,36 @@
+//! Data substrate: corpus construction/generation, batcher, probe
+//! generation, tokenizer round-trip.
+
+use nvfp4_faar::data::{batcher::Split, tasks::TaskKind, Batcher, Corpus, TaskSuite, Tokenizer};
+use nvfp4_faar::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("data");
+
+    b.bench("corpus_build_v512", || {
+        black_box(Corpus::by_name("synthwiki", 512).unwrap());
+    });
+
+    let c = Corpus::by_name("synthwiki", 512).unwrap();
+    b.bench_n("generate_16k_tokens", 16384, || {
+        black_box(c.generate(16384, 7));
+    });
+
+    let batcher = Batcher::new(&c, Split::Train, 8, 129, 42);
+    b.bench_n("batch_8x129", 8 * 129, || {
+        black_box(batcher.batch_at(3));
+    });
+
+    b.bench("tasks_generate_100_arc_c", || {
+        black_box(TaskSuite::generate(TaskKind::ArcChallenge, &c, 100, 16, 1));
+    });
+
+    let tok = Tokenizer::new(512);
+    let toks: Vec<i32> = (0..512).collect();
+    b.bench_n("tokenizer_roundtrip_512", 512, || {
+        let text = tok.decode(&toks);
+        black_box(tok.encode(&text));
+    });
+
+    b.finish();
+}

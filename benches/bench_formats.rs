@@ -1,0 +1,82 @@
+//! Codec throughput: E4M3 / E2M1 / NVFP4 prepare + pack (L3 hot paths of
+//! the quantization pipeline). Results land in results/bench/formats.json
+//! for the EXPERIMENTS.md §Perf log.
+
+use nvfp4_faar::formats::{e2m1, e4m3, nvfp4};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::rng::Rng;
+
+fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 0.0, 0.05);
+    t
+}
+
+fn main() {
+    let mut b = Bench::new("formats");
+    let n = 1 << 20;
+
+    let xs: Vec<f32> = {
+        let mut rng = Rng::new(1);
+        (0..n).map(|_| rng.normal_f32(0.0, 50.0)).collect()
+    };
+    b.bench_n("e4m3_encode_1M", n as u64, || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(e4m3::encode(x) as u32);
+        }
+        black_box(acc);
+    });
+
+    let codes: Vec<u8> = (0..n).map(|i| (i % 256) as u8).collect();
+    b.bench_n("e4m3_decode_1M", n as u64, || {
+        let mut acc = 0.0f32;
+        for &c in &codes {
+            let v = e4m3::decode(c);
+            if v.is_finite() {
+                acc += v;
+            }
+        }
+        black_box(acc);
+    });
+
+    b.bench_n("e2m1_encode_rtn_1M", n as u64, || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(e2m1::encode_rtn(x / 60.0) as u32);
+        }
+        black_box(acc);
+    });
+
+    let codes4: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+    b.bench_n("e2m1_pack_unpack_1M", n as u64, || {
+        let packed = e2m1::pack(&codes4);
+        black_box(e2m1::unpack(&packed, n));
+    });
+
+    // weight-tensor level (tiny wq stack: 4 x 128 x 128)
+    let w = rand_t(&[4, 128, 128], 2);
+    let numel = w.numel() as u64;
+    b.bench_n("prepare_4x128x128", numel, || {
+        black_box(nvfp4::prepare(&w));
+    });
+
+    let p = nvfp4::prepare(&w);
+    b.bench_n("rtn_quant_4x128x128", numel, || {
+        black_box(nvfp4::rtn_quant(&w, &p));
+    });
+
+    let v = p.v_init.map(|x| if x >= 0.5 { 1.0 } else { 0.0 });
+    b.bench_n("pack_4x128x128", numel, || {
+        black_box(nvfp4::PackedTensor::pack(&w, &p, &v));
+    });
+
+    let packed = nvfp4::PackedTensor::pack(&w, &p, &v);
+    b.bench_n("unpack_4x128x128", numel, || {
+        black_box(packed.unpack());
+    });
+
+    b.finish();
+}

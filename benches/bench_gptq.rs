@@ -1,0 +1,61 @@
+//! GPTQ substrate: Hessian accumulation, Cholesky/inverse, and the full
+//! column solve at the layer shapes the tiny/small presets use.
+
+use nvfp4_faar::formats::nvfp4;
+use nvfp4_faar::gptq::{cholesky, gptq_quantize, spd_inverse, GptqOptions, Hessian};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::rng::Rng;
+
+fn rand_t(shape: &[usize], seed: u64, std: f32) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 0.0, std);
+    t
+}
+
+fn main() {
+    let mut b = Bench::new("gptq");
+
+    for k in [128usize, 352] {
+        let x = rand_t(&[512, k], 1, 1.0);
+        b.bench_n(&format!("hessian_update_512x{k}"), (512 * k) as u64, || {
+            let mut h = Hessian::new(k);
+            h.update(&x).unwrap();
+            black_box(h.n_rows);
+        });
+
+        let mut h = Hessian::new(k);
+        h.update(&x).unwrap();
+        let hd = h.damped(0.01);
+        b.bench(&format!("cholesky_{k}"), || {
+            black_box(cholesky(&hd, k).unwrap());
+        });
+        b.bench(&format!("spd_inverse_{k}"), || {
+            black_box(spd_inverse(&hd, k).unwrap());
+        });
+
+        let n = if k == 128 { 128 } else { 128 };
+        let w = rand_t(&[k, n], 2, 0.05);
+        let p = nvfp4::prepare(&w);
+        b.bench_n(&format!("gptq_solve_{k}x{n}"), (k * n) as u64, || {
+            black_box(
+                gptq_quantize(&w, &h, &p.scale, &p.s_global, GptqOptions::default()).unwrap(),
+            );
+        });
+        b.bench_n(&format!("mr_gptq_solve_{k}x{n}"), (k * n) as u64, || {
+            black_box(
+                gptq_quantize(
+                    &w,
+                    &h,
+                    &p.scale,
+                    &p.s_global,
+                    GptqOptions { mr_scales: true, ..Default::default() },
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,56 @@
+//! End-to-end pipeline benches on the nano preset: wall-clock of each
+//! quantization method (the paper's "4 GPU hours" cost claim, scaled),
+//! plus serve-path generation latency. Needs `make artifacts`.
+
+use std::path::Path;
+
+use nvfp4_faar::config::PipelineConfig;
+use nvfp4_faar::pipeline::{Method, Workbench};
+use nvfp4_faar::serve::Generator;
+use nvfp4_faar::util::bench::{black_box, Bench};
+
+fn main() {
+    if !Path::new("artifacts/nano/manifest.json").exists() {
+        eprintln!("skipping bench_pipeline: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = PipelineConfig::default();
+    cfg.model = "nano".into();
+    cfg.pretrain_steps = 200;
+    cfg.stage1_steps = 30;
+    cfg.stage2_steps = 20;
+    cfg.eval_batches = 2;
+
+    let mut b = Bench::new("pipeline");
+    b.samples = 3;
+    b.target_time = 0.0; // one run per sample: these are seconds-long
+
+    let wb = Workbench::open(cfg).unwrap();
+
+    for method in [
+        Method::Rtn,
+        Method::FourSix,
+        Method::StrongBaseline,
+        Method::Gptq,
+        Method::MrGptq,
+        Method::Faar,
+        Method::Faar2fa,
+    ] {
+        b.bench(&format!("quantize_{}", method.name()), || {
+            black_box(wb.quantize(method).unwrap());
+        });
+    }
+
+    // eval + serve paths
+    let outcome = wb.quantize(Method::Rtn).unwrap();
+    b.bench("eval_ppl_2_batches", || {
+        black_box(wb.ppl(&outcome, "wiki").unwrap());
+    });
+
+    let gen = Generator::new(&wb.rt, outcome.params.clone());
+    b.bench_n("generate_16_tokens", 16, || {
+        black_box(gen.generate(&[1, 2, 3, 4], 16).unwrap());
+    });
+
+    b.finish();
+}

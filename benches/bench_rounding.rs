@@ -1,0 +1,38 @@
+//! Rounding + scaling strategy costs (Table 1 / strong-baseline machinery):
+//! RTN vs stochastic decisions, 4/6 and search scale selection.
+
+use nvfp4_faar::config::ScaleMethod;
+use nvfp4_faar::formats::nvfp4;
+use nvfp4_faar::quant::rounding::RoundingScheme;
+use nvfp4_faar::quant::{round_with, scaling};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("rounding");
+    let mut rng = Rng::new(3);
+    let mut w = Tensor::zeros(&[4, 128, 352]); // tiny w_gate stack
+    rng.fill_normal(&mut w.data, 0.0, 0.05);
+    let numel = w.numel() as u64;
+
+    for method in [ScaleMethod::Standard, ScaleMethod::FourSix, ScaleMethod::Search] {
+        b.bench_n(&format!("scales_{}", method.name()), numel, || {
+            black_box(scaling::scales_for(&w, method));
+        });
+    }
+
+    let p = nvfp4::prepare(&w);
+    for scheme in [
+        RoundingScheme::Rtn,
+        RoundingScheme::Lower,
+        RoundingScheme::Upper,
+        RoundingScheme::Stochastic(1),
+    ] {
+        b.bench_n(&format!("round_{}", scheme.name()), numel, || {
+            black_box(round_with(&w, &p, scheme));
+        });
+    }
+
+    b.finish();
+}

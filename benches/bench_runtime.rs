@@ -1,0 +1,91 @@
+//! Runtime / artifact benches: compile cost, forward latency + token
+//! throughput, stage-1 step latency, and the Pallas-vs-jnp kernel cost
+//! through the real PJRT path. Needs `make artifacts` (nano).
+
+use std::path::Path;
+
+use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::rng::Rng;
+
+fn main() {
+    if !Path::new("artifacts/nano/manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+    let rt = Runtime::load(Path::new("artifacts"), "nano").unwrap();
+    let cfg = rt.config().clone();
+    let params = ParamStore::init(&rt.manifest, 42);
+
+    b.bench("compile_lm_fwd_cold", || {
+        // cold compile: fresh runtime each iteration (compile cache is
+        // per-Runtime)
+        let rt2 = Runtime::load(Path::new("artifacts"), "nano").unwrap();
+        black_box(rt2.executable("lm_fwd").unwrap());
+    });
+
+    // eval forward: latency + throughput
+    let mut rng = Rng::new(1);
+    let toks: Vec<i32> =
+        (0..cfg.eval_batch * (cfg.seq_len + 1)).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let tokens = Value::I32(toks, vec![cfg.eval_batch, cfg.seq_len + 1]);
+    let mut args = params.values();
+    args.push(tokens);
+    rt.warmup(&["lm_fwd", "lm_fwd_aq"]).unwrap();
+    let n_tok = (cfg.eval_batch * cfg.seq_len) as u64;
+    b.bench_n("lm_fwd_exec", n_tok, || {
+        black_box(rt.exec("lm_fwd", &args).unwrap());
+    });
+    b.bench_n("lm_fwd_aq_exec", n_tok, || {
+        black_box(rt.exec("lm_fwd_aq", &args).unwrap());
+    });
+
+    // stage-1 step (the FAAR hot loop)
+    let d = cfg.d_model;
+    let name = format!("stage1_step_{d}x{d}");
+    let mut w = Tensor::zeros(&[d, d]);
+    rng.fill_normal(&mut w.data, 0.0, 0.05);
+    let p = nvfp4_faar::formats::nvfp4::prepare(&w);
+    let mut x = Tensor::zeros(&[cfg.stage1_rows, d]);
+    rng.fill_normal(&mut x.data, 0.0, 1.0);
+    let s1_args = vec![
+        Value::F32(x),
+        Value::F32(w),
+        Value::F32(p.lower.clone()),
+        Value::F32(p.upper.clone()),
+        Value::F32(p.scale.clone()),
+        Value::F32(p.v_init.clone()),
+        Value::F32(Tensor::zeros(&[d, d])),
+        Value::F32(Tensor::zeros(&[d, d])),
+        Value::scalar_f32(1.0),
+        Value::scalar_f32(10.0),
+        Value::scalar_f32(1e-2),
+        Value::scalar_f32(1e-2),
+    ];
+    rt.warmup(&[&name]).unwrap();
+    b.bench(&format!("{name}_exec"), || {
+        black_box(rt.exec(&name, &s1_args).unwrap());
+    });
+
+    // kernel: pallas interpret vs jnp lowering, same math
+    let kargs = vec![
+        s1_args[1].clone(),
+        Value::F32(p.lower),
+        Value::F32(p.upper),
+        Value::F32(p.scale),
+        Value::F32(p.v_init),
+        Value::scalar_f32(10.0),
+    ];
+    rt.warmup(&["kernel_softquant", "kernel_softquant_jnp"]).unwrap();
+    b.bench(&format!("kernel_softquant_pallas_{d}x{d}"), || {
+        black_box(rt.exec("kernel_softquant", &kargs).unwrap());
+    });
+    b.bench(&format!("kernel_softquant_jnp_{d}x{d}"), || {
+        black_box(rt.exec("kernel_softquant_jnp", &kargs).unwrap());
+    });
+
+    b.finish();
+}

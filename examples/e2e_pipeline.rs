@@ -1,0 +1,112 @@
+//! End-to-end validation driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!
+//!   1. pretrain a transformer LM from scratch on the synthetic corpus
+//!      mixture, through the AOT `pretrain_step` XLA graph (loss curve
+//!      logged to results/e2e/loss_curve.json),
+//!   2. capture calibration activations from the frozen checkpoint,
+//!   3. quantize with RTN (baseline) and FAAR+2FA (full method —
+//!      stage-1 Pallas soft-quant jobs + stage-2 global alignment),
+//!   4. harden + pack true `.nvfp4` payloads,
+//!   5. evaluate PPL / hidden-cosine on both corpora + all four zero-shot
+//!      probes, and write the headline comparison to results/e2e/.
+//!
+//!     cargo run --release --example e2e_pipeline [-- --model tiny]
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use nvfp4_faar::config::PipelineConfig;
+use nvfp4_faar::data::tasks::TaskKind;
+use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
+use nvfp4_faar::util::{cli::Args, json::Json, stats};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let mut cfg = PipelineConfig::default();
+    cfg.model = "tiny".into();
+    cfg.pretrain_steps = 600;
+    cfg.apply_args(&args)?;
+    let out_dir = PathBuf::from(&cfg.out_dir).join("e2e");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let t0 = std::time::Instant::now();
+    println!("=== E2E: model={} ===", cfg.model);
+    println!("[1/5] pretrain (or load cached checkpoint) + calibration capture");
+    let wb = Workbench::open(cfg)?;
+    println!(
+        "      checkpoint: {} params",
+        wb.fp.total_params()
+    );
+
+    let mut records = vec![];
+    let mut faar_packed_mib = 0.0;
+    for method in [Method::Bf16, Method::Rtn, Method::Faar2fa] {
+        println!("[2/5] quantize: {}", method.name());
+        let outcome = wb.quantize(method)?;
+        println!("      done in {:.1}s", outcome.wall_s);
+
+        if let Some(state) = &outcome.faar {
+            println!("[3/5] harden + pack .nvfp4 payloads");
+            let dir = out_dir.join("packed_faar2fa");
+            let bytes = pack_model(&wb.rt, &wb.fp, state, &dir)?;
+            faar_packed_mib = bytes as f64 / (1 << 20) as f64;
+            let fp_mib = (wb.fp.total_params() * 4) as f64 / (1 << 20) as f64;
+            println!(
+                "      packed {:.2} MiB vs fp32 {:.2} MiB ({:.1}x compression)",
+                faar_packed_mib,
+                fp_mib,
+                fp_mib / faar_packed_mib
+            );
+        }
+
+        println!("[4/5] evaluate: PPL + cosine on both corpora, 4 probe suites");
+        let wiki = wb.lm_metrics(&outcome, "wiki")?;
+        let c4 = wb.lm_metrics(&outcome, "c4")?;
+        let mut accs = vec![];
+        for k in TaskKind::all() {
+            accs.push(wb.task_accuracy(&outcome, k, 120)?);
+        }
+        let avg = stats::mean(&accs);
+        println!(
+            "      {:<10} wiki ppl {:.3} cos {:.2}% | c4 ppl {:.3} cos {:.2}% | tasks avg {:.1}%",
+            method.name(),
+            wiki.ppl,
+            wiki.cosine_pct,
+            c4.ppl,
+            c4.cosine_pct,
+            avg
+        );
+        records.push(Json::obj(vec![
+            ("method", Json::str(method.name())),
+            ("wiki_ppl", Json::Num(wiki.ppl)),
+            ("wiki_cos_pct", Json::Num(wiki.cosine_pct)),
+            ("c4_ppl", Json::Num(c4.ppl)),
+            ("c4_cos_pct", Json::Num(c4.cosine_pct)),
+            (
+                "task_acc_pct",
+                Json::Arr(accs.iter().map(|&a| Json::Num(a)).collect()),
+            ),
+            ("task_avg_pct", Json::Num(avg)),
+            ("quantize_wall_s", Json::Num(outcome.wall_s)),
+        ]));
+    }
+
+    println!("[5/5] write results/e2e/summary.json");
+    let doc = Json::obj(vec![
+        ("model", Json::str(wb.cfg.model.as_str())),
+        ("config", wb.cfg.to_json()),
+        ("packed_mib", Json::Num(faar_packed_mib)),
+        ("total_wall_s", Json::Num(t0.elapsed().as_secs_f64())),
+        ("methods", Json::Arr(records)),
+    ]);
+    std::fs::write(out_dir.join("summary.json"), doc.to_string_pretty())?;
+    println!(
+        "=== E2E complete in {:.0}s → {}/summary.json ===",
+        t0.elapsed().as_secs_f64(),
+        out_dir.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Artifact latency probe (perf tooling): measures per-exec latency of
+//! the stage-1/stage-2/eval graphs for a preset under the current machine
+//! load. Used to size table-run schedules (EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::util::rng::Rng;
+fn main() {
+    let rt = Runtime::load(Path::new("artifacts"), "tiny").unwrap();
+    let cfg = rt.config().clone();
+    let mut rng = Rng::new(1);
+    for (k, n) in rt.manifest.qshapes() {
+        let name = format!("stage1_step_{k}x{n}");
+        let mut x = Tensor::zeros(&[cfg.stage1_rows, k]); rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let mut w = Tensor::zeros(&[k, n]); rng.fill_normal(&mut w.data, 0.0, 0.05);
+        let p = nvfp4_faar::formats::nvfp4::prepare(&w);
+        let args = vec![Value::F32(x), Value::F32(w), Value::F32(p.lower), Value::F32(p.upper),
+            Value::F32(p.scale), Value::F32(p.v_init), Value::F32(Tensor::zeros(&[k,n])), Value::F32(Tensor::zeros(&[k,n])),
+            Value::scalar_f32(1.0), Value::scalar_f32(10.0), Value::scalar_f32(1e-2), Value::scalar_f32(1e-2)];
+        rt.exec(&name, &args).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..20 { rt.exec(&name, &args).unwrap(); }
+        println!("{name}: {:.1} ms/exec", t0.elapsed().as_secs_f64()*50.0);
+    }
+    // stage2
+    let spec = rt.manifest.artifact("stage2_step").unwrap().clone();
+    let mut args = vec![];
+    for ispec in &spec.inputs {
+        match ispec.dtype {
+            nvfp4_faar::runtime::DType::F32 => {
+                let mut t = Tensor::zeros(&ispec.shape);
+                if ispec.name.starts_with("upper") || ispec.name.starts_with("scale") { t.data.fill(0.01); }
+                if ispec.name.starts_with("v.") { t.data.fill(0.5); }
+                args.push(Value::F32(t));
+            }
+            nvfp4_faar::runtime::DType::I32 => {
+                let numel: usize = ispec.shape.iter().product();
+                args.push(Value::I32(vec![1; numel], ispec.shape.clone()));
+            }
+        }
+    }
+    rt.exec("stage2_step", &args).unwrap();
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 { rt.exec("stage2_step", &args).unwrap(); }
+    println!("stage2_step: {:.1} ms/exec", t0.elapsed().as_secs_f64()*200.0);
+    // eval fwd
+    let params = nvfp4_faar::train::ParamStore::init(&rt.manifest, 1);
+    let mut a2 = params.values();
+    a2.push(Value::I32(vec![1; cfg.eval_batch*(cfg.seq_len+1)], vec![cfg.eval_batch, cfg.seq_len+1]));
+    rt.exec("lm_fwd_aq", &a2).unwrap();
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 { rt.exec("lm_fwd_aq", &a2).unwrap(); }
+    println!("lm_fwd_aq: {:.1} ms/exec", t0.elapsed().as_secs_f64()*100.0);
+}

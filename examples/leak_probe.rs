@@ -1,0 +1,24 @@
+//! Memory-leak regression probe: executes one artifact thousands of times
+//! and reports RSS growth per exec. Guards the execute_b fix in
+//! runtime::Value::to_buffer (the xla crate's literal-execute path leaks
+//! every input buffer). Expected output: +0.00 KB/exec.
+
+use std::path::Path;
+use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::tensor::Tensor;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() { if l.starts_with("VmRSS") {
+        return l.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0; } }
+    0.0
+}
+fn main() {
+    let rt = Runtime::load(Path::new("artifacts"), "nano").unwrap();
+    let w = Value::F32(Tensor::full(&[2, 64, 64], 0.01));
+    rt.exec("prepare_64x64", &[w.clone()]).unwrap();
+    let base = rss_mb();
+    for i in 0..5000 {
+        rt.exec("prepare_64x64", &[w.clone()]).unwrap();
+        if i % 1000 == 999 { println!("exec {}: RSS {:.1} MB (+{:.2} KB/exec)", i+1, rss_mb(), (rss_mb()-base)*1024.0/(i as f64+1.0)); }
+    }
+}

@@ -1,0 +1,36 @@
+//! Quickstart: quantize a model to NVFP4 with RTN vs FAAR and compare.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the `nano` preset with a short schedule so it finishes in well
+//! under a minute; the first run pretrains a checkpoint and caches it
+//! under results/models/.
+
+use anyhow::Result;
+
+use nvfp4_faar::config::PipelineConfig;
+use nvfp4_faar::pipeline::{Method, Workbench};
+
+fn main() -> Result<()> {
+    let mut cfg = PipelineConfig::default();
+    cfg.model = "nano".into();
+    // the rounding problem only bites once the checkpoint is sharp
+    // (see EXPERIMENTS.md): train nano to ~convergence (≈1 min once,
+    // then cached), short-ish FAAR schedule
+    cfg.pretrain_steps = 4000;
+    cfg.stage1_steps = 100;
+    cfg.stage2_steps = 300;
+
+    // Workbench = runtime + pretrained checkpoint + calibration capture
+    let wb = Workbench::open(cfg)?;
+
+    println!("\n{:<16}{:>12}{:>14}", "method", "PPL (wiki)", "cosine (%)");
+    for method in [Method::Bf16, Method::Rtn, Method::Faar2fa] {
+        let outcome = wb.quantize(method)?;
+        let lm = wb.lm_metrics(&outcome, "wiki")?;
+        println!("{:<16}{:>12.3}{:>14.2}", method.name(), lm.ppl, lm.cosine_pct);
+    }
+    println!("\nFAAR+2FA should sit between BF16 and RTN — the learnable");
+    println!("rounding recovers part of the NVFP4 quantization loss.");
+    Ok(())
+}

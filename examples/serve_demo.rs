@@ -1,0 +1,85 @@
+//! Serving demo: quantize a model, start the TCP inference server, and
+//! drive it with a batch of client requests, reporting latency stats.
+//!
+//!     cargo run --release --example serve_demo
+//!
+//! The PJRT client is not Send, so the server owns the main thread and
+//! the demo client runs on a worker thread — exactly the deployment shape
+//! of the real binary (`faar serve`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::Result;
+
+use nvfp4_faar::config::PipelineConfig;
+use nvfp4_faar::data::Tokenizer;
+use nvfp4_faar::pipeline::{Method, Workbench};
+use nvfp4_faar::serve::Generator;
+use nvfp4_faar::util::{json::Json, stats};
+
+const N_REQUESTS: usize = 8;
+
+fn main() -> Result<()> {
+    let mut cfg = PipelineConfig::default();
+    cfg.model = "nano".into();
+    cfg.pretrain_steps = 300;
+    cfg.stage1_steps = 40;
+    cfg.stage2_steps = 0; // FAAR stage-1 only: fast demo
+
+    let wb = Workbench::open(cfg)?;
+    let outcome = wb.quantize(Method::Faar)?;
+    let generator = Generator::new(&wb.rt, outcome.params.clone());
+    let vocab = wb.rt.config().vocab;
+
+    let addr = "127.0.0.1:7746";
+    // client thread: waits for the listener, fires N requests, collects latency
+    let client = std::thread::spawn(move || -> Result<Vec<f64>> {
+        let tok = Tokenizer::new(vocab);
+        let mut latencies = vec![];
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+            }
+        };
+        let mut reader = BufReader::new(stream.try_clone()?);
+        for i in 0..N_REQUESTS {
+            let prompt = tok.decode(&[(i as i32 * 13) % vocab as i32, 5, 9, 2]);
+            let req = Json::obj(vec![
+                ("prompt", Json::str(prompt.as_str())),
+                ("max_tokens", Json::num(12.0)),
+            ]);
+            stream.write_all(req.to_string().as_bytes())?;
+            stream.write_all(b"\n")?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let resp = Json::parse(&line)?;
+            if let Some(err) = resp.get("error") {
+                anyhow::bail!("server error: {err:?}");
+            }
+            let ms = resp.req("latency_ms")?.as_f64()?;
+            println!(
+                "  req {i}: {:>6.1} ms   \"{}\" → \"{}\"",
+                ms,
+                prompt,
+                resp.req("text")?.as_str()?
+            );
+            latencies.push(ms);
+        }
+        Ok(latencies)
+    });
+
+    // server owns the main thread; exits after one connection closes
+    generator.serve(addr, Some(1))?;
+
+    let latencies = client.join().expect("client thread panicked")?;
+    println!(
+        "\nserved {} requests: mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms per 12-token completion",
+        latencies.len(),
+        stats::mean(&latencies),
+        stats::percentile(&latencies, 50.0),
+        stats::percentile(&latencies, 95.0),
+    );
+    Ok(())
+}

@@ -1,0 +1,254 @@
+"""AOT export: lower every L2 graph ONCE to HLO *text* + manifest.json.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --config tiny --out ../artifacts
+
+The manifest records, for every artifact, the exact positional input order
+and output order (name/shape/dtype) so the rust runtime can marshal
+literals without guessing. It also records the weight layout + init spec
+so rust can initialize the model deterministically.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, steps
+from .configs import CONFIGS, ModelConfig, weight_specs, QLINEARS, CAPTURE_NAMES, qlinear_shapes
+from .kernels import ref, nvfp4
+
+F32, I32 = "f32", "i32"
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == F32 else jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.out, exist_ok=True)
+        self.manifest = {
+            "config": cfg.to_dict(),
+            "weights": [
+                {"name": n, "shape": list(s), "init": init, "quantized": q, "wd": wd}
+                for n, s, init, q, wd in weight_specs(cfg)
+            ],
+            "qlinears": [
+                {"name": n, "capture": c,
+                 "k": getattr(cfg, ka), "n": getattr(cfg, na)}
+                for n, c, ka, na in QLINEARS
+            ],
+            "captures": CAPTURE_NAMES,
+            "artifacts": {},
+        }
+
+    def emit(self, name, fn, inputs, output_names):
+        """Lower fn(*inputs) and record the artifact. inputs is a list of
+        (name, shape, dtype)."""
+        in_specs = [spec(s, d) for _, s, d in inputs]
+        # keep_unused: the rust runtime always passes every manifest input;
+        # without it jax prunes unused params (e.g. lm_head in lm_capture)
+        # and PJRT rejects the arg count.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        assert len(output_names) == len(out_avals), \
+            f"{name}: {len(output_names)} names vs {len(out_avals)} outputs"
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+            "outputs": [
+                {"name": n, "shape": list(a.shape),
+                 "dtype": I32 if jnp.issubdtype(a.dtype, jnp.integer) else F32}
+                for n, a in zip(output_names, out_avals)
+            ],
+        }
+        print(f"  [{self.cfg.name}] {name}: {len(text)//1024} KiB, "
+              f"{len(inputs)} in / {len(out_avals)} out")
+
+    def finish(self):
+        path = os.path.join(self.out, "manifest.json")
+        blob = json.dumps(self.manifest, indent=1)
+        self.manifest["sha256"] = hashlib.sha256(blob.encode()).hexdigest()
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  [{self.cfg.name}] manifest.json written")
+
+
+def weight_inputs(cfg, prefix=""):
+    return [(f"{prefix}{n}", list(s), F32) for n, s, *_ in weight_specs(cfg)]
+
+
+def export_config(cfg: ModelConfig, out_dir: str):
+    ex = Exporter(cfg, out_dir)
+    nW = len(weight_specs(cfg))
+    names = [s[0] for s in weight_specs(cfg)]
+    B, T = cfg.train_batch, cfg.seq_len
+    BE, B2 = cfg.eval_batch, cfg.stage2_batch
+    d = cfg.d_model
+
+    # ---- pretraining step -------------------------------------------------
+    def pretrain_fn(*flat):
+        w, m, v = flat[:nW], flat[nW:2 * nW], flat[2 * nW:3 * nW]
+        tokens, step, lr = flat[3 * nW], flat[3 * nW + 1], flat[3 * nW + 2]
+        return steps.pretrain_step(cfg, w, m, v, tokens, step, lr)
+
+    ex.emit(
+        "pretrain_step", pretrain_fn,
+        weight_inputs(cfg)
+        + [(f"m.{n}", list(s), F32) for n, s, *_ in weight_specs(cfg)]
+        + [(f"v.{n}", list(s), F32) for n, s, *_ in weight_specs(cfg)]
+        + [("tokens", [B, T + 1], I32), ("step", [], F32), ("lr", [], F32)],
+        [f"w.{n}" for n in names] + [f"m.{n}" for n in names]
+        + [f"v.{n}" for n in names] + ["loss"],
+    )
+
+    # ---- eval forwards ----------------------------------------------------
+    def fwd_fn(act_quant):
+        def f(*flat):
+            params = dict(zip(names, flat[:nW]))
+            tokens = flat[nW]
+            logits, hid, _ = model.fwd(cfg, params, tokens[:, :-1],
+                                       act_quant=act_quant)
+            nll = model.nll_from_logits(logits, tokens[:, 1:])
+            return nll, hid
+        return f
+
+    eval_inputs = weight_inputs(cfg) + [("tokens", [BE, T + 1], I32)]
+    ex.emit("lm_fwd", fwd_fn(False), eval_inputs, ["nll", "last_hidden"])
+    ex.emit("lm_fwd_aq", fwd_fn(True), eval_inputs, ["nll", "last_hidden"])
+
+    # ---- serve: last-position logits (W4A4 path) --------------------------
+    def logits_pos_fn(*flat):
+        params = dict(zip(names, flat[:nW]))
+        tokens, pos = flat[nW], flat[nW + 1]
+        logits, _, _ = model.fwd(cfg, params, tokens, act_quant=True)
+        return (jnp.take(logits[0], pos, axis=0),)
+
+    ex.emit("lm_logits_pos_aq", logits_pos_fn,
+            weight_inputs(cfg) + [("tokens", [1, T], I32), ("pos", [], I32)],
+            ["logits"])
+
+    # ---- calibration capture ----------------------------------------------
+    def capture_fn(*flat):
+        params = dict(zip(names, flat[:nW]))
+        tokens = flat[nW]
+        _, _, caps = model.fwd(cfg, params, tokens, capture=True)
+        return tuple(caps[c] for c in CAPTURE_NAMES)
+
+    ex.emit("lm_capture", capture_fn,
+            weight_inputs(cfg) + [("tokens", [BE, T], I32)],
+            list(CAPTURE_NAMES))
+
+    # ---- quant prepare + stage-1, one per distinct linear shape -----------
+    L = cfg.n_layers
+    R = cfg.stage1_rows
+    for (k, n) in qlinear_shapes(cfg):
+        ex.emit(f"prepare_{k}x{n}",
+                lambda w: ref.quant_prepare(w),
+                [("w", [L, k, n], F32)],
+                ["lower", "upper", "scale", "v_init"])
+
+        def s1_fn(x, w, lo, up, sc, v, m, a, step, beta, lr, lam):
+            return steps.stage1_step(x, w, lo, up, sc, v, m, a, step, beta,
+                                     lr, lam, act_quant=True, use_pallas=True)
+
+        ex.emit(f"stage1_step_{k}x{n}", s1_fn,
+                [("x", [R, k], F32), ("w", [k, n], F32),
+                 ("lower", [k, n], F32), ("upper", [k, n], F32),
+                 ("scale", [k, n], F32), ("v", [k, n], F32),
+                 ("m", [k, n], F32), ("a", [k, n], F32),
+                 ("step", [], F32), ("beta", [], F32),
+                 ("lr", [], F32), ("lam_round", [], F32)],
+                ["v", "m", "a", "loss"])
+
+    # ---- stage-2 global alignment ------------------------------------------
+    qnames = model.QNAMES
+    qshapes = {q["name"]: (q["k"], q["n"]) for q in ex.manifest["qlinears"]}
+
+    def stage2_fn(*flat):
+        w = flat[:nW]
+        i = nW
+        qstate = {}
+        for qn in qnames:
+            k, n = qshapes[qn]
+            qstate[qn] = tuple(flat[i:i + 6])
+            i += 6
+        tokens, step, beta, lr, lam_kl, lam_round, tau = flat[i:i + 7]
+        return steps.stage2_step(cfg, w, qstate, tokens, step, beta, lr,
+                                 lam_kl, lam_round, tau, act_quant=True)
+
+    s2_inputs = weight_inputs(cfg)
+    for qn in qnames:
+        k, n = qshapes[qn]
+        for part in ["lower", "upper", "scale", "v", "m", "a"]:
+            s2_inputs.append((f"{part}.{qn}", [L, k, n], F32))
+    s2_inputs += [("tokens", [B2, T], I32), ("step", [], F32),
+                  ("beta", [], F32), ("lr", [], F32), ("lam_kl", [], F32),
+                  ("lam_round", [], F32), ("tau", [], F32)]
+    ex.emit("stage2_step", stage2_fn, s2_inputs,
+            [f"v.{qn}" for qn in qnames] + [f"m.{qn}" for qn in qnames]
+            + [f"a.{qn}" for qn in qnames] + ["loss", "kl", "mse"])
+
+    # ---- kernel parity/bench artifacts (pallas vs jnp, same math) ---------
+    def kernel_sq(pallas):
+        def f(w, lo, up, sc, v, beta):
+            return (nvfp4.softquant(jnp.sign(w), lo, up, sc, v, beta,
+                                    use_pallas=pallas),)
+        return f
+
+    kin = [("w", [d, d], F32), ("lower", [d, d], F32), ("upper", [d, d], F32),
+           ("scale", [d, d], F32), ("v", [d, d], F32), ("beta", [], F32)]
+    ex.emit("kernel_softquant", kernel_sq(True), kin, ["wq"])
+    ex.emit("kernel_softquant_jnp", kernel_sq(False), kin, ["wq"])
+
+    def kernel_rtn(pallas):
+        def f(w):
+            sc, _ = ref.nvfp4_weight_scales(w)
+            return (nvfp4.rtn(w, sc, use_pallas=pallas),)
+        return f
+
+    ex.emit("kernel_rtn", kernel_rtn(True), [("w", [d, d], F32)], ["wq"])
+    ex.emit("kernel_rtn_jnp", kernel_rtn(False), [("w", [d, d], F32)], ["wq"])
+
+    ex.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="all",
+                    help="preset name or 'all' (nano,tiny,small)")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    cfgs = ["nano", "tiny", "small"] if args.config == "all" else args.config.split(",")
+    for c in cfgs:
+        print(f"exporting config '{c}' -> {args.out}/{c}/")
+        export_config(CONFIGS[c], args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Model / pipeline configuration presets.
+
+Single source of truth for shapes shared between the build-time python
+layer (L1 kernels + L2 graphs) and the runtime rust layer (L3). The rust
+side never imports this module — everything it needs is serialized into
+``artifacts/<cfg>/manifest.json`` by ``aot.py``.
+
+Presets (see DESIGN.md §4):
+  nano  — unit/integration tests
+  tiny  — "Llama3-1B" stand-in for the paper's main tables
+  small — "Qwen3-1.7B" stand-in
+  med   — optional scale check
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    # NVFP4 block size along the contraction axis (the format fixes 16).
+    block: int = 16
+    # pipeline shapes (all graphs are shape-specialized at AOT time)
+    train_batch: int = 8
+    eval_batch: int = 8
+    stage1_rows: int = 512
+    stage2_batch: int = 8
+    # mlp hidden (SwiGLU): ~8/3 * d rounded up to a multiple of 32 so that
+    # NVFP4 16-element blocks tile it exactly.
+    mlp_hidden: int = 0
+
+    def __post_init__(self):
+        if self.mlp_hidden == 0:
+            object.__setattr__(self, "mlp_hidden", _round_up(self.d_model * 8 // 3, 32))
+        assert self.d_model % self.n_heads == 0
+        assert (self.d_model // self.n_heads) % 2 == 0, "rope needs even head_dim"
+        assert self.d_model % self.block == 0
+        assert self.mlp_hidden % self.block == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+CONFIGS = {
+    "nano": ModelConfig(
+        name="nano", vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=64,
+        train_batch=4, eval_batch=4, stage1_rows=128, stage2_batch=4,
+    ),
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=128, n_layers=4, n_heads=4, seq_len=128,
+    ),
+    "small": ModelConfig(
+        name="small", vocab=1024, d_model=192, n_layers=6, n_heads=6, seq_len=128,
+    ),
+    "med": ModelConfig(
+        name="med", vocab=4096, d_model=384, n_layers=8, n_heads=8, seq_len=256,
+    ),
+}
+
+
+# Canonical weight layout. Per-layer tensors are stacked on a leading L
+# axis so the whole forward is a single lax.scan and the artifact parameter
+# list stays short. `quantized` tensors are the NVFP4 targets; everything
+# else stays high-precision (standard PTQ practice, see DESIGN.md §4).
+#
+# init kinds: "normal:<std>", "normal_scaled:<std>" (std / sqrt(2 L)), "ones".
+def weight_specs(cfg: ModelConfig):
+    L, d, h, v = cfg.n_layers, cfg.d_model, cfg.mlp_hidden, cfg.vocab
+    return [
+        # (name, shape, init, quantized, weight_decay)
+        ("tok_emb",          (v, d),    "normal:0.02",        False, True),
+        ("layers.attn_norm", (L, d),    "ones",               False, False),
+        ("layers.wq",        (L, d, d), "normal:0.02",        True,  True),
+        ("layers.wk",        (L, d, d), "normal:0.02",        True,  True),
+        ("layers.wv",        (L, d, d), "normal:0.02",        True,  True),
+        ("layers.wo",        (L, d, d), "normal_scaled:0.02", True,  True),
+        ("layers.mlp_norm",  (L, d),    "ones",               False, False),
+        ("layers.w_gate",    (L, d, h), "normal:0.02",        True,  True),
+        ("layers.w_up",      (L, d, h), "normal:0.02",        True,  True),
+        ("layers.w_down",    (L, h, d), "normal_scaled:0.02", True,  True),
+        ("out_norm",         (d,),      "ones",               False, False),
+        ("lm_head",          (d, v),    "normal:0.02",        False, True),
+    ]
+
+
+WEIGHT_NAMES = [s[0] for s in weight_specs(CONFIGS["nano"])]
+
+# The 7 quantized linears, each mapped to the activation-capture tensor
+# that feeds it (4 distinct capture points per layer — see model.fwd).
+QLINEARS = [
+    # (weight name, capture name, in-dim attr, out-dim attr)
+    ("layers.wq",     "attn_in",    "d_model",    "d_model"),
+    ("layers.wk",     "attn_in",    "d_model",    "d_model"),
+    ("layers.wv",     "attn_in",    "d_model",    "d_model"),
+    ("layers.wo",     "attn_o_in",  "d_model",    "d_model"),
+    ("layers.w_gate", "mlp_in",     "d_model",    "mlp_hidden"),
+    ("layers.w_up",   "mlp_in",     "d_model",    "mlp_hidden"),
+    ("layers.w_down", "mlp_down_in","mlp_hidden", "d_model"),
+]
+
+CAPTURE_NAMES = ["attn_in", "attn_o_in", "mlp_in", "mlp_down_in"]
+
+
+def qlinear_shapes(cfg: ModelConfig):
+    """Distinct (in, out) shapes among quantized linears → one stage-1 /
+    prepare artifact per shape."""
+    shapes = []
+    for _, _, a_in, a_out in QLINEARS:
+        s = (getattr(cfg, a_in), getattr(cfg, a_out))
+        if s not in shapes:
+            shapes.append(s)
+    return shapes

@@ -1,0 +1,193 @@
+"""L1 Pallas kernels — the paper's compute hot-spot.
+
+Two kernels, both elementwise over weight tiles:
+
+  * ``softquant_pallas``  — FAAR continuous relaxation (paper eq. 2/3):
+      FindInterval is precomputed (lower/upper/scale tensors); the kernel
+      evaluates the temperature sigmoid and the format-aware interpolation.
+      Wrapped in ``jax.custom_vjp`` with an analytic backward kernel so the
+      stage-1/stage-2 graphs can differentiate through it.
+  * ``rtn_pallas``        — RTN fake-quant on the NVFP4 grid, including
+      the FindInterval where-chain (used by the baseline path and as the
+      rust-codec parity artifact).
+
+Hardware adaptation (DESIGN.md §3): the paper targets NVFP4 tensor cores
+on Blackwell. On a TPU-shaped target this work is VPU-elementwise ahead of
+an MXU matmul; we express the HBM↔VMEM schedule with a BlockSpec grid of
+(row_tile × lane_tile) blocks. ``interpret=True`` everywhere — real-TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute
+(see /opt/xla-example/README.md); the TPU cost model is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+# Default VMEM tile. 128 lanes matches the TPU lane width; 128 rows keeps
+# the block-16 scale groups (along K = rows) aligned within a tile.
+TILE = 128
+
+
+def _pick_tile(n: int, target: int = TILE) -> int:
+    """Largest divisor of n that is <= target (shapes here are multiples
+    of 16, so this is always >= 16 for our configs)."""
+    if n <= target:
+        return n
+    for t in range(target, 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _as2d(x):
+    """Elementwise kernels: collapse leading axes onto rows."""
+    return x.reshape(-1, x.shape[-1])
+
+
+def _tiled_specs(shape, n_tensors):
+    m, n = shape
+    bm, bn = _pick_tile(m), _pick_tile(n)
+    grid = (m // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    # beta rides along as a (1,1) block mapped to the origin for every tile.
+    beta_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return grid, [spec] * n_tensors, beta_spec, spec
+
+
+# ---------------------------------------------------------------------------
+# FAAR soft-quant forward + backward kernels
+
+
+def _softquant_kernel(w_sign_ref, lo_ref, up_ref, scale_ref, v_ref, beta_ref, o_ref):
+    beta = beta_ref[0, 0]
+    h = jax.nn.sigmoid(beta * (v_ref[...] - 0.5))
+    o_ref[...] = w_sign_ref[...] * (lo_ref[...] + h * (up_ref[...] - lo_ref[...])) * scale_ref[...]
+
+
+def _softquant_bwd_kernel(w_sign_ref, lo_ref, up_ref, scale_ref, v_ref, beta_ref, g_ref, o_ref):
+    beta = beta_ref[0, 0]
+    h = jax.nn.sigmoid(beta * (v_ref[...] - 0.5))
+    width = up_ref[...] - lo_ref[...]
+    o_ref[...] = g_ref[...] * w_sign_ref[...] * scale_ref[...] * width * beta * h * (1.0 - h)
+
+
+def _softquant_fwd_call(w_sign, lo, up, scale, v, beta):
+    shape2d = _as2d(w_sign).shape
+    grid, specs, beta_spec, out_spec = _tiled_specs(shape2d, 5)
+    out = pl.pallas_call(
+        _softquant_kernel,
+        grid=grid,
+        in_specs=specs + [beta_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        interpret=INTERPRET,
+    )(_as2d(w_sign), _as2d(lo), _as2d(up), _as2d(scale), _as2d(v),
+      jnp.reshape(beta, (1, 1)).astype(jnp.float32))
+    return out.reshape(w_sign.shape)
+
+
+def _softquant_bwd_call(w_sign, lo, up, scale, v, beta, g):
+    shape2d = _as2d(w_sign).shape
+    grid, specs, beta_spec, out_spec = _tiled_specs(shape2d, 5)
+    dv = pl.pallas_call(
+        _softquant_bwd_kernel,
+        grid=grid,
+        in_specs=specs + [beta_spec, out_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        interpret=INTERPRET,
+    )(_as2d(w_sign), _as2d(lo), _as2d(up), _as2d(scale), _as2d(v),
+      jnp.reshape(beta, (1, 1)).astype(jnp.float32), _as2d(g))
+    return dv.reshape(v.shape)
+
+
+@jax.custom_vjp
+def softquant_pallas(w_sign, lower, upper, scale, v, beta):
+    """FAAR soft-quant (Pallas forward). Differentiable w.r.t. v only —
+    exactly what the 2FA optimization needs (V is the only trainable)."""
+    return _softquant_fwd_call(w_sign, lower, upper, scale, v, beta)
+
+
+def _sq_fwd(w_sign, lower, upper, scale, v, beta):
+    out = _softquant_fwd_call(w_sign, lower, upper, scale, v, beta)
+    return out, (w_sign, lower, upper, scale, v, beta)
+
+
+def _sq_bwd(res, g):
+    w_sign, lower, upper, scale, v, beta = res
+    dv = _softquant_bwd_call(w_sign, lower, upper, scale, v, beta, g)
+    zeros = (jnp.zeros_like(w_sign), jnp.zeros_like(lower),
+             jnp.zeros_like(upper), jnp.zeros_like(scale))
+    return (*zeros, dv, jnp.zeros_like(jnp.asarray(beta, jnp.float32)))
+
+
+softquant_pallas.defvjp(_sq_fwd, _sq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RTN fake-quant kernel (FindInterval where-chain inside the kernel)
+
+
+def _rtn_kernel(w_ref, scale_ref, o_ref):
+    w = w_ref[...]
+    s = scale_ref[...]
+    wt = jnp.where(s > 0, jnp.abs(w) / jnp.maximum(s, 1e-30), 0.0)
+    wt = jnp.clip(wt, 0.0, 6.0)
+    lo = jnp.where(wt >= 6.0, 6.0,
+         jnp.where(wt >= 4.0, 4.0,
+         jnp.where(wt >= 3.0, 3.0,
+         jnp.where(wt >= 2.0, 2.0,
+         jnp.where(wt >= 1.5, 1.5,
+         jnp.where(wt >= 1.0, 1.0,
+         jnp.where(wt >= 0.5, 0.5, 0.0)))))))
+    up = jnp.where(wt <= 0.0, 0.0,
+         jnp.where(wt <= 0.5, 0.5,
+         jnp.where(wt <= 1.0, 1.0,
+         jnp.where(wt <= 1.5, 1.5,
+         jnp.where(wt <= 2.0, 2.0,
+         jnp.where(wt <= 3.0, 3.0,
+         jnp.where(wt <= 4.0, 4.0, 6.0)))))))
+    q = jnp.where(wt - lo > up - wt, up, lo)
+    o_ref[...] = jnp.sign(w) * q * s
+
+
+def rtn_pallas(w, scale):
+    """RTN fake-quant on the NVFP4 grid (Pallas), given elementwise scales."""
+    shape2d = _as2d(w).shape
+    m, n = shape2d
+    bm, bn = _pick_tile(m), _pick_tile(n)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _rtn_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        interpret=INTERPRET,
+    )(_as2d(w), _as2d(scale))
+    return out.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch used by the L2 graphs. Stage-1 (the hot path the paper profiles)
+# uses the Pallas kernels; the full-model stage-2 graph uses the jnp path
+# (identical math, pytest-enforced) to keep the 7-way stacked lowering lean.
+
+from . import ref  # noqa: E402
+
+
+def softquant(w_sign, lower, upper, scale, v, beta, use_pallas=False):
+    if use_pallas:
+        return softquant_pallas(w_sign, lower, upper, scale, v, beta)
+    return ref.soft_quant(w_sign, lower, upper, scale, v, beta)
+
+
+def rtn(w, scale, use_pallas=False):
+    if use_pallas:
+        return rtn_pallas(w, scale)
+    return ref.rtn_quant(w, scale)

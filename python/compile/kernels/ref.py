@@ -1,0 +1,177 @@
+"""Pure-jnp reference ("oracle") for all NVFP4 / FAAR numerics.
+
+Every Pallas kernel in this package is checked against these functions by
+pytest at build time, and the rust codec (rust/src/formats/) is checked
+against the AOT-exported `quant_prepare` / `kernel_rtn` artifacts, which
+are lowered from these exact functions. This file therefore pins the
+bit-level semantics of the whole system:
+
+  * NVFP4 node set N = {0, ±0.5, ±1, ±1.5, ±2, ±3, ±4, ±6} (FP4 E2M1)
+  * block-16 scales along the contraction axis, stored as FP8 E4M3
+    relative to a per-tensor FP32 global scale (scale-of-scales)
+  * RTN tie-break: exact midpoints round DOWN (toward the lower node).
+    This is deliberately simpler than E2M1 round-half-even and is applied
+    identically in python and rust (DESIGN.md §7).
+  * FindInterval on the normalized magnitude w̃ = |w| / s, clamped to
+    [0, 6]:  lower = max{n ∈ N : n ≤ w̃},  upper = min{n ∈ N : n ≥ w̃}.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Positive NVFP4 (E2M1) nodes.
+NODES = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+FP4_MAX = 6.0
+E4M3_MAX = 448.0
+BLOCK = 16
+
+
+def lower_node(wt):
+    """Largest NVFP4 node <= wt (wt >= 0)."""
+    return jnp.where(wt >= 6.0, 6.0,
+           jnp.where(wt >= 4.0, 4.0,
+           jnp.where(wt >= 3.0, 3.0,
+           jnp.where(wt >= 2.0, 2.0,
+           jnp.where(wt >= 1.5, 1.5,
+           jnp.where(wt >= 1.0, 1.0,
+           jnp.where(wt >= 0.5, 0.5, 0.0)))))))
+
+
+def upper_node(wt):
+    """Smallest NVFP4 node >= wt (wt in [0, 6])."""
+    return jnp.where(wt <= 0.0, 0.0,
+           jnp.where(wt <= 0.5, 0.5,
+           jnp.where(wt <= 1.0, 1.0,
+           jnp.where(wt <= 1.5, 1.5,
+           jnp.where(wt <= 2.0, 2.0,
+           jnp.where(wt <= 3.0, 3.0,
+           jnp.where(wt <= 4.0, 4.0, 6.0)))))))
+
+
+def e4m3_roundtrip(x):
+    """f32 -> FP8 E4M3 -> f32 (round-to-nearest-even; inputs are
+    guaranteed <= 448 by construction of the global scale)."""
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def nvfp4_weight_scales(w):
+    """Two-level NVFP4 scales for a weight tensor w[..., K, N].
+
+    Blocks of 16 run along K (the contraction axis), one scale per
+    (block, output-column) pair — matching NVFP4 GEMM layout. The global
+    scale is per *tensor*; for stacked [L, K, N] weights each layer slice
+    is its own tensor (amax over the trailing two axes).
+
+    Returns the elementwise effective scale (E4M3 quantization error
+    included — this is what deployable NVFP4 hardware sees) broadcast to
+    w's shape, and the global scale (shape [..., 1, 1]).
+    """
+    *lead, k, n = w.shape
+    assert k % BLOCK == 0, f"K={k} not a multiple of {BLOCK}"
+    wb = jnp.abs(w).reshape(*lead, k // BLOCK, BLOCK, n)
+    amax_blk = jnp.max(wb, axis=-2, keepdims=True)                # [..., K/B, 1, N]
+    amax_tot = jnp.max(jnp.abs(w), axis=(-1, -2), keepdims=True)  # [..., 1, 1]
+    s_global = jnp.maximum(amax_tot / (FP4_MAX * E4M3_MAX), 1e-30)
+    s_g = s_global.reshape(*lead, 1, 1, 1)
+    s_eff = e4m3_roundtrip(amax_blk / FP4_MAX / s_g) * s_g        # [..., K/B, 1, N]
+    s_eff = jnp.broadcast_to(s_eff, wb.shape).reshape(w.shape)
+    return s_eff, s_global
+
+
+def act_scales(x):
+    """Dynamic activation scales: blocks of 16 along the LAST axis
+    (feature dim), per-tensor global scale — same two-level scheme."""
+    *lead, f = x.shape
+    assert f % BLOCK == 0, f"F={f} not a multiple of {BLOCK}"
+    xb = jnp.abs(x).reshape(*lead, f // BLOCK, BLOCK)
+    amax_blk = jnp.max(xb, axis=-1, keepdims=True)
+    amax_tot = jnp.max(jnp.abs(x))
+    s_global = jnp.maximum(amax_tot / (FP4_MAX * E4M3_MAX), 1e-30)
+    s_eff = e4m3_roundtrip(amax_blk / FP4_MAX / s_global) * s_global
+    s_eff = jnp.broadcast_to(s_eff, xb.shape).reshape(x.shape)
+    return s_eff
+
+
+def find_interval(w, scale):
+    """Normalized magnitude + enclosing NVFP4 nodes.
+
+    Returns (lower, upper, wt) with wt = clip(|w|/scale, 0, 6);
+    zero-scale (all-zero block) elements get wt = 0.
+    """
+    wt = jnp.where(scale > 0, jnp.abs(w) / jnp.maximum(scale, 1e-30), 0.0)
+    wt = jnp.clip(wt, 0.0, FP4_MAX)
+    return lower_node(wt), upper_node(wt), wt
+
+
+def v_init(wt, lower, upper):
+    """Relative position of wt inside its interval (paper eq. 4);
+    degenerate (zero-width) intervals get 0.5."""
+    width = upper - lower
+    return jnp.where(width > 0, (wt - lower) / jnp.maximum(width, 1e-30), 0.5)
+
+
+def rtn_round(wt, lower, upper):
+    """Round-to-nearest on the non-uniform grid; ties -> lower."""
+    return jnp.where(wt - lower > upper - wt, upper, lower)
+
+
+def rtn_quant(w, scale):
+    """RTN fake-quant given precomputed elementwise scales."""
+    lo, up, wt = find_interval(w, scale)
+    return jnp.sign(w) * rtn_round(wt, lo, up) * scale
+
+
+def rtn_fake_quant_weights(w):
+    """Full RTN weight fake-quant (scales computed internally)."""
+    s, _ = nvfp4_weight_scales(w)
+    return rtn_quant(w, s)
+
+
+def rtn_fake_quant_act(x):
+    """Full RTN activation fake-quant (dynamic per-token-block scales)."""
+    return rtn_quant(x, act_scales(x))
+
+
+def soft_round(v, beta):
+    """Temperature-scaled sigmoid h_beta(v) (paper eq. 3)."""
+    return jax.nn.sigmoid(beta * (v - 0.5))
+
+
+def soft_quant(w_sign, lower, upper, scale, v, beta):
+    """FAAR continuous relaxation (paper eq. 2):
+    w_q = sign(w) * [lower + h_beta(v) * (upper - lower)] * scale.
+    The local interval width (upper - lower) scales each v's gradient —
+    the format-aware part."""
+    h = soft_round(v, beta)
+    return w_sign * (lower + h * (upper - lower)) * scale
+
+
+def soft_quant_grad_v(w_sign, lower, upper, scale, v, beta, g):
+    """Analytic d(loss)/dv given upstream gradient g on w_q — used as the
+    custom VJP of the Pallas forward kernel."""
+    h = soft_round(v, beta)
+    return g * w_sign * scale * (upper - lower) * beta * h * (1.0 - h)
+
+
+def harden(v):
+    """Deterministic hardening (paper eq. 7): v >= 0.5 -> upper."""
+    return (v >= 0.5).astype(jnp.float32)
+
+
+def hard_quant(w_sign, lower, upper, scale, v):
+    """Final NVFP4 weights after hardening (paper step 26)."""
+    return w_sign * (lower + harden(v) * (upper - lower)) * scale
+
+
+def round_loss(v):
+    """Rounding regularizer (paper eq. 5, second term):
+    mean_i (1 - (2 v_i - 1)^2) — pushes v toward {0, 1}."""
+    return jnp.mean(1.0 - jnp.square(2.0 * v - 1.0))
+
+
+def quant_prepare(w):
+    """Everything rust's stage-1 driver needs, from the raw weights:
+    (lower, upper, scale, v_init), all elementwise with w's shape."""
+    scale, _ = nvfp4_weight_scales(w)
+    lo, up, wt = find_interval(w, scale)
+    return lo, up, scale, v_init(wt, lo, up)

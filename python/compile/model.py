@@ -1,0 +1,184 @@
+"""L2 — the JAX compute graphs (Llama-style decoder) that get AOT-lowered.
+
+All per-layer weights are stacked on a leading L axis and the decoder body
+is a single ``lax.scan``, so every artifact has a short, fixed parameter
+list (12 weight tensors — see configs.weight_specs) regardless of depth.
+
+Three forward variants share one implementation:
+  * plain           — BF16-stand-in (f32) reference model
+  * act_quant=True  — W4A4: every quantized linear's input is dynamically
+                      RTN-fake-quantized (STE backward)
+  * qweights given  — quantized model: the 7 linear weight stacks are
+                      replaced by FAAR soft-quant (or hard/dequantized
+                      weights fed directly by rust)
+
+Python never runs at inference time: rust feeds weights (original or
+dequantized-hard) into these graphs through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, weight_specs, QLINEARS, CAPTURE_NAMES
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Activation fake-quant with straight-through estimator. Stage-2 gradients
+# must flow *through* later layers' activation quantizers to reach earlier
+# layers' rounding variables.
+
+@jax.custom_vjp
+def act_fake_quant(x):
+    return ref.rtn_fake_quant_act(x)
+
+
+def _afq_fwd(x):
+    return ref.rtn_fake_quant_act(x), None
+
+
+def _afq_bwd(_, g):
+    return (g,)
+
+
+act_fake_quant.defvjp(_afq_fwd, _afq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+
+def params_to_dict(cfg: ModelConfig, flat):
+    specs = weight_specs(cfg)
+    assert len(flat) == len(specs), f"{len(flat)} != {len(specs)}"
+    return {name: t for (name, *_), t in zip(specs, flat)}
+
+
+def param_shapes(cfg: ModelConfig):
+    return [(name, shape) for name, shape, *_ in weight_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+def rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, seq_len: int):
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)                      # [T, hd/2]
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin):
+    # x: [B, T, H, hd]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _linear(x, w, act_quant):
+    if act_quant:
+        x = act_fake_quant(x)
+    return x @ w
+
+
+def _layer(cfg: ModelConfig, carry, lw, cos, sin, act_quant):
+    """One decoder block. lw = dict of this layer's (un-stacked) weights.
+    Returns (new_hidden, captures) where captures are the 4 linear-input
+    tensors (pre-act-quant, i.e. what calibration sees)."""
+    x = carry
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    attn_in = rmsnorm(x, lw["attn_norm"])
+    q = _linear(attn_in, lw["wq"], act_quant).reshape(b, t, h, hd)
+    k = _linear(attn_in, lw["wk"], act_quant).reshape(b, t, h, hd)
+    v = _linear(attn_in, lw["wv"], act_quant).reshape(b, t, h, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+    attn_o_in = attn
+    x = x + _linear(attn_o_in, lw["wo"], act_quant)
+
+    mlp_in = rmsnorm(x, lw["mlp_norm"])
+    g = _linear(mlp_in, lw["w_gate"], act_quant)
+    u = _linear(mlp_in, lw["w_up"], act_quant)
+    mlp_down_in = jax.nn.silu(g) * u
+    x = x + _linear(mlp_down_in, lw["w_down"], act_quant)
+
+    captures = {
+        "attn_in": attn_in,
+        "attn_o_in": attn_o_in,
+        "mlp_in": mlp_in,
+        "mlp_down_in": mlp_down_in,
+    }
+    return x, captures
+
+
+_LAYER_KEYS = ["attn_norm", "wq", "wk", "wv", "wo",
+               "mlp_norm", "w_gate", "w_up", "w_down"]
+
+
+def fwd(cfg: ModelConfig, params, tokens, act_quant=False, capture=False):
+    """Decoder forward.
+
+    tokens: [B, T] int32. Returns (logits [B,T,V], last_hidden [B,T,d],
+    captures dict of [L,B,T,*] or None).
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens]
+    cos, sin = rope_tables(cfg, t)
+
+    stacked = {k: params[f"layers.{k}"] for k in _LAYER_KEYS}
+
+    def body(carry, lw):
+        y, caps = _layer(cfg, carry, lw, cos, sin, act_quant)
+        return y, (caps if capture else 0)
+
+    x, caps = jax.lax.scan(body, x, stacked)
+    x = rmsnorm(x, params["out_norm"])
+    logits = x @ params["lm_head"]
+    return logits, x, (caps if capture else None)
+
+
+def nll_from_logits(logits, targets):
+    """Per-position negative log-likelihood. logits [B,T,V], targets [B,T]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Quantized-parameter assembly (used by stage-2 and by kernels parity)
+
+QNAMES = sorted({q[0] for q in QLINEARS}, key=[q[0] for q in QLINEARS].index)
+
+
+def soft_quant_params(params, qtensors, beta, use_pallas=False):
+    """Replace each quantized weight stack with its FAAR soft-quant.
+
+    qtensors: dict name -> (lower, upper, scale, v); sign comes from the
+    original weights (paper: quantize magnitude, preserve sign).
+    """
+    from .kernels import nvfp4
+    out = dict(params)
+    for name in QNAMES:
+        lo, up, sc, v = qtensors[name]
+        w_sign = jnp.sign(params[name])
+        out[name] = nvfp4.softquant(w_sign, lo, up, sc, v, beta, use_pallas=use_pallas)
+    return out
+
+
+__all__ = [
+    "fwd", "nll_from_logits", "params_to_dict", "param_shapes", "rmsnorm",
+    "soft_quant_params", "act_fake_quant", "QNAMES", "CAPTURE_NAMES",
+]

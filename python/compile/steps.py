@@ -1,0 +1,146 @@
+"""L2 — optimization step graphs (lowered once, looped from rust).
+
+Each step function takes and returns *flat* tensor lists in the canonical
+manifest order, with optimizer state carried through the graph so the rust
+driver never touches Adam math: it just re-feeds outputs as inputs
+(device-resident via execute_b — see rust/src/runtime/).
+
+  pretrain_step — AdamW + global-norm clip on all 12 weight tensors
+  stage1_step   — FAAR layer-wise rounding (paper eq. 5): Adam on V only,
+                  V clipped to [0,1] after the update, Pallas soft-quant
+                  on the hot path
+  stage2_step   — 2FA global alignment (paper eq. 6): KL(logits) +
+                  MSE(last hidden) + rounding regularizer, Adam on the 7
+                  stacked V tensors
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig, weight_specs
+from .kernels import ref, nvfp4
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(p, g, m, v, step, lr, wd=0.0):
+    """One Adam(W) update. `step` is a 1-based f32 scalar (bias correction
+    uses exp/log so it stays a traced value)."""
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    bc1 = 1.0 - jnp.exp(step * jnp.log(ADAM_B1))
+    bc2 = 1.0 - jnp.exp(step * jnp.log(ADAM_B2))
+    mh = m2 / bc1
+    vh = v2 / bc2
+    p2 = p - lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + wd * p)
+    return p2, m2, v2
+
+
+def global_norm_clip(grads, max_norm=1.0):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / gn)
+    return [g * scale for g in grads], gn
+
+
+# ---------------------------------------------------------------------------
+
+def pretrain_step(cfg: ModelConfig, weights, ms, vs, tokens, step, lr):
+    """One AdamW LM step. tokens: [B, T+1] (context + shifted targets)."""
+    specs = weight_specs(cfg)
+    names = [s[0] for s in specs]
+    wd_flags = {s[0]: s[4] for s in specs}
+
+    def loss_fn(ws):
+        params = dict(zip(names, ws))
+        logits, _, _ = model.fwd(cfg, params, tokens[:, :-1])
+        nll = model.nll_from_logits(logits, tokens[:, 1:])
+        return jnp.mean(nll)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(weights))
+    grads, _ = global_norm_clip(grads, 1.0)
+
+    new_w, new_m, new_v = [], [], []
+    for name, p, g, m, v in zip(names, weights, grads, ms, vs):
+        wd = 0.01 if wd_flags[name] else 0.0
+        p2, m2, v2 = adam_update(p, g, m, v, step, lr, wd)
+        new_w.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (*new_w, *new_m, *new_v, loss)
+
+
+# ---------------------------------------------------------------------------
+
+def stage1_step(x, w, lower, upper, scale, v, m, madam, step, beta, lr,
+                lam_round, act_quant=True, use_pallas=True):
+    """FAAR Stage 1 (paper eq. 5) on a single [K, N] linear.
+
+    x      [R, K]  fp input activations captured from the frozen model
+    w      [K, N]  fp weights (only sign(w) enters the quantized branch)
+    lower/upper/scale/v [K, N]
+    m, madam       Adam first/second moments for v
+    Returns (v', m', madam', loss).
+    """
+    w_sign = jnp.sign(w)
+    y_fp = x @ w
+    xq = model.act_fake_quant(x) if act_quant else x
+
+    def loss_fn(vv):
+        wq = nvfp4.softquant(w_sign, lower, upper, scale, vv, beta,
+                             use_pallas=use_pallas)
+        mse = jnp.mean(jnp.square(y_fp - xq @ wq))
+        return mse + lam_round * ref.round_loss(vv)
+
+    loss, g = jax.value_and_grad(loss_fn)(v)
+    v2, m2, a2 = adam_update(v, g, m, madam, step, lr)
+    v2 = jnp.clip(v2, 0.0, 1.0)  # paper §3.5: clip after every update
+    return v2, m2, a2, loss
+
+
+# ---------------------------------------------------------------------------
+
+def stage2_step(cfg: ModelConfig, weights, qstate, tokens, step, beta, lr,
+                lam_kl, lam_round, tau, act_quant=True):
+    """2FA Stage 2 (paper eq. 6): global alignment of the assembled NVFP4
+    model against the frozen fp model.
+
+    qstate: dict qname -> (lower, upper, scale, v, m, madam), all stacked
+    [L, K, N]. Returns flat (v' x7, m' x7, madam' x7, loss, kl, mse).
+    """
+    names = [s[0] for s in weight_specs(cfg)]
+    params = dict(zip(names, weights))
+
+    logits_fp, h_fp, _ = model.fwd(cfg, params, tokens)
+    p_fp = jax.nn.softmax(logits_fp / tau, axis=-1)
+    logp_fp = jax.nn.log_softmax(logits_fp / tau, axis=-1)
+
+    qnames = model.QNAMES
+
+    def loss_fn(vlist):
+        qtensors = {}
+        rl = 0.0
+        for name, vv in zip(qnames, vlist):
+            lo, up, sc, _, _, _ = qstate[name]
+            qtensors[name] = (lo, up, sc, vv)
+            rl = rl + ref.round_loss(vv)
+        qparams = model.soft_quant_params(params, qtensors, beta,
+                                          use_pallas=False)
+        logits_q, h_q, _ = model.fwd(cfg, qparams, tokens, act_quant=act_quant)
+        logp_q = jax.nn.log_softmax(logits_q / tau, axis=-1)
+        kl = jnp.mean(jnp.sum(p_fp * (logp_fp - logp_q), axis=-1))
+        mse = jnp.mean(jnp.square(h_fp - h_q))
+        loss = lam_kl * kl + mse + lam_round * rl
+        return loss, (kl, mse)
+
+    vlist = [qstate[n][3] for n in qnames]
+    (loss, (kl, mse)), grads = jax.value_and_grad(loss_fn, has_aux=True)(vlist)
+
+    new_v, new_m, new_a = [], [], []
+    for name, vv, g in zip(qnames, vlist, grads):
+        _, _, _, _, m, a = qstate[name]
+        v2, m2, a2 = adam_update(vv, g, m, a, step, lr)
+        new_v.append(jnp.clip(v2, 0.0, 1.0))
+        new_m.append(m2)
+        new_a.append(a2)
+    return (*new_v, *new_m, *new_a, loss, kl, mse)

@@ -1,0 +1,105 @@
+"""AOT export self-consistency: manifest ↔ configs ↔ emitted files.
+
+Runs against the artifacts/ tree if present (`make artifacts`); the nano
+config is exported into a temp dir otherwise, keeping the test hermetic
+(but slower), so `pytest` is meaningful in a fresh checkout too.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import CONFIGS, weight_specs, qlinear_shapes
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def nano_dir(tmp_path_factory):
+    d = os.path.join(ART, "nano")
+    if os.path.isdir(d) and os.path.exists(os.path.join(d, "manifest.json")):
+        return d
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    from compile.aot import export_config
+    export_config(CONFIGS["nano"], out)
+    return os.path.join(out, "nano")
+
+
+@pytest.fixture(scope="module")
+def manifest(nano_dir):
+    with open(os.path.join(nano_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_weights_match_specs(manifest):
+    cfg = CONFIGS["nano"]
+    specs = weight_specs(cfg)
+    assert len(manifest["weights"]) == len(specs)
+    for w, (name, shape, init, q, wd) in zip(manifest["weights"], specs):
+        assert w["name"] == name
+        assert tuple(w["shape"]) == tuple(shape)
+        assert w["quantized"] == q
+
+
+def test_all_artifact_files_exist(manifest, nano_dir):
+    for name, a in manifest["artifacts"].items():
+        path = os.path.join(nano_dir, a["file"])
+        assert os.path.exists(path), f"{name}: missing {a['file']}"
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_stage1_artifacts_cover_all_qlinear_shapes(manifest):
+    cfg = CONFIGS["nano"]
+    for (k, n) in qlinear_shapes(cfg):
+        assert f"stage1_step_{k}x{n}" in manifest["artifacts"]
+        assert f"prepare_{k}x{n}" in manifest["artifacts"]
+
+
+def test_pretrain_step_io_symmetry(manifest):
+    a = manifest["artifacts"]["pretrain_step"]
+    n_w = len(manifest["weights"])
+    assert len(a["inputs"]) == 3 * n_w + 3
+    assert len(a["outputs"]) == 3 * n_w + 1
+    # weight inputs and outputs carry matching shapes
+    for i in range(n_w):
+        assert a["inputs"][i]["shape"] == a["outputs"][i]["shape"]
+
+
+def test_stage2_step_io(manifest):
+    a = manifest["artifacts"]["stage2_step"]
+    n_w = len(manifest["weights"])
+    n_q = len(manifest["qlinears"])
+    assert len(a["inputs"]) == n_w + 6 * n_q + 7
+    assert len(a["outputs"]) == 3 * n_q + 3
+    assert a["outputs"][-3]["name"] == "loss"
+
+
+def test_eval_fwd_io(manifest):
+    cfg = CONFIGS["nano"]
+    for name in ["lm_fwd", "lm_fwd_aq"]:
+        a = manifest["artifacts"][name]
+        assert a["inputs"][-1]["dtype"] == "i32"
+        assert a["inputs"][-1]["shape"] == [cfg.eval_batch, cfg.seq_len + 1]
+        assert a["outputs"][0]["shape"] == [cfg.eval_batch, cfg.seq_len]
+        assert a["outputs"][1]["shape"] == [cfg.eval_batch, cfg.seq_len, cfg.d_model]
+
+
+def test_capture_covers_all_qlinears(manifest):
+    captures = set(manifest["captures"])
+    for q in manifest["qlinears"]:
+        assert q["capture"] in captures
+    a = manifest["artifacts"]["lm_capture"]
+    out_names = {o["name"] for o in a["outputs"]}
+    assert captures == out_names
+
+
+def test_qlinear_shapes_match_weights(manifest):
+    by_name = {w["name"]: w for w in manifest["weights"]}
+    for q in manifest["qlinears"]:
+        w = by_name[q["name"]]
+        L, k, n = w["shape"]
+        assert (q["k"], q["n"]) == (k, n)
+        assert k % 16 == 0, "contraction dim must tile into NVFP4 blocks"

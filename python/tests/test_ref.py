@@ -1,0 +1,220 @@
+"""Properties of the pure-jnp NVFP4 reference (the numerics oracle).
+
+These tests pin the bit-level semantics the whole system (Pallas kernels,
+rust codec, AOT graphs) is checked against.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+NODES = np.array(ref.NODES)
+
+
+def rand_w(shape, scale=0.05, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# node helpers
+
+
+@pytest.mark.parametrize("wt,lo,up", [
+    (0.0, 0.0, 0.0), (0.2, 0.0, 0.5), (0.5, 0.5, 0.5), (0.7, 0.5, 1.0),
+    (1.0, 1.0, 1.0), (1.2, 1.0, 1.5), (1.5, 1.5, 1.5), (1.7, 1.5, 2.0),
+    (2.0, 2.0, 2.0), (2.5, 2.0, 3.0), (3.0, 3.0, 3.0), (3.5, 3.0, 4.0),
+    (4.0, 4.0, 4.0), (5.0, 4.0, 6.0), (6.0, 6.0, 6.0),
+])
+def test_interval_nodes(wt, lo, up):
+    x = jnp.float32(wt)
+    assert float(ref.lower_node(x)) == lo
+    assert float(ref.upper_node(x)) == up
+
+
+def test_interval_encloses():
+    wt = jnp.asarray(RNG.uniform(0, 6, size=5000).astype(np.float32))
+    lo, up = ref.lower_node(wt), ref.upper_node(wt)
+    assert np.all(np.asarray(lo) <= np.asarray(wt) + 1e-7)
+    assert np.all(np.asarray(up) >= np.asarray(wt) - 1e-7)
+    # adjacent nodes: no representable node strictly between lo and up
+    for n in NODES:
+        inside = (np.asarray(lo) < n) & (n < np.asarray(up))
+        assert not inside.any()
+
+
+def test_rtn_ties_round_down():
+    # midpoints of every interval round to the lower node
+    mids = (NODES[:-1] + NODES[1:]) / 2
+    lo, up = ref.lower_node(jnp.asarray(mids)), ref.upper_node(jnp.asarray(mids))
+    q = ref.rtn_round(jnp.asarray(mids), lo, up)
+    np.testing.assert_allclose(np.asarray(q), NODES[:-1])
+
+
+def test_rtn_nearest():
+    wt = jnp.asarray(RNG.uniform(0, 6, size=5000).astype(np.float32))
+    lo, up = ref.lower_node(wt), ref.upper_node(wt)
+    q = np.asarray(ref.rtn_round(wt, lo, up))
+    # q is the nearest node (up to tie-break)
+    dist_q = np.abs(q - np.asarray(wt))
+    for n in NODES:
+        assert np.all(dist_q <= np.abs(n - np.asarray(wt)) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scales
+
+
+def test_weight_scales_shapes_and_range():
+    w = rand_w((2, 64, 32))
+    s, sg = ref.nvfp4_weight_scales(w)
+    assert s.shape == w.shape
+    assert sg.shape == (2, 1, 1)
+    # every normalized magnitude lands inside the representable range, up
+    # to E4M3 rounding of the block scale (<= 2^-3 relative, then clamped
+    # to 6 by find_interval)
+    wt = np.abs(np.asarray(w)) / np.maximum(np.asarray(s), 1e-30)
+    assert wt.max() <= 6.0 * (1 + 2.0 ** -3)
+
+
+def test_weight_scales_block_structure():
+    w = rand_w((32, 8))
+    s, _ = ref.nvfp4_weight_scales(w)
+    s = np.asarray(s)
+    # constant within each 16-block along K, per output column
+    assert np.allclose(s[:16], s[0:1])
+    assert np.allclose(s[16:], s[16:17])
+
+
+def test_weight_scales_zero_block():
+    w = np.zeros((32, 8), np.float32)
+    w[16:, :] = RNG.normal(0, 1, (16, 8))
+    s, _ = ref.nvfp4_weight_scales(jnp.asarray(w))
+    assert np.all(np.asarray(s)[:16] == 0.0)
+    lo, up, wt = ref.find_interval(jnp.asarray(w), s)
+    assert np.all(np.asarray(wt)[:16] == 0.0)  # no NaNs from 0/0
+
+
+def test_e4m3_exact_values():
+    # exactly representable E4M3 values roundtrip unchanged
+    for v in [1.0, 1.5, 448.0, 0.015625, 2.0 ** -9]:
+        assert float(ref.e4m3_roundtrip(jnp.float32(v))) == v
+    # 3 bits of mantissa: 1 + 1/8 representable, 1 + 1/16 rounds to even
+    assert float(ref.e4m3_roundtrip(jnp.float32(1.125))) == 1.125
+    assert float(ref.e4m3_roundtrip(jnp.float32(1.0625))) == 1.0
+
+
+def test_act_scales_last_axis_blocks():
+    x = rand_w((4, 32))
+    s = ref.act_scales(x)
+    assert s.shape == x.shape
+    s = np.asarray(s)
+    assert np.allclose(s[:, :16], s[:, 0:1])
+
+
+# ---------------------------------------------------------------------------
+# quantization behaviour
+
+
+def test_rtn_is_idempotent():
+    w = rand_w((64, 16))
+    s, _ = ref.nvfp4_weight_scales(w)
+    q1 = ref.rtn_quant(w, s)
+    q2 = ref.rtn_quant(q1, s)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+
+
+def test_rtn_error_bounded_by_half_interval():
+    w = rand_w((64, 16))
+    s, _ = ref.nvfp4_weight_scales(w)
+    lo, up, wt = ref.find_interval(w, s)
+    q = ref.rtn_quant(w, s)
+    err = np.abs(np.asarray(q) - np.asarray(w))
+    half = np.asarray((up - lo) * s) / 2
+    # elements pushed past 6 by E4M3 scale rounding saturate: add the
+    # clamped-off excess |w| - 6 s to the bound
+    excess = np.maximum(np.abs(np.asarray(w)) - 6.0 * np.asarray(s), 0.0)
+    assert np.all(err <= half + excess + 1e-6)
+
+
+def test_soft_quant_limits():
+    """beta -> inf turns the sigmoid into hardening at v = 0.5."""
+    w = rand_w((32, 16))
+    lo, up, sc, vi = ref.quant_prepare(w)
+    ws = jnp.sign(w)
+    hard = ref.hard_quant(ws, lo, up, sc, vi)
+    soft = ref.soft_quant(ws, lo, up, sc, vi, 1e6)
+    np.testing.assert_allclose(np.asarray(soft), np.asarray(hard), atol=1e-5)
+
+
+def test_soft_quant_midpoint():
+    """beta-sigmoid at v=0.5 interpolates to the interval middle."""
+    w = rand_w((32, 16))
+    lo, up, sc, _ = ref.quant_prepare(w)
+    v = jnp.full(w.shape, 0.5)
+    out = ref.soft_quant(jnp.sign(w), lo, up, sc, v, 10.0)
+    mid = np.asarray(jnp.sign(w) * (lo + 0.5 * (up - lo)) * sc)
+    np.testing.assert_allclose(np.asarray(out), mid, atol=1e-6)
+
+
+def test_v_init_in_unit_interval_and_faithful():
+    w = rand_w((64, 64))
+    lo, up, sc, vi = ref.quant_prepare(w)
+    vi = np.asarray(vi)
+    assert np.all(vi >= 0) and np.all(vi <= 1)
+    # reconstruction with h := v_init (identity interpolation) recovers |w|/s
+    lo, up, sc = map(np.asarray, (lo, up, sc))
+    wt = np.abs(np.asarray(w)) / np.maximum(sc, 1e-30)
+    rec = lo + vi * (up - lo)
+    mask = (up - lo) > 0
+    np.testing.assert_allclose(rec[mask], np.clip(wt, 0, 6)[mask], atol=1e-4)
+
+
+def test_harden_threshold():
+    v = jnp.asarray([0.0, 0.49, 0.5, 0.51, 1.0])
+    np.testing.assert_array_equal(np.asarray(ref.harden(v)), [0, 0, 1, 1, 1])
+
+
+def test_round_loss_range():
+    assert float(ref.round_loss(jnp.asarray([0.0, 1.0]))) == pytest.approx(0.0)
+    assert float(ref.round_loss(jnp.asarray([0.5]))) == pytest.approx(1.0)
+
+
+def test_hard_quant_on_grid():
+    """Hardened weights are exactly on the NVFP4 grid: |wq|/s in N."""
+    w = rand_w((64, 32))
+    lo, up, sc, vi = ref.quant_prepare(w)
+    q = np.asarray(ref.hard_quant(jnp.sign(w), lo, up, sc, vi))
+    sc_np = np.asarray(sc)
+    mask = sc_np > 0
+    wt = np.abs(q[mask]) / sc_np[mask]
+    dist = np.min(np.abs(wt[:, None] - NODES[None, :]), axis=1)
+    assert dist.max() < 1e-4
+
+
+def test_sign_preserved():
+    w = rand_w((64, 32))
+    s, _ = ref.nvfp4_weight_scales(w)
+    q = np.asarray(ref.rtn_quant(w, s))
+    w_np = np.asarray(w)
+    nz = q != 0
+    assert np.all(np.sign(q[nz]) == np.sign(w_np[nz]))
+
+
+def test_grad_v_matches_autodiff():
+    import jax
+    w = rand_w((16, 16))
+    lo, up, sc, vi = ref.quant_prepare(w)
+    ws = jnp.sign(w)
+    beta = 12.0
+    g = rand_w((16, 16), scale=1.0, seed=7)
+
+    def f(v):
+        return jnp.sum(ref.soft_quant(ws, lo, up, sc, v, beta) * g)
+
+    auto = jax.grad(f)(vi)
+    manual = ref.soft_quant_grad_v(ws, lo, up, sc, vi, beta, g)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(manual), rtol=1e-5, atol=1e-8)

@@ -1,0 +1,157 @@
+"""Optimization-step graph tests: losses go down, invariants hold."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model, steps
+from compile.configs import CONFIGS, weight_specs
+from compile.kernels import ref
+from tests.test_model import init_params, toks
+
+CFG = CONFIGS["nano"]
+
+
+def test_adam_update_moves_against_gradient():
+    p = jnp.zeros(4)
+    g = jnp.asarray([1.0, -1.0, 0.5, 0.0])
+    p2, m2, v2 = steps.adam_update(p, g, jnp.zeros(4), jnp.zeros(4),
+                                   step=1.0, lr=1e-2)
+    p2 = np.asarray(p2)
+    assert p2[0] < 0 and p2[1] > 0 and p2[2] < 0 and p2[3] == 0
+
+
+def test_adam_bias_correction_first_step():
+    """At step 1 with zero state the update is ~lr * sign(g)."""
+    g = jnp.asarray([0.3, -0.7])
+    p2, _, _ = steps.adam_update(jnp.zeros(2), g, jnp.zeros(2), jnp.zeros(2),
+                                 step=1.0, lr=1e-3)
+    np.testing.assert_allclose(np.abs(np.asarray(p2)), 1e-3, rtol=1e-3)
+
+
+def test_global_norm_clip():
+    gs = [jnp.asarray([3.0]), jnp.asarray([4.0])]
+    clipped, gn = steps.global_norm_clip(gs, max_norm=1.0)
+    assert float(gn) == pytest.approx(5.0)
+    total = np.sqrt(sum(float(jnp.sum(g ** 2)) for g in clipped))
+    assert total == pytest.approx(1.0, rel=1e-5)
+    # under the cap: untouched
+    same, _ = steps.global_norm_clip(gs, max_norm=100.0)
+    np.testing.assert_allclose(np.asarray(same[0]), 3.0)
+
+
+def test_pretrain_step_reduces_loss():
+    params = init_params(CFG, seed=0)
+    names = [s[0] for s in weight_specs(CFG)]
+    w = [params[n] for n in names]
+    m = [jnp.zeros_like(t) for t in w]
+    v = [jnp.zeros_like(t) for t in w]
+    tokens = toks(4, CFG.seq_len + 1, seed=2)
+    losses = []
+    for i in range(8):
+        out = steps.pretrain_step(CFG, w, m, v, tokens,
+                                  jnp.float32(i + 1), jnp.float32(3e-3))
+        nW = len(w)
+        w, m, v = list(out[:nW]), list(out[nW:2 * nW]), list(out[2 * nW:3 * nW])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def stage1_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    k, n, r = 64, 32, 128
+    x = jnp.asarray(rng.normal(0, 1, (r, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.05, (k, n)).astype(np.float32))
+    lo, up, sc, vi = ref.quant_prepare(w)
+    return x, w, lo, up, sc, vi
+
+
+def test_stage1_step_improves_over_vinit():
+    x, w, lo, up, sc, vi = stage1_inputs()
+    v = vi
+    m = jnp.zeros_like(v)
+    a = jnp.zeros_like(v)
+    losses = []
+    for i in range(30):
+        v, m, a, loss = steps.stage1_step(
+            x, w, lo, up, sc, v, m, a,
+            jnp.float32(i + 1), jnp.float32(8.0), jnp.float32(5e-3),
+            jnp.float32(0.0),  # pure MSE: must go down
+            act_quant=True, use_pallas=False)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.98, (losses[0], losses[-1])
+
+
+def test_stage1_v_stays_clipped():
+    x, w, lo, up, sc, vi = stage1_inputs(seed=3)
+    v, m, a = vi, jnp.zeros_like(vi), jnp.zeros_like(vi)
+    for i in range(5):
+        v, m, a, _ = steps.stage1_step(
+            x, w, lo, up, sc, v, m, a,
+            jnp.float32(i + 1), jnp.float32(10.0), jnp.float32(0.5),  # huge lr
+            jnp.float32(0.01), act_quant=False, use_pallas=False)
+    v = np.asarray(v)
+    assert v.min() >= 0.0 and v.max() <= 1.0
+
+
+def test_stage1_round_loss_pushes_binary():
+    """With ONLY the regularizer active, v drifts toward {0,1}."""
+    x, w, lo, up, sc, vi = stage1_inputs(seed=5)
+    v = jnp.clip(vi, 0.05, 0.95)
+    m, a = jnp.zeros_like(v), jnp.zeros_like(v)
+    before = float(ref.round_loss(v))
+    for i in range(20):
+        v, m, a, _ = steps.stage1_step(
+            0.0 * x, w, lo, up, sc, v, m, a,   # zero inputs → MSE grad = 0
+            jnp.float32(i + 1), jnp.float32(8.0), jnp.float32(1e-2),
+            jnp.float32(1.0), act_quant=False, use_pallas=False)
+    after = float(ref.round_loss(v))
+    assert after < before
+
+
+def make_qstate(params):
+    qstate = {}
+    for name in model.QNAMES:
+        lo, up, sc, vi = ref.quant_prepare(params[name])
+        qstate[name] = (lo, up, sc, vi, jnp.zeros_like(vi), jnp.zeros_like(vi))
+    return qstate
+
+
+def test_stage2_step_outputs_and_improvement():
+    params = init_params(CFG, seed=1)
+    names = [s[0] for s in weight_specs(CFG)]
+    w = [params[n] for n in names]
+    qstate = make_qstate(params)
+    tokens = toks(2, 32, seed=4)
+    first_loss, last_loss = None, None
+    for i in range(10):
+        out = steps.stage2_step(CFG, w, qstate, tokens,
+                                jnp.float32(i + 1), jnp.float32(8.0),
+                                jnp.float32(3e-3), jnp.float32(1.0),
+                                jnp.float32(0.0), jnp.float32(2.0))
+        nq = len(model.QNAMES)
+        vs, ms, as_ = out[:nq], out[nq:2 * nq], out[2 * nq:3 * nq]
+        loss, kl, mse = (float(x) for x in out[3 * nq:])
+        for j, name in enumerate(model.QNAMES):
+            lo, up, sc, _, _, _ = qstate[name]
+            qstate[name] = (lo, up, sc, vs[j], ms[j], as_[j])
+        if first_loss is None:
+            first_loss = loss
+        last_loss = loss
+        assert kl >= -1e-5 and mse >= 0
+    assert last_loss < first_loss, (first_loss, last_loss)
+
+
+def test_stage2_v_clipped():
+    params = init_params(CFG, seed=2)
+    names = [s[0] for s in weight_specs(CFG)]
+    w = [params[n] for n in names]
+    qstate = make_qstate(params)
+    tokens = toks(2, 32, seed=6)
+    out = steps.stage2_step(CFG, w, qstate, tokens,
+                            jnp.float32(1.0), jnp.float32(8.0),
+                            jnp.float32(0.9),  # huge lr
+                            jnp.float32(1.0), jnp.float32(0.01), jnp.float32(2.0))
+    for v in out[:len(model.QNAMES)]:
+        v = np.asarray(v)
+        assert v.min() >= 0.0 and v.max() <= 1.0

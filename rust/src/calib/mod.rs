@@ -1,0 +1,185 @@
+//! Calibration: capture per-linear input activations from the frozen
+//! full-precision model via the `lm_capture` artifact, and build the
+//! stage-1 row sets + GPTQ Hessians from them.
+//!
+//! The capture artifact returns one stacked tensor per capture point
+//! (`attn_in`, `attn_o_in`, `mlp_in`, `mlp_down_in`) with shape
+//! [L, B, T, F]. Each quantized linear is mapped to its capture point by
+//! the manifest (wq/wk/wv share `attn_in`, etc.).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{batcher::Split, Batcher, Corpus};
+use crate::gptq::Hessian;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::train::ParamStore;
+use crate::util::rng::Rng;
+
+/// Calibration data for one capture point.
+pub struct CaptureSet {
+    /// per-layer stage-1 row matrices [R, F]
+    pub rows: Vec<Tensor>,
+    /// per-layer input Hessians (for GPTQ)
+    pub hessians: Vec<Hessian>,
+}
+
+/// All capture points.
+pub struct Calibration {
+    pub sets: BTreeMap<String, CaptureSet>,
+    pub n_batches: usize,
+}
+
+impl Calibration {
+    pub fn set(&self, capture: &str) -> Result<&CaptureSet> {
+        self.sets.get(capture).ok_or_else(|| anyhow!("no capture set '{capture}'"))
+    }
+}
+
+/// Run `n_batches` calibration batches through the frozen model and
+/// collect rows + Hessians. Stage-1 rows are reservoir-subsampled to
+/// `rows_per_layer` (deterministic by seed).
+pub fn capture(
+    rt: &Runtime,
+    corpora: &[&Corpus],
+    params: &ParamStore,
+    n_batches: usize,
+    rows_per_layer: usize,
+    seed: u64,
+) -> Result<Calibration> {
+    let cfg = rt.config().clone();
+    let spec = rt.manifest.artifact("lm_capture")?.clone();
+    // calibration draws round-robin from the corpus mixture so the learned
+    // rounding doesn't overfit one eval distribution (paper calibrates on
+    // general text; see EXPERIMENTS.md)
+    let batchers: Vec<Batcher> = corpora
+        .iter()
+        .map(|c| Batcher::new(c, Split::Calib, cfg.eval_batch, cfg.seq_len, seed))
+        .collect();
+
+    // feature dim per capture point, from the artifact's output specs
+    let mut feat: BTreeMap<String, usize> = BTreeMap::new();
+    for out in &spec.outputs {
+        feat.insert(out.name.clone(), *out.shape.last().unwrap());
+    }
+
+    // reservoirs: per capture point, per layer
+    struct Reservoir {
+        rows: Vec<f32>,
+        f: usize,
+        cap: usize,
+        seen: usize,
+        rng: Rng,
+    }
+    impl Reservoir {
+        fn push(&mut self, row: &[f32]) {
+            if self.rows.len() < self.cap * self.f {
+                self.rows.extend_from_slice(row);
+            } else {
+                let j = self.rng.below(self.seen + 1);
+                if j < self.cap {
+                    self.rows[j * self.f..(j + 1) * self.f].copy_from_slice(row);
+                }
+            }
+            self.seen += 1;
+        }
+    }
+
+    let mut reservoirs: BTreeMap<String, Vec<Reservoir>> = BTreeMap::new();
+    let mut hessians: BTreeMap<String, Vec<Hessian>> = BTreeMap::new();
+    for (name, &f) in &feat {
+        reservoirs.insert(
+            name.clone(),
+            (0..cfg.n_layers)
+                .map(|l| Reservoir {
+                    rows: vec![],
+                    f,
+                    cap: rows_per_layer,
+                    seen: 0,
+                    rng: Rng::new(seed ^ (l as u64) << 32 ^ fnv(name)),
+                })
+                .collect(),
+        );
+        hessians.insert(name.clone(), (0..cfg.n_layers).map(|_| Hessian::new(f)).collect());
+    }
+
+    let mut args = params.values();
+    args.push(Value::I32(vec![], vec![])); // placeholder, replaced per batch
+    let tok_idx = args.len() - 1;
+
+    for b in 0..n_batches {
+        args[tok_idx] = batchers[b % batchers.len()].batch_at(b);
+        let outputs = rt.exec("lm_capture", &args)?;
+        for (out, ospec) in outputs.iter().zip(&spec.outputs) {
+            let t = out.as_tensor()?;
+            let f = feat[&ospec.name];
+            let rows_per_l: usize = t.numel() / cfg.n_layers / f;
+            let res = reservoirs.get_mut(&ospec.name).unwrap();
+            let hes = hessians.get_mut(&ospec.name).unwrap();
+            for l in 0..cfg.n_layers {
+                let base = l * rows_per_l * f;
+                let slice = &t.data[base..base + rows_per_l * f];
+                hes[l]
+                    .update(&Tensor::new(slice.to_vec(), vec![rows_per_l, f]))?;
+                for r in 0..rows_per_l {
+                    res[l].push(&slice[r * f..(r + 1) * f]);
+                }
+            }
+        }
+    }
+
+    let mut sets = BTreeMap::new();
+    for (name, res) in reservoirs {
+        let f = feat[&name];
+        let rows = res
+            .into_iter()
+            .map(|r| {
+                let n = r.rows.len() / f;
+                Tensor::new(r.rows, vec![n, f])
+            })
+            .collect();
+        sets.insert(
+            name.clone(),
+            CaptureSet { rows, hessians: hessians.remove(&name).unwrap() },
+        );
+    }
+    Ok(Calibration { sets, n_batches })
+}
+
+/// Pad or trim a row matrix to exactly `target` rows (cycling) — stage-1
+/// artifacts are shape-specialized to cfg.stage1_rows.
+pub fn fit_rows(x: &Tensor, target: usize) -> Tensor {
+    let (r, f) = x.mat_dims().unwrap();
+    if r == target {
+        return x.clone();
+    }
+    let mut data = Vec::with_capacity(target * f);
+    for i in 0..target {
+        let src = i % r.max(1);
+        data.extend_from_slice(&x.data[src * f..(src + 1) * f]);
+    }
+    Tensor::new(data, vec![target, f])
+}
+
+fn fnv(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_rows_pads_and_trims() {
+        let x = Tensor::new((0..6).map(|i| i as f32).collect(), vec![3, 2]);
+        let padded = fit_rows(&x, 5);
+        assert_eq!(padded.shape, vec![5, 2]);
+        assert_eq!(&padded.data[6..8], &[0.0, 1.0]); // cycled
+        let trimmed = fit_rows(&x, 2);
+        assert_eq!(trimmed.shape, vec![2, 2]);
+        assert_eq!(trimmed.data, &x.data[..4]);
+        assert_eq!(fit_rows(&x, 3).data, x.data);
+    }
+}

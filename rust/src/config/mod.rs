@@ -1,0 +1,280 @@
+//! Pipeline configuration: every hyperparameter of the FAAR + 2FA run,
+//! loadable from a JSON file, overridable from the CLI, and serialized
+//! into every results file so experiments are self-describing.
+//!
+//! Defaults follow DESIGN.md §7 (which pins down everything the paper
+//! leaves implicit).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::{cli::Args, json::Json};
+
+/// β annealing schedule: log-linear from `beta_start` to `beta_end`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BetaSchedule {
+    pub start: f32,
+    pub end: f32,
+}
+
+impl BetaSchedule {
+    /// β at progress t ∈ [0, 1].
+    pub fn at(&self, t: f32) -> f32 {
+        let t = t.clamp(0.0, 1.0);
+        (self.start.ln() + (self.end.ln() - self.start.ln()) * t).exp()
+    }
+}
+
+/// Scale-selection method for the NVFP4 block scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleMethod {
+    /// amax/6 (the NVFP4 default recipe)
+    Standard,
+    /// per-block choice between amax→6 and amax→4 by block MSE ("4/6")
+    FourSix,
+    /// per-block MSE-optimal search over a scale grid (strong baseline)
+    Search,
+}
+
+impl ScaleMethod {
+    pub fn parse(s: &str) -> Result<ScaleMethod> {
+        match s {
+            "standard" => Ok(ScaleMethod::Standard),
+            "foursix" | "4/6" => Ok(ScaleMethod::FourSix),
+            "search" => Ok(ScaleMethod::Search),
+            _ => bail!("unknown scale method '{s}' (standard|foursix|search)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleMethod::Standard => "standard",
+            ScaleMethod::FourSix => "foursix",
+            ScaleMethod::Search => "search",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// model preset (must match an artifacts/<name>/ directory)
+    pub model: String,
+    pub artifact_root: String,
+    pub out_dir: String,
+    pub seed: u64,
+
+    // pretraining
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    pub pretrain_warmup: usize,
+
+    // calibration
+    pub calib_batches: usize,
+
+    // FAAR stage 1 (per layer)
+    pub stage1_steps: usize,
+    pub stage1_lr: f32,
+    pub lam_round: f32,
+    /// fraction of steps before λ_round reaches full strength
+    pub lam_warmup_frac: f32,
+    pub beta: BetaSchedule,
+
+    // 2FA stage 2 (global alignment)
+    pub stage2_steps: usize,
+    pub stage2_lr: f32,
+    pub lam_kl: f32,
+    pub tau: f32,
+
+    // quantization options
+    pub scale_method: ScaleMethod,
+    /// evaluate with activation quantization (W4A4) — paper setting
+    pub act_quant_eval: bool,
+
+    // evaluation
+    pub eval_batches: usize,
+
+    // GPTQ
+    pub gptq_damp: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            model: "tiny".into(),
+            artifact_root: "artifacts".into(),
+            out_dir: "results".into(),
+            seed: 42,
+            pretrain_steps: 400,
+            pretrain_lr: 1e-3,
+            pretrain_warmup: 40,
+            calib_batches: 8,
+            stage1_steps: 300,
+            stage1_lr: 1e-2,
+            lam_round: 1e-3,
+            lam_warmup_frac: 0.2,
+            beta: BetaSchedule { start: 5.0, end: 50.0 },
+            stage2_steps: 1000,
+            stage2_lr: 5e-4,
+            lam_kl: 1.0,
+            tau: 2.0,
+            scale_method: ScaleMethod::Standard,
+            act_quant_eval: true,
+            eval_batches: 16,
+            gptq_damp: 0.01,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load from JSON file (all keys optional, overriding defaults).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        let mut c = PipelineConfig::default();
+        c.apply_json(&v)?;
+        Ok(c)
+    }
+
+    pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        let obj = v.as_obj()?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "model" => self.model = val.as_str()?.to_string(),
+                "artifact_root" => self.artifact_root = val.as_str()?.to_string(),
+                "out_dir" => self.out_dir = val.as_str()?.to_string(),
+                "seed" => self.seed = val.as_f64()? as u64,
+                "pretrain_steps" => self.pretrain_steps = val.as_usize()?,
+                "pretrain_lr" => self.pretrain_lr = val.as_f64()? as f32,
+                "pretrain_warmup" => self.pretrain_warmup = val.as_usize()?,
+                "calib_batches" => self.calib_batches = val.as_usize()?,
+                "stage1_steps" => self.stage1_steps = val.as_usize()?,
+                "stage1_lr" => self.stage1_lr = val.as_f64()? as f32,
+                "lam_round" => self.lam_round = val.as_f64()? as f32,
+                "lam_warmup_frac" => self.lam_warmup_frac = val.as_f64()? as f32,
+                "beta_start" => self.beta.start = val.as_f64()? as f32,
+                "beta_end" => self.beta.end = val.as_f64()? as f32,
+                "stage2_steps" => self.stage2_steps = val.as_usize()?,
+                "stage2_lr" => self.stage2_lr = val.as_f64()? as f32,
+                "lam_kl" => self.lam_kl = val.as_f64()? as f32,
+                "tau" => self.tau = val.as_f64()? as f32,
+                "scale_method" => self.scale_method = ScaleMethod::parse(val.as_str()?)?,
+                "act_quant_eval" => self.act_quant_eval = val.as_bool()?,
+                "eval_batches" => self.eval_batches = val.as_usize()?,
+                "gptq_damp" => self.gptq_damp = val.as_f64()?,
+                _ => bail!("unknown config key '{k}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// CLI overrides (--model, --stage1-steps, ... with kebab-case keys).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(p) = args.get("config-file") {
+            *self = Self::from_file(Path::new(p))?;
+        }
+        self.model = args.str_or("model", &self.model);
+        self.artifact_root = args.str_or("artifacts", &self.artifact_root);
+        self.out_dir = args.str_or("out", &self.out_dir);
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.pretrain_steps = args.usize_or("pretrain-steps", self.pretrain_steps)?;
+        self.pretrain_lr = args.f32_or("pretrain-lr", self.pretrain_lr)?;
+        self.calib_batches = args.usize_or("calib-batches", self.calib_batches)?;
+        self.stage1_steps = args.usize_or("stage1-steps", self.stage1_steps)?;
+        self.stage1_lr = args.f32_or("stage1-lr", self.stage1_lr)?;
+        self.lam_round = args.f32_or("lam-round", self.lam_round)?;
+        self.beta.start = args.f32_or("beta-start", self.beta.start)?;
+        self.beta.end = args.f32_or("beta-end", self.beta.end)?;
+        self.stage2_steps = args.usize_or("stage2-steps", self.stage2_steps)?;
+        self.stage2_lr = args.f32_or("stage2-lr", self.stage2_lr)?;
+        self.lam_kl = args.f32_or("lam-kl", self.lam_kl)?;
+        self.tau = args.f32_or("tau", self.tau)?;
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
+        if let Some(s) = args.get("scale-method") {
+            self.scale_method = ScaleMethod::parse(s)?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.as_str())),
+            ("seed", Json::num(self.seed as f64)),
+            ("pretrain_steps", Json::num(self.pretrain_steps as f64)),
+            ("pretrain_lr", Json::num(self.pretrain_lr as f64)),
+            ("calib_batches", Json::num(self.calib_batches as f64)),
+            ("stage1_steps", Json::num(self.stage1_steps as f64)),
+            ("stage1_lr", Json::num(self.stage1_lr as f64)),
+            ("lam_round", Json::num(self.lam_round as f64)),
+            ("beta_start", Json::num(self.beta.start as f64)),
+            ("beta_end", Json::num(self.beta.end as f64)),
+            ("stage2_steps", Json::num(self.stage2_steps as f64)),
+            ("stage2_lr", Json::num(self.stage2_lr as f64)),
+            ("lam_kl", Json::num(self.lam_kl as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("scale_method", Json::str(self.scale_method.name())),
+            ("act_quant_eval", Json::Bool(self.act_quant_eval)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_schedule_endpoints() {
+        let b = BetaSchedule { start: 5.0, end: 50.0 };
+        assert!((b.at(0.0) - 5.0).abs() < 1e-4);
+        assert!((b.at(1.0) - 50.0).abs() < 1e-3);
+        let mid = b.at(0.5);
+        assert!(mid > 5.0 && mid < 50.0);
+        // log-linear midpoint = geometric mean
+        assert!((mid - (5.0f32 * 50.0).sqrt()).abs() < 1e-2);
+        // clamped
+        assert_eq!(b.at(-1.0), b.at(0.0));
+        assert_eq!(b.at(2.0), b.at(1.0));
+    }
+
+    #[test]
+    fn json_roundtrip_overrides() {
+        let mut c = PipelineConfig::default();
+        let j = Json::parse(r#"{"model":"small","stage1_steps":42,"beta_end":99.0}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.stage1_steps, 42);
+        assert_eq!(c.beta.end, 99.0);
+        // untouched default
+        assert_eq!(c.stage2_steps, 1000);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let mut c = PipelineConfig::default();
+        let j = Json::parse(r#"{"stage1_stepz": 1}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            "x --model small --stage2-steps 7 --scale-method foursix"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        )
+        .unwrap();
+        let mut c = PipelineConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.stage2_steps, 7);
+        assert_eq!(c.scale_method, ScaleMethod::FourSix);
+    }
+
+    #[test]
+    fn scale_method_parse() {
+        assert_eq!(ScaleMethod::parse("4/6").unwrap(), ScaleMethod::FourSix);
+        assert!(ScaleMethod::parse("nope").is_err());
+    }
+}

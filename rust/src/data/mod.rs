@@ -1,0 +1,23 @@
+//! Synthetic data substrate.
+//!
+//! The paper evaluates on WikiText-2 / C4 and four zero-shot suites; none
+//! of those are available offline, so we build generative stand-ins with
+//! the statistical properties the experiments depend on (DESIGN.md §2):
+//!
+//! * [`corpus`] — Zipfian–Markov token streams at two entropy levels
+//!   (`synthwiki` structured / `synthc4` noisy), deterministic by seed.
+//! * [`tokenizer`] — a word-level text codec over pseudo-words, used by
+//!   the serving example so the request path looks like a real LM API.
+//! * [`batcher`] — train/eval batch streams with disjoint RNG streams.
+//! * [`tasks`] — zero-shot probe generators (BoolQ/Arc-E/Arc-C/HellaSwag
+//!   analogues) scored by candidate log-likelihood, LM-harness style.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use corpus::Corpus;
+pub use tasks::{Probe, TaskKind, TaskSuite};
+pub use tokenizer::Tokenizer;

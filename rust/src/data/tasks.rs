@@ -1,0 +1,305 @@
+//! Zero-shot probe suites (Table 5 analogues).
+//!
+//! Each probe is a (prompt, candidates, answer) triple scored exactly like
+//! the LM Evaluation Harness scores multiple-choice tasks: the model
+//! ranks candidate continuations by total (or length-normalized)
+//! log-likelihood given the prompt. The generators control difficulty:
+//!
+//! * `BoolQ`      — 2-way: is the shown continuation process-consistent?
+//! * `ArcEasy`    — 4-way, distractors drawn from *unlikely* successors
+//! * `ArcChallenge` — 4-way, distractors drawn from mid-probability
+//!   successors (much closer to the gold continuation)
+//! * `HellaSwag`  — 4-way with multi-token continuations, scored with
+//!   length normalization
+//!
+//! Difficulty ordering (Easy > Challenge) and the BF16 > quantized gap
+//! emerge from the same statistics the paper's tasks rely on.
+
+use crate::util::rng::Rng;
+
+use super::corpus::Corpus;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    BoolQ,
+    ArcEasy,
+    ArcChallenge,
+    HellaSwag,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::BoolQ => "boolq",
+            TaskKind::ArcEasy => "arc-e",
+            TaskKind::ArcChallenge => "arc-c",
+            TaskKind::HellaSwag => "hellaswag",
+        }
+    }
+
+    pub fn all() -> [TaskKind; 4] {
+        [TaskKind::BoolQ, TaskKind::ArcEasy, TaskKind::ArcChallenge, TaskKind::HellaSwag]
+    }
+
+    /// LM-harness-style length normalization (acc_norm) for HellaSwag.
+    pub fn length_normalized(&self) -> bool {
+        matches!(self, TaskKind::HellaSwag)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Probe {
+    pub prompt: Vec<i32>,
+    pub candidates: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+pub struct TaskSuite {
+    pub kind: TaskKind,
+    pub probes: Vec<Probe>,
+}
+
+impl TaskSuite {
+    /// Generate a deterministic suite of `n` probes.
+    pub fn generate(kind: TaskKind, corpus: &Corpus, n: usize, prompt_len: usize, seed: u64) -> TaskSuite {
+        let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0xABCD_EF12));
+        let probes = (0..n)
+            .map(|i| match kind {
+                TaskKind::BoolQ => boolq(corpus, prompt_len, &mut rng, i),
+                TaskKind::ArcEasy => arc(corpus, prompt_len, &mut rng, i, true),
+                TaskKind::ArcChallenge => arc(corpus, prompt_len, &mut rng, i, false),
+                TaskKind::HellaSwag => hellaswag(corpus, prompt_len, &mut rng, i),
+            })
+            .collect();
+        TaskSuite { kind, probes }
+    }
+}
+
+fn prompt_for(corpus: &Corpus, len: usize, idx: usize, salt: u64) -> Vec<i32> {
+    corpus.generate(len, 0xAAAA_0000u64 ^ salt ^ (idx as u64) << 8)
+}
+
+fn tail2(prompt: &[i32]) -> (u32, u32) {
+    let n = prompt.len();
+    assert!(n >= 2, "probes need prompts of at least 2 tokens");
+    (prompt[n - 2] as u32, prompt[n - 1] as u32)
+}
+
+/// Gold continuation: greedy successors of the prompt tail (order-2).
+fn gold_continuation(corpus: &Corpus, prompt: &[i32], len: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    let (mut prev2, mut prev) = tail2(prompt);
+    for _ in 0..len {
+        let nxt = corpus.argmax_next(prev2, prev);
+        out.push(nxt as i32);
+        prev2 = prev;
+        prev = nxt;
+    }
+    out
+}
+
+/// A continuation of unlikely tokens.
+fn bad_continuation(corpus: &Corpus, prompt: &[i32], len: usize, rng: &mut Rng) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    let (mut prev2, mut prev) = tail2(prompt);
+    for _ in 0..len {
+        let nxt = corpus.unlikely_next(prev2, prev, rng);
+        out.push(nxt as i32);
+        prev2 = prev;
+        prev = nxt;
+    }
+    out
+}
+
+/// A "plausible but wrong" continuation: the 2nd/3rd-ranked successor
+/// chain (mid probability — the hard distractor).
+fn near_continuation(corpus: &Corpus, prompt: &[i32], len: usize, rank: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    let (mut prev2, mut prev) = tail2(prompt);
+    for _ in 0..len {
+        let probs = corpus.next_probs(prev2, prev);
+        let mut order: Vec<usize> = (0..probs.len()).collect();
+        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let nxt = order[rank.min(order.len() - 1)] as u32;
+        out.push(nxt as i32);
+        prev2 = prev;
+        prev = nxt;
+    }
+    out
+}
+
+fn boolq(corpus: &Corpus, plen: usize, rng: &mut Rng, idx: usize) -> Probe {
+    let prompt = prompt_for(corpus, plen, idx, 0xB001);
+    let good = gold_continuation(corpus, &prompt, 2);
+    let bad = bad_continuation(corpus, &prompt, 2, rng);
+    // randomize answer position
+    if rng.bernoulli(0.5) {
+        Probe { prompt, candidates: vec![good, bad], answer: 0 }
+    } else {
+        Probe { prompt, candidates: vec![bad, good], answer: 1 }
+    }
+}
+
+fn arc(corpus: &Corpus, plen: usize, rng: &mut Rng, idx: usize, easy: bool) -> Probe {
+    let prompt = prompt_for(corpus, plen, idx, if easy { 0xA8CE } else { 0xA8CC });
+    let good = gold_continuation(corpus, &prompt, 3);
+    let mut candidates = vec![good];
+    for d in 0..3 {
+        let distractor = if easy {
+            bad_continuation(corpus, &prompt, 3, rng)
+        } else {
+            near_continuation(corpus, &prompt, 3, d + 1)
+        };
+        candidates.push(distractor);
+    }
+    let answer = rng.below(4);
+    candidates.swap(0, answer);
+    Probe { prompt, candidates, answer }
+}
+
+fn hellaswag(corpus: &Corpus, plen: usize, rng: &mut Rng, idx: usize) -> Probe {
+    let prompt = prompt_for(corpus, plen, idx, 0x4E11);
+    // variable-length continuations: length normalization matters
+    let good = gold_continuation(corpus, &prompt, 6);
+    let mut candidates = vec![good];
+    for d in 0..3 {
+        let len = 4 + (d * 2); // 4, 6, 8 — different lengths
+        candidates.push(bad_continuation(corpus, &prompt, len, rng));
+    }
+    let answer = rng.below(4);
+    candidates.swap(0, answer);
+    Probe { prompt, candidates, answer }
+}
+
+/// Exact-process scorer: log-likelihood of a candidate continuation under
+/// the *generative process itself* (upper bound on any model). Used by
+/// tests to verify the gold answer is actually the most likely.
+pub fn process_loglik(corpus: &Corpus, prompt: &[i32], cont: &[i32]) -> f64 {
+    let (mut prev2, mut prev) = tail2(prompt);
+    let mut ll = 0.0;
+    for &t in cont {
+        let p = corpus.next_probs(prev2, prev);
+        ll += p[t as usize].max(1e-12).ln();
+        prev2 = prev;
+        prev = t as u32;
+    }
+    ll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::by_name("synthwiki", 128).unwrap()
+    }
+
+    #[test]
+    fn deterministic_suites() {
+        let c = corpus();
+        let a = TaskSuite::generate(TaskKind::ArcEasy, &c, 10, 16, 1);
+        let b = TaskSuite::generate(TaskKind::ArcEasy, &c, 10, 16, 1);
+        assert_eq!(a.probes.len(), 10);
+        for (p, q) in a.probes.iter().zip(&b.probes) {
+            assert_eq!(p.prompt, q.prompt);
+            assert_eq!(p.answer, q.answer);
+        }
+    }
+
+    #[test]
+    fn gold_answer_is_process_optimal() {
+        let c = corpus();
+        for kind in [TaskKind::BoolQ, TaskKind::ArcEasy] {
+            let suite = TaskSuite::generate(kind, &c, 30, 16, 2);
+            let mut correct = 0;
+            for p in &suite.probes {
+                let scores: Vec<f64> = p
+                    .candidates
+                    .iter()
+                    .map(|cand| process_loglik(&c, &p.prompt, cand) / cand.len() as f64)
+                    .collect();
+                let best = scores
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if best == p.answer {
+                    correct += 1;
+                }
+            }
+            assert!(
+                correct >= 28,
+                "{}: process scorer only got {correct}/30",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn challenge_harder_than_easy() {
+        // margin between gold and best distractor must be smaller for Arc-C
+        let c = corpus();
+        let margin = |kind| {
+            let suite = TaskSuite::generate(kind, &c, 40, 16, 3);
+            let mut total = 0.0;
+            for p in &suite.probes {
+                let scores: Vec<f64> = p
+                    .candidates
+                    .iter()
+                    .map(|cand| process_loglik(&c, &p.prompt, cand) / cand.len() as f64)
+                    .collect();
+                let gold = scores[p.answer];
+                let best_other = scores
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != p.answer)
+                    .map(|(_, &s)| s)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                total += gold - best_other;
+            }
+            total / 40.0
+        };
+        let easy = margin(TaskKind::ArcEasy);
+        let hard = margin(TaskKind::ArcChallenge);
+        assert!(hard < easy, "challenge margin {hard} not below easy {easy}");
+    }
+
+    #[test]
+    fn answers_distributed() {
+        let c = corpus();
+        let suite = TaskSuite::generate(TaskKind::ArcEasy, &c, 60, 16, 4);
+        let mut seen = [0usize; 4];
+        for p in &suite.probes {
+            seen[p.answer] += 1;
+        }
+        assert!(seen.iter().all(|&s| s > 3), "answer positions skewed: {seen:?}");
+    }
+
+    #[test]
+    fn hellaswag_lengths_vary() {
+        let c = corpus();
+        let suite = TaskSuite::generate(TaskKind::HellaSwag, &c, 5, 16, 5);
+        for p in &suite.probes {
+            let lens: Vec<usize> = p.candidates.iter().map(|c| c.len()).collect();
+            let min = *lens.iter().min().unwrap();
+            let max = *lens.iter().max().unwrap();
+            assert!(max > min, "lengths should differ: {lens:?}");
+        }
+        assert!(TaskKind::HellaSwag.length_normalized());
+        assert!(!TaskKind::ArcEasy.length_normalized());
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = corpus();
+        for kind in TaskKind::all() {
+            let suite = TaskSuite::generate(kind, &c, 10, 16, 6);
+            for p in &suite.probes {
+                for &t in p.prompt.iter().chain(p.candidates.iter().flatten()) {
+                    assert!((0..128).contains(&t));
+                }
+            }
+        }
+    }
+}

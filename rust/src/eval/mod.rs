@@ -1,0 +1,195 @@
+//! Evaluation harness: perplexity, last-hidden cosine similarity, and
+//! zero-shot probe accuracy — the three metric families of Tables 3/4/5.
+//!
+//! All metrics run through the `lm_fwd` / `lm_fwd_aq` artifacts, which
+//! return per-position NLL (for PPL and likelihood scoring) and the last
+//! hidden state (for cosine). Quantized models are evaluated W4A4
+//! (activation fake-quant in-graph) unless configured otherwise.
+
+use anyhow::Result;
+
+use crate::data::{batcher::Split, tasks::TaskSuite, Batcher, Corpus};
+use crate::runtime::{Runtime, Value};
+use crate::train::ParamStore;
+use crate::util::stats;
+
+/// Which forward graph to use for a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdMode {
+    /// full-precision reference (no activation quant)
+    Fp,
+    /// W4A4: weights are already fake-quantized tensors; activations are
+    /// RTN-quantized inside the graph
+    ActQuant,
+}
+
+impl FwdMode {
+    fn artifact(&self) -> &'static str {
+        match self {
+            FwdMode::Fp => "lm_fwd",
+            FwdMode::ActQuant => "lm_fwd_aq",
+        }
+    }
+}
+
+/// Run one forward batch; returns (nll [B*T], last_hidden flat).
+fn fwd_batch(
+    rt: &Runtime,
+    params: &ParamStore,
+    tokens: Value,
+    mode: FwdMode,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut args = params.values();
+    args.push(tokens);
+    let out = rt.exec(mode.artifact(), &args)?;
+    let nll = out[0].as_tensor()?.data.clone();
+    let hid = out[1].as_tensor()?.data.clone();
+    Ok((nll, hid))
+}
+
+/// Word perplexity over `n_batches` eval batches: exp(mean NLL).
+pub fn perplexity(
+    rt: &Runtime,
+    params: &ParamStore,
+    corpus: &Corpus,
+    mode: FwdMode,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = rt.config();
+    let batcher = Batcher::new(corpus, Split::Eval, cfg.eval_batch, cfg.seq_len + 1, seed);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..n_batches {
+        let (nll, _) = fwd_batch(rt, params, batcher.batch_at(b), mode)?;
+        total += nll.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.len();
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Mean cosine similarity between last hidden states of a model and the
+/// full-precision reference, over eval batches (Table 4, reported in %).
+pub fn hidden_cosine(
+    rt: &Runtime,
+    fp_params: &ParamStore,
+    q_params: &ParamStore,
+    corpus: &Corpus,
+    q_mode: FwdMode,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = rt.config();
+    let batcher = Batcher::new(corpus, Split::Eval, cfg.eval_batch, cfg.seq_len + 1, seed);
+    let mut cs = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let tokens = batcher.batch_at(b);
+        let (_, h_fp) = fwd_batch(rt, fp_params, tokens.clone(), FwdMode::Fp)?;
+        let (_, h_q) = fwd_batch(rt, q_params, tokens, q_mode)?;
+        cs.push(stats::cosine(&h_fp, &h_q));
+    }
+    Ok(stats::mean(&cs))
+}
+
+/// Zero-shot accuracy on a probe suite (LM-harness scoring).
+///
+/// Every (probe, candidate) pair becomes one row: prompt ++ candidate,
+/// padded to the graph's fixed sequence length; the candidate's
+/// log-likelihood is the summed -NLL over its token positions.
+pub fn task_accuracy(
+    rt: &Runtime,
+    params: &ParamStore,
+    suite: &TaskSuite,
+    mode: FwdMode,
+) -> Result<f64> {
+    let cfg = rt.config();
+    let t_plus1 = cfg.seq_len + 1;
+    let b = cfg.eval_batch;
+
+    // flatten (probe, candidate) pairs into rows
+    struct RowRef {
+        probe: usize,
+        cand: usize,
+        start: usize, // first candidate token index within the row
+        len: usize,
+    }
+    let mut rows: Vec<(Vec<i32>, RowRef)> = vec![];
+    for (pi, probe) in suite.probes.iter().enumerate() {
+        for (ci, cand) in probe.candidates.iter().enumerate() {
+            let mut seq = probe.prompt.clone();
+            let start = seq.len();
+            seq.extend_from_slice(cand);
+            assert!(
+                seq.len() <= t_plus1,
+                "probe sequence {} exceeds context {}",
+                seq.len(),
+                t_plus1
+            );
+            seq.resize(t_plus1, 0);
+            rows.push((seq, RowRef { probe: pi, cand: ci, start, len: cand.len() }));
+        }
+    }
+
+    // score rows batch by batch
+    let mut scores: Vec<Vec<f64>> =
+        suite.probes.iter().map(|p| vec![0.0; p.candidates.len()]).collect();
+    for chunk in rows.chunks(b) {
+        let mut data = Vec::with_capacity(b * t_plus1);
+        for (seq, _) in chunk {
+            data.extend_from_slice(seq);
+        }
+        // pad the batch with copies of the first row (ignored)
+        for _ in chunk.len()..b {
+            data.extend_from_slice(&chunk[0].0);
+        }
+        let tokens = Value::I32(data, vec![b, t_plus1]);
+        let (nll, _) = fwd_batch(rt, params, tokens, mode)?;
+        let t = t_plus1 - 1; // nll row length
+        for (ri, (_, rref)) in chunk.iter().enumerate() {
+            // candidate token j sits at sequence index start+j; its NLL is
+            // predicted at position start+j-1
+            let mut ll = 0.0f64;
+            for j in 0..rref.len {
+                ll -= nll[ri * t + rref.start + j - 1] as f64;
+            }
+            if suite.kind.length_normalized() {
+                ll /= rref.len as f64;
+            }
+            scores[rref.probe][rref.cand] = ll;
+        }
+    }
+
+    let mut correct = 0usize;
+    for (p, s) in suite.probes.iter().zip(&scores) {
+        let best = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == p.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / suite.probes.len() as f64)
+}
+
+/// Full metric row for one (model, corpus): PPL + cosine vs reference.
+pub struct LmMetrics {
+    pub ppl: f64,
+    pub cosine_pct: f64,
+}
+
+pub fn lm_metrics(
+    rt: &Runtime,
+    fp_params: &ParamStore,
+    q_params: &ParamStore,
+    corpus: &Corpus,
+    q_mode: FwdMode,
+    n_batches: usize,
+    seed: u64,
+) -> Result<LmMetrics> {
+    let ppl = perplexity(rt, q_params, corpus, q_mode, n_batches, seed)?;
+    let cos = hidden_cosine(rt, fp_params, q_params, corpus, q_mode, n_batches, seed)?;
+    Ok(LmMetrics { ppl, cosine_pct: cos * 100.0 })
+}

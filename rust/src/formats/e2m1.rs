@@ -1,0 +1,206 @@
+//! Software FP4 E2M1 codec — the NVFP4 element type.
+//!
+//! Layout: 1 sign, 2 exponent, 1 mantissa. 16 codes decoding to
+//! ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}. No NaN/Inf. Two zeros (±0).
+//!
+//! `encode_rtn` rounds to the nearest node with **ties toward the lower
+//! node** — the project-wide tie rule shared with python (ref.py) and the
+//! rust quantizers (DESIGN.md §7).
+
+/// Positive node values indexed by the 3 magnitude bits (exp<<1 | man).
+pub const NODES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+pub const FP4_MAX: f32 = 6.0;
+
+/// Decode a 4-bit code (low nibble) to f32.
+pub fn decode(code: u8) -> f32 {
+    let mag = NODES[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Index of the largest node <= wt (wt >= 0, clamped to the grid).
+pub fn lower_idx(wt: f32) -> usize {
+    if wt >= 6.0 {
+        7
+    } else if wt >= 4.0 {
+        6
+    } else if wt >= 3.0 {
+        5
+    } else if wt >= 2.0 {
+        4
+    } else if wt >= 1.5 {
+        3
+    } else if wt >= 1.0 {
+        2
+    } else if wt >= 0.5 {
+        1
+    } else {
+        0
+    }
+}
+
+/// Index of the smallest node >= wt (wt in [0, 6]).
+pub fn upper_idx(wt: f32) -> usize {
+    if wt <= 0.0 {
+        0
+    } else if wt <= 0.5 {
+        1
+    } else if wt <= 1.0 {
+        2
+    } else if wt <= 1.5 {
+        3
+    } else if wt <= 2.0 {
+        4
+    } else if wt <= 3.0 {
+        5
+    } else if wt <= 4.0 {
+        6
+    } else {
+        7
+    }
+}
+
+/// (lower, upper) nodes enclosing the normalized magnitude.
+pub fn interval(wt: f32) -> (f32, f32) {
+    let wt = wt.clamp(0.0, FP4_MAX);
+    (NODES[lower_idx(wt)], NODES[upper_idx(wt)])
+}
+
+/// Encode a normalized value (already divided by scales) to the nearest
+/// node, ties toward lower. Returns the 4-bit code.
+pub fn encode_rtn(x: f32) -> u8 {
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let wt = x.abs().min(FP4_MAX);
+    let (li, ui) = (lower_idx(wt), upper_idx(wt));
+    let (lo, up) = (NODES[li], NODES[ui]);
+    let idx = if wt - lo > up - wt { ui } else { li };
+    sign | idx as u8
+}
+
+/// Encode picking lower (`v = 0`) or upper (`v = 1`) explicitly — the
+/// hardened FAAR decision path.
+pub fn encode_choice(x: f32, pick_upper: bool) -> u8 {
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let wt = x.abs().min(FP4_MAX);
+    let idx = if pick_upper { upper_idx(wt) } else { lower_idx(wt) };
+    sign | idx as u8
+}
+
+/// Pack a slice of 4-bit codes, two per byte (low nibble first).
+pub fn pack(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = pair[0] & 0x0F;
+        let hi = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` 4-bit codes from packed bytes.
+pub fn unpack(bytes: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in bytes.iter().enumerate() {
+        out.push(b & 0x0F);
+        if 2 * i + 1 < n {
+            out.push(b >> 4);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_all_codes() {
+        let expect = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        for i in 0..8 {
+            assert_eq!(decode(i), expect[i as usize]);
+            assert_eq!(decode(i | 0x8), -expect[i as usize]);
+        }
+    }
+
+    #[test]
+    fn encode_exact_nodes() {
+        for (i, &n) in NODES.iter().enumerate() {
+            assert_eq!(encode_rtn(n) as usize, i);
+            if n > 0.0 {
+                assert_eq!(encode_rtn(-n) as usize, i | 0x8);
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_ties_to_lower() {
+        for w in [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0] {
+            let code = encode_rtn(w);
+            let (lo, _) = interval(w);
+            assert_eq!(decode(code), lo, "tie at {w} must go down");
+        }
+    }
+
+    #[test]
+    fn rtn_nearest_otherwise() {
+        assert_eq!(decode(encode_rtn(0.26)), 0.5);
+        assert_eq!(decode(encode_rtn(0.24)), 0.0);
+        assert_eq!(decode(encode_rtn(5.1)), 6.0);
+        assert_eq!(decode(encode_rtn(4.9)), 4.0);
+        assert_eq!(decode(encode_rtn(-2.6)), -3.0);
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(decode(encode_rtn(100.0)), 6.0);
+        assert_eq!(decode(encode_rtn(-100.0)), -6.0);
+    }
+
+    #[test]
+    fn interval_encloses() {
+        let mut wt = 0.0f32;
+        while wt <= 6.0 {
+            let (lo, up) = interval(wt);
+            assert!(lo <= wt && wt <= up, "wt={wt} lo={lo} up={up}");
+            wt += 0.01;
+        }
+    }
+
+    #[test]
+    fn interval_degenerate_at_nodes() {
+        for &n in &NODES {
+            assert_eq!(interval(n), (n, n));
+        }
+    }
+
+    #[test]
+    fn encode_choice_paths() {
+        assert_eq!(decode(encode_choice(0.7, false)), 0.5);
+        assert_eq!(decode(encode_choice(0.7, true)), 1.0);
+        assert_eq!(decode(encode_choice(-0.7, true)), -1.0);
+        // at a node, both choices agree
+        assert_eq!(decode(encode_choice(2.0, true)), 2.0);
+        assert_eq!(decode(encode_choice(2.0, false)), 2.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..31).map(|i| (i % 16) as u8).collect();
+        let packed = pack(&codes);
+        assert_eq!(packed.len(), 16);
+        assert_eq!(unpack(&packed, 31), codes);
+        // even count
+        let codes2: Vec<u8> = (0..16).map(|i| i as u8).collect();
+        assert_eq!(unpack(&pack(&codes2), 16), codes2);
+        // empty
+        assert!(pack(&[]).is_empty());
+        assert!(unpack(&[], 0).is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Software FP8 E4M3 (OCP "e4m3fn") codec.
+//!
+//! Layout: 1 sign, 4 exponent (bias 7), 3 mantissa. No infinities; the
+//! all-ones code (S.1111.111) is NaN; max finite = ±448; subnormal step
+//! 2^-9. Encoding uses round-to-nearest-even to match `ml_dtypes` /
+//! `jnp.float8_e4m3fn` bit-for-bit (verified by the parity tests against
+//! the AOT `prepare_*` artifacts, which embed jax's own conversion).
+
+pub const E4M3_MAX: f32 = 448.0;
+pub const E4M3_NAN: u8 = 0x7F;
+
+/// Decode one E4M3 byte to f32 (exact — every finite code is an f32).
+pub fn decode(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((code >> 3) & 0x0F) as i32;
+    let man = (code & 0x07) as i32;
+    if exp == 0x0F && man == 0x07 {
+        return f32::NAN;
+    }
+    if exp == 0 {
+        // subnormal: m/8 * 2^-6
+        sign * (man as f32) * (1.0 / 8.0) * 2.0f32.powi(-6)
+    } else {
+        sign * (1.0 + man as f32 / 8.0) * 2.0f32.powi(exp - 7)
+    }
+}
+
+/// Encode f32 to the nearest E4M3 code (round-to-nearest-even).
+///
+/// Overflow semantics match ml_dtypes: |x| >= 464 (the midpoint above the
+/// max finite) becomes NaN; 448 < |x| < 464 rounds down to ±448.
+pub fn encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return E4M3_NAN;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign; // ±0
+    }
+    if a >= 464.0 {
+        return sign | E4M3_NAN;
+    }
+    // Quantize in exact f64 arithmetic: pick the representable grid for
+    // a's binade, then round-half-even on the integer grid index.
+    let a64 = a as f64;
+    let e = a64.log2().floor() as i32;
+    // guard log2 boundary imprecision: ensure 2^e <= a < 2^(e+1)
+    let e = if 2f64.powi(e) > a64 { e - 1 } else if 2f64.powi(e + 1) <= a64 { e + 1 } else { e };
+    if e < -6 {
+        // subnormal range: grid step 2^-9
+        let q = rne(a64 / 2f64.powi(-9));
+        if q == 0 {
+            return sign; // underflow to zero
+        }
+        if q <= 7 {
+            return sign | q as u8;
+        }
+        // rounded up into the first normal binade
+        return sign | 0x08;
+    }
+    let e = e.min(8);
+    // normal: mantissa grid step 2^(e-3); index in [8, 16]
+    let q = rne(a64 / 2f64.powi(e - 3));
+    let (e, q) = if q >= 16 { (e + 1, 8) } else { (e, q) };
+    if e > 8 {
+        return sign | E4M3_NAN; // can't happen for a < 464, kept for safety
+    }
+    if e == 8 && q == 15 {
+        // 480 is not representable; nearest finite is 448
+        return sign | ((15u8) << 3) | 6;
+    }
+    let exp_bits = (e + 7) as u8;
+    let man_bits = (q - 8) as u8;
+    sign | (exp_bits << 3) | man_bits
+}
+
+/// f32 -> E4M3 -> f32 (the "effective value" the hardware sees).
+pub fn roundtrip(x: f32) -> f32 {
+    decode(encode(x))
+}
+
+/// Round-half-even to u64 for non-negative x.
+fn rne(x: f64) -> u64 {
+    let f = x.floor();
+    let frac = x - f;
+    let base = f as u64;
+    if frac > 0.5 {
+        base + 1
+    } else if frac < 0.5 {
+        base
+    } else if base % 2 == 0 {
+        base
+    } else {
+        base + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_known_codes() {
+        assert_eq!(decode(0x00), 0.0);
+        assert!(decode(0x80) == 0.0 && decode(0x80).is_sign_negative());
+        assert_eq!(decode(0x38), 1.0); // e=7, m=0
+        assert_eq!(decode(0x3C), 1.5);
+        assert_eq!(decode(0x7E), 448.0); // max finite
+        assert_eq!(decode(0x01), 2.0f32.powi(-9)); // min subnormal
+        assert_eq!(decode(0x08), 2.0f32.powi(-6)); // min normal
+        assert!(decode(0x7F).is_nan());
+        assert!(decode(0xFF).is_nan());
+        assert_eq!(decode(0xBC), -1.5);
+    }
+
+    #[test]
+    fn all_finite_codes_roundtrip() {
+        for code in 0u16..=255 {
+            let code = code as u8;
+            let v = decode(code);
+            if v.is_nan() {
+                continue;
+            }
+            let back = encode(v);
+            // -0 encodes to 0x80; +0 to 0x00; otherwise exact
+            assert_eq!(
+                decode(back), v,
+                "code {code:#04x} -> {v} -> {back:#04x}"
+            );
+        }
+    }
+
+    #[test]
+    fn rne_behaviour() {
+        // 1.0625 is halfway between 1.0 (m=0, even) and 1.125 (m=1, odd)
+        assert_eq!(roundtrip(1.0625), 1.0);
+        // 1.1875 is halfway between 1.125 (odd) and 1.25 (even)
+        assert_eq!(roundtrip(1.1875), 1.25);
+        assert_eq!(roundtrip(1.1), 1.125);
+    }
+
+    #[test]
+    fn overflow_rules() {
+        assert_eq!(roundtrip(448.0), 448.0);
+        assert_eq!(roundtrip(455.0), 448.0);
+        assert_eq!(roundtrip(463.9), 448.0);
+        assert!(roundtrip(464.0).is_nan());
+        assert!(roundtrip(1e30).is_nan());
+        assert_eq!(roundtrip(-450.0), -448.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        let step = 2.0f32.powi(-9);
+        assert_eq!(roundtrip(step), step);
+        assert_eq!(roundtrip(3.0 * step), 3.0 * step);
+        assert_eq!(roundtrip(0.4 * step), 0.0);
+        assert_eq!(roundtrip(0.6 * step), step);
+        // halfway between 0 and step -> even (0)
+        assert_eq!(roundtrip(0.5 * step), 0.0);
+        // halfway between step and 2*step -> even (2*step)
+        assert_eq!(roundtrip(1.5 * step), 2.0 * step);
+        // subnormal rounds up into first normal
+        let min_normal = 2.0f32.powi(-6);
+        assert_eq!(roundtrip(min_normal - 0.01 * step), min_normal);
+    }
+
+    #[test]
+    fn monotone_on_positives() {
+        // encoding is monotone: decode(encode(x)) is non-decreasing in x
+        let mut prev = 0.0f32;
+        let mut x = 1e-10f32;
+        while x < 500.0 {
+            let r = roundtrip(x);
+            if !r.is_nan() {
+                assert!(r >= prev, "x={x} r={r} prev={prev}");
+                prev = r;
+            }
+            x *= 1.01;
+        }
+    }
+
+    #[test]
+    fn error_within_half_ulp() {
+        let mut x = 0.001f32;
+        while x < 448.0 {
+            let r = roundtrip(x);
+            let e = x.log2().floor() as i32;
+            let ulp = if e < -6 { 2.0f32.powi(-9) } else { 2.0f32.powi(e - 3) };
+            assert!((r - x).abs() <= ulp / 2.0 + 1e-12, "x={x} r={r} ulp={ulp}");
+            x *= 1.37;
+        }
+    }
+}

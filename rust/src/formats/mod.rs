@@ -1,0 +1,16 @@
+//! Software codecs for the NVFP4 format family.
+//!
+//! * [`e4m3`] — FP8 E4M3 (block-scale storage type)
+//! * [`e2m1`] — FP4 E2M1 (element type; the non-uniform node grid the
+//!   paper's whole argument is about)
+//! * [`nvfp4`] — the two-level block format: pack/unpack, prepare
+//!   (FindInterval + v_init), RTN/hard quantization
+
+pub mod e2m1;
+pub mod e4m3;
+pub mod mxfp4;
+pub mod nvfp4;
+
+pub use e2m1::{FP4_MAX, NODES};
+pub use e4m3::E4M3_MAX;
+pub use nvfp4::{prepare, standard_scales, PackedTensor, Prepared, BLOCK};

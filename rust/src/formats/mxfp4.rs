@@ -1,0 +1,178 @@
+//! MXFP4 (OCP Microscaling) codec — the format the paper's related work
+//! compares NVFP4 against ([21], MR-GPTQ's other target).
+//!
+//! Same E2M1 element grid as NVFP4, but:
+//!   * blocks of **32** elements (vs 16),
+//!   * block scales are **E8M0** (power-of-two only, 8-bit biased
+//!     exponent) instead of FP8-E4M3 — no mantissa, so the scale itself
+//!     quantizes much more coarsely,
+//!   * no FP32 global scale.
+//!
+//! Exposed for the format-ablation experiment (`faar eval
+//! --scale-method ...` comparisons and the `formats_ablation` harness):
+//! it demonstrates *why* the paper targets NVFP4 — finer scale
+//! granularity halves the block-quantization error for LLM-like weight
+//! distributions.
+
+use crate::formats::e2m1;
+use crate::tensor::Tensor;
+
+pub const BLOCK: usize = 32;
+
+/// Encode a positive raw scale to E8M0: the nearest power of two that
+/// does not clip the block (ceil of log2), clamped to the E8M0 range
+/// [2^-127, 2^127]. Returns (byte, decoded scale).
+pub fn e8m0_encode_ceil(raw: f32) -> (u8, f32) {
+    if raw <= 0.0 || !raw.is_finite() {
+        // zero block: smallest scale, decodes fine since elements are 0
+        return (0, 2.0f32.powi(-127));
+    }
+    let e = raw.log2().ceil();
+    // guard numeric boundary: 2^(e-1) >= raw means e overshot by one
+    let mut e = e as i32;
+    if 2.0f32.powi(e - 1) >= raw {
+        e -= 1;
+    }
+    let e = e.clamp(-127, 127);
+    ((e + 127) as u8, 2.0f32.powi(e))
+}
+
+pub fn e8m0_decode(byte: u8) -> f32 {
+    2.0f32.powi(byte as i32 - 127)
+}
+
+/// Elementwise effective MXFP4 scales for `w[..., K, N]` (blocks of 32
+/// along K, per column). Mirrors `nvfp4::standard_scales`' layout so the
+/// two formats drop into the same quantizers.
+pub fn mxfp4_scales(w: &Tensor) -> Tensor {
+    let (k, n) = w.mat_dims().expect("rank >= 2");
+    assert_eq!(k % BLOCK, 0, "K={k} not a multiple of {BLOCK}");
+    let lead = w.lead();
+    let slice_len = k * n;
+    let mut scale = vec![0.0f32; w.numel()];
+    for l in 0..lead {
+        let ws = &w.data[l * slice_len..(l + 1) * slice_len];
+        let out = &mut scale[l * slice_len..(l + 1) * slice_len];
+        for kb in 0..k / BLOCK {
+            for col in 0..n {
+                let mut amax = 0.0f32;
+                for r in 0..BLOCK {
+                    amax = amax.max(ws[(kb * BLOCK + r) * n + col].abs());
+                }
+                let raw = amax / e2m1::FP4_MAX;
+                let (_, s) = e8m0_encode_ceil(raw);
+                let s = if amax == 0.0 { 0.0 } else { s };
+                for r in 0..BLOCK {
+                    out[(kb * BLOCK + r) * n + col] = s;
+                }
+            }
+        }
+    }
+    Tensor::new(scale, w.shape.clone())
+}
+
+/// RTN fake-quant in MXFP4 (for the format-ablation comparison).
+pub fn mxfp4_rtn_quant(w: &Tensor) -> Tensor {
+    let scale = mxfp4_scales(w);
+    let mut out = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let s = scale.data[i];
+        if s > 0.0 {
+            let wt = (w.data[i].abs() / s).min(e2m1::FP4_MAX);
+            out[i] = crate::formats::nvfp4::sign(w.data[i])
+                * e2m1::decode(e2m1::encode_rtn(wt))
+                * s;
+        }
+    }
+    Tensor::new(out, w.shape.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::nvfp4;
+    use crate::util::{rng::Rng, stats};
+
+    fn rand_w(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, 0.05);
+        t
+    }
+
+    #[test]
+    fn e8m0_powers_of_two() {
+        for e in [-10i32, -1, 0, 1, 7] {
+            let v = 2.0f32.powi(e);
+            let (byte, dec) = e8m0_encode_ceil(v);
+            assert_eq!(dec, v, "exact power of two must round-trip");
+            assert_eq!(e8m0_decode(byte), v);
+        }
+    }
+
+    #[test]
+    fn e8m0_ceil_never_clips() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let raw = (rng.f32() + 1e-6) * 10.0;
+            let (_, s) = e8m0_encode_ceil(raw);
+            assert!(s >= raw * 0.9999, "scale {s} clips raw {raw}");
+            assert!(s < raw * 2.0001, "scale {s} over-covers raw {raw}");
+        }
+    }
+
+    #[test]
+    fn scales_block_structure_32() {
+        let w = rand_w(&[64, 8], 2);
+        let s = mxfp4_scales(&w);
+        for col in 0..8 {
+            for r in 1..32 {
+                assert_eq!(s.data[r * 8 + col], s.data[col]);
+            }
+            assert_eq!(s.data[(32 + 1) * 8 + col], s.data[32 * 8 + col]);
+        }
+        // all scales are powers of two
+        for &x in s.data.iter().filter(|x| **x > 0.0) {
+            assert_eq!(x.log2().fract(), 0.0, "{x} not a power of two");
+        }
+    }
+
+    #[test]
+    fn zero_block_safe() {
+        let w = Tensor::zeros(&[32, 4]);
+        let q = mxfp4_rtn_quant(&w);
+        assert!(q.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quantized_on_grid_and_bounded() {
+        let w = rand_w(&[64, 16], 3);
+        let q = mxfp4_rtn_quant(&w);
+        let s = mxfp4_scales(&w);
+        for i in 0..w.numel() {
+            if s.data[i] > 0.0 {
+                let wt = q.data[i].abs() / s.data[i];
+                let near = e2m1::NODES.iter().map(|&n| (wt - n).abs()).fold(f32::MAX, f32::min);
+                assert!(near < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn nvfp4_beats_mxfp4_on_gaussian_weights() {
+        // the ablation behind the paper's format choice: E4M3 block
+        // scales (16-elem) track local amax much tighter than power-of-
+        // two 32-elem scales → lower RTN MSE
+        let mut nv_wins = 0;
+        for seed in 0..8 {
+            let w = rand_w(&[128, 64], 10 + seed);
+            let p = nvfp4::prepare(&w);
+            let nv = stats::mse(&nvfp4::rtn_quant(&w, &p).data, &w.data);
+            let mx = stats::mse(&mxfp4_rtn_quant(&w).data, &w.data);
+            if nv < mx {
+                nv_wins += 1;
+            }
+        }
+        assert!(nv_wins >= 7, "NVFP4 only won {nv_wins}/8 trials");
+    }
+}

@@ -1,0 +1,433 @@
+//! NVFP4 block codec: two-level scaling + E2M1 elements, bit-faithful to
+//! the python oracle (`python/compile/kernels/ref.py`) and to what NVFP4
+//! hardware would consume.
+//!
+//! Layout for a weight tensor `[..., K, N]` (K = contraction axis):
+//!   * blocks of 16 consecutive K-elements per output column share one
+//!     FP8-E4M3 scale (stored relative to the global scale),
+//!   * one FP32 global scale per tensor (per leading slice for stacked
+//!     `[L, K, N]` weights),
+//!   * elements are 4-bit E2M1 codes packed two per byte.
+//!
+//! `prepare` reproduces ref.quant_prepare exactly (same f32 op order), so
+//! rust-side scale/interval math agrees with the AOT graphs — enforced by
+//! integration tests against the `prepare_*` artifacts.
+
+use anyhow::{bail, Result};
+
+use super::{e2m1, e4m3};
+use crate::tensor::Tensor;
+
+pub const BLOCK: usize = 16;
+
+/// Elementwise quantization context for FAAR / baselines:
+/// lower/upper nodes, effective scale, and the paper's v_init.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    pub lower: Tensor,
+    pub upper: Tensor,
+    pub scale: Tensor,
+    pub v_init: Tensor,
+    /// per leading-slice global scale
+    pub s_global: Vec<f32>,
+}
+
+/// Compute the effective elementwise scale tensor for `w[..., K, N]`
+/// given a per-(slice, block, column) raw scale chooser.
+///
+/// `raw_scale(slice, amax_block)` returns the *pre-E4M3* block scale; the
+/// default NVFP4 recipe is `amax / 6`. The 4/6 and strong-baseline
+/// methods pass different choosers (see quant/scaling.rs).
+pub fn effective_scales(
+    w: &Tensor,
+    raw_scale: impl Fn(usize, usize, usize, f32) -> f32,
+) -> (Tensor, Vec<f32>) {
+    let (k, n) = w.mat_dims().expect("weights must be rank >= 2");
+    assert_eq!(k % BLOCK, 0, "K={k} not a multiple of {BLOCK}");
+    let lead = w.lead();
+    let slice_len = k * n;
+    let mut scale = vec![0.0f32; w.numel()];
+    let mut s_globals = Vec::with_capacity(lead);
+
+    for l in 0..lead {
+        let ws = &w.data[l * slice_len..(l + 1) * slice_len];
+        let amax_tot = ws.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let s_g = (amax_tot / (e2m1::FP4_MAX * e4m3::E4M3_MAX)).max(1e-30);
+        s_globals.push(s_g);
+        let out = &mut scale[l * slice_len..(l + 1) * slice_len];
+        for kb in 0..k / BLOCK {
+            for col in 0..n {
+                let mut amax = 0.0f32;
+                for r in 0..BLOCK {
+                    amax = amax.max(ws[(kb * BLOCK + r) * n + col].abs());
+                }
+                let raw = raw_scale(l, kb, col, amax);
+                let s_eff = e4m3::roundtrip(raw / s_g) * s_g;
+                for r in 0..BLOCK {
+                    out[(kb * BLOCK + r) * n + col] = s_eff;
+                }
+            }
+        }
+    }
+    (Tensor::new(scale, w.shape.clone()), s_globals)
+}
+
+/// Standard NVFP4 scale recipe: `amax_block / 6`.
+pub fn standard_scales(w: &Tensor) -> (Tensor, Vec<f32>) {
+    effective_scales(w, |_, _, _, amax| amax / e2m1::FP4_MAX)
+}
+
+/// Full FAAR preparation from raw weights using given elementwise scales.
+pub fn prepare_with_scales(w: &Tensor, scale: Tensor, s_global: Vec<f32>) -> Prepared {
+    let mut lower = vec![0.0f32; w.numel()];
+    let mut upper = vec![0.0f32; w.numel()];
+    let mut v_init = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let s = scale.data[i];
+        let wt = if s > 0.0 {
+            (w.data[i].abs() / s.max(1e-30)).clamp(0.0, e2m1::FP4_MAX)
+        } else {
+            0.0
+        };
+        let (lo, up) = e2m1::interval(wt);
+        lower[i] = lo;
+        upper[i] = up;
+        let width = up - lo;
+        v_init[i] = if width > 0.0 { (wt - lo) / width.max(1e-30) } else { 0.5 };
+    }
+    Prepared {
+        lower: Tensor::new(lower, w.shape.clone()),
+        upper: Tensor::new(upper, w.shape.clone()),
+        scale,
+        v_init: Tensor::new(v_init, w.shape.clone()),
+        s_global,
+    }
+}
+
+/// Standard NVFP4 preparation (ref.quant_prepare equivalent).
+pub fn prepare(w: &Tensor) -> Prepared {
+    let (scale, s_global) = standard_scales(w);
+    prepare_with_scales(w, scale, s_global)
+}
+
+/// Dequantized weights for hardened binary decisions `v` (>= 0.5 → upper).
+pub fn hard_quant(w: &Tensor, p: &Prepared, v: &Tensor) -> Tensor {
+    assert_eq!(w.shape, v.shape);
+    let mut out = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let node = if v.data[i] >= 0.5 { p.upper.data[i] } else { p.lower.data[i] };
+        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+    }
+    Tensor::new(out, w.shape.clone())
+}
+
+/// Dequantized RTN weights (nearest node, ties → lower). Equivalent to
+/// hardening `v_init > 0.5`.
+pub fn rtn_quant(w: &Tensor, p: &Prepared) -> Tensor {
+    let mut out = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let up = p.v_init.data[i] > 0.5;
+        let node = if up { p.upper.data[i] } else { p.lower.data[i] };
+        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+    }
+    Tensor::new(out, w.shape.clone())
+}
+
+#[inline]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed on-disk representation (deployable NVFP4 payload)
+
+/// A tensor in true packed NVFP4: 4-bit codes + E4M3 block scales + FP32
+/// global scale(s). This is the artifact `faar quantize` writes to disk —
+/// 4.25 bits/weight + one f32 per slice, exactly what NVFP4 hardware
+/// would consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    pub shape: Vec<usize>,
+    /// packed E2M1 codes, two per byte, row-major
+    pub codes: Vec<u8>,
+    /// E4M3-encoded block scales, [lead, K/16, N] row-major
+    pub scales: Vec<u8>,
+    /// per leading-slice FP32 global scale
+    pub s_global: Vec<f32>,
+}
+
+impl PackedTensor {
+    /// Pack from raw weights + prepared context + (possibly learned)
+    /// binary decisions. `v` >= 0.5 picks the upper node.
+    pub fn pack(w: &Tensor, p: &Prepared, v: &Tensor) -> PackedTensor {
+        let (k, n) = w.mat_dims().unwrap();
+        let lead = w.lead();
+        let slice_len = k * n;
+        let mut codes4 = Vec::with_capacity(w.numel());
+        let mut scales = Vec::with_capacity(lead * (k / BLOCK) * n);
+        for l in 0..lead {
+            let s_g = p.s_global[l];
+            for kb in 0..k / BLOCK {
+                for col in 0..n {
+                    let s_eff = p.scale.data[l * slice_len + (kb * BLOCK) * n + col];
+                    scales.push(e4m3::encode(s_eff / s_g));
+                }
+            }
+        }
+        for i in 0..w.numel() {
+            let wt = if p.scale.data[i] > 0.0 {
+                (w.data[i].abs() / p.scale.data[i].max(1e-30)).clamp(0.0, e2m1::FP4_MAX)
+            } else {
+                0.0
+            };
+            let x = if w.data[i] < 0.0 { -wt } else { wt };
+            codes4.push(e2m1::encode_choice(x, v.data[i] >= 0.5));
+        }
+        PackedTensor {
+            shape: w.shape.clone(),
+            codes: e2m1::pack(&codes4),
+            scales,
+            s_global: p.s_global.clone(),
+        }
+    }
+
+    /// Dequantize to f32 (what the PJRT graphs consume).
+    pub fn unpack(&self) -> Tensor {
+        let t = Tensor::zeros(&self.shape);
+        let (k, n) = t.mat_dims().unwrap();
+        let lead = t.lead();
+        let slice_len = k * n;
+        let codes = e2m1::unpack(&self.codes, lead * slice_len);
+        let mut data = vec![0.0f32; lead * slice_len];
+        let sc_cols = n;
+        let sc_rows = k / BLOCK;
+        for l in 0..lead {
+            let s_g = self.s_global[l];
+            for row in 0..k {
+                let kb = row / BLOCK;
+                for col in 0..n {
+                    let idx = l * slice_len + row * n + col;
+                    let s_eff =
+                        e4m3::decode(self.scales[l * sc_rows * sc_cols + kb * sc_cols + col]) * s_g;
+                    data[idx] = e2m1::decode(codes[idx]) * s_eff;
+                }
+            }
+        }
+        Tensor::new(data, self.shape.clone())
+    }
+
+    /// Payload bytes (codes + scales + globals) — the memory-footprint
+    /// number reported in EXPERIMENTS.md.
+    pub fn payload_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + self.s_global.len() * 4
+    }
+
+    /// Serialize to the `.nvfp4` container: magic, rank, dims, globals,
+    /// scales, codes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.payload_bytes() + 64);
+        buf.extend_from_slice(b"NVF4");
+        buf.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.s_global.len() as u32).to_le_bytes());
+        for &g in &self.s_global {
+            buf.extend_from_slice(&g.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.scales.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&self.scales);
+        buf.extend_from_slice(&(self.codes.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&self.codes);
+        buf
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<PackedTensor> {
+        if buf.len() < 8 || &buf[..4] != b"NVF4" {
+            bail!("not an NVF4 payload");
+        }
+        let mut off = 4;
+        let rd_u32 = |o: &mut usize| -> Result<u32> {
+            let v = u32::from_le_bytes(buf[*o..*o + 4].try_into()?);
+            *o += 4;
+            Ok(v)
+        };
+        let rd_u64 = |o: &mut usize| -> Result<u64> {
+            let v = u64::from_le_bytes(buf[*o..*o + 8].try_into()?);
+            *o += 8;
+            Ok(v)
+        };
+        let rank = rd_u32(&mut off)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(rd_u64(&mut off)? as usize);
+        }
+        let ng = rd_u32(&mut off)? as usize;
+        let mut s_global = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            s_global.push(f32::from_le_bytes(buf[off..off + 4].try_into()?));
+            off += 4;
+        }
+        let ns = rd_u64(&mut off)? as usize;
+        let scales = buf[off..off + ns].to_vec();
+        off += ns;
+        let nc = rd_u64(&mut off)? as usize;
+        if buf.len() < off + nc {
+            bail!("truncated NVF4 payload");
+        }
+        let codes = buf[off..off + nc].to_vec();
+        Ok(PackedTensor { shape, codes, scales, s_global })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(shape: &[usize], seed: u64, std: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, std);
+        t
+    }
+
+    #[test]
+    fn prepare_invariants() {
+        let w = rand_w(&[64, 32], 1, 0.05);
+        let p = prepare(&w);
+        for i in 0..w.numel() {
+            assert!(p.lower.data[i] <= p.upper.data[i]);
+            assert!((0.0..=1.0).contains(&p.v_init.data[i]), "v_init oob");
+            assert!(p.scale.data[i] >= 0.0);
+            assert!(e2m1::NODES.contains(&p.lower.data[i]));
+            assert!(e2m1::NODES.contains(&p.upper.data[i]));
+        }
+    }
+
+    #[test]
+    fn scale_block_structure() {
+        let w = rand_w(&[32, 8], 2, 0.1);
+        let (s, sg) = standard_scales(&w);
+        assert_eq!(sg.len(), 1);
+        // constant within a 16-block per column
+        for col in 0..8 {
+            for r in 1..16 {
+                assert_eq!(s.data[r * 8 + col], s.data[col]);
+                assert_eq!(s.data[(16 + r) * 8 + col], s.data[16 * 8 + col]);
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_slices_independent_globals() {
+        let mut w = rand_w(&[2, 32, 8], 3, 0.05);
+        // second slice much larger magnitudes
+        for x in &mut w.data[32 * 8..] {
+            *x *= 100.0;
+        }
+        let p = prepare(&w);
+        assert_eq!(p.s_global.len(), 2);
+        assert!(p.s_global[1] > p.s_global[0] * 50.0);
+    }
+
+    #[test]
+    fn zero_block_safe() {
+        let mut w = rand_w(&[32, 4], 4, 0.05);
+        for col in 0..4 {
+            for r in 0..16 {
+                w.data[r * 4 + col] = 0.0;
+            }
+        }
+        let p = prepare(&w);
+        for col in 0..4 {
+            assert_eq!(p.scale.data[col], 0.0);
+            assert_eq!(p.v_init.data[col], 0.5); // degenerate interval
+        }
+        let q = rtn_quant(&w, &p);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rtn_equals_hard_of_vinit_threshold() {
+        let w = rand_w(&[64, 16], 5, 0.05);
+        let p = prepare(&w);
+        let v_rtn = p.v_init.map(|v| if v > 0.5 { 1.0 } else { 0.0 });
+        let a = rtn_quant(&w, &p);
+        let b = hard_quant(&w, &p, &v_rtn);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn hard_quant_on_grid() {
+        let w = rand_w(&[64, 16], 6, 0.2);
+        let p = prepare(&w);
+        let q = hard_quant(&w, &p, &p.v_init);
+        for i in 0..q.numel() {
+            if p.scale.data[i] > 0.0 {
+                let wt = q.data[i].abs() / p.scale.data[i];
+                let nearest =
+                    e2m1::NODES.iter().map(|&n| (wt - n).abs()).fold(f32::INFINITY, f32::min);
+                assert!(nearest < 1e-4, "off grid: {wt}");
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_minimizes_elementwise_error() {
+        let w = rand_w(&[64, 16], 7, 0.1);
+        let p = prepare(&w);
+        let q_rtn = rtn_quant(&w, &p);
+        let q_lo = hard_quant(&w, &p, &Tensor::zeros(&w.shape));
+        let q_up = hard_quant(&w, &p, &Tensor::full(&w.shape, 1.0));
+        for i in 0..w.numel() {
+            let e = (q_rtn.data[i] - w.data[i]).abs();
+            assert!(e <= (q_lo.data[i] - w.data[i]).abs() + 1e-6);
+            assert!(e <= (q_up.data[i] - w.data[i]).abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_matches_hard_quant() {
+        let w = rand_w(&[2, 32, 16], 8, 0.05);
+        let p = prepare(&w);
+        let v = p.v_init.map(|v| if v >= 0.5 { 1.0 } else { 0.0 });
+        let packed = PackedTensor::pack(&w, &p, &v);
+        let deq = packed.unpack();
+        let expect = hard_quant(&w, &p, &v);
+        for i in 0..w.numel() {
+            assert!(
+                (deq.data[i] - expect.data[i]).abs() <= 1e-6 * expect.data[i].abs().max(1e-6),
+                "i={i}: {} vs {}",
+                deq.data[i],
+                expect.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let w = rand_w(&[32, 16], 9, 0.05);
+        let p = prepare(&w);
+        let packed = PackedTensor::pack(&w, &p, &p.v_init);
+        let back = PackedTensor::from_bytes(&packed.to_bytes()).unwrap();
+        assert_eq!(packed, back);
+        assert!(PackedTensor::from_bytes(b"junk").is_err());
+    }
+
+    #[test]
+    fn payload_is_4_25_bits_per_weight() {
+        let w = rand_w(&[128, 64], 10, 0.05);
+        let p = prepare(&w);
+        let packed = PackedTensor::pack(&w, &p, &p.v_init);
+        let bits = packed.payload_bytes() as f64 * 8.0 / w.numel() as f64;
+        // 4 bits/code + 8 bits per 16-element block = 4.5 bits + f32 global
+        assert!((4.4..4.7).contains(&bits), "bits/weight = {bits}");
+    }
+}

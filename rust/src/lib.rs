@@ -1,0 +1,32 @@
+//! # nvfp4-faar
+//!
+//! Full-system reproduction of **"FAAR: Format-Aware Adaptive Rounding for
+//! NVFP4"** (Li Auto Inc., 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the runtime coordinator: config system, synthetic
+//!   data substrate, NVFP4 software codecs, GPTQ/RTN/4-6 baselines, the
+//!   FAAR + 2FA quantization pipeline, evaluation harness, table
+//!   reproduction, and a small inference server. Python never runs here.
+//! * **L2 (python/compile)** — JAX graphs (Llama-style decoder, pretrain /
+//!   stage-1 / stage-2 optimization steps) AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's
+//!   compute hot-spot (format-aware soft-quant), lowered into the same HLO.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod calib;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod formats;
+pub mod gptq;
+pub mod pipeline;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,274 @@
+//! `faar` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   pretrain   train the full-precision checkpoint for a model preset
+//!   quantize   run one quantization method end-to-end (writes .nvfp4)
+//!   eval       evaluate a method: PPL / cosine / zero-shot accuracy
+//!   tables     regenerate paper tables (t1, t3, t4, t5, t6, t7, t8, all)
+//!   figures    regenerate paper figures (f2)
+//!   serve      serve the quantized model over TCP (JSON lines)
+//!   info       print manifest / artifact info for a model preset
+//!
+//! Every subcommand accepts the config overrides documented in
+//! `config::PipelineConfig::apply_args` (--model, --stage1-steps, ...).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use nvfp4_faar::config::PipelineConfig;
+use nvfp4_faar::data::tasks::TaskKind;
+use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
+use nvfp4_faar::report::tables;
+use nvfp4_faar::runtime::Runtime;
+use nvfp4_faar::util::cli::Args;
+use nvfp4_faar::{info, util};
+
+const USAGE: &str = "\
+faar — FAAR/NVFP4 quantization framework (paper reproduction)
+
+USAGE: faar <subcommand> [options]
+
+  pretrain  --model tiny [--pretrain-steps N] [--seed S]
+  quantize  --model tiny --method faar+2fa [--stage1-steps N] ...
+  eval      --model tiny --method rtn[,gptq,...] [--tasks]
+  tables    --id t1|t3|t4|t5|t6|t7|t8|all [--model tiny] [--models tiny,small]
+  figures   --id f2
+  serve     --model tiny [--addr 127.0.0.1:7745] [--method faar+2fa]
+  info      --model tiny
+
+Common options: --artifacts DIR (default artifacts), --out DIR (default
+results), --seed N, plus every pipeline hyperparameter (see README).";
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    info!("done in {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["tasks", "pack", "help"])?;
+    if args.positional.is_empty() || args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let mut cfg = PipelineConfig::default();
+    cfg.apply_args(&args)?;
+
+    match args.subcommand()? {
+        "pretrain" => cmd_pretrain(cfg),
+        "quantize" => cmd_quantize(cfg, &args),
+        "eval" => cmd_eval(cfg, &args),
+        "tables" => cmd_tables(cfg, &args),
+        "figures" => cmd_figures(cfg, &args),
+        "serve" => cmd_serve(cfg, &args),
+        "info" => cmd_info(cfg),
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_pretrain(cfg: PipelineConfig) -> Result<()> {
+    // force re-train by removing any cached checkpoint
+    let ckpt = Workbench::ckpt_path(&cfg);
+    if ckpt.exists() {
+        std::fs::remove_file(&ckpt)?;
+    }
+    let wb = Workbench::open(cfg)?;
+    info!(
+        "checkpoint ready: {} ({} params)",
+        Workbench::ckpt_path(&wb.cfg).display(),
+        wb.fp.total_params()
+    );
+    Ok(())
+}
+
+fn cmd_quantize(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
+    let out_dir = PathBuf::from(&cfg.out_dir);
+    let wb = Workbench::open(cfg)?;
+    let outcome = wb.quantize(method)?;
+    info!("quantized with {} in {:.1}s", method.name(), outcome.wall_s);
+
+    if let Some(state) = &outcome.faar {
+        let dir = out_dir.join(format!("packed_{}_{}", wb.cfg.model, sanitize(&method.name())));
+        let bytes = pack_model(&wb.rt, &wb.fp, state, &dir)?;
+        let fp_bytes = wb.fp.total_params() * 4;
+        info!(
+            "packed NVFP4 payload: {:.2} MiB (fp32 {:.2} MiB, {:.1}x smaller) → {}",
+            bytes as f64 / (1 << 20) as f64,
+            fp_bytes as f64 / (1 << 20) as f64,
+            fp_bytes as f64 / bytes as f64,
+            dir.display()
+        );
+    }
+    let lm = wb.lm_metrics(&outcome, "wiki")?;
+    println!(
+        "{} on synthwiki: PPL {:.3}, hidden cosine {:.2}%",
+        method.name(),
+        lm.ppl,
+        lm.cosine_pct
+    );
+    Ok(())
+}
+
+fn cmd_eval(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let methods: Vec<Method> = args
+        .list_or("method", &["bf16", "rtn", "faar+2fa"])
+        .iter()
+        .map(|s| Method::parse(s))
+        .collect::<Result<_>>()?;
+    let with_tasks = args.flag("tasks");
+    let n_probes = args.usize_or("probes", 100)?;
+    let wb = Workbench::open(cfg)?;
+
+    println!(
+        "{:<18}{:>10}{:>10}{:>10}{:>10}",
+        "method", "wiki-ppl", "wiki-cos", "c4-ppl", "c4-cos"
+    );
+    for m in &methods {
+        let out = wb.quantize(*m)?;
+        let w = wb.lm_metrics(&out, "wiki")?;
+        let c = wb.lm_metrics(&out, "c4")?;
+        println!(
+            "{:<18}{:>10.3}{:>10.2}{:>10.3}{:>10.2}",
+            m.name(),
+            w.ppl,
+            w.cosine_pct,
+            c.ppl,
+            c.cosine_pct
+        );
+        if with_tasks {
+            for k in TaskKind::all() {
+                let acc = wb.task_accuracy(&out, k, n_probes)?;
+                println!("    {:<12} {:.2}%", k.name(), acc);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tables(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let id = args.str_or("id", "all");
+    let out_dir = PathBuf::from(&cfg.out_dir).join("tables");
+    let models = args.list_or("models", &[&cfg.model]);
+    let ids: Vec<&str> = id.split(',').map(|s| s.trim()).collect();
+    let run = |which: &str| ids.contains(&"all") || ids.contains(&which);
+
+    for model in &models {
+        let mut mcfg = cfg.clone();
+        mcfg.model = model.clone();
+        // sweep-heavy tables use the reduced schedule unless overridden
+        let wb = Workbench::open(mcfg)?;
+
+        if run("t1") {
+            let trials = args.usize_or("trials", 20)?;
+            tables::table1(&wb, trials)?.emit(&out_dir, &format!("table1_{model}"))?;
+        }
+        if run("t3") || run("t4") {
+            let (t3, t4) = tables::table3_4(&wb, &tables::main_methods())?;
+            if run("t3") {
+                t3.emit(&out_dir, &format!("table3_{model}"))?;
+            }
+            if run("t4") {
+                t4.emit(&out_dir, &format!("table4_{model}"))?;
+            }
+        }
+        if run("t5") {
+            let n_probes = args.usize_or("probes", 150)?;
+            let methods = [
+                Method::Bf16,
+                Method::Rtn,
+                Method::MrGptq,
+                Method::Gptq,
+                Method::GptqFourSix,
+                Method::Faar2fa,
+            ];
+            tables::table5(&wb, &methods, n_probes)?
+                .emit(&out_dir, &format!("table5_{model}"))?;
+        }
+        if run("t6") {
+            tables::table6(&wb)?.emit(&out_dir, &format!("table6_{model}"))?;
+        }
+        if run("t7") {
+            let cks = args.list_or("checkpoints", &["0", "50", "250", "1000"]);
+            let cks: Vec<usize> =
+                cks.iter().map(|s| s.parse()).collect::<std::result::Result<_, _>>()?;
+            tables::table7(&wb, &cks)?.emit(&out_dir, &format!("table7_{model}"))?;
+        }
+        if run("t8") {
+            let lrs = args.list_or("lrs", &["5e-5", "1e-4", "5e-4", "1e-3"]);
+            let lrs: Vec<f32> =
+                lrs.iter().map(|s| s.parse()).collect::<std::result::Result<_, _>>()?;
+            tables::table8(&wb, &lrs)?.emit(&out_dir, &format!("table8_{model}"))?;
+        }
+        // extension (not in the paper): NVFP4 vs MXFP4 format ablation
+        if ids.contains(&"fmt") {
+            tables::format_ablation(&wb)?.emit(&out_dir, &format!("format_{model}"))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let id = args.str_or("id", "f2");
+    if id == "f2" || id == "all" {
+        tables::figure2(&PathBuf::from(&cfg.out_dir).join("figures"))?;
+    } else {
+        bail!("unknown figure id '{id}' (have: f2)");
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7745");
+    let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
+    let max_conns = args.get("max-conns").map(|s| s.parse()).transpose()?;
+    let wb = Workbench::open(cfg)?;
+    let outcome = wb.quantize(method)?;
+    info!("model quantized with {}; starting server", method.name());
+    let gen = nvfp4_faar::serve::Generator::new(&wb.rt, outcome.params.clone());
+    gen.serve(&addr, max_conns)
+}
+
+fn cmd_info(cfg: PipelineConfig) -> Result<()> {
+    let rt = Runtime::load(Path::new(&cfg.artifact_root), &cfg.model)?;
+    let m = &rt.manifest;
+    let c = &m.config;
+    println!("model preset '{}'", c.name);
+    println!(
+        "  vocab {}  d_model {}  layers {}  heads {}  mlp {}  seq {}",
+        c.vocab, c.d_model, c.n_layers, c.n_heads, c.mlp_hidden, c.seq_len
+    );
+    let total: usize = m.weights.iter().map(|w| w.shape.iter().product::<usize>()).sum();
+    let qtotal: usize = m
+        .weights
+        .iter()
+        .filter(|w| w.quantized)
+        .map(|w| w.shape.iter().product::<usize>())
+        .sum();
+    println!(
+        "  params {} total, {} quantized ({:.1}%)",
+        total,
+        qtotal,
+        100.0 * qtotal as f64 / total as f64
+    );
+    println!("  artifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "    {:<24} {:>3} in / {:>3} out   {}",
+            name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    let _ = util::timed(|| ());
+    Ok(())
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect()
+}

@@ -1,0 +1,222 @@
+//! FAAR + 2FA: the learnable rounding optimization (paper §3.4–3.5).
+//!
+//! Stage 1 runs one job per (quantized linear, layer): the AOT
+//! `stage1_step_<K>x<N>` graph performs soft-quant (Pallas kernel) →
+//! reconstruction MSE + rounding regularizer → Adam-on-V → clip, all
+//! fused; rust supplies the captured activations, the β annealing
+//! schedule (log-linear 5→50), the λ_round warmup, and collects the loss
+//! trajectory.
+//!
+//! Stage 2 assembles the full quantized model (all 7 V stacks at once)
+//! and aligns it to the frozen fp model with KL(logits) + MSE(last
+//! hidden) through `stage2_step`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::calib::{fit_rows, Calibration};
+use crate::config::PipelineConfig;
+use crate::data::{batcher::Split, Batcher, Corpus};
+use crate::formats::nvfp4::Prepared;
+use crate::quant::scaling;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::train::ParamStore;
+
+/// Learned rounding state for all quantized linears.
+pub struct FaarState {
+    /// qlinear name → prepared context (stacked [L, K, N])
+    pub prepared: BTreeMap<String, Prepared>,
+    /// qlinear name → continuous rounding variables (stacked)
+    pub v: BTreeMap<String, Tensor>,
+    /// stage-1 per-job final losses, keyed "name[layer]"
+    pub stage1_losses: BTreeMap<String, f64>,
+    /// stage-2 loss trajectory (loss, kl, mse)
+    pub stage2_log: Vec<(f64, f64, f64)>,
+}
+
+/// Prepare the interval context for every quantized linear under the
+/// configured scale method and initialize V = v_init.
+pub fn prepare_all(rt: &Runtime, params: &ParamStore, cfg: &PipelineConfig) -> Result<FaarState> {
+    let mut prepared = BTreeMap::new();
+    let mut v = BTreeMap::new();
+    for q in &rt.manifest.qlinears {
+        let w = params.get(&q.name)?;
+        let (scale, s_global) = scaling::scales_for(w, cfg.scale_method);
+        let p = crate::formats::nvfp4::prepare_with_scales(w, scale, s_global);
+        v.insert(q.name.clone(), p.v_init.clone());
+        prepared.insert(q.name.clone(), p);
+    }
+    Ok(FaarState { prepared, v, stage1_losses: BTreeMap::new(), stage2_log: vec![] })
+}
+
+/// λ_round warmup: linear ramp over the first `frac` of the steps.
+fn lam_at(step: usize, total: usize, lam: f32, frac: f32) -> f32 {
+    let warm = ((total as f32) * frac).max(1.0);
+    lam * ((step as f32 + 1.0) / warm).min(1.0)
+}
+
+/// Stage 1: layer-wise adaptive rounding for every (qlinear, layer) job.
+pub fn stage1(
+    rt: &Runtime,
+    params: &ParamStore,
+    calib: &Calibration,
+    cfg: &PipelineConfig,
+    state: &mut FaarState,
+) -> Result<()> {
+    let model_cfg = rt.config().clone();
+    let steps = cfg.stage1_steps;
+    if steps == 0 {
+        return Ok(());
+    }
+    for q in rt.manifest.qlinears.clone() {
+        let artifact = format!("stage1_step_{}x{}", q.k, q.n);
+        let w_stacked = params.get(&q.name)?.clone();
+        let p = state.prepared[&q.name].clone();
+        let mut v_stacked = state.v[&q.name].clone();
+        let cap = calib.set(&q.capture)?;
+
+        for l in 0..model_cfg.n_layers {
+            let x = fit_rows(&cap.rows[l], model_cfg.stage1_rows);
+            let w = w_stacked.index0(l);
+            let lo = p.lower.index0(l);
+            let up = p.upper.index0(l);
+            let sc = p.scale.index0(l);
+            let mut v = v_stacked.index0(l);
+            let mut m = Tensor::zeros(&v.shape);
+            let mut a = Tensor::zeros(&v.shape);
+            let mut last_loss = f64::NAN;
+
+            for step in 0..steps {
+                let t = step as f32 / (steps.max(2) - 1) as f32;
+                let beta = cfg.beta.at(t);
+                let lam = lam_at(step, steps, cfg.lam_round, cfg.lam_warmup_frac);
+                let out = rt.exec(
+                    &artifact,
+                    &[
+                        Value::F32(x.clone()),
+                        Value::F32(w.clone()),
+                        Value::F32(lo.clone()),
+                        Value::F32(up.clone()),
+                        Value::F32(sc.clone()),
+                        Value::F32(v.clone()),
+                        Value::F32(m.clone()),
+                        Value::F32(a.clone()),
+                        Value::scalar_f32(step as f32 + 1.0),
+                        Value::scalar_f32(beta),
+                        Value::scalar_f32(cfg.stage1_lr),
+                        Value::scalar_f32(lam),
+                    ],
+                )?;
+                v = out[0].as_tensor()?.clone();
+                m = out[1].as_tensor()?.clone();
+                a = out[2].as_tensor()?.clone();
+                last_loss = out[3].as_f32_scalar()? as f64;
+                if !last_loss.is_finite() {
+                    bail!("stage1 diverged: {}[{l}] step {step}", q.name);
+                }
+            }
+            v_stacked.set_index0(l, &v);
+            state.stage1_losses.insert(format!("{}[{l}]", q.name), last_loss);
+            crate::debug!("stage1 {}[{l}] final loss {last_loss:.3e}", q.name);
+        }
+        state.v.insert(q.name.clone(), v_stacked);
+        crate::info!("stage1 done: {} ({} layers x {} steps)", q.name, model_cfg.n_layers, steps);
+    }
+    Ok(())
+}
+
+/// Stage 2: full-model alignment of all rounding variables jointly.
+pub fn stage2(
+    rt: &Runtime,
+    params: &ParamStore,
+    corpora: &[&Corpus],
+    cfg: &PipelineConfig,
+    state: &mut FaarState,
+) -> Result<()> {
+    let model_cfg = rt.config().clone();
+    let steps = cfg.stage2_steps;
+    if steps == 0 {
+        return Ok(());
+    }
+    let spec = rt.manifest.artifact("stage2_step")?.clone();
+    // qlinear order = manifest order (matches aot.py's model.QNAMES)
+    let qnames: Vec<String> = rt.manifest.qlinears.iter().map(|q| q.name.clone()).collect();
+    let nq = qnames.len();
+
+    let mut m: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut a: BTreeMap<String, Tensor> = BTreeMap::new();
+    for qn in &qnames {
+        m.insert(qn.clone(), Tensor::zeros(&state.v[qn].shape));
+        a.insert(qn.clone(), Tensor::zeros(&state.v[qn].shape));
+    }
+
+    // stage-2 data stream: calibration split of the corpus mixture,
+    // distinct seed space from the capture batches
+    let batchers: Vec<Batcher> = corpora
+        .iter()
+        .map(|c| {
+            Batcher::new(c, Split::Calib, model_cfg.stage2_batch, model_cfg.seq_len,
+                         cfg.seed ^ 0x5A5A)
+        })
+        .collect();
+
+    let weights = params.values();
+    for step in 0..steps {
+        let t = step as f32 / (steps.max(2) - 1) as f32;
+        let beta = cfg.beta.at(t);
+        let lam = lam_at(step, steps, cfg.lam_round, cfg.lam_warmup_frac);
+
+        let mut args = Vec::with_capacity(spec.inputs.len());
+        args.extend(weights.iter().cloned());
+        for qn in &qnames {
+            let p = &state.prepared[qn];
+            args.push(Value::F32(p.lower.clone()));
+            args.push(Value::F32(p.upper.clone()));
+            args.push(Value::F32(p.scale.clone()));
+            args.push(Value::F32(state.v[qn].clone()));
+            args.push(Value::F32(m[qn].clone()));
+            args.push(Value::F32(a[qn].clone()));
+        }
+        args.push(batchers[step % batchers.len()].batch_at(step));
+        args.push(Value::scalar_f32(step as f32 + 1.0));
+        args.push(Value::scalar_f32(beta));
+        args.push(Value::scalar_f32(cfg.stage2_lr));
+        args.push(Value::scalar_f32(cfg.lam_kl));
+        args.push(Value::scalar_f32(lam));
+        args.push(Value::scalar_f32(cfg.tau));
+
+        let out = rt.exec("stage2_step", &args)?;
+        for (i, qn) in qnames.iter().enumerate() {
+            state.v.insert(qn.clone(), out[i].as_tensor()?.clone());
+            m.insert(qn.clone(), out[nq + i].as_tensor()?.clone());
+            a.insert(qn.clone(), out[2 * nq + i].as_tensor()?.clone());
+        }
+        let loss = out[3 * nq].as_f32_scalar()? as f64;
+        let kl = out[3 * nq + 1].as_f32_scalar()? as f64;
+        let mse = out[3 * nq + 2].as_f32_scalar()? as f64;
+        if !loss.is_finite() {
+            bail!("stage2 diverged at step {step}");
+        }
+        state.stage2_log.push((loss, kl, mse));
+        if step % 25 == 0 || step + 1 == steps {
+            crate::info!("stage2 step {step}/{steps} loss {loss:.4e} kl {kl:.3e} mse {mse:.3e}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lam_warmup_ramps() {
+        assert!(lam_at(0, 100, 0.01, 0.2) < 0.001);
+        assert!((lam_at(19, 100, 0.01, 0.2) - 0.01).abs() < 1e-6);
+        assert_eq!(lam_at(50, 100, 0.01, 0.2), 0.01);
+        // degenerate: frac 0 → full strength immediately
+        assert_eq!(lam_at(0, 100, 0.01, 0.0), 0.01);
+    }
+}

@@ -1,0 +1,69 @@
+//! Hardening (paper §3.5, eq. 7): continuous V → binary decisions →
+//! final NVFP4 weights, as both dequantized f32 tensors (for the PJRT
+//! eval graphs) and true packed `.nvfp4` payloads (the deployable form).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::formats::nvfp4::{hard_quant, PackedTensor};
+use crate::runtime::Runtime;
+use crate::train::ParamStore;
+
+use super::faar::FaarState;
+
+/// Replace every quantized linear in `params` with its hardened NVFP4
+/// dequantization. Returns the new store (non-quantized tensors shared).
+pub fn harden_to_params(
+    rt: &Runtime,
+    params: &ParamStore,
+    state: &FaarState,
+) -> Result<ParamStore> {
+    let mut out = params.clone();
+    for q in &rt.manifest.qlinears {
+        let w = params.get(&q.name)?;
+        let p = &state.prepared[&q.name];
+        let v = &state.v[&q.name];
+        out.set(&q.name, hard_quant(w, p, v))?;
+    }
+    Ok(out)
+}
+
+/// Write every quantized linear as a packed `.nvfp4` file; returns the
+/// total payload bytes (the paper's memory-footprint claim).
+pub fn pack_model(
+    rt: &Runtime,
+    params: &ParamStore,
+    state: &FaarState,
+    dir: &Path,
+) -> Result<usize> {
+    std::fs::create_dir_all(dir)?;
+    let mut total = 0usize;
+    for q in &rt.manifest.qlinears {
+        let w = params.get(&q.name)?;
+        let p = &state.prepared[&q.name];
+        let v = &state.v[&q.name];
+        let packed = PackedTensor::pack(w, p, v);
+        total += packed.payload_bytes();
+        let fname = format!("{}.nvfp4", q.name.replace('.', "_"));
+        std::fs::write(dir.join(fname), packed.to_bytes())?;
+    }
+    Ok(total)
+}
+
+/// Load a packed model directory back into a param store (dequantized) —
+/// the serving path's cold-start.
+pub fn load_packed(
+    rt: &Runtime,
+    base: &ParamStore,
+    dir: &Path,
+) -> Result<ParamStore> {
+    let mut out = base.clone();
+    for q in &rt.manifest.qlinears {
+        let fname = format!("{}.nvfp4", q.name.replace('.', "_"));
+        let bytes = std::fs::read(dir.join(&fname))?;
+        let packed = PackedTensor::from_bytes(&bytes)?;
+        out.set(&q.name, packed.unpack())?;
+    }
+    Ok(out)
+}

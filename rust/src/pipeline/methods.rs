@@ -1,0 +1,252 @@
+//! Method registry: every quantization method the paper's tables compare.
+//!
+//! `quantize` is the single entry point: (frozen fp params, calibration)
+//! → dequantized quantized-weight store, ready for the W4A4 eval graphs.
+
+use anyhow::{bail, Result};
+
+use crate::calib::Calibration;
+use crate::config::{PipelineConfig, ScaleMethod};
+use crate::data::Corpus;
+use crate::formats::nvfp4;
+use crate::gptq::{gptq_quantize_stacked, GptqOptions};
+use crate::quant::rounding::RoundingScheme;
+use crate::runtime::Runtime;
+use crate::train::ParamStore;
+
+use super::faar::{prepare_all, stage1, stage2, FaarState};
+use super::harden::harden_to_params;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// unquantized reference
+    Bf16,
+    /// plain RTN with standard amax/6 scales
+    Rtn,
+    /// always-lower / always-upper rounding (Table 1)
+    Lower,
+    Upper,
+    /// stochastic rounding trial (Table 1)
+    Stochastic(u64),
+    /// "4/6" adaptive block scaling + RTN (paper baseline [23])
+    FourSix,
+    /// RTN + MSE-optimal block-scale search (paper "strong baseline")
+    StrongBaseline,
+    /// GPTQ on the NVFP4 grid (standard scales)
+    Gptq,
+    /// MR-GPTQ: GPTQ with per-block scale re-optimization ([22])
+    MrGptq,
+    /// GPTQ on 4/6 scales (paper "GPTQ+4/6")
+    GptqFourSix,
+    /// FAAR stage-1 only (ablation Table 6)
+    Faar,
+    /// full method: FAAR + 2FA
+    Faar2fa,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Bf16 => "bf16".into(),
+            Method::Rtn => "rtn".into(),
+            Method::Lower => "lower".into(),
+            Method::Upper => "upper".into(),
+            Method::Stochastic(s) => format!("stochastic[{s}]"),
+            Method::FourSix => "4/6".into(),
+            Method::StrongBaseline => "strong-baseline".into(),
+            Method::Gptq => "gptq".into(),
+            Method::MrGptq => "mr-gptq".into(),
+            Method::GptqFourSix => "gptq+4/6".into(),
+            Method::Faar => "faar".into(),
+            Method::Faar2fa => "faar+2fa".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "bf16" | "fp" => Method::Bf16,
+            "rtn" => Method::Rtn,
+            "lower" => Method::Lower,
+            "upper" => Method::Upper,
+            "4/6" | "foursix" => Method::FourSix,
+            "strong-baseline" | "strong" => Method::StrongBaseline,
+            "gptq" => Method::Gptq,
+            "mr-gptq" | "mrgptq" => Method::MrGptq,
+            "gptq+4/6" | "gptq46" => Method::GptqFourSix,
+            "faar" => Method::Faar,
+            "faar+2fa" | "faar2fa" | "ours" => Method::Faar2fa,
+            _ => {
+                if let Some(seed) = s.strip_prefix("stochastic:") {
+                    Method::Stochastic(seed.parse()?)
+                } else {
+                    bail!("unknown method '{s}'")
+                }
+            }
+        })
+    }
+
+    /// Does this method need calibration activations?
+    pub fn needs_calibration(&self) -> bool {
+        matches!(
+            self,
+            Method::Gptq | Method::MrGptq | Method::GptqFourSix | Method::Faar | Method::Faar2fa
+        )
+    }
+
+    /// Is the result evaluated through the act-quant (W4A4) graph?
+    pub fn w4a4(&self) -> bool {
+        !matches!(self, Method::Bf16)
+    }
+}
+
+/// Result of quantizing a model with a method.
+pub struct QuantOutcome {
+    pub params: ParamStore,
+    pub method: Method,
+    pub wall_s: f64,
+    /// FAAR-family state (for packing / inspection); None for baselines
+    pub faar: Option<FaarState>,
+}
+
+/// Quantize `fp_params` with `method`. `calib`/`corpus` may be None for
+/// training-free methods that don't need them (enforced).
+pub fn quantize(
+    rt: &Runtime,
+    fp_params: &ParamStore,
+    method: Method,
+    cfg: &PipelineConfig,
+    calib: Option<&Calibration>,
+    corpora: Option<&[&Corpus]>,
+) -> Result<QuantOutcome> {
+    let t0 = std::time::Instant::now();
+    if method.needs_calibration() && calib.is_none() {
+        bail!("method {} requires calibration data", method.name());
+    }
+
+    let params = match method {
+        Method::Bf16 => fp_params.clone(),
+        Method::Rtn => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Rtn)?,
+        Method::Lower => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Lower)?,
+        Method::Upper => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Upper)?,
+        Method::Stochastic(seed) => round_all(
+            rt,
+            fp_params,
+            ScaleMethod::Standard,
+            RoundingScheme::Stochastic(seed),
+        )?,
+        Method::FourSix => round_all(rt, fp_params, ScaleMethod::FourSix, RoundingScheme::Rtn)?,
+        Method::StrongBaseline => {
+            round_all(rt, fp_params, ScaleMethod::Search, RoundingScheme::Rtn)?
+        }
+        Method::Gptq => gptq_all(rt, fp_params, calib.unwrap(), ScaleMethod::Standard, false, cfg)?,
+        Method::MrGptq => gptq_all(rt, fp_params, calib.unwrap(), ScaleMethod::Standard, true, cfg)?,
+        Method::GptqFourSix => {
+            gptq_all(rt, fp_params, calib.unwrap(), ScaleMethod::FourSix, false, cfg)?
+        }
+        Method::Faar | Method::Faar2fa => {
+            let mut state = prepare_all(rt, fp_params, cfg)?;
+            stage1(rt, fp_params, calib.unwrap(), cfg, &mut state)?;
+            if method == Method::Faar2fa {
+                let corpora = corpora
+                    .ok_or_else(|| anyhow::anyhow!("faar+2fa requires the calibration corpora"))?;
+                stage2(rt, fp_params, corpora, cfg, &mut state)?;
+            }
+            let hardened = harden_to_params(rt, fp_params, &state)?;
+            return Ok(QuantOutcome {
+                params: hardened,
+                method,
+                wall_s: t0.elapsed().as_secs_f64(),
+                faar: Some(state),
+            });
+        }
+    };
+
+    Ok(QuantOutcome { params, method, wall_s: t0.elapsed().as_secs_f64(), faar: None })
+}
+
+/// Training-free path: scales + rounding scheme on every qlinear.
+fn round_all(
+    rt: &Runtime,
+    fp_params: &ParamStore,
+    scale_method: ScaleMethod,
+    scheme: RoundingScheme,
+) -> Result<ParamStore> {
+    let mut out = fp_params.clone();
+    for (i, q) in rt.manifest.qlinears.iter().enumerate() {
+        let w = fp_params.get(&q.name)?;
+        let (scale, s_global) = crate::quant::scaling::scales_for(w, scale_method);
+        let p = nvfp4::prepare_with_scales(w, scale, s_global);
+        // per-tensor seed variation for stochastic trials
+        let scheme_i = match scheme {
+            RoundingScheme::Stochastic(s) => {
+                RoundingScheme::Stochastic(s.wrapping_mul(31).wrapping_add(i as u64))
+            }
+            other => other,
+        };
+        out.set(&q.name, crate::quant::round_with(w, &p, scheme_i))?;
+    }
+    Ok(out)
+}
+
+/// GPTQ path: per-layer Hessians from calibration, column solve per slice.
+fn gptq_all(
+    rt: &Runtime,
+    fp_params: &ParamStore,
+    calib: &Calibration,
+    scale_method: ScaleMethod,
+    mr_scales: bool,
+    cfg: &PipelineConfig,
+) -> Result<ParamStore> {
+    let mut out = fp_params.clone();
+    for q in &rt.manifest.qlinears {
+        let w = fp_params.get(&q.name)?;
+        let (scale, s_global) = crate::quant::scaling::scales_for(w, scale_method);
+        let hessians = &calib.set(&q.capture)?.hessians;
+        let wq = gptq_quantize_stacked(
+            w,
+            hessians,
+            &scale,
+            &s_global,
+            GptqOptions { damp: cfg.gptq_damp, mr_scales },
+        )?;
+        out.set(&q.name, wq)?;
+        crate::debug!("gptq done: {}", q.name);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for m in [
+            Method::Bf16,
+            Method::Rtn,
+            Method::Lower,
+            Method::Upper,
+            Method::FourSix,
+            Method::StrongBaseline,
+            Method::Gptq,
+            Method::MrGptq,
+            Method::GptqFourSix,
+            Method::Faar,
+            Method::Faar2fa,
+        ] {
+            let parsed = Method::parse(&m.name()).unwrap();
+            assert_eq!(parsed, m, "{}", m.name());
+        }
+        assert_eq!(Method::parse("stochastic:7").unwrap(), Method::Stochastic(7));
+        assert!(Method::parse("awq").is_err());
+    }
+
+    #[test]
+    fn calibration_requirements() {
+        assert!(!Method::Rtn.needs_calibration());
+        assert!(Method::Gptq.needs_calibration());
+        assert!(Method::Faar2fa.needs_calibration());
+        assert!(!Method::Bf16.w4a4());
+        assert!(Method::Rtn.w4a4());
+    }
+}

@@ -1,0 +1,20 @@
+//! The quantization coordinator — the paper's pipeline (Figure 1).
+//!
+//! * [`methods`] — the method registry: every row of Tables 3/4/5 (RTN,
+//!   lower/upper/stochastic, 4/6, strong baseline, GPTQ, MR-GPTQ,
+//!   GPTQ+4/6, FAAR, FAAR+2FA) maps to one [`methods::Method`].
+//! * [`faar`] — the learnable part: Stage-1 layer-wise adaptive rounding
+//!   and Stage-2 full-model alignment, driven through the AOT step graphs
+//!   with rust owning the β/λ schedules, the job order and the state.
+//! * [`harden`] — continuous V → binary decisions → dequantized weights
+//!   and true packed `.nvfp4` payloads.
+
+pub mod faar;
+pub mod harden;
+pub mod methods;
+pub mod workbench;
+
+pub use faar::{stage1, stage2, FaarState};
+pub use harden::{harden_to_params, pack_model};
+pub use methods::{quantize, Method, QuantOutcome};
+pub use workbench::Workbench;

@@ -1,0 +1,161 @@
+//! Workbench: shared experiment context for the table harnesses and
+//! examples — runtime + pretrained checkpoint (cached on disk) +
+//! calibration, with evaluation helpers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::calib::{capture, Calibration};
+use crate::config::PipelineConfig;
+use crate::data::{tasks::TaskKind, tasks::TaskSuite, Corpus};
+use crate::eval::{self, FwdMode, LmMetrics};
+use crate::runtime::Runtime;
+use crate::train::{pretrain, ParamStore};
+
+use super::methods::{quantize, Method, QuantOutcome};
+
+pub struct Workbench {
+    pub rt: Runtime,
+    pub cfg: PipelineConfig,
+    pub fp: ParamStore,
+    pub calib: Calibration,
+    pub wiki: Corpus,
+    pub c4: Corpus,
+    /// memoized quantization outcomes per method (tables reuse methods
+    /// across metrics; FAAR+2FA costs minutes — never run it twice)
+    cache: std::cell::RefCell<std::collections::HashMap<String, std::rc::Rc<QuantOutcome>>>,
+}
+
+impl Workbench {
+    /// Open a workbench: loads the cached pretrained checkpoint if one
+    /// exists for (model, seed, steps), otherwise pretrains and caches.
+    pub fn open(cfg: PipelineConfig) -> Result<Workbench> {
+        let rt = Runtime::load(Path::new(&cfg.artifact_root), &cfg.model)?;
+        let vocab = rt.config().vocab;
+        let wiki = Corpus::by_name("synthwiki", vocab).unwrap();
+        let c4 = Corpus::by_name("synthc4", vocab).unwrap();
+
+        let ckpt = Self::ckpt_path(&cfg);
+        let fp = if ckpt.exists() {
+            crate::info!("loading cached checkpoint {}", ckpt.display());
+            let p = ParamStore::load(&ckpt)?;
+            p.check_layout(&rt.manifest)?;
+            p
+        } else {
+            crate::info!(
+                "pretraining {} for {} steps (no cached checkpoint)",
+                cfg.model,
+                cfg.pretrain_steps
+            );
+            let init = ParamStore::init(&rt.manifest, cfg.seed);
+            let (p, report) = pretrain(
+                &rt,
+                &[&wiki, &c4],
+                init,
+                cfg.pretrain_steps,
+                cfg.pretrain_lr,
+                cfg.pretrain_warmup,
+                cfg.seed,
+            )?;
+            crate::info!(
+                "pretrained: loss {:.4}, {:.0} tok/s, {:.1}s",
+                report.final_loss,
+                report.tokens_per_s,
+                report.wall_s
+            );
+            crate::train::pretrain::save_loss_curve(
+                &report,
+                &PathBuf::from(&cfg.out_dir).join(format!("pretrain_{}.json", cfg.model)),
+            )?;
+            p.save(&ckpt)?;
+            p
+        };
+
+        // calibration on the corpus mixture (mirrors the paper's general-text calibration set)
+        let calib = capture(&rt, &[&wiki, &c4], &fp, cfg.calib_batches, rt.config().stage1_rows, cfg.seed)?;
+        Ok(Workbench {
+            rt,
+            cfg,
+            fp,
+            calib,
+            wiki,
+            c4,
+            cache: Default::default(),
+        })
+    }
+
+    pub fn ckpt_path(cfg: &PipelineConfig) -> PathBuf {
+        PathBuf::from(&cfg.out_dir).join(format!(
+            "models/{}_s{}_p{}.fwts",
+            cfg.model, cfg.seed, cfg.pretrain_steps
+        ))
+    }
+
+    pub fn quantize(&self, method: Method) -> Result<std::rc::Rc<QuantOutcome>> {
+        if let Some(out) = self.cache.borrow().get(&method.name()) {
+            return Ok(out.clone());
+        }
+        let out = std::rc::Rc::new(self.quantize_with(method, &self.cfg)?);
+        self.cache.borrow_mut().insert(method.name(), out.clone());
+        Ok(out)
+    }
+
+    pub fn quantize_with(&self, method: Method, cfg: &PipelineConfig) -> Result<QuantOutcome> {
+        quantize(&self.rt, &self.fp, method, cfg, Some(&self.calib), Some(&[&self.wiki, &self.c4]))
+    }
+
+    pub fn corpus(&self, name: &str) -> &Corpus {
+        match name {
+            "synthwiki" | "wiki" => &self.wiki,
+            "synthc4" | "c4" => &self.c4,
+            other => panic!("unknown corpus '{other}'"),
+        }
+    }
+
+    fn mode_for(&self, method: Method) -> FwdMode {
+        if method.w4a4() && self.cfg.act_quant_eval {
+            FwdMode::ActQuant
+        } else {
+            FwdMode::Fp
+        }
+    }
+
+    /// PPL + hidden-cosine of a quantized outcome on a corpus.
+    pub fn lm_metrics(&self, outcome: &QuantOutcome, corpus: &str) -> Result<LmMetrics> {
+        eval::lm_metrics(
+            &self.rt,
+            &self.fp,
+            &outcome.params,
+            self.corpus(corpus),
+            self.mode_for(outcome.method),
+            self.cfg.eval_batches,
+            self.cfg.seed,
+        )
+    }
+
+    pub fn ppl(&self, outcome: &QuantOutcome, corpus: &str) -> Result<f64> {
+        eval::perplexity(
+            &self.rt,
+            &outcome.params,
+            self.corpus(corpus),
+            self.mode_for(outcome.method),
+            self.cfg.eval_batches,
+            self.cfg.seed,
+        )
+    }
+
+    /// Zero-shot accuracy (%) on one probe suite.
+    pub fn task_accuracy(
+        &self,
+        outcome: &QuantOutcome,
+        kind: TaskKind,
+        n_probes: usize,
+    ) -> Result<f64> {
+        let prompt_len = (self.rt.config().seq_len / 2).min(24);
+        let suite =
+            TaskSuite::generate(kind, &self.wiki, n_probes, prompt_len, self.cfg.seed ^ 0x7A5);
+        Ok(eval::task_accuracy(&self.rt, &outcome.params, &suite, self.mode_for(outcome.method))?
+            * 100.0)
+    }
+}

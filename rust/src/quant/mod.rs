@@ -1,0 +1,17 @@
+//! Quantization strategies on the NVFP4 grid.
+//!
+//! * [`scaling`] — block-scale selection: standard amax/6, the "4/6"
+//!   adaptive choice (paper baseline [23]), and the strong-baseline
+//!   MSE-optimal scale search.
+//! * [`rounding`] — rounding schemes over a prepared interval context:
+//!   RTN, always-lower, always-upper, stochastic (Table 1), and FAAR
+//!   hardening.
+//!
+//! The FAAR *learning* itself runs through the AOT stage-1/stage-2 graphs
+//! (pipeline/); this module covers everything training-free.
+
+pub mod rounding;
+pub mod scaling;
+
+pub use rounding::{round_with, RoundingScheme};
+pub use scaling::scales_for;

@@ -1,0 +1,139 @@
+//! Rounding schemes over a prepared NVFP4 interval context (Table 1).
+//!
+//! All schemes produce a binary decision tensor `v` (1 → upper node) that
+//! plugs into `formats::nvfp4::hard_quant`. Stochastic rounding picks the
+//! upper node with probability = relative position in the interval
+//! (unbiased: E[q] = w̃).
+
+use crate::formats::nvfp4::{hard_quant, Prepared};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundingScheme {
+    /// nearest node, ties → lower (the paper's baseline)
+    Rtn,
+    /// always the lower enclosing node
+    Lower,
+    /// always the upper enclosing node
+    Upper,
+    /// upper with probability v_init (seeded)
+    Stochastic(u64),
+}
+
+impl RoundingScheme {
+    pub fn name(&self) -> String {
+        match self {
+            RoundingScheme::Rtn => "rtn".into(),
+            RoundingScheme::Lower => "lower".into(),
+            RoundingScheme::Upper => "upper".into(),
+            RoundingScheme::Stochastic(s) => format!("stochastic[{s}]"),
+        }
+    }
+
+    /// Binary decisions for this scheme.
+    pub fn decisions(&self, p: &Prepared) -> Tensor {
+        match self {
+            RoundingScheme::Rtn => p.v_init.map(|v| if v > 0.5 { 1.0 } else { 0.0 }),
+            RoundingScheme::Lower => Tensor::zeros(&p.v_init.shape),
+            RoundingScheme::Upper => Tensor::full(&p.v_init.shape, 1.0),
+            RoundingScheme::Stochastic(seed) => {
+                let mut rng = Rng::new(*seed);
+                p.v_init.map(|v| if rng.f64() < v as f64 { 1.0 } else { 0.0 })
+            }
+        }
+    }
+}
+
+/// Dequantized weights under a rounding scheme.
+pub fn round_with(w: &Tensor, p: &Prepared, scheme: RoundingScheme) -> Tensor {
+    hard_quant(w, p, &scheme.decisions(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::nvfp4::prepare;
+    use crate::util::stats::mse;
+
+    fn rand_w(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(&[64, 32]);
+        rng.fill_normal(&mut t.data, 0.0, 0.05);
+        t
+    }
+
+    #[test]
+    fn rtn_beats_lower_and_upper_on_mse() {
+        let w = rand_w(1);
+        let p = prepare(&w);
+        let rtn = mse(&round_with(&w, &p, RoundingScheme::Rtn).data, &w.data);
+        let lo = mse(&round_with(&w, &p, RoundingScheme::Lower).data, &w.data);
+        let up = mse(&round_with(&w, &p, RoundingScheme::Upper).data, &w.data);
+        assert!(rtn <= lo && rtn <= up, "rtn {rtn} lo {lo} up {up}");
+    }
+
+    #[test]
+    fn lower_never_exceeds_magnitude() {
+        let w = rand_w(2);
+        let p = prepare(&w);
+        let q = round_with(&w, &p, RoundingScheme::Lower);
+        for i in 0..w.numel() {
+            // lower node magnitude <= |w~| (modulo scale clamp)
+            assert!(q.data[i].abs() <= w.data[i].abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn stochastic_seeded_reproducible() {
+        let w = rand_w(3);
+        let p = prepare(&w);
+        let a = round_with(&w, &p, RoundingScheme::Stochastic(7));
+        let b = round_with(&w, &p, RoundingScheme::Stochastic(7));
+        let c = round_with(&w, &p, RoundingScheme::Stochastic(8));
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        // average many stochastic quantizations → approaches w (in the
+        // non-clipped region)
+        let w = rand_w(4);
+        let p = prepare(&w);
+        let n = 200;
+        let mut acc = vec![0.0f64; w.numel()];
+        for s in 0..n {
+            let q = round_with(&w, &p, RoundingScheme::Stochastic(s as u64));
+            for i in 0..w.numel() {
+                acc[i] += q.data[i] as f64;
+            }
+        }
+        let mut bias = 0.0f64;
+        let mut count = 0;
+        for i in 0..w.numel() {
+            let wt = w.data[i].abs() / p.scale.data[i].max(1e-30);
+            if wt < 5.9 && p.scale.data[i] > 0.0 {
+                bias += acc[i] / n as f64 - w.data[i] as f64;
+                count += 1;
+            }
+        }
+        let mean_bias = (bias / count as f64).abs();
+        assert!(mean_bias < 5e-4, "mean bias {mean_bias}");
+    }
+
+    #[test]
+    fn some_stochastic_trial_differs_from_rtn() {
+        let w = rand_w(5);
+        let p = prepare(&w);
+        let rtn = round_with(&w, &p, RoundingScheme::Rtn);
+        let st = round_with(&w, &p, RoundingScheme::Stochastic(1));
+        assert_ne!(rtn.data, st.data);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(RoundingScheme::Rtn.name(), "rtn");
+        assert_eq!(RoundingScheme::Stochastic(3).name(), "stochastic[3]");
+    }
+}

@@ -1,0 +1,184 @@
+//! Result tables: paper-format printers + CSV/JSON writers.
+//!
+//! Every `faar tables --id tN` harness builds a [`Table`], prints it in
+//! the paper's row/column layout, and persists it under `results/` so
+//! EXPERIMENTS.md can quote it verbatim.
+
+pub mod tables;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<Option<f64>>)>,
+    /// printf precision per value
+    pub precision: usize,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            precision: 2,
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<Option<f64>>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64]) {
+        self.row(label, values.iter().map(|&v| Some(v)).collect());
+    }
+
+    /// Paper-style fixed-width text rendering.
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(6))
+            .max()
+            .unwrap()
+            + 2;
+        let col_w = self.columns.iter().map(|c| c.len().max(8) + 2).collect::<Vec<_>>();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:<label_w$}", "method"));
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            out.push_str(&format!("{c:>w$}"));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(label_w + col_w.iter().sum::<usize>()));
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:<label_w$}"));
+            for (v, w) in vals.iter().zip(&col_w) {
+                match v {
+                    Some(x) => out.push_str(&format!("{x:>w$.prec$}", prec = self.precision)),
+                    None => out.push_str(&format!("{:>w$}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("method");
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(label);
+            for v in vals {
+                out.push(',');
+                if let Some(x) = v {
+                    out.push_str(&format!("{x:.6}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.as_str())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::str(c.as_str())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(l, vs)| {
+                            Json::obj(vec![
+                                ("label", Json::str(l.as_str())),
+                                (
+                                    "values",
+                                    Json::Arr(
+                                        vs.iter()
+                                            .map(|v| match v {
+                                                Some(x) => Json::Num(*x),
+                                                None => Json::Null,
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout and write .csv + .json under `dir/<stem>.*`.
+    pub fn emit(&self, dir: &Path, stem: &str) -> Result<()> {
+        println!("{}", self.render());
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json().to_string_pretty())?;
+        println!("→ wrote {}/{stem}.csv", dir.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Test", &["wiki", "c4"]);
+        t.row_f("rtn", &[14.28, 36.19]);
+        t.row("gptq", vec![Some(13.74), None]);
+        t
+    }
+
+    #[test]
+    fn render_contains_values() {
+        let r = sample().render();
+        assert!(r.contains("14.28"));
+        assert!(r.contains("rtn"));
+        assert!(r.contains("—"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "method,wiki,c4");
+        assert!(lines[2].ends_with(','));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req("title").unwrap().as_str().unwrap(), "Test");
+        assert_eq!(parsed.req("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row_f("r", &[1.0, 2.0]);
+    }
+}

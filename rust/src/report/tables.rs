@@ -1,0 +1,302 @@
+//! Paper-table reproduction harnesses (DESIGN.md §6 experiment index).
+//!
+//! Each `table_*` function regenerates one table of the paper on the
+//! synthetic substrate: same rows, same metric, same expected *shape*
+//! (method ordering / deltas), absolute numbers differ by design.
+//! `figure2` emits the CSV series behind Figure 2.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::data::tasks::TaskKind;
+use crate::formats::{e2m1, nvfp4};
+use crate::pipeline::{Method, Workbench};
+use crate::tensor::Tensor;
+use crate::util::{rng::Rng, stats};
+
+use super::Table;
+
+/// Table 1: rounding-scheme study (RTN vs lower/upper/stochastic).
+pub fn table1(wb: &Workbench, n_trials: usize) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Table 1 — rounding schemes, {} on synthwiki (PPL ↓)", wb.cfg.model),
+        &["ppl"],
+    );
+    for m in [Method::Rtn, Method::Lower, Method::Upper] {
+        let out = wb.quantize(m)?;
+        let label = if m == Method::Rtn { "baseline (rtn)" } else { &m.name() };
+        t.row_f(label, &[wb.ppl(&out, "wiki")?]);
+    }
+    let mut ppls = Vec::with_capacity(n_trials);
+    for trial in 0..n_trials {
+        let out = wb.quantize(Method::Stochastic(trial as u64 + 1))?;
+        let p = wb.ppl(&out, "wiki")?;
+        crate::info!("stochastic trial {trial}: ppl {p:.3}");
+        ppls.push(p);
+    }
+    t.row_f("stochastic (mean)", &[stats::mean(&ppls)]);
+    t.row_f("stochastic (std)", &[stats::std_dev(&ppls)]);
+    t.row_f("stochastic (best)", &[stats::min(&ppls)]);
+    t.precision = 3;
+    Ok(t)
+}
+
+/// The method list of Tables 3/4 in paper order.
+pub fn main_methods() -> Vec<Method> {
+    vec![
+        Method::Bf16,
+        Method::Rtn,
+        Method::Gptq,
+        Method::MrGptq,
+        Method::FourSix,
+        Method::GptqFourSix,
+        Method::StrongBaseline,
+        Method::Faar2fa,
+    ]
+}
+
+/// Tables 3 + 4 for one model: PPL and cosine on both corpora.
+/// Returns (table3, table4).
+pub fn table3_4(wb: &Workbench, methods: &[Method]) -> Result<(Table, Table)> {
+    let cols = ["synthwiki", "synthc4"];
+    let mut t3 = Table::new(
+        &format!("Table 3 — word PPL (↓), model {}", wb.cfg.model),
+        &cols,
+    );
+    let mut t4 = Table::new(
+        &format!("Table 4 — last-hidden cosine similarity %, model {}", wb.cfg.model),
+        &cols,
+    );
+    for &m in methods {
+        let out = wb.quantize(m)?;
+        let mut ppls = vec![];
+        let mut coss = vec![];
+        for c in cols {
+            let lm = wb.lm_metrics(&out, c)?;
+            ppls.push(lm.ppl);
+            coss.push(lm.cosine_pct);
+        }
+        crate::info!(
+            "{}: wiki ppl {:.3} cos {:.2}% | c4 ppl {:.3} cos {:.2}% ({:.0}s)",
+            m.name(), ppls[0], coss[0], ppls[1], coss[1], out.wall_s
+        );
+        t3.row_f(&m.name(), &ppls);
+        t4.row_f(&m.name(), &coss);
+    }
+    t3.precision = 3;
+    t4.precision = 2;
+    Ok((t3, t4))
+}
+
+/// Table 5: zero-shot probe accuracy (%).
+pub fn table5(wb: &Workbench, methods: &[Method], n_probes: usize) -> Result<Table> {
+    let kinds = TaskKind::all();
+    let mut cols: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+    cols.push("average");
+    let mut t = Table::new(
+        &format!("Table 5 — zero-shot accuracy %, model {}", wb.cfg.model),
+        &cols,
+    );
+    for &m in methods {
+        let out = wb.quantize(m)?;
+        let mut accs = vec![];
+        for k in kinds {
+            accs.push(wb.task_accuracy(&out, k, n_probes)?);
+        }
+        accs.push(stats::mean(&accs));
+        crate::info!("{}: {:?}", m.name(), accs);
+        t.row_f(&m.name(), &accs);
+    }
+    t.precision = 2;
+    Ok(t)
+}
+
+/// Table 6: component ablation (RTN → FAAR → FAAR+2FA).
+pub fn table6(wb: &Workbench) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Table 6 — component ablation, {} on synthwiki (PPL ↓)", wb.cfg.model),
+        &["ppl"],
+    );
+    for m in [Method::Bf16, Method::Rtn, Method::Faar, Method::Faar2fa] {
+        let out = wb.quantize(m)?;
+        let p = wb.ppl(&out, "wiki")?;
+        crate::info!("{}: ppl {p:.3}", m.name());
+        t.row_f(&m.name(), &[p]);
+    }
+    t.precision = 3;
+    Ok(t)
+}
+
+/// Table 7: stage-2 optimization-steps sweep. Runs stage-1 once, then a
+/// single stage-2 pass with snapshots at each checkpoint.
+pub fn table7(wb: &Workbench, checkpoints: &[usize]) -> Result<Table> {
+    use crate::pipeline::{faar, harden};
+    let mut t = Table::new(
+        &format!("Table 7 — stage-2 steps, {} on synthwiki (PPL ↓)", wb.cfg.model),
+        &["ppl"],
+    );
+    let max = *checkpoints.iter().max().unwrap();
+    let mut state = faar::prepare_all(&wb.rt, &wb.fp, &wb.cfg)?;
+    faar::stage1(&wb.rt, &wb.fp, &wb.calib, &wb.cfg, &mut state)?;
+
+    for (i, &ck) in checkpoints.iter().enumerate() {
+        let prev = if i == 0 { 0 } else { checkpoints[i - 1] };
+        let delta = ck - prev;
+        if delta > 0 {
+            let mut cfg = wb.cfg.clone();
+            cfg.stage2_steps = delta;
+            faar::stage2(&wb.rt, &wb.fp, &[&wb.wiki, &wb.c4], &cfg, &mut state)?;
+        }
+        let params = harden::harden_to_params(&wb.rt, &wb.fp, &state)?;
+        let out = crate::pipeline::QuantOutcome {
+            params,
+            method: Method::Faar2fa,
+            wall_s: 0.0,
+            faar: None,
+        };
+        let p = wb.ppl(&out, "wiki")?;
+        crate::info!("steps {ck}: ppl {p:.3}");
+        t.row_f(&format!("{ck}"), &[p]);
+    }
+    let _ = max;
+    t.precision = 3;
+    Ok(t)
+}
+
+/// Table 8: stage-2 learning-rate sweep.
+pub fn table8(wb: &Workbench, lrs: &[f32]) -> Result<Table> {
+    use crate::pipeline::{faar, harden};
+    let mut t = Table::new(
+        &format!("Table 8 — stage-2 learning rate, {} on synthwiki (PPL ↓)", wb.cfg.model),
+        &["ppl"],
+    );
+    // share the stage-1 result across the sweep
+    let mut base = faar::prepare_all(&wb.rt, &wb.fp, &wb.cfg)?;
+    faar::stage1(&wb.rt, &wb.fp, &wb.calib, &wb.cfg, &mut base)?;
+    let v1: Vec<(String, Tensor)> =
+        base.v.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+
+    for &lr in lrs {
+        for (k, v) in &v1 {
+            base.v.insert(k.clone(), v.clone());
+        }
+        base.stage2_log.clear();
+        let mut cfg = wb.cfg.clone();
+        cfg.stage2_lr = lr;
+        faar::stage2(&wb.rt, &wb.fp, &[&wb.wiki, &wb.c4], &cfg, &mut base)?;
+        let params = harden::harden_to_params(&wb.rt, &wb.fp, &base)?;
+        let out = crate::pipeline::QuantOutcome {
+            params,
+            method: Method::Faar2fa,
+            wall_s: 0.0,
+            faar: None,
+        };
+        let p = wb.ppl(&out, "wiki")?;
+        crate::info!("lr {lr:.0e}: ppl {p:.3}");
+        t.row_f(&format!("{lr:.0e}"), &[p]);
+    }
+    t.precision = 3;
+    Ok(t)
+}
+
+/// Figure 2: the NVFP4 mapping curve and absolute rounding error, as CSV
+/// (w, mapped, abs_err) plus the per-magnitude expected error of a
+/// Gaussian weight population.
+pub fn figure2(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut csv = String::from("w,mapped,abs_err\n");
+    let steps = 1400;
+    for i in 0..=steps {
+        let w = 7.0 * i as f32 / steps as f32;
+        let mapped = e2m1::decode(e2m1::encode_rtn(w));
+        csv.push_str(&format!("{w:.4},{mapped:.4},{:.5}\n", (mapped - w).abs()));
+    }
+    std::fs::write(dir.join("figure2_mapping.csv"), &csv)?;
+
+    // panel (b): quantization error of a Gaussian tensor vs magnitude
+    let mut rng = Rng::new(2);
+    let mut w = Tensor::zeros(&[4096, 16]);
+    rng.fill_normal(&mut w.data, 0.0, 1.0);
+    let p = nvfp4::prepare(&w);
+    let q = nvfp4::rtn_quant(&w, &p);
+    let mut csv2 = String::from("abs_w,abs_err\n");
+    for i in 0..w.numel() {
+        csv2.push_str(&format!(
+            "{:.4},{:.6}\n",
+            w.data[i].abs(),
+            (q.data[i] - w.data[i]).abs()
+        ));
+    }
+    std::fs::write(dir.join("figure2_error_scatter.csv"), &csv2)?;
+    println!("→ wrote {}/figure2_mapping.csv and figure2_error_scatter.csv", dir.display());
+    Ok(())
+}
+
+/// Default pipeline-config tweaks for sweep-heavy tables so the full run
+/// stays tractable on CPU; callers can override via CLI.
+pub fn sweep_config(base: &PipelineConfig) -> PipelineConfig {
+    let mut c = base.clone();
+    c.stage1_steps = base.stage1_steps.min(150);
+    c.stage2_steps = base.stage2_steps.min(120);
+    c
+}
+
+/// Format ablation (extension — DESIGN.md §6 footnote): NVFP4's
+/// 16-element E4M3 block scales vs MXFP4's 32-element power-of-two
+/// scales, on the same checkpoint. Weight MSE + end-task PPL (weights
+/// swapped per format; activations stay NVFP4 in-graph).
+pub fn format_ablation(wb: &Workbench) -> Result<Table> {
+    use crate::formats::mxfp4;
+    let mut t = Table::new(
+        &format!(
+            "Format ablation — NVFP4 vs MXFP4, model {} (weight MSE / PPL ↓)",
+            wb.cfg.model
+        ),
+        &["weight_mse", "wiki_ppl", "c4_ppl"],
+    );
+
+    let weight_mse = |params: &crate::train::ParamStore| -> f64 {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for q in &wb.rt.manifest.qlinears {
+            let a = wb.fp.get(&q.name).unwrap();
+            let b = params.get(&q.name).unwrap();
+            acc += stats::mse(&a.data, &b.data) * a.data.len() as f64;
+            n += a.data.len();
+        }
+        acc / n as f64
+    };
+
+    // NVFP4 RTN (the repo's native path)
+    let nv = wb.quantize(Method::Rtn)?;
+    let nv_mse = weight_mse(&nv.params);
+    t.row_f("nvfp4 (rtn)", &[
+        nv_mse,
+        wb.ppl(&nv, "wiki")?,
+        wb.ppl(&nv, "c4")?,
+    ]);
+
+    // MXFP4 RTN: swap every quantized linear for its MXFP4 quantization
+    let mut mx_params = wb.fp.clone();
+    for q in &wb.rt.manifest.qlinears {
+        let w = wb.fp.get(&q.name)?;
+        mx_params.set(&q.name, mxfp4::mxfp4_rtn_quant(w))?;
+    }
+    let mx = crate::pipeline::QuantOutcome {
+        params: mx_params,
+        method: Method::Rtn,
+        wall_s: 0.0,
+        faar: None,
+    };
+    let mx_mse = weight_mse(&mx.params);
+    t.row_f("mxfp4 (rtn)", &[
+        mx_mse,
+        wb.ppl(&mx, "wiki")?,
+        wb.ppl(&mx, "c4")?,
+    ]);
+    t.precision = 4;
+    crate::info!("format ablation: nvfp4 mse {nv_mse:.3e} vs mxfp4 {mx_mse:.3e}");
+    Ok(t)
+}

@@ -1,0 +1,332 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Records the model config, the canonical weight layout
+//! (names, shapes, init spec, quantized flags) and, for every artifact,
+//! the exact positional input/output order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_arr()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output '{name}'", self.name))
+    }
+}
+
+/// Weight-init spec parsed from the manifest ("normal:0.02",
+/// "normal_scaled:0.02", "ones").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    /// std scaled by 1/sqrt(2 L) — residual-out projections
+    NormalScaled(f32),
+    Ones,
+}
+
+impl Init {
+    fn parse(s: &str) -> Result<Init> {
+        if s == "ones" {
+            return Ok(Init::Ones);
+        }
+        let (kind, std) = s.split_once(':').ok_or_else(|| anyhow!("bad init '{s}'"))?;
+        let std: f32 = std.parse()?;
+        match kind {
+            "normal" => Ok(Init::Normal(std)),
+            "normal_scaled" => Ok(Init::NormalScaled(std)),
+            _ => bail!("bad init kind '{kind}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub quantized: bool,
+}
+
+/// The model configuration as exported by configs.py.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub block: usize,
+    pub mlp_hidden: usize,
+    pub head_dim: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub stage1_rows: usize,
+    pub stage2_batch: usize,
+}
+
+/// One quantized linear: weight stack name + the capture tensor feeding it.
+#[derive(Clone, Debug)]
+pub struct QLinear {
+    pub name: String,
+    pub capture: String,
+    pub k: usize,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub weights: Vec<WeightSpec>,
+    pub qlinears: Vec<QLinear>,
+    pub captures: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let c = v.req("config")?;
+        let config = ModelConfig {
+            name: c.req("name")?.as_str()?.to_string(),
+            vocab: c.req("vocab")?.as_usize()?,
+            d_model: c.req("d_model")?.as_usize()?,
+            n_layers: c.req("n_layers")?.as_usize()?,
+            n_heads: c.req("n_heads")?.as_usize()?,
+            seq_len: c.req("seq_len")?.as_usize()?,
+            block: c.req("block")?.as_usize()?,
+            mlp_hidden: c.req("mlp_hidden")?.as_usize()?,
+            head_dim: c.req("head_dim")?.as_usize()?,
+            train_batch: c.req("train_batch")?.as_usize()?,
+            eval_batch: c.req("eval_batch")?.as_usize()?,
+            stage1_rows: c.req("stage1_rows")?.as_usize()?,
+            stage2_batch: c.req("stage2_batch")?.as_usize()?,
+        };
+
+        let mut weights = vec![];
+        for w in v.req("weights")?.as_arr()? {
+            weights.push(WeightSpec {
+                name: w.req("name")?.as_str()?.to_string(),
+                shape: w.req("shape")?.usize_arr()?,
+                init: Init::parse(w.req("init")?.as_str()?)?,
+                quantized: w.req("quantized")?.as_bool()?,
+            });
+        }
+
+        let mut qlinears = vec![];
+        for q in v.req("qlinears")?.as_arr()? {
+            qlinears.push(QLinear {
+                name: q.req("name")?.as_str()?.to_string(),
+                capture: q.req("capture")?.as_str()?.to_string(),
+                k: q.req("k")?.as_usize()?,
+                n: q.req("n")?.as_usize()?,
+            });
+        }
+
+        let captures = v
+            .req("captures")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_obj()? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.req("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let m = Manifest { config, weights, qlinears, captures, artifacts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        if c.d_model % c.block != 0 || c.mlp_hidden % c.block != 0 {
+            bail!("dims not multiples of NVFP4 block {}", c.block);
+        }
+        if c.head_dim * c.n_heads != c.d_model {
+            bail!("head_dim * n_heads != d_model");
+        }
+        for q in &self.qlinears {
+            if !self.weights.iter().any(|w| w.name == q.name && w.quantized) {
+                bail!("qlinear '{}' not a quantized weight", q.name);
+            }
+            if !self.captures.contains(&q.capture) {
+                bail!("qlinear '{}' capture '{}' unknown", q.name, q.capture);
+            }
+        }
+        for must in ["pretrain_step", "lm_fwd", "lm_fwd_aq", "lm_capture", "stage2_step"] {
+            if !self.artifacts.contains_key(must) {
+                bail!("manifest missing required artifact '{must}'");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightSpec> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .ok_or_else(|| anyhow!("unknown weight '{name}'"))
+    }
+
+    /// Distinct (k, n) shapes among quantized linears (stage-1 artifacts
+    /// are emitted per shape).
+    pub fn qshapes(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = vec![];
+        for q in &self.qlinears {
+            if !out.contains(&(q.k, q.n)) {
+                out.push((q.k, q.n));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"name":"t","vocab":16,"d_model":32,"n_layers":1,"n_heads":2,
+                 "seq_len":8,"block":16,"mlp_hidden":32,"head_dim":16,
+                 "train_batch":2,"eval_batch":2,"stage1_rows":8,"stage2_batch":2},
+      "weights": [
+        {"name":"layers.wq","shape":[1,32,32],"init":"normal:0.02","quantized":true,"wd":true},
+        {"name":"out_norm","shape":[32],"init":"ones","quantized":false,"wd":false}
+      ],
+      "qlinears": [{"name":"layers.wq","capture":"attn_in","k":32,"n":32}],
+      "captures": ["attn_in"],
+      "artifacts": {
+        "pretrain_step": {"file":"p.hlo.txt","inputs":[{"name":"w","shape":[1,32,32],"dtype":"f32"}],
+          "outputs":[{"name":"loss","shape":[],"dtype":"f32"}]},
+        "lm_fwd": {"file":"f.hlo.txt","inputs":[],"outputs":[]},
+        "lm_fwd_aq": {"file":"fa.hlo.txt","inputs":[],"outputs":[]},
+        "lm_capture": {"file":"c.hlo.txt","inputs":[],"outputs":[]},
+        "stage2_step": {"file":"s2.hlo.txt","inputs":[],"outputs":[]}
+      }
+    }"#;
+
+    #[test]
+    fn parse_mini() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.d_model, 32);
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.weight("out_norm").unwrap().init, Init::Ones);
+        assert_eq!(m.qshapes(), vec![(32, 32)]);
+        let a = m.artifact("pretrain_step").unwrap();
+        assert_eq!(a.inputs[0].numel(), 1024);
+        assert_eq!(a.input_index("w").unwrap(), 0);
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_block() {
+        let bad = MINI.replace("\"d_model\":32", "\"d_model\":33");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn validation_requires_artifacts() {
+        let bad = MINI.replace("\"stage2_step\"", "\"stage2_other\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn init_parsing() {
+        assert_eq!(Init::parse("normal:0.02").unwrap(), Init::Normal(0.02));
+        assert_eq!(Init::parse("normal_scaled:0.5").unwrap(), Init::NormalScaled(0.5));
+        assert!(Init::parse("uniform:1").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU PJRT). Executables are
+//! compiled lazily on first use and cached for the process lifetime; all
+//! argument marshalling is validated against the manifest so a shape
+//! mismatch fails loudly in rust rather than deep inside XLA.
+//!
+//! `Value` is the host-side currency: an f32 tensor or an i32 tensor.
+//! Outputs of an artifact come back as a flat `Vec<Value>` in manifest
+//! order (the graphs are lowered with `return_tuple=True`; PJRT hands the
+//! tuple back as a single literal which we decompose).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::tensor::Tensor;
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelConfig, QLinear, TensorSpec, WeightSpec};
+
+/// Host value: what flows in and out of artifacts.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(Tensor::scalar(x))
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(vec![x], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_f32_scalar(&self) -> Result<f32> {
+        let t = self.as_tensor()?;
+        if t.numel() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape);
+        }
+        Ok(t.data[0])
+    }
+
+    /// Upload to a rust-owned device buffer (freed on Drop).
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+    /// (literal path): its C wrapper `release()`s every input device
+    /// buffer without freeing it — ~input-size bytes leaked per call,
+    /// which is fatal for 10^4-step optimization loops. The `execute_b`
+    /// path takes caller-owned buffers instead (see EXPERIMENTS.md §Perf).
+    fn to_buffer(&self, client: &PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            Value::F32(t) => Ok(client.buffer_from_host_buffer(&t.data, &t.shape, None)?),
+            Value::I32(data, shape) => {
+                Ok(client.buffer_from_host_buffer(data, shape, None)?)
+            }
+        }
+    }
+
+    fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<Value> {
+        match spec.dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                if data.len() != spec.numel() {
+                    bail!(
+                        "output '{}': got {} elements, expected {}",
+                        spec.name,
+                        data.len(),
+                        spec.numel()
+                    );
+                }
+                Ok(Value::F32(Tensor::new(data, spec.shape.clone())))
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I32(data, spec.shape.clone()))
+            }
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+/// Compiled-executable cache + manifest for one artifact directory.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// cumulative executions per artifact (metrics)
+    exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Load the runtime for `artifacts/<config>/`.
+    pub fn load(artifact_root: &Path, config: &str) -> Result<Runtime> {
+        let dir = artifact_root.join(config);
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let (exe, secs) = crate::util::timed(|| -> Result<_> {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?)
+        });
+        let exe = Rc::new(exe?);
+        crate::debug!("compiled artifact '{name}' in {secs:.2}s");
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (pipeline warm-up).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with positional values; returns outputs in
+    /// manifest order. Validates shapes and dtypes on the way in.
+    pub fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} args given, {} expected",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        for (v, ispec) in args.iter().zip(&spec.inputs) {
+            if v.shape() != ispec.shape.as_slice() {
+                bail!(
+                    "artifact '{name}' input '{}': shape {:?} != expected {:?}",
+                    ispec.name,
+                    v.shape(),
+                    ispec.shape
+                );
+            }
+            if v.dtype() != ispec.dtype {
+                bail!("artifact '{name}' input '{}': dtype mismatch", ispec.name);
+            }
+        }
+        let exe = self.executable(name)?;
+        let buffers: Vec<xla::PjRtBuffer> =
+            args.iter().map(|v| v.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+
+        let tuple_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} outputs: {e}"))?;
+        let parts = tuple_lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}': {} outputs returned, {} expected",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                Value::from_literal(lit, ospec)
+                    .with_context(|| format!("artifact '{name}' output '{}'", ospec.name))
+            })
+            .collect()
+    }
+
+    /// Execution counters (for metrics / EXPERIMENTS.md).
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        self.exec_counts.borrow().clone()
+    }
+}
+
+/// Helper: pull a named output out of an exec() result.
+pub fn take_output(
+    spec: &ArtifactSpec,
+    outputs: &mut Vec<Value>,
+    name: &str,
+) -> Result<Value> {
+    let idx = spec.output_index(name)?;
+    Ok(outputs[idx].clone())
+}

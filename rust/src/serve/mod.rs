@@ -1,0 +1,152 @@
+//! Minimal inference server over a quantized model.
+//!
+//! Line-delimited JSON over TCP (the offline image has no HTTP stack):
+//! each request line is `{"prompt": "text...", "max_tokens": N}` (or
+//! `"tokens": [...]`), each response line is
+//! `{"tokens": [...], "text": "...", "latency_ms": x}`.
+//!
+//! Decoding is greedy through the `lm_logits_pos_aq` artifact (W4A4 —
+//! the deployed NVFP4 path). The PJRT client is not Send, so the server
+//! is a single accept loop; concurrency comes from XLA's intra-op pool.
+//! Throughput numbers for EXPERIMENTS.md come from `bench_pipeline`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Tokenizer;
+use crate::runtime::{Runtime, Value};
+use crate::train::ParamStore;
+use crate::util::json::Json;
+
+pub struct Generator<'r> {
+    pub rt: &'r Runtime,
+    pub params: ParamStore,
+    pub tokenizer: Tokenizer,
+}
+
+impl<'r> Generator<'r> {
+    pub fn new(rt: &'r Runtime, params: ParamStore) -> Generator<'r> {
+        let tokenizer = Tokenizer::new(rt.config().vocab);
+        Generator { rt, params, tokenizer }
+    }
+
+    /// Greedy-decode `max_tokens` continuations of `prompt`.
+    pub fn generate(&self, prompt: &[i32], max_tokens: usize) -> Result<Vec<i32>> {
+        let t = self.rt.config().seq_len;
+        let vocab = self.rt.config().vocab as i32;
+        let mut buf = vec![0i32; t];
+        let plen = prompt.len().min(t);
+        buf[..plen].copy_from_slice(&prompt[prompt.len() - plen..]);
+        let mut pos = plen.saturating_sub(1);
+        let mut out = Vec::with_capacity(max_tokens);
+
+        let mut args = self.params.values();
+        args.push(Value::I32(buf.clone(), vec![1, t]));
+        args.push(Value::scalar_i32(pos as i32));
+        let tok_idx = args.len() - 2;
+        let pos_idx = args.len() - 1;
+
+        for _ in 0..max_tokens {
+            args[tok_idx] = Value::I32(buf.clone(), vec![1, t]);
+            args[pos_idx] = Value::scalar_i32(pos as i32);
+            let outv = self.rt.exec("lm_logits_pos_aq", &args)?;
+            let logits = outv[0].as_tensor()?;
+            let next = logits
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+                .min(vocab - 1);
+            out.push(next);
+            if pos + 1 < t {
+                pos += 1;
+                buf[pos] = next;
+            } else {
+                // slide the window left by one
+                buf.copy_within(1..t, 0);
+                buf[t - 1] = next;
+            }
+        }
+        Ok(out)
+    }
+
+    fn handle_line(&self, line: &str) -> Result<String> {
+        let req = Json::parse(line)?;
+        let max_tokens = req.get("max_tokens").and_then(|v| v.as_usize().ok()).unwrap_or(16);
+        let prompt: Vec<i32> = if let Some(toks) = req.get("tokens") {
+            toks.as_arr()?
+                .iter()
+                .map(|t| Ok(t.as_f64()? as i32))
+                .collect::<Result<Vec<_>>>()?
+        } else if let Some(text) = req.get("prompt") {
+            self.tokenizer.encode(text.as_str()?)
+        } else {
+            return Err(anyhow!("request needs 'prompt' or 'tokens'"));
+        };
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let t0 = std::time::Instant::now();
+        let tokens = self.generate(&prompt, max_tokens)?;
+        let latency = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(Json::obj(vec![
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("text", Json::str(self.tokenizer.decode(&tokens))),
+            ("latency_ms", Json::Num(latency)),
+        ])
+        .to_string())
+    }
+
+    fn handle_conn(&self, stream: TcpStream) {
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) if !l.trim().is_empty() => l,
+                Ok(_) => continue,
+                Err(_) => break,
+            };
+            let resp = match self.handle_line(&line) {
+                Ok(r) => r,
+                Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+            };
+            if writer.write_all(resp.as_bytes()).is_err()
+                || writer.write_all(b"\n").is_err()
+            {
+                break;
+            }
+        }
+        crate::debug!("connection {peer} closed");
+    }
+
+    /// Serve forever (or until `max_conns` connections, for tests).
+    pub fn serve(&self, addr: &str, max_conns: Option<usize>) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        crate::info!("serving on {} (model {})", listener.local_addr()?, self.rt.config().name);
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => self.handle_conn(s),
+                Err(e) => crate::warn!("accept: {e}"),
+            }
+            served += 1;
+            if let Some(n) = max_conns {
+                if served >= n {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+}

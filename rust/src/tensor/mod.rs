@@ -1,0 +1,263 @@
+//! Host tensor: a flat `Vec<f32>` plus shape, with the handful of ops the
+//! coordinator needs (the heavy math runs in AOT-compiled XLA; this type
+//! exists for marshalling, codecs, GPTQ and evaluation plumbing).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data len {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Last two dims as (rows, cols); errors on rank < 2.
+    pub fn mat_dims(&self) -> Result<(usize, usize)> {
+        if self.rank() < 2 {
+            bail!("expected rank >= 2, got {:?}", self.shape);
+        }
+        Ok((self.shape[self.rank() - 2], self.shape[self.rank() - 1]))
+    }
+
+    /// Number of leading (batch) slices for a [..., K, N] tensor.
+    pub fn lead(&self) -> usize {
+        self.shape[..self.rank().saturating_sub(2)].iter().product::<usize>().max(1)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.numel() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Slice the leading axis: returns the i-th sub-tensor of shape[1..].
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(self.rank() >= 1 && i < self.shape[0]);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor::new(
+            self.data[i * sub..(i + 1) * sub].to_vec(),
+            self.shape[1..].to_vec(),
+        )
+    }
+
+    /// Write a sub-tensor into position i along the leading axis.
+    pub fn set_index0(&mut self, i: usize, t: &Tensor) {
+        let sub: usize = self.shape[1..].iter().product();
+        assert_eq!(t.numel(), sub);
+        self.data[i * sub..(i + 1) * sub].copy_from_slice(&t.data);
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let inner = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            assert_eq!(p.shape, inner);
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend(inner);
+        Tensor::new(data, shape)
+    }
+
+    pub fn map(&self, mut f: impl FnMut(f32) -> f32) -> Tensor {
+        Tensor::new(self.data.iter().map(|&x| f(x)).collect(), self.shape.clone())
+    }
+
+    /// Elementwise combine with another tensor of identical shape.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+            self.shape.clone(),
+        )
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Row-major matmul (self [M,K] x other [K,N]) in f64 accumulation —
+    /// used only by tests and the GPTQ substrate, not on the serving path.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.mat_dims()?;
+        let (k2, n) = other.mat_dims()?;
+        if self.rank() != 2 || other.rank() != 2 || k != k2 {
+            bail!("matmul shape mismatch {:?} x {:?}", self.shape, other.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += self.data[i * k + p] as f64 * other.data[p * n + j] as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+        Ok(Tensor::new(out, vec![m, n]))
+    }
+
+    // ---- binary IO ---------------------------------------------------------
+    // Simple self-describing format: magic "FT32", rank, dims (u64 LE), data.
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf = Vec::with_capacity(16 + self.numel() * 4);
+        buf.extend_from_slice(b"FT32");
+        buf.extend_from_slice(&(self.rank() as u32).to_le_bytes());
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in &self.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Tensor> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 8 || &buf[..4] != b"FT32" {
+            bail!("{}: not an FT32 tensor file", path.display());
+        }
+        let rank = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+        let mut off = 8;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u64::from_le_bytes(buf[off..off + 8].try_into()?) as usize);
+            off += 8;
+        }
+        let numel: usize = shape.iter().product();
+        if buf.len() != off + numel * 4 {
+            bail!("{}: truncated tensor file", path.display());
+        }
+        let data = buf[off..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::new(data, shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.mat_dims().unwrap(), (2, 3));
+        assert_eq!(Tensor::scalar(5.0).rank(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![1.0; 5], vec![2, 3]);
+    }
+
+    #[test]
+    fn reshape_and_lead() {
+        let t = Tensor::zeros(&[4, 2, 8]).reshape(&[2, 2, 2, 8]).unwrap();
+        assert_eq!(t.lead(), 4);
+        assert!(Tensor::zeros(&[4]).reshape(&[5]).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let mut t = Tensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]);
+        let row1 = t.index0(1);
+        assert_eq!(row1.data, vec![4.0, 5.0, 6.0, 7.0]);
+        t.set_index0(0, &row1);
+        assert_eq!(t.index0(0).data, row1.data);
+    }
+
+    #[test]
+    fn stack() {
+        let a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 2.0);
+        let s = Tensor::stack(&[a, b]);
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        assert_eq!(s.index0(1).data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let eye = Tensor::new(vec![1.0, 0.0, 0.0, 1.0], vec![2, 2]);
+        assert_eq!(a.matmul(&eye).unwrap().data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = Tensor::new(vec![1.0, 1.0, 1.0, 1.0], vec![2, 2]);
+        assert_eq!(a.matmul(&b).unwrap().data, vec![3.0, 3.0, 7.0, 7.0]);
+        assert!(a.matmul(&Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let t = Tensor::new(vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE], vec![2, 2]);
+        let dir = std::env::temp_dir().join(format!("faar_t_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.ft32");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("faar_g_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ft32");
+        std::fs::write(&p, b"nope").unwrap();
+        assert!(Tensor::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn zip_map_absmax() {
+        let a = Tensor::new(vec![1.0, -3.0], vec![2]);
+        let b = Tensor::new(vec![2.0, 2.0], vec![2]);
+        assert_eq!(a.zip(&b, |x, y| x * y).data, vec![2.0, -6.0]);
+        assert_eq!(a.map(|x| x + 1.0).data, vec![2.0, -2.0]);
+        assert_eq!(a.abs_max(), 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model parameter store + the pretraining driver.
+//!
+//! The paper quantizes *pretrained* checkpoints (Llama3/Qwen3). Offline we
+//! have none, so this module produces them: deterministic init from the
+//! manifest's weight specs, then a full LM training loop driven from rust
+//! through the AOT `pretrain_step` artifact (AdamW + clip fused in-graph;
+//! rust owns the data pipeline, the LR schedule and checkpointing).
+
+pub mod params;
+pub mod pretrain;
+
+pub use params::ParamStore;
+pub use pretrain::{pretrain, PretrainReport};

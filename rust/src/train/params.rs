@@ -1,0 +1,261 @@
+//! Ordered parameter store matching the manifest weight layout.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{manifest::Init, Manifest, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// All model weights, in manifest order (the order every artifact expects
+/// its leading parameters in).
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Deterministic initialization from the manifest's init specs.
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        let mut names = vec![];
+        let n_layers = manifest.config.n_layers as f32;
+        for (i, w) in manifest.weights.iter().enumerate() {
+            let mut t = Tensor::zeros(&w.shape);
+            let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9_7F4A_7C15));
+            match w.init {
+                Init::Ones => t.data.fill(1.0),
+                Init::Normal(std) => rng.fill_normal(&mut t.data, 0.0, std),
+                Init::NormalScaled(std) => {
+                    rng.fill_normal(&mut t.data, 0.0, std / (2.0 * n_layers).sqrt())
+                }
+            }
+            names.push(w.name.clone());
+            tensors.insert(w.name.clone(), t);
+        }
+        ParamStore { names, tensors }
+    }
+
+    /// Zeros with the same layout (optimizer moments).
+    pub fn zeros_like(&self) -> ParamStore {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|(k, v)| (k.clone(), Tensor::zeros(&v.shape)))
+            .collect();
+        ParamStore { names: self.names.clone(), tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("no param '{name}'"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let cur = self.tensors.get(name).ok_or_else(|| anyhow!("no param '{name}'"))?;
+        if cur.shape != t.shape {
+            bail!("param '{name}': shape {:?} != {:?}", t.shape, cur.shape);
+        }
+        self.tensors.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    /// Flat values in manifest order (artifact marshalling).
+    pub fn values(&self) -> Vec<Value> {
+        self.names.iter().map(|n| Value::F32(self.tensors[n].clone())).collect()
+    }
+
+    /// Rebuild from flat values in manifest order.
+    pub fn from_values(&self, vals: &[Value]) -> Result<ParamStore> {
+        if vals.len() != self.names.len() {
+            bail!("{} values for {} params", vals.len(), self.names.len());
+        }
+        let mut out = self.clone();
+        for (name, v) in self.names.iter().zip(vals) {
+            out.set(name, v.as_tensor()?.clone())?;
+        }
+        Ok(out)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    // ---- single-file container: "FWTS" ------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"FWTS");
+        buf.extend_from_slice(&(self.names.len() as u32).to_le_bytes());
+        for name in &self.names {
+            let t = &self.tensors[name];
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.rank() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 8 || &buf[..4] != b"FWTS" {
+            bail!("{}: not a FWTS weights file", path.display());
+        }
+        let count = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+        let mut off = 8;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if buf.len() < *off + n {
+                bail!("{}: truncated weights file", path.display());
+            }
+            let s = &buf[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let mut names = vec![];
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
+            if nlen > 4096 {
+                bail!("{}: implausible name length {nlen}", path.display());
+            }
+            let name = String::from_utf8(take(&mut off, nlen)?.to_vec())?;
+            let rank = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
+            if rank > 8 {
+                bail!("{}: implausible rank {rank}", path.display());
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(take(&mut off, 8)?.try_into()?) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            if buf.len() < off + numel * 4 {
+                bail!("{}: truncated", path.display());
+            }
+            let data: Vec<f32> = buf[off..off + numel * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            off += numel * 4;
+            names.push(name.clone());
+            tensors.insert(name, Tensor::new(data, shape));
+        }
+        Ok(ParamStore { names, tensors })
+    }
+
+    /// Validate layout against a manifest (after load).
+    pub fn check_layout(&self, manifest: &Manifest) -> Result<()> {
+        if self.names.len() != manifest.weights.len() {
+            bail!("param count mismatch");
+        }
+        for (n, w) in self.names.iter().zip(&manifest.weights) {
+            if n != &w.name {
+                bail!("param order mismatch: '{n}' vs '{}'", w.name);
+            }
+            if self.tensors[n].shape != w.shape {
+                bail!("param '{n}': shape {:?} != manifest {:?}", self.tensors[n].shape, w.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn mini_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "config": {"name":"t","vocab":16,"d_model":32,"n_layers":1,"n_heads":2,
+                     "seq_len":8,"block":16,"mlp_hidden":32,"head_dim":16,
+                     "train_batch":2,"eval_batch":2,"stage1_rows":8,"stage2_batch":2},
+          "weights": [
+            {"name":"layers.wq","shape":[1,32,32],"init":"normal:0.02","quantized":true,"wd":true},
+            {"name":"layers.wo","shape":[1,32,32],"init":"normal_scaled:0.02","quantized":true,"wd":true},
+            {"name":"out_norm","shape":[32],"init":"ones","quantized":false,"wd":false}
+          ],
+          "qlinears": [{"name":"layers.wq","capture":"attn_in","k":32,"n":32}],
+          "captures": ["attn_in"],
+          "artifacts": {
+            "pretrain_step": {"file":"p.hlo.txt","inputs":[],"outputs":[]},
+            "lm_fwd": {"file":"f.hlo.txt","inputs":[],"outputs":[]},
+            "lm_fwd_aq": {"file":"fa.hlo.txt","inputs":[],"outputs":[]},
+            "lm_capture": {"file":"c.hlo.txt","inputs":[],"outputs":[]},
+            "stage2_step": {"file":"s2.hlo.txt","inputs":[],"outputs":[]}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let m = mini_manifest();
+        let a = ParamStore::init(&m, 42);
+        let b = ParamStore::init(&m, 42);
+        let c = ParamStore::init(&m, 43);
+        assert_eq!(a.get("layers.wq").unwrap().data, b.get("layers.wq").unwrap().data);
+        assert_ne!(a.get("layers.wq").unwrap().data, c.get("layers.wq").unwrap().data);
+        assert!(a.get("out_norm").unwrap().data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn scaled_init_smaller() {
+        let m = mini_manifest();
+        let p = ParamStore::init(&m, 1);
+        let std = |t: &Tensor| {
+            let n = t.numel() as f64;
+            (t.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n).sqrt()
+        };
+        let wq = std(p.get("layers.wq").unwrap());
+        let wo = std(p.get("layers.wo").unwrap());
+        assert!(wo < wq * 0.9, "wo std {wo} not scaled below wq {wq}");
+    }
+
+    #[test]
+    fn values_roundtrip() {
+        let m = mini_manifest();
+        let p = ParamStore::init(&m, 2);
+        let vals = p.values();
+        assert_eq!(vals.len(), 3);
+        let p2 = p.from_values(&vals).unwrap();
+        assert_eq!(p2.get("layers.wq").unwrap().data, p.get("layers.wq").unwrap().data);
+        assert!(p.from_values(&vals[..2]).is_err());
+    }
+
+    #[test]
+    fn save_load_check() {
+        let m = mini_manifest();
+        let p = ParamStore::init(&m, 3);
+        let dir = std::env::temp_dir().join(format!("faar_ps_{}", std::process::id()));
+        let path = dir.join("w.fwts");
+        p.save(&path).unwrap();
+        let l = ParamStore::load(&path).unwrap();
+        l.check_layout(&m).unwrap();
+        assert_eq!(l.get("layers.wo").unwrap().data, p.get("layers.wo").unwrap().data);
+        assert_eq!(l.total_params(), p.total_params());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn set_rejects_wrong_shape() {
+        let m = mini_manifest();
+        let mut p = ParamStore::init(&m, 4);
+        assert!(p.set("out_norm", Tensor::zeros(&[16])).is_err());
+        assert!(p.set("nope", Tensor::zeros(&[32])).is_err());
+        assert!(p.set("out_norm", Tensor::zeros(&[32])).is_ok());
+    }
+}

@@ -1,0 +1,169 @@
+//! Pretraining driver: the rust loop around the AOT `pretrain_step` graph.
+//!
+//! Rust owns the schedule (linear warmup → cosine decay), the data stream,
+//! checkpointing and the loss log; XLA owns the math (fwd+bwd+AdamW+clip
+//! fused in one executable). The checkpoint this produces is the "BF16
+//! model" every quantization method in the paper starts from.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::data::{batcher::Split, Batcher, Corpus};
+use crate::runtime::{Runtime, Value};
+use crate::util::json::Json;
+
+use super::ParamStore;
+
+pub struct PretrainReport {
+    pub losses: Vec<f64>,
+    pub final_loss: f64,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Linear warmup to `lr`, then cosine decay to 10% of `lr`.
+pub fn lr_at(step: usize, total: usize, warmup: usize, lr: f32) -> f32 {
+    if total == 0 {
+        return lr;
+    }
+    if step < warmup {
+        return lr * (step as f32 + 1.0) / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    lr * (0.1 + 0.9 * cos)
+}
+
+/// Train from `init` for `steps` steps over a mixture of corpora
+/// (batches alternate round-robin — the "general web text" stand-in).
+/// Returns final params + report.
+pub fn pretrain(
+    rt: &Runtime,
+    corpora: &[&Corpus],
+    init: ParamStore,
+    steps: usize,
+    lr: f32,
+    warmup: usize,
+    seed: u64,
+) -> Result<(ParamStore, PretrainReport)> {
+    let cfg = rt.config();
+    let spec = rt.manifest.artifact("pretrain_step")?.clone();
+    let n_w = init.names.len();
+    if spec.inputs.len() != 3 * n_w + 3 {
+        bail!(
+            "pretrain_step expects {} inputs, weights imply {}",
+            spec.inputs.len(),
+            3 * n_w + 3
+        );
+    }
+    if corpora.is_empty() {
+        bail!("need at least one corpus");
+    }
+
+    let batchers: Vec<Batcher> = corpora
+        .iter()
+        .map(|c| Batcher::new(c, Split::Train, cfg.train_batch, cfg.seq_len + 1, seed))
+        .collect();
+    let mut weights = init.values();
+    let mut m: Vec<Value> = init.zeros_like().values();
+    let mut v: Vec<Value> = init.zeros_like().values();
+    let mut losses = Vec::with_capacity(steps);
+
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let tokens = batchers[step % batchers.len()].batch_at(step);
+        let cur_lr = lr_at(step, steps, warmup, lr);
+        let mut args = Vec::with_capacity(3 * n_w + 3);
+        args.extend(weights.iter().cloned());
+        args.extend(m.iter().cloned());
+        args.extend(v.iter().cloned());
+        args.push(tokens);
+        args.push(Value::scalar_f32(step as f32 + 1.0));
+        args.push(Value::scalar_f32(cur_lr));
+
+        let mut out = rt.exec("pretrain_step", &args)?;
+        let loss = out.last().unwrap().as_f32_scalar()? as f64;
+        if !loss.is_finite() {
+            bail!("pretraining diverged at step {step} (loss = {loss})");
+        }
+        losses.push(loss);
+        // outputs: w' x n, m' x n, v' x n, loss
+        let rest = out.split_off(n_w);
+        weights = out;
+        let (m2, mut rest2) = {
+            let mut r = rest;
+            let tail = r.split_off(n_w);
+            (r, tail)
+        };
+        m = m2;
+        rest2.truncate(n_w);
+        v = rest2;
+
+        if step % 50 == 0 || step + 1 == steps {
+            crate::info!(
+                "pretrain[{}] step {step}/{steps} loss {loss:.4} lr {cur_lr:.2e}",
+                cfg.name
+            );
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let toks = (steps * cfg.train_batch * cfg.seq_len) as f64;
+
+    let final_params = init.from_values(&weights)?;
+    let report = PretrainReport {
+        final_loss: *losses.last().unwrap_or(&f64::NAN),
+        losses,
+        steps,
+        wall_s,
+        tokens_per_s: toks / wall_s.max(1e-9),
+    };
+    Ok((final_params, report))
+}
+
+/// Persist the loss curve for EXPERIMENTS.md.
+pub fn save_loss_curve(report: &PretrainReport, path: &Path) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("steps", Json::num(report.steps as f64)),
+        ("final_loss", Json::Num(report.final_loss)),
+        ("wall_s", Json::Num(report.wall_s)),
+        ("tokens_per_s", Json::Num(report.tokens_per_s)),
+        (
+            "losses",
+            Json::Arr(report.losses.iter().map(|&l| Json::Num(l)).collect()),
+        ),
+    ]);
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(path, doc.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let lr = 1e-3;
+        assert!(lr_at(0, 100, 10, lr) < lr * 0.2); // warming up
+        assert!((lr_at(9, 100, 10, lr) - lr).abs() < 1e-9); // peak
+        assert!(lr_at(99, 100, 10, lr) < lr * 0.2); // decayed
+        // monotone decay after warmup
+        let mut prev = f32::INFINITY;
+        for s in 10..100 {
+            let cur = lr_at(s, 100, 10, lr);
+            assert!(cur <= prev + 1e-9);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn lr_degenerate_cases() {
+        assert_eq!(lr_at(5, 0, 0, 1e-3), 1e-3);
+        // no warmup
+        assert!((lr_at(0, 10, 0, 1e-3) - 1e-3).abs() < 1e-9);
+    }
+}

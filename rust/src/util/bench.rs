@@ -1,0 +1,162 @@
+//! Criterion-style micro-benchmark harness (offline environment).
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("formats");
+//! b.bench("e4m3_encode_1M", || { ... });
+//! b.finish();
+//! ```
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean / p50 / p95 / throughput and writes a JSON record under
+//! `results/bench/` so runs can be diffed across optimization iterations
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use super::{json::Json, stats};
+
+pub struct Bench {
+    group: String,
+    records: Vec<Json>,
+    /// target seconds per measurement
+    pub target_time: f64,
+    /// number of measurement samples
+    pub samples: usize,
+}
+
+pub struct Report {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Keep default costs modest; FAAR_BENCH_FAST=1 slashes them for CI.
+        let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+        Bench {
+            group: group.to_string(),
+            records: vec![],
+            target_time: if fast { 0.05 } else { 0.5 },
+            samples: if fast { 3 } else { 10 },
+        }
+    }
+
+    /// Benchmark a closure; returns the mean seconds per iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Report {
+        // warmup + calibration: find iters such that one sample ~ target_time
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time / once).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let rep = Report {
+            name: name.to_string(),
+            mean_s: stats::mean(&times),
+            p50_s: stats::percentile(&times, 50.0),
+            p95_s: stats::percentile(&times, 95.0),
+            iters,
+        };
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters x {} samples)",
+            format!("{}/{}", self.group, name),
+            fmt_time(rep.mean_s),
+            fmt_time(rep.p50_s),
+            fmt_time(rep.p95_s),
+            iters,
+            self.samples,
+        );
+        self.records.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("mean_s", Json::Num(rep.mean_s)),
+            ("p50_s", Json::Num(rep.p50_s)),
+            ("p95_s", Json::Num(rep.p95_s)),
+            ("iters", Json::Num(rep.iters as f64)),
+        ]));
+        rep
+    }
+
+    /// Benchmark with an item count for throughput reporting.
+    pub fn bench_n<F: FnMut()>(&mut self, name: &str, n_items: u64, f: F) -> Report {
+        let rep = self.bench(name, f);
+        let per_sec = n_items as f64 / rep.mean_s;
+        println!("{:<44} {:>16.3e} items/s", format!("{}/{} ⤷", self.group, name), per_sec);
+        if let Some(Json::Obj(pairs)) = self.records.last_mut() {
+            pairs.push(("items_per_s".into(), Json::Num(per_sec)));
+        }
+        rep
+    }
+
+    /// Write the JSON record and print the header.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results/bench");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.group));
+        let doc = Json::obj(vec![
+            ("group", Json::str(self.group.as_str())),
+            ("benches", Json::Arr(self.records)),
+        ]);
+        if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+            eprintln!("[warn] could not write {}: {e}", path.display());
+        } else {
+            println!("→ wrote {}", path.display());
+        }
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("FAAR_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let rep = b.bench("noop_loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(rep.mean_s > 0.0);
+        assert!(rep.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_times() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+}

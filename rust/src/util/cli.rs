@@ -1,0 +1,167 @@
+//! Tiny CLI argument parser (offline environment — no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed accessors, defaults, and a usage printer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    known_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args { known_flags: flag_names.to_vec(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&'static str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        self.positional
+            .first()
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("expected a subcommand"))
+    }
+
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !self.known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&'static str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("quantize --config tiny --steps=300 --verbose extra", &["verbose"]);
+        assert_eq!(a.subcommand().unwrap(), "quantize");
+        assert_eq!(a.get("config"), Some("tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["quantize", "extra"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run", &[]);
+        assert_eq!(a.str_or("out", "results"), "results");
+        assert!(a.req("config").is_err());
+        assert_eq!(a.f64_or("lr", 5e-4).unwrap(), 5e-4);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --methods rtn,gptq, faar", &[]);
+        // note: space after comma splits the shell token; emulate single token
+        let b = parse("x --methods=rtn,gptq,faar", &[]);
+        assert_eq!(b.list_or("methods", &[]), vec!["rtn", "gptq", "faar"]);
+        assert_eq!(a.list_or("missing", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["--config".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn reject_unknown() {
+        let a = parse("x --bogus 1", &[]);
+        assert!(a.reject_unknown(&["config"]).is_err());
+        assert!(a.reject_unknown(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,63 @@
+//! From-scratch infrastructure substrates.
+//!
+//! The build environment is fully offline with a minimal crate cache, so
+//! the usual ecosystem crates (clap, serde_json, rand, rayon, criterion,
+//! proptest) are implemented here in the small: a deterministic RNG, a
+//! JSON codec, a CLI argument parser, a scoped-thread parallel map, a
+//! stats helper, a criterion-style bench harness and a property-testing
+//! loop. Each lives in its own module with its own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+
+use std::time::Instant;
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple leveled stderr logger (no env_logger in the offline cache).
+/// Level comes from `FAAR_LOG` (error|warn|info|debug), default info.
+pub fn log_level() -> u8 {
+    match std::env::var("FAAR_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 3 {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 {
+            eprintln!("[warn] {}", format!($($arg)*));
+        }
+    };
+}

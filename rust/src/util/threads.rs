@@ -1,0 +1,85 @@
+//! Scoped-thread parallel map (offline environment — no rayon).
+//!
+//! Used by the pure-rust hot paths (GPTQ column solves across layers,
+//! stochastic-rounding trials, corpus sharding). XLA executions stay on
+//! the main thread — the PJRT CPU client parallelizes internally.
+
+/// Parallel map over items with a bounded worker count. Preserves order.
+pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return vec![];
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_mx = std::sync::Mutex::new(&mut slots);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let item = { queue.lock().unwrap().pop() };
+                match item {
+                    Some((i, x)) => {
+                        let r = f(x);
+                        slots_mx.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker died")).collect()
+}
+
+/// Default worker count: available parallelism minus one (leave a core
+/// for the coordinator), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map((0..100).collect(), 8, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(par_map(vec![7], 4, |x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        par_map((0..16).collect(), 4, |_: i32| {
+            let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(l, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) > 1);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(par_map(vec![1, 2], 64, |x: i32| x), vec![1, 2]);
+    }
+}

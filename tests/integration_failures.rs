@@ -1,0 +1,78 @@
+//! Failure injection: corrupted manifests, truncated artifacts, bad
+//! checkpoints — every load path must fail loudly, not UB or hang.
+
+use std::path::{Path, PathBuf};
+
+use nvfp4_faar::runtime::Runtime;
+use nvfp4_faar::train::ParamStore;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("faar_fail_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(d.join("cfg")).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_errors() {
+    let d = tmp_dir("missing");
+    let err = format!("{:#}", Runtime::load(&d, "cfg").err().unwrap());
+    assert!(err.contains("manifest.json"), "{err}");
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn corrupt_manifest_errors() {
+    let d = tmp_dir("corrupt");
+    std::fs::write(d.join("cfg/manifest.json"), "{not json").unwrap();
+    assert!(Runtime::load(&d, "cfg").is_err());
+    std::fs::write(d.join("cfg/manifest.json"), r#"{"config": {}}"#).unwrap();
+    let err = format!("{:#}", Runtime::load(&d, "cfg").err().unwrap());
+    assert!(err.contains("missing key"), "{err}");
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn truncated_artifact_errors_at_compile() {
+    // real manifest, garbage HLO file
+    if !Path::new("artifacts/nano/manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let d = tmp_dir("badhlo");
+    std::fs::copy("artifacts/nano/manifest.json", d.join("cfg/manifest.json")).unwrap();
+    // copy every artifact as an empty file
+    let manifest = std::fs::read_to_string("artifacts/nano/manifest.json").unwrap();
+    let v = nvfp4_faar::util::json::Json::parse(&manifest).unwrap();
+    for (_, a) in v.req("artifacts").unwrap().as_obj().unwrap() {
+        let f = a.req("file").unwrap().as_str().unwrap();
+        std::fs::write(d.join("cfg").join(f), "HloModule garbage\n???").unwrap();
+    }
+    let rt = Runtime::load(&d, "cfg").unwrap();
+    assert!(rt.executable("lm_fwd").is_err());
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn checkpoint_corruption_detected() {
+    let d = tmp_dir("ckpt");
+    let p = d.join("w.fwts");
+    std::fs::write(&p, b"FWTS\x02\x00\x00\x00garbage").unwrap();
+    assert!(ParamStore::load(&p).is_err());
+    std::fs::write(&p, b"WRONG").unwrap();
+    assert!(ParamStore::load(&p).is_err());
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn packed_tensor_corruption_detected() {
+    use nvfp4_faar::formats::nvfp4::PackedTensor;
+    // valid header, truncated payload
+    let mut w = nvfp4_faar::tensor::Tensor::zeros(&[16, 16]);
+    w.data[0] = 1.0;
+    let p = nvfp4_faar::formats::nvfp4::prepare(&w);
+    let packed = PackedTensor::pack(&w, &p, &p.v_init);
+    let bytes = packed.to_bytes();
+    assert!(PackedTensor::from_bytes(&bytes[..bytes.len() - 4]).is_err());
+    assert!(PackedTensor::from_bytes(b"NVF").is_err());
+}

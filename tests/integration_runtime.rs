@@ -1,0 +1,209 @@
+//! Runtime integration: artifact loading, execution, validation, and the
+//! cross-language numerics parity checks (rust codec vs the AOT graphs
+//! lowered from ref.py). Needs `make artifacts` (nano).
+
+use std::path::Path;
+
+use nvfp4_faar::formats::nvfp4;
+use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    assert!(
+        Path::new("artifacts/nano/manifest.json").exists(),
+        "run `make artifacts` before integration tests"
+    );
+    Runtime::load(Path::new("artifacts"), "nano").unwrap()
+}
+
+fn rand_t(shape: &[usize], seed: u64, std: f32) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 0.0, std);
+    t
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let rt = runtime();
+    assert_eq!(rt.config().name, "nano");
+    assert_eq!(rt.manifest.qlinears.len(), 7);
+    assert_eq!(rt.manifest.qshapes().len(), 3);
+    assert!(rt.manifest.artifact("stage2_step").is_ok());
+    assert!(rt.manifest.artifact("bogus").is_err());
+}
+
+#[test]
+fn exec_validates_shapes_and_dtypes() {
+    let rt = runtime();
+    let d = rt.config().d_model;
+    let l = rt.config().n_layers;
+    // wrong arg count
+    assert!(rt.exec("prepare_64x64", &[]).is_err());
+    // wrong shape
+    let bad = Value::F32(Tensor::zeros(&[l, d, d + 1]));
+    assert!(rt.exec("prepare_64x64", &[bad]).is_err());
+    // wrong dtype
+    let bad = Value::I32(vec![0; l * d * d], vec![l, d, d]);
+    assert!(rt.exec("prepare_64x64", &[bad]).is_err());
+    // correct
+    let ok = Value::F32(rand_t(&[l, d, d], 1, 0.05));
+    let out = rt.exec("prepare_64x64", &[ok]).unwrap();
+    assert_eq!(out.len(), 4);
+}
+
+#[test]
+fn rust_prepare_matches_aot_prepare() {
+    // Cross-language parity: rust codec (formats::nvfp4) vs the jax graph
+    // lowered from ref.quant_prepare, on the same weights.
+    //
+    // XLA's algebraic simplifier folds the divisions (`/6/s_g`, `/2688`)
+    // into reciprocal multiplies, shifting results by ≤1 f32 ulp; at an
+    // exact E4M3 round-to-nearest-even tie that flips the block scale by
+    // one mantissa step (12.5%). So the contract is semantic, not
+    // bit-exact: every scale within one E4M3 step, the vast majority of
+    // elements identical, intervals always valid.
+    let rt = runtime();
+    let d = rt.config().d_model;
+    let l = rt.config().n_layers;
+    for seed in [1u64, 2, 3, 4, 5] {
+        let w = rand_t(&[l, d, d], seed, 0.05);
+        let p_rust = nvfp4::prepare(&w);
+        let out = rt.exec("prepare_64x64", &[Value::F32(w.clone())]).unwrap();
+        let lower = out[0].as_tensor().unwrap();
+        let upper = out[1].as_tensor().unwrap();
+        let scale = out[2].as_tensor().unwrap();
+        let v_init = out[3].as_tensor().unwrap();
+
+        let n = w.numel();
+        let mut node_mismatch = 0usize;
+        for i in 0..n {
+            let rel = (p_rust.scale.data[i] - scale.data[i]).abs()
+                / scale.data[i].max(1e-30);
+            assert!(
+                rel <= 0.13,
+                "seed {seed} i={i}: scale off by more than one E4M3 step \
+                 ({} vs {})",
+                p_rust.scale.data[i],
+                scale.data[i]
+            );
+            if p_rust.lower.data[i] != lower.data[i]
+                || p_rust.upper.data[i] != upper.data[i]
+            {
+                // legitimate when the scales differ OR when wt sits on a
+                // node boundary (the graph computes |w|/s with a folded
+                // reciprocal, ±1 ulp)
+                node_mismatch += 1;
+            } else if rel < 1e-7 {
+                // identical scale + identical interval → v_init must agree
+                let dv = (p_rust.v_init.data[i] - v_init.data[i]).abs();
+                assert!(dv < 2e-4, "seed {seed} i={i}: v_init diff {dv}");
+            }
+            // interval invariants on the AOT side
+            assert!(lower.data[i] <= upper.data[i]);
+            assert!((0.0..=1.0).contains(&v_init.data[i]));
+        }
+        assert!(
+            node_mismatch * 100 < n,
+            "seed {seed}: {node_mismatch}/{n} interval mismatches (>1%)"
+        );
+    }
+}
+
+#[test]
+fn rust_rtn_matches_aot_rtn_kernel() {
+    // Same semantic-parity contract as prepare (see above): XLA's folded
+    // reciprocals shift w̃ by ±1 ulp, flipping rare boundary elements to
+    // the adjacent node. Require: <1% of elements differ, and every
+    // difference is at most one interval step.
+    let rt = runtime();
+    let d = rt.config().d_model;
+    let w = rand_t(&[d, d], 7, 0.05);
+    let out = rt.exec("kernel_rtn", &[Value::F32(w.clone())]).unwrap();
+    let q_aot = out[0].as_tensor().unwrap();
+    let p = nvfp4::prepare(&w);
+    let q_rust = nvfp4::rtn_quant(&w, &p);
+    let mut mismatch = 0usize;
+    for i in 0..w.numel() {
+        let d_i = (q_aot.data[i] - q_rust.data[i]).abs();
+        if d_i > 1e-7 {
+            mismatch += 1;
+            let step = (p.upper.data[i] - p.lower.data[i] + 0.5) * p.scale.data[i] * 1.3;
+            assert!(d_i <= step.max(1e-6), "i={i}: diff {d_i} beyond one grid step");
+        }
+    }
+    assert!(
+        mismatch * 100 < w.numel(),
+        "{mismatch}/{} rtn elements differ (>1%)",
+        w.numel()
+    );
+}
+
+#[test]
+fn pallas_kernel_matches_jnp_kernel() {
+    let rt = runtime();
+    let d = rt.config().d_model;
+    let w = rand_t(&[d, d], 9, 0.05);
+    let p = nvfp4::prepare(&w);
+    let args = vec![
+        Value::F32(w),
+        Value::F32(p.lower),
+        Value::F32(p.upper),
+        Value::F32(p.scale),
+        Value::F32(p.v_init),
+        Value::scalar_f32(17.0),
+    ];
+    let a = rt.exec("kernel_softquant", &args).unwrap();
+    let b = rt.exec("kernel_softquant_jnp", &args).unwrap();
+    let diff = max_abs_diff(&a[0].as_tensor().unwrap().data, &b[0].as_tensor().unwrap().data);
+    assert!(diff < 2e-6, "pallas/jnp parity: max diff {diff}");
+}
+
+#[test]
+fn lm_fwd_runs_and_nll_reasonable() {
+    let rt = runtime();
+    let cfg = rt.config().clone();
+    let params = ParamStore::init(&rt.manifest, 42);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> =
+        (0..cfg.eval_batch * (cfg.seq_len + 1)).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let mut args = params.values();
+    args.push(Value::I32(toks, vec![cfg.eval_batch, cfg.seq_len + 1]));
+    let out = rt.exec("lm_fwd", &args).unwrap();
+    let nll = out[0].as_tensor().unwrap();
+    assert_eq!(nll.shape, vec![cfg.eval_batch, cfg.seq_len]);
+    // untrained model on uniform tokens: NLL ≈ ln(vocab)
+    let mean: f32 = nll.data.iter().sum::<f32>() / nll.numel() as f32;
+    let expect = (cfg.vocab as f32).ln();
+    assert!(
+        (mean - expect).abs() < 0.5,
+        "untrained NLL {mean} should be ~ln(vocab)={expect}"
+    );
+    let hid = out[1].as_tensor().unwrap();
+    assert_eq!(hid.shape, vec![cfg.eval_batch, cfg.seq_len, cfg.d_model]);
+}
+
+#[test]
+fn executable_cache_reuses() {
+    let rt = runtime();
+    let a = rt.executable("lm_fwd").unwrap();
+    let b = rt.executable("lm_fwd").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn exec_counts_tracked() {
+    let rt = runtime();
+    let d = rt.config().d_model;
+    let l = rt.config().n_layers;
+    let w = Value::F32(rand_t(&[l, d, d], 3, 0.05));
+    rt.exec("prepare_64x64", &[w.clone()]).unwrap();
+    rt.exec("prepare_64x64", &[w]).unwrap();
+    assert_eq!(rt.exec_counts()["prepare_64x64"], 2);
+}

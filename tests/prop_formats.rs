@@ -1,0 +1,200 @@
+//! Property-based tests over the NVFP4 codec stack (util::prop — the
+//! offline stand-in for proptest). These pin the invariants the whole
+//! pipeline leans on, over adversarial input distributions.
+
+use nvfp4_faar::formats::{e2m1, e4m3, nvfp4};
+use nvfp4_faar::quant::rounding::RoundingScheme;
+use nvfp4_faar::quant::round_with;
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::util::prop::{check_msg, gen};
+
+fn tensor_from(v: Vec<f32>, cols: usize) -> Tensor {
+    let rows = v.len() / cols;
+    Tensor::new(v[..rows * cols].to_vec(), vec![rows, cols])
+}
+
+#[test]
+fn prop_e4m3_roundtrip_idempotent() {
+    check_msg(
+        "e4m3_idempotent",
+        300,
+        |rng| gen::f32_wide(rng, 64),
+        |xs| {
+            for &x in xs {
+                let r1 = e4m3::roundtrip(x);
+                if r1.is_nan() {
+                    continue;
+                }
+                let r2 = e4m3::roundtrip(r1);
+                if r1 != r2 {
+                    return Err(format!("{x} -> {r1} -> {r2}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_e4m3_error_bound() {
+    check_msg(
+        "e4m3_relative_error",
+        300,
+        |rng| gen::f32_wide(rng, 64),
+        |xs| {
+            for &x in xs {
+                let a = x.abs();
+                if !(2.0f32.powi(-6)..448.0).contains(&a) {
+                    continue; // normals only
+                }
+                let r = e4m3::roundtrip(x);
+                let rel = (r - x).abs() / a;
+                if rel > 1.0 / 16.0 + 1e-6 {
+                    return Err(format!("x={x} r={r} rel={rel}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_e2m1_rtn_is_nearest() {
+    check_msg(
+        "e2m1_nearest",
+        500,
+        |rng| (0..64).map(|_| rng.range_f64(0.0, 6.0) as f32).collect::<Vec<_>>(),
+        |xs| {
+            for &x in xs {
+                let q = e2m1::decode(e2m1::encode_rtn(x));
+                let d = (q - x).abs();
+                for &n in &e2m1::NODES {
+                    if (n - x).abs() + 1e-6 < d {
+                        return Err(format!("x={x}: chose {q}, {n} closer"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prepare_invariants_heavy_tails() {
+    check_msg(
+        "prepare_invariants",
+        60,
+        |rng| gen::f32_heavy(rng, 32 * 16),
+        |xs| {
+            let w = tensor_from(xs.clone(), 16);
+            let p = nvfp4::prepare(&w);
+            for i in 0..w.numel() {
+                let (lo, up, s, v) =
+                    (p.lower.data[i], p.upper.data[i], p.scale.data[i], p.v_init.data[i]);
+                if !(lo <= up) {
+                    return Err(format!("i={i}: lo {lo} > up {up}"));
+                }
+                if !(0.0..=1.0).contains(&v) || !v.is_finite() {
+                    return Err(format!("i={i}: v_init {v}"));
+                }
+                if !s.is_finite() || s < 0.0 {
+                    return Err(format!("i={i}: scale {s}"));
+                }
+                // wt must sit inside [lo, up] modulo the saturation clamp
+                if s > 0.0 {
+                    let wt = (w.data[i].abs() / s).min(6.0);
+                    if wt < lo - 1e-4 || wt > up + 1e-4 {
+                        return Err(format!("i={i}: wt {wt} outside [{lo}, {up}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rtn_error_never_above_alternatives() {
+    check_msg(
+        "rtn_optimal_pointwise",
+        40,
+        |rng| gen::f32_normal(rng, 32 * 16, 0.05),
+        |xs| {
+            let w = tensor_from(xs.clone(), 16);
+            let p = nvfp4::prepare(&w);
+            let q_rtn = round_with(&w, &p, RoundingScheme::Rtn);
+            let q_lo = round_with(&w, &p, RoundingScheme::Lower);
+            let q_up = round_with(&w, &p, RoundingScheme::Upper);
+            for i in 0..w.numel() {
+                let e = (q_rtn.data[i] - w.data[i]).abs();
+                let e_lo = (q_lo.data[i] - w.data[i]).abs();
+                let e_up = (q_up.data[i] - w.data[i]).abs();
+                if e > e_lo + 1e-6 || e > e_up + 1e-6 {
+                    return Err(format!("i={i}: rtn {e} vs lo {e_lo} up {e_up}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_roundtrip_arbitrary_decisions() {
+    check_msg(
+        "pack_roundtrip",
+        40,
+        |rng| {
+            let w = gen::f32_heavy(rng, 32 * 16);
+            let v: Vec<f32> = (0..32 * 16).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+            (w, v)
+        },
+        |(wv, vv)| {
+            let w = tensor_from(wv.clone(), 16);
+            let v = tensor_from(vv.clone(), 16);
+            let p = nvfp4::prepare(&w);
+            let expect = nvfp4::hard_quant(&w, &p, &v);
+            let packed = nvfp4::PackedTensor::pack(&w, &p, &v);
+            let back = nvfp4::PackedTensor::from_bytes(&packed.to_bytes())
+                .map_err(|e| e.to_string())?;
+            let deq = back.unpack();
+            for i in 0..w.numel() {
+                let d = (deq.data[i] - expect.data[i]).abs();
+                let tol = 1e-6 * expect.data[i].abs().max(1e-5);
+                if d > tol {
+                    return Err(format!("i={i}: {} vs {}", deq.data[i], expect.data[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_interval() {
+    check_msg(
+        "error_bounded",
+        40,
+        |rng| gen::f32_heavy(rng, 16 * 16),
+        |xs| {
+            let w = tensor_from(xs.clone(), 16);
+            let p = nvfp4::prepare(&w);
+            let q = nvfp4::rtn_quant(&w, &p);
+            for i in 0..w.numel() {
+                let s = p.scale.data[i];
+                if s <= 0.0 {
+                    continue;
+                }
+                let width = (p.upper.data[i] - p.lower.data[i]) * s;
+                let clip = (w.data[i].abs() - 6.0 * s).max(0.0);
+                let e = (q.data[i] - w.data[i]).abs();
+                if e > width / 2.0 + clip + 1e-5 {
+                    return Err(format!(
+                        "i={i}: err {e} > half-width {} + clip {clip}",
+                        width / 2.0
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
