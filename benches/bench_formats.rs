@@ -1,11 +1,17 @@
 //! Codec throughput: E4M3 / E2M1 / NVFP4 prepare + pack (L3 hot paths of
-//! the quantization pipeline). Results land in results/bench/formats.json
-//! for the EXPERIMENTS.md §Perf log.
+//! the quantization pipeline), plus the packed-`QuantTensor` scalar-vs-
+//! block-parallel comparison at ≥1M elements. Results land in
+//! results/bench/formats.json; the headline packed-path comparison is
+//! also written as one machine-readable line to BENCH_formats.json.
 
+use nvfp4_faar::formats::codec::{self, rtn_decisions, FormatCodec, FormatKind, Parallelism};
+use nvfp4_faar::formats::nvfp4::Nvfp4;
 use nvfp4_faar::formats::{e2m1, e4m3, nvfp4};
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::json::Json;
 use nvfp4_faar::util::rng::Rng;
+use nvfp4_faar::util::threads;
 
 fn rand_t(shape: &[usize], seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
@@ -65,7 +71,7 @@ fn main() {
 
     let p = nvfp4::prepare(&w);
     b.bench_n("rtn_quant_4x128x128", numel, || {
-        black_box(nvfp4::rtn_quant(&w, &p));
+        black_box(codec::rtn_quant(&w, &p));
     });
 
     let v = p.v_init.map(|x| if x >= 0.5 { 1.0 } else { 0.0 });
@@ -77,6 +83,60 @@ fn main() {
     b.bench_n("unpack_4x128x128", numel, || {
         black_box(packed.unpack());
     });
+
+    // ---- packed QuantTensor: block-parallel vs scalar at 1M+ elements ----
+    // (the tentpole claim: the parallel path must beat the scalar path)
+    let big = rand_t(&[8, 512, 256], 7); // 1,048,576 elements
+    let n_big = big.numel() as u64;
+    let nv = Nvfp4;
+    let p_big = FormatCodec::prepare(&nv, &big);
+    let v_big = rtn_decisions(&p_big);
+    let workers = threads::default_workers();
+
+    let enc_s = b.bench_n("qt_encode_scalar_1M", n_big, || {
+        black_box(nv.encode_mode(&big, &p_big, &v_big, Parallelism::Scalar));
+    });
+    let enc_p = b.bench_n("qt_encode_parallel_1M", n_big, || {
+        black_box(nv.encode_mode(&big, &p_big, &v_big, Parallelism::Workers(workers)));
+    });
+    let qt = nv.encode_mode(&big, &p_big, &v_big, Parallelism::Auto);
+    let dec_s = b.bench_n("qt_decode_scalar_1M", n_big, || {
+        black_box(nv.decode_mode(&qt, Parallelism::Scalar).unwrap());
+    });
+    let dec_p = b.bench_n("qt_decode_parallel_1M", n_big, || {
+        black_box(nv.decode_mode(&qt, Parallelism::Workers(workers)).unwrap());
+    });
+
+    // packed-vs-dequantized memory + headline throughput line
+    let packed_bytes = qt.payload_bytes();
+    let dense_bytes = qt.numel() * 4;
+    let enc_speedup = enc_s.mean_s / enc_p.mean_s;
+    let dec_speedup = dec_s.mean_s / dec_p.mean_s;
+    let line = Json::obj(vec![
+        ("bench", Json::str("formats")),
+        ("format", Json::str(FormatKind::Nvfp4.name())),
+        ("elements", Json::Num(qt.numel() as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("encode_scalar_s", Json::Num(enc_s.mean_s)),
+        ("encode_parallel_s", Json::Num(enc_p.mean_s)),
+        ("encode_speedup", Json::Num(enc_speedup)),
+        ("decode_scalar_s", Json::Num(dec_s.mean_s)),
+        ("decode_parallel_s", Json::Num(dec_p.mean_s)),
+        ("decode_speedup", Json::Num(dec_speedup)),
+        ("packed_bytes", Json::Num(packed_bytes as f64)),
+        ("dense_f32_bytes", Json::Num(dense_bytes as f64)),
+        ("compression_x", Json::Num(dense_bytes as f64 / packed_bytes as f64)),
+        ("bits_per_weight", Json::Num(qt.bits_per_weight())),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_formats.json", format!("{}\n", line.to_string())) {
+        eprintln!("[warn] could not write BENCH_formats.json: {e}");
+    } else {
+        println!(
+            "→ wrote BENCH_formats.json (encode {enc_speedup:.2}x, decode {dec_speedup:.2}x \
+             with {workers} workers; packed {:.2}x smaller than fp32)",
+            dense_bytes as f64 / packed_bytes as f64
+        );
+    }
 
     b.finish();
 }

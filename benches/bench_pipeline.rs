@@ -2,6 +2,8 @@
 //! quantization method (the paper's "4 GPU hours" cost claim, scaled),
 //! plus serve-path generation latency. Needs `make artifacts`.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use std::path::Path;
 
 use nvfp4_faar::config::PipelineConfig;

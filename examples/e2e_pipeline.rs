@@ -14,6 +14,8 @@
 //!
 //!     cargo run --release --example e2e_pipeline [-- --model tiny]
 
+#![allow(clippy::field_reassign_with_default)]
+
 use std::path::PathBuf;
 
 use anyhow::Result;
@@ -48,10 +50,10 @@ fn main() -> Result<()> {
         let outcome = wb.quantize(method)?;
         println!("      done in {:.1}s", outcome.wall_s);
 
-        if let Some(state) = &outcome.faar {
+        if outcome.faar.is_some() {
             println!("[3/5] harden + pack .nvfp4 payloads");
             let dir = out_dir.join("packed_faar2fa");
-            let bytes = pack_model(&wb.rt, &wb.fp, state, &dir)?;
+            let bytes = pack_model(&wb.rt, &outcome.params, &dir)?;
             faar_packed_mib = bytes as f64 / (1 << 20) as f64;
             let fp_mib = (wb.fp.total_params() * 4) as f64 / (1 << 20) as f64;
             println!(

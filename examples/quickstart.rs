@@ -6,6 +6,8 @@
 //! under a minute; the first run pretrains a checkpoint and caches it
 //! under results/models/.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 
 use nvfp4_faar::config::PipelineConfig;

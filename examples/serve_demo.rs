@@ -7,6 +7,8 @@
 //! the demo client runs on a worker thread — exactly the deployment shape
 //! of the real binary (`faar serve`).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 

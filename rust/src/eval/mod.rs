@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::data::{batcher::Split, tasks::TaskSuite, Batcher, Corpus};
 use crate::runtime::{Runtime, Value};
-use crate::train::ParamStore;
+use crate::train::ParamSource;
 use crate::util::stats;
 
 /// Which forward graph to use for a model.
@@ -35,11 +35,11 @@ impl FwdMode {
 /// Run one forward batch; returns (nll [B*T], last_hidden flat).
 fn fwd_batch(
     rt: &Runtime,
-    params: &ParamStore,
+    params: &dyn ParamSource,
     tokens: Value,
     mode: FwdMode,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let mut args = params.values();
+    let mut args = params.values()?;
     args.push(tokens);
     let out = rt.exec(mode.artifact(), &args)?;
     let nll = out[0].as_tensor()?.data.clone();
@@ -50,7 +50,7 @@ fn fwd_batch(
 /// Word perplexity over `n_batches` eval batches: exp(mean NLL).
 pub fn perplexity(
     rt: &Runtime,
-    params: &ParamStore,
+    params: &dyn ParamSource,
     corpus: &Corpus,
     mode: FwdMode,
     n_batches: usize,
@@ -72,8 +72,8 @@ pub fn perplexity(
 /// full-precision reference, over eval batches (Table 4, reported in %).
 pub fn hidden_cosine(
     rt: &Runtime,
-    fp_params: &ParamStore,
-    q_params: &ParamStore,
+    fp_params: &dyn ParamSource,
+    q_params: &dyn ParamSource,
     corpus: &Corpus,
     q_mode: FwdMode,
     n_batches: usize,
@@ -98,7 +98,7 @@ pub fn hidden_cosine(
 /// log-likelihood is the summed -NLL over its token positions.
 pub fn task_accuracy(
     rt: &Runtime,
-    params: &ParamStore,
+    params: &dyn ParamSource,
     suite: &TaskSuite,
     mode: FwdMode,
 ) -> Result<f64> {
@@ -182,8 +182,8 @@ pub struct LmMetrics {
 
 pub fn lm_metrics(
     rt: &Runtime,
-    fp_params: &ParamStore,
-    q_params: &ParamStore,
+    fp_params: &dyn ParamSource,
+    q_params: &dyn ParamSource,
     corpus: &Corpus,
     q_mode: FwdMode,
     n_batches: usize,

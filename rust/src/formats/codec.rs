@@ -1,0 +1,856 @@
+//! The format-codec layer: one trait, three codecs, one canonical packed
+//! representation.
+//!
+//! The paper's premise is that the 4-bit grid's *shape* must be a
+//! first-class object. This module makes the whole format pluggable:
+//!
+//! * [`FormatCodec`] — `block_size` / `grid` / `prepare` / `encode` /
+//!   `decode`, implemented by [`nvfp4::Nvfp4`] (16-elem E4M3 block scales
+//!   + fp32 global), [`mxfp4::Mxfp4`] (32-elem power-of-two scales) and
+//!   the plain [`E2m1`] (one fp32 scale per leading slice, no blocks).
+//! * [`QuantTensor`] — the format-tagged packed payload (two 4-bit codes
+//!   per byte + block-scale bytes + global scales) that the rest of the
+//!   stack carries around instead of dequantized `f32` tensors. It
+//!   serializes to the `FAQ1` container (and reads legacy `NVF4` files),
+//!   validates every length against the header *before* slicing, and
+//!   dequantizes through [`codec_for`].
+//! * [`Prepared`] — the elementwise interval context (lower/upper node,
+//!   effective scale, v_init) shared by all three codecs: they differ
+//!   only in how the effective-scale tensor is built, not in the E2M1
+//!   element grid itself.
+//!
+//! Encode/decode are block-parallel ([`util::threads::par_map`]) above
+//! [`PAR_THRESHOLD`] elements; `bench_formats` records the scalar-vs-
+//! parallel comparison in `BENCH_formats.json`.
+
+use anyhow::{bail, Result};
+
+use super::{e2m1, e4m3, mxfp4, nvfp4};
+use crate::tensor::Tensor;
+use crate::util::threads;
+
+// ---------------------------------------------------------------------------
+// Prepared interval context (format-agnostic given an effective scale)
+
+/// Elementwise quantization context for FAAR / baselines: lower/upper
+/// nodes, effective scale, and the paper's v_init. Built only inside
+/// `formats/` — pipeline code obtains one through a codec's `prepare` or
+/// `quant::scaling::prepare_with_method`.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    pub lower: Tensor,
+    pub upper: Tensor,
+    pub scale: Tensor,
+    pub v_init: Tensor,
+    /// per leading-slice global scale (1.0 placeholders for formats
+    /// without a global level)
+    pub s_global: Vec<f32>,
+}
+
+/// Full interval preparation from raw weights and a precomputed
+/// elementwise effective-scale tensor (ref.quant_prepare's op order).
+pub fn prepare_with_scales(w: &Tensor, scale: Tensor, s_global: Vec<f32>) -> Prepared {
+    let mut lower = vec![0.0f32; w.numel()];
+    let mut upper = vec![0.0f32; w.numel()];
+    let mut v_init = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let s = scale.data[i];
+        let wt = if s > 0.0 {
+            (w.data[i].abs() / s.max(1e-30)).clamp(0.0, e2m1::FP4_MAX)
+        } else {
+            0.0
+        };
+        let (lo, up) = e2m1::interval(wt);
+        lower[i] = lo;
+        upper[i] = up;
+        let width = up - lo;
+        v_init[i] = if width > 0.0 { (wt - lo) / width.max(1e-30) } else { 0.5 };
+    }
+    Prepared {
+        lower: Tensor::new(lower, w.shape.clone()),
+        upper: Tensor::new(upper, w.shape.clone()),
+        scale,
+        v_init: Tensor::new(v_init, w.shape.clone()),
+        s_global,
+    }
+}
+
+/// Dequantized weights for hardened binary decisions `v` (>= 0.5 → upper).
+pub fn hard_quant(w: &Tensor, p: &Prepared, v: &Tensor) -> Tensor {
+    assert_eq!(w.shape, v.shape);
+    let mut out = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let node = if v.data[i] >= 0.5 { p.upper.data[i] } else { p.lower.data[i] };
+        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+    }
+    Tensor::new(out, w.shape.clone())
+}
+
+/// Dequantized RTN weights (nearest node, ties → lower). Equivalent to
+/// hardening `v_init > 0.5`.
+pub fn rtn_quant(w: &Tensor, p: &Prepared) -> Tensor {
+    let mut out = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let up = p.v_init.data[i] > 0.5;
+        let node = if up { p.upper.data[i] } else { p.lower.data[i] };
+        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+    }
+    Tensor::new(out, w.shape.clone())
+}
+
+#[inline]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Binary RTN decisions for a prepared context (`v_init > 0.5` → upper).
+pub fn rtn_decisions(p: &Prepared) -> Tensor {
+    p.v_init.map(|v| if v > 0.5 { 1.0 } else { 0.0 })
+}
+
+// ---------------------------------------------------------------------------
+// Format identity
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// 16-elem blocks, FP8-E4M3 block scales, fp32 global scale
+    Nvfp4,
+    /// 32-elem blocks, E8M0 (power-of-two) block scales, no global
+    Mxfp4,
+    /// no blocks: one fp32 scale per leading slice
+    E2m1,
+}
+
+impl FormatKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Nvfp4 => "nvfp4",
+            FormatKind::Mxfp4 => "mxfp4",
+            FormatKind::E2m1 => "e2m1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FormatKind> {
+        match s {
+            "nvfp4" => Ok(FormatKind::Nvfp4),
+            "mxfp4" => Ok(FormatKind::Mxfp4),
+            "e2m1" => Ok(FormatKind::E2m1),
+            _ => bail!("unknown format '{s}' (nvfp4|mxfp4|e2m1)"),
+        }
+    }
+
+    fn tag(self) -> u32 {
+        match self {
+            FormatKind::Nvfp4 => 1,
+            FormatKind::Mxfp4 => 2,
+            FormatKind::E2m1 => 3,
+        }
+    }
+
+    fn from_tag(t: u32) -> Result<FormatKind> {
+        match t {
+            1 => Ok(FormatKind::Nvfp4),
+            2 => Ok(FormatKind::Mxfp4),
+            3 => Ok(FormatKind::E2m1),
+            _ => bail!("unknown format tag {t}"),
+        }
+    }
+}
+
+/// A 4-bit block-format codec. All implementations share the E2M1
+/// element grid; they differ in scale granularity and storage.
+pub trait FormatCodec: Sync {
+    fn kind(&self) -> FormatKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Elements sharing one block scale along K (0 = per-slice only).
+    fn block_size(&self) -> usize;
+
+    /// The non-negative element node grid, strictly increasing from 0.
+    fn grid(&self) -> &'static [f32] {
+        &e2m1::NODES
+    }
+
+    /// Interval context under this format's default scale recipe.
+    fn prepare(&self, w: &Tensor) -> Prepared;
+
+    /// Pack `w` into codes + scales given a prepared context and binary
+    /// decisions `v` (>= 0.5 → upper node). `p` must come from this
+    /// codec (or an equivalent scale recipe for it).
+    fn encode(&self, w: &Tensor, p: &Prepared, v: &Tensor) -> QuantTensor;
+
+    /// Dequantize a packed tensor of this format to f32.
+    fn decode(&self, q: &QuantTensor) -> Result<Tensor>;
+}
+
+/// The codec registry: every format the pipeline can route through.
+pub fn codec_for(kind: FormatKind) -> &'static dyn FormatCodec {
+    match kind {
+        FormatKind::Nvfp4 => &nvfp4::Nvfp4,
+        FormatKind::Mxfp4 => &mxfp4::Mxfp4,
+        FormatKind::E2m1 => &E2m1,
+    }
+}
+
+pub fn all_codecs() -> [&'static dyn FormatCodec; 3] {
+    [
+        codec_for(FormatKind::Nvfp4),
+        codec_for(FormatKind::Mxfp4),
+        codec_for(FormatKind::E2m1),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// QuantTensor: the canonical packed representation
+
+/// A quantized tensor in true packed form: 4-bit E2M1 codes two per byte,
+/// format-specific block-scale bytes, per-slice global scales, and the
+/// format tag. This is what `pipeline::methods::quantize` produces, what
+/// `train::QuantParamStore` / `serve` hold in memory, and what
+/// `harden::pack_model` writes to disk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    pub format: FormatKind,
+    pub shape: Vec<usize>,
+    /// packed E2M1 codes, two per byte (low nibble first), row-major
+    pub codes: Vec<u8>,
+    /// block-scale bytes (E4M3 for NVFP4, E8M0 for MXFP4, empty for E2M1)
+    pub scales: Vec<u8>,
+    /// per leading-slice fp32 scales (empty for MXFP4)
+    pub s_global: Vec<f32>,
+}
+
+/// [lead, K, N] geometry of a `[..., K, N]` weight shape.
+pub(crate) struct Geometry {
+    pub lead: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+pub(crate) fn geometry(shape: &[usize]) -> Result<Geometry> {
+    if shape.len() < 2 {
+        bail!("quantized tensors must be rank >= 2, got {shape:?}");
+    }
+    let k = shape[shape.len() - 2];
+    let n = shape[shape.len() - 1];
+    let lead = shape[..shape.len() - 2].iter().product::<usize>().max(1);
+    Ok(Geometry { lead, k, n })
+}
+
+const MAGIC: &[u8; 4] = b"FAQ1";
+const LEGACY_MAGIC: &[u8; 4] = b"NVF4";
+
+impl QuantTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes of the packed payload (codes + scales + globals) — the real
+    /// memory footprint of this layer.
+    pub fn payload_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + self.s_global.len() * 4
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.payload_bytes() as f64 * 8.0 / self.numel().max(1) as f64
+    }
+
+    /// Dequantize through the codec registry.
+    pub fn dequantize(&self) -> Result<Tensor> {
+        codec_for(self.format).decode(self)
+    }
+
+    /// Expected (scale-byte count, global count) for format + shape.
+    fn expected_lens(&self) -> Result<(usize, usize)> {
+        let g = geometry(&self.shape)?;
+        match self.format {
+            FormatKind::Nvfp4 => {
+                if g.k % nvfp4::BLOCK != 0 {
+                    bail!("nvfp4: K={} not a multiple of {}", g.k, nvfp4::BLOCK);
+                }
+                Ok((g.lead * (g.k / nvfp4::BLOCK) * g.n, g.lead))
+            }
+            FormatKind::Mxfp4 => {
+                if g.k % mxfp4::BLOCK != 0 {
+                    bail!("mxfp4: K={} not a multiple of {}", g.k, mxfp4::BLOCK);
+                }
+                Ok((g.lead * (g.k / mxfp4::BLOCK) * g.n, 0))
+            }
+            FormatKind::E2m1 => Ok((0, g.lead)),
+        }
+    }
+
+    /// Validate payload lengths against the shape — a corrupted container
+    /// must error, never panic or slice out of bounds.
+    pub fn validate(&self) -> Result<()> {
+        let (ns, ng) = self.expected_lens()?;
+        let nc = self.numel().div_ceil(2);
+        if self.codes.len() != nc {
+            bail!(
+                "{}: {} code bytes for {} elements (expected {nc})",
+                self.format.name(),
+                self.codes.len(),
+                self.numel()
+            );
+        }
+        if self.scales.len() != ns {
+            bail!("{}: {} scale bytes, expected {ns}", self.format.name(), self.scales.len());
+        }
+        if self.s_global.len() != ng {
+            bail!("{}: {} global scales, expected {ng}", self.format.name(), self.s_global.len());
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `FAQ1` container: magic, format tag, rank, dims,
+    /// globals, scales, codes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.payload_bytes() + 64);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&self.format.tag().to_le_bytes());
+        buf.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.s_global.len() as u32).to_le_bytes());
+        for &g in &self.s_global {
+            buf.extend_from_slice(&g.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.scales.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&self.scales);
+        buf.extend_from_slice(&(self.codes.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&self.codes);
+        buf
+    }
+
+    /// Parse a `FAQ1` container (or a legacy `NVF4` payload, which has
+    /// the same layout minus the format tag). Every length is validated
+    /// against the remaining buffer and the declared shape.
+    pub fn from_bytes(buf: &[u8]) -> Result<QuantTensor> {
+        let mut r = Reader { buf, off: 0 };
+        let magic = r.take(4)?;
+        let format = if magic == MAGIC {
+            FormatKind::from_tag(r.u32()?)?
+        } else if magic == LEGACY_MAGIC {
+            FormatKind::Nvfp4
+        } else {
+            bail!("not a FAQ1/NVF4 payload");
+        };
+        let rank = r.u32()? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        // guard the element count before any size arithmetic: a lying
+        // header must error, not overflow (panic in debug, wrap-and-pass
+        // length checks in release)
+        let mut numel = 1usize;
+        for &d in &shape {
+            numel = match numel.checked_mul(d) {
+                Some(v) => v,
+                None => bail!("implausible shape {shape:?}"),
+            };
+        }
+        if numel.div_ceil(2) > buf.len() {
+            bail!("shape {shape:?} implies more code bytes than the payload holds");
+        }
+        let ng = r.u32()? as usize;
+        if ng.saturating_mul(4) > buf.len() {
+            bail!("implausible global-scale count {ng}");
+        }
+        let mut s_global = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            s_global.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+        }
+        let ns = r.u64()? as usize;
+        let scales = r.take(ns)?.to_vec();
+        let nc = r.u64()? as usize;
+        let codes = r.take(nc)?.to_vec();
+        let q = QuantTensor { format, shape, codes, scales, s_global };
+        q.validate()?;
+        Ok(q)
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() < self.off.saturating_add(n) {
+            bail!("truncated payload at byte {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block-parallel pack / unpack machinery
+
+/// Minimum element count before encode/decode fans out across threads.
+pub const PAR_THRESHOLD: usize = 1 << 16;
+const MIN_CHUNK: usize = 1 << 14;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Parallelism {
+    /// single-threaded reference path
+    Scalar,
+    /// threads when the tensor is big enough (the default)
+    Auto,
+    /// exactly this many workers (benchmarking)
+    Workers(usize),
+}
+
+impl Parallelism {
+    fn workers_for(self, n: usize) -> usize {
+        match self {
+            Parallelism::Scalar => 1,
+            Parallelism::Workers(w) => w.max(1),
+            Parallelism::Auto => {
+                if n >= PAR_THRESHOLD {
+                    threads::default_workers()
+                } else {
+                    1
+                }
+            }
+        }
+    }
+}
+
+/// Even-aligned chunk ranges: each chunk starts on a nibble-pair
+/// boundary, so chunks pack/unpack independently.
+fn chunk_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let target = (n / (workers * 4).max(1)).max(MIN_CHUNK);
+    let target = (target + 1) & !1;
+    let mut out = vec![];
+    let mut start = 0;
+    while start < n {
+        let end = (start + target).min(n);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// The one chunk fan-out: run `per_range(start, end)` over even-aligned
+/// chunks of `[0, n)` — inline for one worker, `par_map` otherwise — and
+/// concatenate the pieces in order.
+fn chunked<R: Send>(
+    n: usize,
+    par: Parallelism,
+    per_range: &(dyn Fn(usize, usize) -> Vec<R> + Sync),
+) -> Vec<R> {
+    let workers = par.workers_for(n);
+    if workers <= 1 {
+        return per_range(0, n);
+    }
+    let parts = threads::par_map(chunk_ranges(n, workers), workers, |(s, e)| per_range(s, e));
+    let total = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for part in parts {
+        out.extend(part);
+    }
+    out
+}
+
+/// Pack `n` elements into nibble codes via an arbitrary per-element code
+/// function, chunk-parallel when allowed.
+fn pack_with(code_of: &(dyn Fn(usize) -> u8 + Sync), n: usize, par: Parallelism) -> Vec<u8> {
+    chunked(n, par, &|start, end| {
+        let mut out = Vec::with_capacity((end - start).div_ceil(2));
+        let mut i = start;
+        while i < end {
+            let lo = code_of(i) & 0x0F;
+            let hi = if i + 1 < end { code_of(i + 1) & 0x0F } else { 0 };
+            out.push(lo | (hi << 4));
+            i += 2;
+        }
+        out
+    })
+}
+
+#[inline]
+fn code_at(w: f32, s: f32, v: f32) -> u8 {
+    let wt = if s > 0.0 { (w.abs() / s.max(1e-30)).clamp(0.0, e2m1::FP4_MAX) } else { 0.0 };
+    let x = if w < 0.0 { -wt } else { wt };
+    e2m1::encode_choice(x, v >= 0.5)
+}
+
+#[inline]
+fn rtn_code_at(w: f32, s: f32) -> u8 {
+    if s > 0.0 {
+        let wt = (w.abs() / s.max(1e-30)).min(e2m1::FP4_MAX);
+        let x = if w < 0.0 { -wt } else { wt };
+        e2m1::encode_rtn(x)
+    } else {
+        0
+    }
+}
+
+/// Pack elementwise decisions into nibble codes (shared by all codecs).
+pub fn pack_codes(w: &Tensor, p: &Prepared, v: &Tensor, par: Parallelism) -> Vec<u8> {
+    assert_eq!(w.shape, v.shape);
+    let (wd, sd, vd) = (&w.data, &p.scale.data, &v.data);
+    pack_with(&|i| code_at(wd[i], sd[i], vd[i]), w.numel(), par)
+}
+
+/// Dequantize packed nibbles with a per-element effective scale,
+/// chunk-parallel when allowed.
+pub fn unpack_elems(
+    codes: &[u8],
+    n: usize,
+    scale_of: &(dyn Fn(usize) -> f32 + Sync),
+    par: Parallelism,
+) -> Vec<f32> {
+    chunked(n, par, &|start, end| {
+        let mut out = Vec::with_capacity(end - start);
+        for i in start..end {
+            let byte = codes[i / 2];
+            let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            out.push(e2m1::decode(code) * scale_of(i));
+        }
+        out
+    })
+}
+
+/// Block-scale bytes for any block-scaled format: one byte per
+/// (slice, block-row, column), emitted `[lead, K/block, N]` row-major.
+/// `byte_of(s_eff, slice)` is the format's scale encoder.
+pub(crate) fn block_scale_bytes(
+    scale: &Tensor,
+    block: usize,
+    byte_of: &dyn Fn(f32, usize) -> u8,
+) -> Vec<u8> {
+    let g = geometry(&scale.shape).expect("quantized weights must be rank >= 2");
+    assert_eq!(g.k % block, 0, "K={} not a multiple of {block}", g.k);
+    let slice_len = g.k * g.n;
+    let mut out = Vec::with_capacity(g.lead * (g.k / block) * g.n);
+    for l in 0..g.lead {
+        for kb in 0..g.k / block {
+            for col in 0..g.n {
+                out.push(byte_of(scale.data[l * slice_len + kb * block * g.n + col], l));
+            }
+        }
+    }
+    out
+}
+
+/// E4M3 block-scale bytes for an NVFP4 effective-scale tensor.
+pub(crate) fn nvfp4_scale_bytes(scale: &Tensor, s_global: &[f32]) -> Vec<u8> {
+    block_scale_bytes(scale, nvfp4::BLOCK, &|s_eff, l| e4m3::encode(s_eff / s_global[l]))
+}
+
+/// Dequantize a block-scaled packed tensor without per-element div/mod:
+/// each chunk decomposes its start index once, then walks (slice, row,
+/// column) incrementally. `s_eff_of(byte, slice)` decodes one scale byte.
+pub(crate) fn unpack_block_scaled(
+    codes: &[u8],
+    shape: &[usize],
+    block: usize,
+    scales: &[u8],
+    s_eff_of: &(dyn Fn(u8, usize) -> f32 + Sync),
+    par: Parallelism,
+) -> Result<Vec<f32>> {
+    let g = geometry(shape)?;
+    let (k, n) = (g.k, g.n);
+    let slice_len = k * n;
+    let sc_rows = k / block;
+    let numel: usize = shape.iter().product();
+    if numel == 0 {
+        return Ok(vec![]);
+    }
+    Ok(chunked(numel, par, &|start, end| {
+        let mut out = Vec::with_capacity(end - start);
+        let mut l = start / slice_len;
+        let rem = start % slice_len;
+        let mut row = rem / n;
+        let mut col = rem % n;
+        let mut brow = row / block;
+        for i in start..end {
+            let byte = codes[i / 2];
+            let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            let sb = scales[(l * sc_rows + brow) * n + col];
+            out.push(e2m1::decode(code) * s_eff_of(sb, l));
+            col += 1;
+            if col == n {
+                col = 0;
+                row += 1;
+                if row == k {
+                    row = 0;
+                    brow = 0;
+                    l += 1;
+                } else if row % block == 0 {
+                    brow += 1;
+                }
+            }
+        }
+        out
+    }))
+}
+
+/// Re-encode an on-grid dequantized tensor (e.g. a GPTQ solution) into a
+/// packed NVFP4 `QuantTensor`, given the effective scales it was
+/// quantized with. Every element already sits on a `node * scale` point,
+/// so RTN recovers the exact codes.
+pub fn encode_nvfp4_on_grid(wq: &Tensor, scale: &Tensor, s_global: &[f32]) -> QuantTensor {
+    assert_eq!(wq.shape, scale.shape);
+    let (wd, sd) = (&wq.data, &scale.data);
+    QuantTensor {
+        format: FormatKind::Nvfp4,
+        shape: wq.shape.clone(),
+        codes: pack_with(&|i| rtn_code_at(wd[i], sd[i]), wq.numel(), Parallelism::Auto),
+        scales: nvfp4_scale_bytes(scale, s_global),
+        s_global: s_global.to_vec(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plain E2M1 codec (no block scales) — the "format floor" that the
+// block-scaled formats improve on.
+
+/// Plain E2M1: one fp32 scale per leading slice (amax → top node), no
+/// block structure at all.
+pub struct E2m1;
+
+impl FormatCodec for E2m1 {
+    fn kind(&self) -> FormatKind {
+        FormatKind::E2m1
+    }
+
+    fn block_size(&self) -> usize {
+        0
+    }
+
+    fn prepare(&self, w: &Tensor) -> Prepared {
+        let g = geometry(&w.shape).expect("quantized weights must be rank >= 2");
+        let slice_len = g.k * g.n;
+        let mut s_global = Vec::with_capacity(g.lead);
+        let mut scale = vec![0.0f32; w.numel()];
+        for l in 0..g.lead {
+            let ws = &w.data[l * slice_len..(l + 1) * slice_len];
+            let amax = ws.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let s = if amax == 0.0 { 0.0 } else { amax / e2m1::FP4_MAX };
+            s_global.push(s);
+            scale[l * slice_len..(l + 1) * slice_len].fill(s);
+        }
+        prepare_with_scales(w, Tensor::new(scale, w.shape.clone()), s_global)
+    }
+
+    fn encode(&self, w: &Tensor, p: &Prepared, v: &Tensor) -> QuantTensor {
+        QuantTensor {
+            format: FormatKind::E2m1,
+            shape: w.shape.clone(),
+            codes: pack_codes(w, p, v, Parallelism::Auto),
+            scales: vec![],
+            s_global: p.s_global.clone(),
+        }
+    }
+
+    fn decode(&self, q: &QuantTensor) -> Result<Tensor> {
+        if q.format != FormatKind::E2m1 {
+            bail!("e2m1 codec fed a {} tensor", q.format.name());
+        }
+        q.validate()?;
+        let g = geometry(&q.shape)?;
+        let slice_len = g.k * g.n;
+        let s_global = &q.s_global;
+        let scale_of = move |i: usize| s_global[i / slice_len];
+        let data = unpack_elems(&q.codes, q.numel(), &scale_of, Parallelism::Auto);
+        Ok(Tensor::new(data, q.shape.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(shape: &[usize], seed: u64, std: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, std);
+        t
+    }
+
+    #[test]
+    fn registry_covers_all_kinds() {
+        for codec in all_codecs() {
+            assert_eq!(codec_for(codec.kind()).kind(), codec.kind());
+            assert!(!codec.name().is_empty());
+            assert_eq!(FormatKind::parse(codec.name()).unwrap(), codec.kind());
+        }
+        assert!(FormatKind::parse("fp37").is_err());
+    }
+
+    #[test]
+    fn e2m1_codec_roundtrip() {
+        let w = rand_w(&[2, 32, 8], 1, 0.1);
+        let c = codec_for(FormatKind::E2m1);
+        let p = c.prepare(&w);
+        let v = rtn_decisions(&p);
+        let q = c.encode(&w, &p, &v);
+        assert_eq!(q.scales.len(), 0);
+        assert_eq!(q.s_global.len(), 2);
+        let expect = hard_quant(&w, &p, &v);
+        let deq = q.dequantize().unwrap();
+        for i in 0..w.numel() {
+            assert!(
+                (deq.data[i] - expect.data[i]).abs() <= 1e-6 * expect.data[i].abs().max(1e-6),
+                "i={i}: {} vs {}",
+                deq.data[i],
+                expect.data[i]
+            );
+        }
+        // bits/weight: 4 bits + one f32 per slice
+        assert!(q.bits_per_weight() < 4.3, "bits {}", q.bits_per_weight());
+    }
+
+    #[test]
+    fn parallel_matches_scalar() {
+        // large enough to split into several chunks
+        let w = rand_w(&[4, 256, 64], 2, 0.1);
+        let nv = nvfp4::Nvfp4;
+        let p = FormatCodec::prepare(&nv, &w);
+        let v = rtn_decisions(&p);
+        let a = nv.encode_mode(&w, &p, &v, Parallelism::Scalar);
+        let b = nv.encode_mode(&w, &p, &v, Parallelism::Workers(4));
+        assert_eq!(a, b);
+        let da = nv.decode_mode(&a, Parallelism::Scalar).unwrap();
+        let db = nv.decode_mode(&a, Parallelism::Workers(4)).unwrap();
+        assert_eq!(da.data, db.data);
+    }
+
+    #[test]
+    fn container_roundtrip_and_legacy() {
+        let w = rand_w(&[32, 16], 3, 0.05);
+        for codec in all_codecs() {
+            let p = codec.prepare(&w);
+            let q = codec.encode(&w, &p, &rtn_decisions(&p));
+            let back = QuantTensor::from_bytes(&q.to_bytes()).unwrap();
+            assert_eq!(back, q, "{} container roundtrip", codec.name());
+        }
+        // legacy NVF4 container parses as an nvfp4 QuantTensor
+        let p = nvfp4::prepare(&w);
+        let packed = nvfp4::PackedTensor::pack(&w, &p, &p.v_init);
+        let q = QuantTensor::from_bytes(&packed.to_bytes()).unwrap();
+        assert_eq!(q.format, FormatKind::Nvfp4);
+        assert_eq!(q.codes, packed.codes);
+        assert_eq!(q.dequantize().unwrap().data, packed.unpack().data);
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_payloads() {
+        let w = rand_w(&[32, 16], 4, 0.05);
+        let c = codec_for(FormatKind::Nvfp4);
+        let p = c.prepare(&w);
+        let mut q = c.encode(&w, &p, &rtn_decisions(&p));
+        assert!(q.validate().is_ok());
+        q.codes.pop();
+        assert!(q.validate().is_err());
+        let mut q2 = c.encode(&w, &p, &rtn_decisions(&p));
+        q2.scales.push(0);
+        assert!(q2.validate().is_err());
+        let mut q3 = c.encode(&w, &p, &rtn_decisions(&p));
+        q3.shape = vec![16]; // rank 1
+        assert!(q3.validate().is_err());
+    }
+
+    #[test]
+    fn from_bytes_never_panics_on_truncation() {
+        let w = rand_w(&[32, 16], 5, 0.05);
+        let c = codec_for(FormatKind::Nvfp4);
+        let p = c.prepare(&w);
+        let bytes = c.encode(&w, &p, &rtn_decisions(&p)).to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(QuantTensor::from_bytes(&bytes[..cut]).is_err(), "cut {cut} accepted");
+        }
+        assert!(QuantTensor::from_bytes(b"junkjunkjunk").is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_lying_dimensions() {
+        // header claiming dims whose product overflows usize must error,
+        // never panic or wrap into a passing length check
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"FAQ1");
+        buf.extend_from_slice(&1u32.to_le_bytes()); // nvfp4 tag
+        buf.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        buf.extend_from_slice(&(1u64 << 62).to_le_bytes());
+        buf.extend_from_slice(&(1u64 << 62).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // ng
+        buf.extend_from_slice(&0u64.to_le_bytes()); // ns
+        buf.extend_from_slice(&0u64.to_le_bytes()); // nc
+        assert!(QuantTensor::from_bytes(&buf).is_err());
+        // huge-but-not-overflowing dims with a tiny payload also error
+        let mut buf2 = Vec::new();
+        buf2.extend_from_slice(b"FAQ1");
+        buf2.extend_from_slice(&1u32.to_le_bytes());
+        buf2.extend_from_slice(&2u32.to_le_bytes());
+        buf2.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        buf2.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        buf2.extend_from_slice(&0u32.to_le_bytes());
+        buf2.extend_from_slice(&0u64.to_le_bytes());
+        buf2.extend_from_slice(&0u64.to_le_bytes());
+        assert!(QuantTensor::from_bytes(&buf2).is_err());
+    }
+
+    #[test]
+    fn chunks_cover_range_and_stay_even() {
+        for n in [0usize, 1, 2, 15, (1 << 14) + 1, 100_000, (1 << 20) + 3] {
+            let chunks = chunk_ranges(n, 8);
+            let mut expect = 0;
+            for (i, &(s, e)) in chunks.iter().enumerate() {
+                assert_eq!(s, expect);
+                assert!(e > s);
+                assert_eq!(s % 2, 0, "chunk {i} starts on odd index");
+                expect = e;
+            }
+            assert_eq!(expect, n);
+            if n == 0 {
+                assert!(chunks.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn on_grid_reencode_matches_source() {
+        // RTN-dequantized weights re-encode to the same values
+        let w = rand_w(&[64, 32], 6, 0.05);
+        let p = nvfp4::prepare(&w);
+        let wq = rtn_quant(&w, &p);
+        let q = encode_nvfp4_on_grid(&wq, &p.scale, &p.s_global);
+        let deq = q.dequantize().unwrap();
+        for i in 0..wq.numel() {
+            assert!(
+                (deq.data[i] - wq.data[i]).abs() <= 1e-6 * wq.data[i].abs().max(1e-6),
+                "i={i}: {} vs {}",
+                deq.data[i],
+                wq.data[i]
+            );
+        }
+    }
+}

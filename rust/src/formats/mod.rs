@@ -1,16 +1,21 @@
-//! Software codecs for the NVFP4 format family.
+//! Software codecs for the 4-bit block-format family.
 //!
-//! * [`e4m3`] — FP8 E4M3 (block-scale storage type)
+//! * [`codec`] — the format layer: the [`codec::FormatCodec`] trait, the
+//!   packed [`codec::QuantTensor`] (the canonical quantized
+//!   representation across the stack) and the shared interval machinery
+//! * [`e4m3`] — FP8 E4M3 (NVFP4's block-scale storage type)
 //! * [`e2m1`] — FP4 E2M1 (element type; the non-uniform node grid the
 //!   paper's whole argument is about)
-//! * [`nvfp4`] — the two-level block format: pack/unpack, prepare
-//!   (FindInterval + v_init), RTN/hard quantization
+//! * [`nvfp4`] — the two-level NVFP4 block format + its codec impl
+//! * [`mxfp4`] — OCP MXFP4 (32-elem power-of-two scales) + its codec impl
 
+pub mod codec;
 pub mod e2m1;
 pub mod e4m3;
 pub mod mxfp4;
 pub mod nvfp4;
 
+pub use codec::{codec_for, FormatCodec, FormatKind, Prepared, QuantTensor};
 pub use e2m1::{FP4_MAX, NODES};
 pub use e4m3::E4M3_MAX;
-pub use nvfp4::{prepare, standard_scales, PackedTensor, Prepared, BLOCK};
+pub use nvfp4::{prepare, standard_scales, PackedTensor, BLOCK};

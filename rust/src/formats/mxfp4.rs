@@ -14,6 +14,9 @@
 //! granularity halves the block-quantization error for LLM-like weight
 //! distributions.
 
+use anyhow::{bail, Result};
+
+use crate::formats::codec::{self, FormatKind, Parallelism, Prepared, QuantTensor};
 use crate::formats::e2m1;
 use crate::tensor::Tensor;
 
@@ -87,6 +90,61 @@ pub fn mxfp4_rtn_quant(w: &Tensor) -> Tensor {
     Tensor::new(out, w.shape.clone())
 }
 
+// ---------------------------------------------------------------------------
+// The MXFP4 FormatCodec implementation
+
+/// The MXFP4 codec: 32-element E8M0 (power-of-two) block scales, no
+/// global scale.
+pub struct Mxfp4;
+
+impl codec::FormatCodec for Mxfp4 {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Mxfp4
+    }
+
+    fn block_size(&self) -> usize {
+        BLOCK
+    }
+
+    fn prepare(&self, w: &Tensor) -> Prepared {
+        let scale = mxfp4_scales(w);
+        // no global scale level: 1.0 placeholders keep Prepared uniform
+        let s_global = vec![1.0; w.lead()];
+        codec::prepare_with_scales(w, scale, s_global)
+    }
+
+    fn encode(&self, w: &Tensor, p: &Prepared, v: &Tensor) -> QuantTensor {
+        // scales were snapped by `mxfp4_scales`, so the one E8M0 mapping
+        // (`e8m0_encode_ceil`) recovers each byte exactly; zero blocks
+        // get byte 0 with all-zero codes
+        QuantTensor {
+            format: FormatKind::Mxfp4,
+            shape: w.shape.clone(),
+            codes: codec::pack_codes(w, p, v, Parallelism::Auto),
+            scales: codec::block_scale_bytes(&p.scale, BLOCK, &|s_eff, _| {
+                e8m0_encode_ceil(s_eff).0
+            }),
+            s_global: vec![],
+        }
+    }
+
+    fn decode(&self, q: &QuantTensor) -> Result<Tensor> {
+        if q.format != FormatKind::Mxfp4 {
+            bail!("mxfp4 codec fed a {} tensor", q.format.name());
+        }
+        q.validate()?;
+        let data = codec::unpack_block_scaled(
+            &q.codes,
+            &q.shape,
+            BLOCK,
+            &q.scales,
+            &|byte, _| e8m0_decode(byte),
+            Parallelism::Auto,
+        )?;
+        Ok(Tensor::new(data, q.shape.clone()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +213,26 @@ mod tests {
                 let near = e2m1::NODES.iter().map(|&n| (wt - n).abs()).fold(f32::MAX, f32::min);
                 assert!(near < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_matches_rtn_quant() {
+        use crate::formats::codec::{rtn_decisions, FormatCodec};
+        let w = rand_w(&[64, 16], 7);
+        let p = FormatCodec::prepare(&Mxfp4, &w);
+        let q = Mxfp4.encode(&w, &p, &rtn_decisions(&p));
+        assert_eq!(q.s_global.len(), 0, "mxfp4 has no global scale");
+        assert_eq!(q.scales.len(), (64 / BLOCK) * 16);
+        let deq = Mxfp4.decode(&q).unwrap();
+        let expect = mxfp4_rtn_quant(&w);
+        for i in 0..w.numel() {
+            assert!(
+                (deq.data[i] - expect.data[i]).abs() <= 1e-6 * expect.data[i].abs().max(1e-6),
+                "i={i}: {} vs {}",
+                deq.data[i],
+                expect.data[i]
+            );
         }
     }
 

@@ -9,28 +9,25 @@
 //!     `[L, K, N]` weights),
 //!   * elements are 4-bit E2M1 codes packed two per byte.
 //!
+//! This module owns the NVFP4 *scale recipes* (`standard_scales`,
+//! `effective_scales`) and the [`Nvfp4`] implementation of
+//! [`codec::FormatCodec`]; the format-agnostic interval machinery
+//! ([`Prepared`], [`prepare_with_scales`], [`hard_quant`], [`rtn_quant`])
+//! lives in [`super::codec`] and is re-exported here for compatibility.
+//!
 //! `prepare` reproduces ref.quant_prepare exactly (same f32 op order), so
 //! rust-side scale/interval math agrees with the AOT graphs — enforced by
 //! integration tests against the `prepare_*` artifacts.
 
 use anyhow::{bail, Result};
 
+use super::codec::{self, FormatKind, Parallelism, QuantTensor};
 use super::{e2m1, e4m3};
 use crate::tensor::Tensor;
 
-pub const BLOCK: usize = 16;
+pub use super::codec::{hard_quant, prepare_with_scales, rtn_quant, sign, Prepared};
 
-/// Elementwise quantization context for FAAR / baselines:
-/// lower/upper nodes, effective scale, and the paper's v_init.
-#[derive(Clone, Debug)]
-pub struct Prepared {
-    pub lower: Tensor,
-    pub upper: Tensor,
-    pub scale: Tensor,
-    pub v_init: Tensor,
-    /// per leading-slice global scale
-    pub s_global: Vec<f32>,
-}
+pub const BLOCK: usize = 16;
 
 /// Compute the effective elementwise scale tensor for `w[..., K, N]`
 /// given a per-(slice, block, column) raw scale chooser.
@@ -77,70 +74,75 @@ pub fn standard_scales(w: &Tensor) -> (Tensor, Vec<f32>) {
     effective_scales(w, |_, _, _, amax| amax / e2m1::FP4_MAX)
 }
 
-/// Full FAAR preparation from raw weights using given elementwise scales.
-pub fn prepare_with_scales(w: &Tensor, scale: Tensor, s_global: Vec<f32>) -> Prepared {
-    let mut lower = vec![0.0f32; w.numel()];
-    let mut upper = vec![0.0f32; w.numel()];
-    let mut v_init = vec![0.0f32; w.numel()];
-    for i in 0..w.numel() {
-        let s = scale.data[i];
-        let wt = if s > 0.0 {
-            (w.data[i].abs() / s.max(1e-30)).clamp(0.0, e2m1::FP4_MAX)
-        } else {
-            0.0
-        };
-        let (lo, up) = e2m1::interval(wt);
-        lower[i] = lo;
-        upper[i] = up;
-        let width = up - lo;
-        v_init[i] = if width > 0.0 { (wt - lo) / width.max(1e-30) } else { 0.5 };
-    }
-    Prepared {
-        lower: Tensor::new(lower, w.shape.clone()),
-        upper: Tensor::new(upper, w.shape.clone()),
-        scale,
-        v_init: Tensor::new(v_init, w.shape.clone()),
-        s_global,
-    }
-}
-
 /// Standard NVFP4 preparation (ref.quant_prepare equivalent).
 pub fn prepare(w: &Tensor) -> Prepared {
     let (scale, s_global) = standard_scales(w);
     prepare_with_scales(w, scale, s_global)
 }
 
-/// Dequantized weights for hardened binary decisions `v` (>= 0.5 → upper).
-pub fn hard_quant(w: &Tensor, p: &Prepared, v: &Tensor) -> Tensor {
-    assert_eq!(w.shape, v.shape);
-    let mut out = vec![0.0f32; w.numel()];
-    for i in 0..w.numel() {
-        let node = if v.data[i] >= 0.5 { p.upper.data[i] } else { p.lower.data[i] };
-        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+// ---------------------------------------------------------------------------
+// The NVFP4 FormatCodec implementation
+
+/// The NVFP4 codec: 16-element E4M3 block scales over an fp32 global.
+pub struct Nvfp4;
+
+impl codec::FormatCodec for Nvfp4 {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Nvfp4
     }
-    Tensor::new(out, w.shape.clone())
+
+    fn block_size(&self) -> usize {
+        BLOCK
+    }
+
+    fn prepare(&self, w: &Tensor) -> Prepared {
+        prepare(w)
+    }
+
+    fn encode(&self, w: &Tensor, p: &Prepared, v: &Tensor) -> QuantTensor {
+        self.encode_mode(w, p, v, Parallelism::Auto)
+    }
+
+    fn decode(&self, q: &QuantTensor) -> Result<Tensor> {
+        self.decode_mode(q, Parallelism::Auto)
+    }
 }
 
-/// Dequantized RTN weights (nearest node, ties → lower). Equivalent to
-/// hardening `v_init > 0.5`.
-pub fn rtn_quant(w: &Tensor, p: &Prepared) -> Tensor {
-    let mut out = vec![0.0f32; w.numel()];
-    for i in 0..w.numel() {
-        let up = p.v_init.data[i] > 0.5;
-        let node = if up { p.upper.data[i] } else { p.lower.data[i] };
-        out[i] = sign(w.data[i]) * node * p.scale.data[i];
+impl Nvfp4 {
+    /// Encode with an explicit parallelism policy (benchmarking; the
+    /// trait method uses `Auto`).
+    pub fn encode_mode(
+        &self,
+        w: &Tensor,
+        p: &Prepared,
+        v: &Tensor,
+        par: Parallelism,
+    ) -> QuantTensor {
+        QuantTensor {
+            format: FormatKind::Nvfp4,
+            shape: w.shape.clone(),
+            codes: codec::pack_codes(w, p, v, par),
+            scales: codec::nvfp4_scale_bytes(&p.scale, &p.s_global),
+            s_global: p.s_global.clone(),
+        }
     }
-    Tensor::new(out, w.shape.clone())
-}
 
-#[inline]
-pub fn sign(x: f32) -> f32 {
-    if x > 0.0 {
-        1.0
-    } else if x < 0.0 {
-        -1.0
-    } else {
-        0.0
+    /// Decode with an explicit parallelism policy.
+    pub fn decode_mode(&self, q: &QuantTensor, par: Parallelism) -> Result<Tensor> {
+        if q.format != FormatKind::Nvfp4 {
+            bail!("nvfp4 codec fed a {} tensor", q.format.name());
+        }
+        q.validate()?;
+        let s_global = &q.s_global;
+        let data = codec::unpack_block_scaled(
+            &q.codes,
+            &q.shape,
+            BLOCK,
+            &q.scales,
+            &|byte, l| e4m3::decode(byte) * s_global[l],
+            par,
+        )?;
+        Ok(Tensor::new(data, q.shape.clone()))
     }
 }
 
@@ -148,9 +150,10 @@ pub fn sign(x: f32) -> f32 {
 // Packed on-disk representation (deployable NVFP4 payload)
 
 /// A tensor in true packed NVFP4: 4-bit codes + E4M3 block scales + FP32
-/// global scale(s). This is the artifact `faar quantize` writes to disk —
-/// 4.25 bits/weight + one f32 per slice, exactly what NVFP4 hardware
-/// would consume.
+/// global scale(s) — 4.5 bits/weight + one f32 per slice, exactly what
+/// NVFP4 hardware would consume. Kept as the legacy `.nvfp4` (`NVF4`)
+/// container type; [`codec::QuantTensor`] is the format-tagged
+/// generalization the pipeline carries in memory.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedTensor {
     pub shape: Vec<usize>,
@@ -166,59 +169,35 @@ impl PackedTensor {
     /// Pack from raw weights + prepared context + (possibly learned)
     /// binary decisions. `v` >= 0.5 picks the upper node.
     pub fn pack(w: &Tensor, p: &Prepared, v: &Tensor) -> PackedTensor {
-        let (k, n) = w.mat_dims().unwrap();
-        let lead = w.lead();
-        let slice_len = k * n;
-        let mut codes4 = Vec::with_capacity(w.numel());
-        let mut scales = Vec::with_capacity(lead * (k / BLOCK) * n);
-        for l in 0..lead {
-            let s_g = p.s_global[l];
-            for kb in 0..k / BLOCK {
-                for col in 0..n {
-                    let s_eff = p.scale.data[l * slice_len + (kb * BLOCK) * n + col];
-                    scales.push(e4m3::encode(s_eff / s_g));
-                }
-            }
-        }
-        for i in 0..w.numel() {
-            let wt = if p.scale.data[i] > 0.0 {
-                (w.data[i].abs() / p.scale.data[i].max(1e-30)).clamp(0.0, e2m1::FP4_MAX)
-            } else {
-                0.0
-            };
-            let x = if w.data[i] < 0.0 { -wt } else { wt };
-            codes4.push(e2m1::encode_choice(x, v.data[i] >= 0.5));
-        }
-        PackedTensor {
-            shape: w.shape.clone(),
-            codes: e2m1::pack(&codes4),
-            scales,
-            s_global: p.s_global.clone(),
+        let q = Nvfp4.encode_mode(w, p, v, Parallelism::Auto);
+        PackedTensor { shape: q.shape, codes: q.codes, scales: q.scales, s_global: q.s_global }
+    }
+
+    /// Convert into a format-tagged [`QuantTensor`] (same payload
+    /// layout; the code/scale vectors are cloned).
+    pub fn to_quant(&self) -> QuantTensor {
+        QuantTensor {
+            format: FormatKind::Nvfp4,
+            shape: self.shape.clone(),
+            codes: self.codes.clone(),
+            scales: self.scales.clone(),
+            s_global: self.s_global.clone(),
         }
     }
 
-    /// Dequantize to f32 (what the PJRT graphs consume).
+    /// Dequantize to f32 (what the PJRT graphs consume). Decodes by
+    /// borrowing the payload — no intermediate copy.
     pub fn unpack(&self) -> Tensor {
-        let t = Tensor::zeros(&self.shape);
-        let (k, n) = t.mat_dims().unwrap();
-        let lead = t.lead();
-        let slice_len = k * n;
-        let codes = e2m1::unpack(&self.codes, lead * slice_len);
-        let mut data = vec![0.0f32; lead * slice_len];
-        let sc_cols = n;
-        let sc_rows = k / BLOCK;
-        for l in 0..lead {
-            let s_g = self.s_global[l];
-            for row in 0..k {
-                let kb = row / BLOCK;
-                for col in 0..n {
-                    let idx = l * slice_len + row * n + col;
-                    let s_eff =
-                        e4m3::decode(self.scales[l * sc_rows * sc_cols + kb * sc_cols + col]) * s_g;
-                    data[idx] = e2m1::decode(codes[idx]) * s_eff;
-                }
-            }
-        }
+        let s_global = &self.s_global;
+        let data = codec::unpack_block_scaled(
+            &self.codes,
+            &self.shape,
+            BLOCK,
+            &self.scales,
+            &|byte, l| e4m3::decode(byte) * s_global[l],
+            Parallelism::Auto,
+        )
+        .expect("PackedTensor payload consistent with its shape");
         Tensor::new(data, self.shape.clone())
     }
 
@@ -228,8 +207,8 @@ impl PackedTensor {
         self.codes.len() + self.scales.len() + self.s_global.len() * 4
     }
 
-    /// Serialize to the `.nvfp4` container: magic, rank, dims, globals,
-    /// scales, codes.
+    /// Serialize to the legacy `.nvfp4` container: magic, rank, dims,
+    /// globals, scales, codes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf = Vec::with_capacity(self.payload_bytes() + 64);
         buf.extend_from_slice(b"NVF4");
@@ -248,41 +227,18 @@ impl PackedTensor {
         buf
     }
 
+    /// Parse a packed NVFP4 payload — the legacy `NVF4` container or an
+    /// NVFP4-tagged `FAQ1` container (what `pack_model` writes under the
+    /// `.nvfp4` extension today). Every section length is bounds-checked
+    /// and the payload is validated against the declared shape before
+    /// use — truncated or inconsistent buffers return errors, never
+    /// panic.
     pub fn from_bytes(buf: &[u8]) -> Result<PackedTensor> {
-        if buf.len() < 8 || &buf[..4] != b"NVF4" {
-            bail!("not an NVF4 payload");
+        let q = QuantTensor::from_bytes(buf)?;
+        if q.format != FormatKind::Nvfp4 {
+            bail!("not an NVFP4 payload (format {})", q.format.name());
         }
-        let mut off = 4;
-        let rd_u32 = |o: &mut usize| -> Result<u32> {
-            let v = u32::from_le_bytes(buf[*o..*o + 4].try_into()?);
-            *o += 4;
-            Ok(v)
-        };
-        let rd_u64 = |o: &mut usize| -> Result<u64> {
-            let v = u64::from_le_bytes(buf[*o..*o + 8].try_into()?);
-            *o += 8;
-            Ok(v)
-        };
-        let rank = rd_u32(&mut off)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(rd_u64(&mut off)? as usize);
-        }
-        let ng = rd_u32(&mut off)? as usize;
-        let mut s_global = Vec::with_capacity(ng);
-        for _ in 0..ng {
-            s_global.push(f32::from_le_bytes(buf[off..off + 4].try_into()?));
-            off += 4;
-        }
-        let ns = rd_u64(&mut off)? as usize;
-        let scales = buf[off..off + ns].to_vec();
-        off += ns;
-        let nc = rd_u64(&mut off)? as usize;
-        if buf.len() < off + nc {
-            bail!("truncated NVF4 payload");
-        }
-        let codes = buf[off..off + nc].to_vec();
-        Ok(PackedTensor { shape, codes, scales, s_global })
+        Ok(PackedTensor { shape: q.shape, codes: q.codes, scales: q.scales, s_global: q.s_global })
     }
 }
 
@@ -419,6 +375,25 @@ mod tests {
         let back = PackedTensor::from_bytes(&packed.to_bytes()).unwrap();
         assert_eq!(packed, back);
         assert!(PackedTensor::from_bytes(b"junk").is_err());
+        // the FAQ1 container pack_model writes under .nvfp4 parses too
+        let via_faq1 = PackedTensor::from_bytes(&packed.to_quant().to_bytes()).unwrap();
+        assert_eq!(packed, via_faq1);
+    }
+
+    #[test]
+    fn from_bytes_validates_payload_against_shape() {
+        let w = rand_w(&[32, 16], 11, 0.05);
+        let p = prepare(&w);
+        let bytes = PackedTensor::pack(&w, &p, &p.v_init).to_bytes();
+        // every truncation errors (no panics, no trusting the header)
+        for cut in [3usize, 4, 7, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(PackedTensor::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // header lying about the code-section length errors too
+        let mut lying = bytes.clone();
+        let nc_off = bytes.len() - (32 * 16 / 2) - 8;
+        lying[nc_off..nc_off + 8].copy_from_slice(&(u64::MAX).to_le_bytes());
+        assert!(PackedTensor::from_bytes(&lying).is_err());
     }
 
     #[test]

@@ -169,6 +169,20 @@ pub fn gptq_quantize(
     s_global: &[f32],
     opts: GptqOptions,
 ) -> Result<Tensor> {
+    Ok(gptq_quantize_with_scales(w, hessian, scale, s_global, opts)?.0)
+}
+
+/// Like [`gptq_quantize`] but also returns the final effective-scale
+/// tensor. MR-GPTQ re-optimizes block scales mid-solve, so callers that
+/// pack the result (`formats::codec::encode_nvfp4_on_grid`) need the
+/// scales the solution actually sits on.
+pub fn gptq_quantize_with_scales(
+    w: &Tensor,
+    hessian: &Hessian,
+    scale: &Tensor,
+    s_global: &[f32],
+    opts: GptqOptions,
+) -> Result<(Tensor, Tensor)> {
     let (k, n) = w.mat_dims()?;
     if w.rank() != 2 {
         bail!("gptq_quantize expects [K, N], got {:?}", w.shape);
@@ -240,7 +254,7 @@ pub fn gptq_quantize(
             }
         }
     }
-    Ok(Tensor::new(out, w.shape.clone()))
+    Ok((Tensor::new(out, w.shape.clone()), Tensor::new(scale_work, w.shape.clone())))
 }
 
 /// Convenience: GPTQ over a stacked weight tensor [L, K, N], with one
@@ -252,18 +266,31 @@ pub fn gptq_quantize_stacked(
     s_global: &[f32],
     opts: GptqOptions,
 ) -> Result<Tensor> {
+    Ok(gptq_quantize_stacked_with_scales(w, hessians, scale, s_global, opts)?.0)
+}
+
+/// Stacked GPTQ returning (dequantized weights, final effective scales).
+pub fn gptq_quantize_stacked_with_scales(
+    w: &Tensor,
+    hessians: &[Hessian],
+    scale: &Tensor,
+    s_global: &[f32],
+    opts: GptqOptions,
+) -> Result<(Tensor, Tensor)> {
     let lead = w.lead();
     if hessians.len() != lead {
         bail!("{} hessians for {} slices", hessians.len(), lead);
     }
     let mut out = Tensor::zeros(&w.shape);
+    let mut scales_out = Tensor::zeros(&w.shape);
     for l in 0..lead {
         let ws = w.index0(l);
         let ss = scale.index0(l);
-        let q = gptq_quantize(&ws, &hessians[l], &ss, &[s_global[l]], opts)?;
+        let (q, sq) = gptq_quantize_with_scales(&ws, &hessians[l], &ss, &[s_global[l]], opts)?;
         out.set_index0(l, &q);
+        scales_out.set_index0(l, &sq);
     }
-    Ok(out)
+    Ok((out, scales_out))
 }
 
 #[cfg(test)]

@@ -4,15 +4,22 @@
 //! NVFP4"** (Li Auto Inc., 2026) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the runtime coordinator: config system, synthetic
-//!   data substrate, NVFP4 software codecs, GPTQ/RTN/4-6 baselines, the
+//!   data substrate, the pluggable 4-bit format layer
+//!   ([`formats::codec::FormatCodec`] + packed [`formats::QuantTensor`] as
+//!   the canonical quantized representation), GPTQ/RTN/4-6 baselines, the
 //!   FAAR + 2FA quantization pipeline, evaluation harness, table
-//!   reproduction, and a small inference server. Python never runs here.
+//!   reproduction, and a small inference server that holds models packed.
+//!   Python never runs here.
 //! * **L2 (python/compile)** — JAX graphs (Llama-style decoder, pretrain /
 //!   stage-1 / stage-2 optimization steps) AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's
 //!   compute hot-spot (format-aware soft-quant), lowered into the same HLO.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
+
+// Index-heavy numeric kernels: iterating several parallel arrays by index
+// is the idiom here, and the hot signatures mirror the AOT artifacts.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod calib;
 pub mod config;

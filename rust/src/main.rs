@@ -92,12 +92,24 @@ fn cmd_quantize(cfg: PipelineConfig, args: &Args) -> Result<()> {
     let outcome = wb.quantize(method)?;
     info!("quantized with {} in {:.1}s", method.name(), outcome.wall_s);
 
-    if let Some(state) = &outcome.faar {
+    let packed = outcome.params.packed_payload_bytes();
+    if packed > 0 {
+        let dense = outcome.params.packed_dense_bytes();
+        info!(
+            "{} layers held packed: {:.2} MiB vs {:.2} MiB fp32 ({:.1}x smaller)",
+            outcome.params.n_packed(),
+            packed as f64 / (1 << 20) as f64,
+            dense as f64 / (1 << 20) as f64,
+            dense as f64 / packed as f64
+        );
+    }
+
+    if outcome.params.n_packed() > 0 {
         let dir = out_dir.join(format!("packed_{}_{}", wb.cfg.model, sanitize(&method.name())));
-        let bytes = pack_model(&wb.rt, &wb.fp, state, &dir)?;
+        let bytes = pack_model(&wb.rt, &outcome.params, &dir)?;
         let fp_bytes = wb.fp.total_params() * 4;
         info!(
-            "packed NVFP4 payload: {:.2} MiB (fp32 {:.2} MiB, {:.1}x smaller) → {}",
+            "packed payload: {:.2} MiB (fp32 model {:.2} MiB, {:.1}x smaller) → {}",
             bytes as f64 / (1 << 20) as f64,
             fp_bytes as f64 / (1 << 20) as f64,
             fp_bytes as f64 / bytes as f64,

@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 use crate::calib::{fit_rows, Calibration};
 use crate::config::PipelineConfig;
 use crate::data::{batcher::Split, Batcher, Corpus};
-use crate::formats::nvfp4::Prepared;
+use crate::formats::codec::Prepared;
 use crate::quant::scaling;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Tensor;
@@ -43,8 +43,7 @@ pub fn prepare_all(rt: &Runtime, params: &ParamStore, cfg: &PipelineConfig) -> R
     let mut v = BTreeMap::new();
     for q in &rt.manifest.qlinears {
         let w = params.get(&q.name)?;
-        let (scale, s_global) = scaling::scales_for(w, cfg.scale_method);
-        let p = crate::formats::nvfp4::prepare_with_scales(w, scale, s_global);
+        let p = scaling::prepare_with_method(w, cfg.scale_method);
         v.insert(q.name.clone(), p.v_init.clone());
         prepared.insert(q.name.clone(), p);
     }

@@ -1,49 +1,49 @@
 //! Hardening (paper §3.5, eq. 7): continuous V → binary decisions →
-//! final NVFP4 weights, as both dequantized f32 tensors (for the PJRT
-//! eval graphs) and true packed `.nvfp4` payloads (the deployable form).
+//! final packed NVFP4 weights. The result is a [`QuantParamStore`] — the
+//! quantized linears stay packed (the deployable form) and dequantize
+//! lazily when the PJRT eval graphs ask for f32.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::formats::nvfp4::{hard_quant, PackedTensor};
+use crate::formats::codec::{FormatCodec, QuantTensor};
+use crate::formats::nvfp4::Nvfp4;
 use crate::runtime::Runtime;
-use crate::train::ParamStore;
+use crate::train::{ParamStore, QuantParamStore};
 
 use super::faar::FaarState;
 
-/// Replace every quantized linear in `params` with its hardened NVFP4
-/// dequantization. Returns the new store (non-quantized tensors shared).
+/// Encode every quantized linear from its learned decisions into a
+/// packed store (non-quantized tensors carried over dense).
 pub fn harden_to_params(
     rt: &Runtime,
     params: &ParamStore,
     state: &FaarState,
-) -> Result<ParamStore> {
-    let mut out = params.clone();
+) -> Result<QuantParamStore> {
+    let mut packed = BTreeMap::new();
     for q in &rt.manifest.qlinears {
         let w = params.get(&q.name)?;
-        let p = &state.prepared[&q.name];
-        let v = &state.v[&q.name];
-        out.set(&q.name, hard_quant(w, p, v))?;
+        packed.insert(
+            q.name.clone(),
+            Nvfp4.encode(w, &state.prepared[&q.name], &state.v[&q.name]),
+        );
     }
-    Ok(out)
+    Ok(QuantParamStore::from_store(params, packed))
 }
 
-/// Write every quantized linear as a packed `.nvfp4` file; returns the
-/// total payload bytes (the paper's memory-footprint claim).
-pub fn pack_model(
-    rt: &Runtime,
-    params: &ParamStore,
-    state: &FaarState,
-    dir: &Path,
-) -> Result<usize> {
+/// Write every quantized linear of an already-quantized store as a
+/// packed `.nvfp4` payload file (no re-encoding — the store's payloads
+/// are serialized as-is); returns the total payload bytes (the paper's
+/// memory-footprint claim).
+pub fn pack_model(rt: &Runtime, store: &QuantParamStore, dir: &Path) -> Result<usize> {
     std::fs::create_dir_all(dir)?;
     let mut total = 0usize;
     for q in &rt.manifest.qlinears {
-        let w = params.get(&q.name)?;
-        let p = &state.prepared[&q.name];
-        let v = &state.v[&q.name];
-        let packed = PackedTensor::pack(w, p, v);
+        let packed = store
+            .packed(&q.name)
+            .ok_or_else(|| anyhow!("qlinear '{}' is not held packed in this store", q.name))?;
         total += packed.payload_bytes();
         let fname = format!("{}.nvfp4", q.name.replace('.', "_"));
         std::fs::write(dir.join(fname), packed.to_bytes())?;
@@ -51,19 +51,15 @@ pub fn pack_model(
     Ok(total)
 }
 
-/// Load a packed model directory back into a param store (dequantized) —
-/// the serving path's cold-start.
-pub fn load_packed(
-    rt: &Runtime,
-    base: &ParamStore,
-    dir: &Path,
-) -> Result<ParamStore> {
-    let mut out = base.clone();
+/// Load a packed model directory into a quantized store — packed stays
+/// packed; dequantization happens lazily at eval. This is the serving
+/// path's cold-start.
+pub fn load_packed(rt: &Runtime, base: &ParamStore, dir: &Path) -> Result<QuantParamStore> {
+    let mut packed = BTreeMap::new();
     for q in &rt.manifest.qlinears {
         let fname = format!("{}.nvfp4", q.name.replace('.', "_"));
         let bytes = std::fs::read(dir.join(&fname))?;
-        let packed = PackedTensor::from_bytes(&bytes)?;
-        out.set(&q.name, packed.unpack())?;
+        packed.insert(q.name.clone(), QuantTensor::from_bytes(&bytes)?);
     }
-    Ok(out)
+    Ok(QuantParamStore::from_store(base, packed))
 }

@@ -1,18 +1,26 @@
 //! Method registry: every quantization method the paper's tables compare.
 //!
 //! `quantize` is the single entry point: (frozen fp params, calibration)
-//! → dequantized quantized-weight store, ready for the W4A4 eval graphs.
+//! → a [`QuantParamStore`] holding every quantized linear as a packed
+//! [`crate::formats::QuantTensor`], ready for the W4A4 eval graphs
+//! (which dequantize lazily, per layer). Every method routes through the
+//! [`crate::formats::FormatCodec`] trait, so formats are one axis of the
+//! registry rather than copy-pasted code paths — `Method::Mxfp4` is RTN
+//! through the MXFP4 codec, the Four-over-Six family is RTN through
+//! NVFP4 with a different scale chooser, and so on.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::calib::Calibration;
 use crate::config::{PipelineConfig, ScaleMethod};
 use crate::data::Corpus;
-use crate::formats::nvfp4;
-use crate::gptq::{gptq_quantize_stacked, GptqOptions};
+use crate::formats::codec::{self, codec_for, FormatCodec, FormatKind};
+use crate::gptq::{gptq_quantize_stacked_with_scales, GptqOptions};
 use crate::quant::rounding::RoundingScheme;
 use crate::runtime::Runtime;
-use crate::train::ParamStore;
+use crate::train::{ParamStore, QuantParamStore};
 
 use super::faar::{prepare_all, stage1, stage2, FaarState};
 use super::harden::harden_to_params;
@@ -32,6 +40,8 @@ pub enum Method {
     FourSix,
     /// RTN + MSE-optimal block-scale search (paper "strong baseline")
     StrongBaseline,
+    /// RTN through the MXFP4 codec (format-ablation row)
+    Mxfp4,
     /// GPTQ on the NVFP4 grid (standard scales)
     Gptq,
     /// MR-GPTQ: GPTQ with per-block scale re-optimization ([22])
@@ -54,6 +64,7 @@ impl Method {
             Method::Stochastic(s) => format!("stochastic[{s}]"),
             Method::FourSix => "4/6".into(),
             Method::StrongBaseline => "strong-baseline".into(),
+            Method::Mxfp4 => "mxfp4".into(),
             Method::Gptq => "gptq".into(),
             Method::MrGptq => "mr-gptq".into(),
             Method::GptqFourSix => "gptq+4/6".into(),
@@ -70,6 +81,7 @@ impl Method {
             "upper" => Method::Upper,
             "4/6" | "foursix" => Method::FourSix,
             "strong-baseline" | "strong" => Method::StrongBaseline,
+            "mxfp4" => Method::Mxfp4,
             "gptq" => Method::Gptq,
             "mr-gptq" | "mrgptq" => Method::MrGptq,
             "gptq+4/6" | "gptq46" => Method::GptqFourSix,
@@ -97,11 +109,20 @@ impl Method {
     pub fn w4a4(&self) -> bool {
         !matches!(self, Method::Bf16)
     }
+
+    /// The element format this method quantizes into.
+    pub fn format(&self) -> FormatKind {
+        match self {
+            Method::Mxfp4 => FormatKind::Mxfp4,
+            _ => FormatKind::Nvfp4,
+        }
+    }
 }
 
 /// Result of quantizing a model with a method.
 pub struct QuantOutcome {
-    pub params: ParamStore,
+    /// the quantized model: packed layers + dense passthrough
+    pub params: QuantParamStore,
     pub method: Method,
     pub wall_s: f64,
     /// FAAR-family state (for packing / inspection); None for baselines
@@ -124,19 +145,29 @@ pub fn quantize(
     }
 
     let params = match method {
-        Method::Bf16 => fp_params.clone(),
-        Method::Rtn => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Rtn)?,
-        Method::Lower => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Lower)?,
-        Method::Upper => round_all(rt, fp_params, ScaleMethod::Standard, RoundingScheme::Upper)?,
+        Method::Bf16 => QuantParamStore::dense_only(fp_params.clone()),
+        Method::Rtn => round_all(rt, fp_params, method, ScaleMethod::Standard, RoundingScheme::Rtn)?,
+        Method::Lower => {
+            round_all(rt, fp_params, method, ScaleMethod::Standard, RoundingScheme::Lower)?
+        }
+        Method::Upper => {
+            round_all(rt, fp_params, method, ScaleMethod::Standard, RoundingScheme::Upper)?
+        }
         Method::Stochastic(seed) => round_all(
             rt,
             fp_params,
+            method,
             ScaleMethod::Standard,
             RoundingScheme::Stochastic(seed),
         )?,
-        Method::FourSix => round_all(rt, fp_params, ScaleMethod::FourSix, RoundingScheme::Rtn)?,
+        Method::FourSix => {
+            round_all(rt, fp_params, method, ScaleMethod::FourSix, RoundingScheme::Rtn)?
+        }
         Method::StrongBaseline => {
-            round_all(rt, fp_params, ScaleMethod::Search, RoundingScheme::Rtn)?
+            round_all(rt, fp_params, method, ScaleMethod::Search, RoundingScheme::Rtn)?
+        }
+        Method::Mxfp4 => {
+            round_all(rt, fp_params, method, ScaleMethod::Standard, RoundingScheme::Rtn)?
         }
         Method::Gptq => gptq_all(rt, fp_params, calib.unwrap(), ScaleMethod::Standard, false, cfg)?,
         Method::MrGptq => gptq_all(rt, fp_params, calib.unwrap(), ScaleMethod::Standard, true, cfg)?,
@@ -164,18 +195,40 @@ pub fn quantize(
     Ok(QuantOutcome { params, method, wall_s: t0.elapsed().as_secs_f64(), faar: None })
 }
 
-/// Training-free path: scales + rounding scheme on every qlinear.
+/// Training-free path: scale selection + rounding scheme on every
+/// qlinear, through the method's codec; each layer lands packed.
 fn round_all(
     rt: &Runtime,
     fp_params: &ParamStore,
+    method: Method,
     scale_method: ScaleMethod,
     scheme: RoundingScheme,
-) -> Result<ParamStore> {
-    let mut out = fp_params.clone();
+) -> Result<QuantParamStore> {
+    let kind = method.format();
+    let codec = codec_for(kind);
+    let mut packed = BTreeMap::new();
     for (i, q) in rt.manifest.qlinears.iter().enumerate() {
         let w = fp_params.get(&q.name)?;
-        let (scale, s_global) = crate::quant::scaling::scales_for(w, scale_method);
-        let p = nvfp4::prepare_with_scales(w, scale, s_global);
+        // a clean error (not a codec assert) when the layer shape doesn't
+        // fit this format's block: manifests only guarantee NVFP4's 16
+        let block = codec.block_size();
+        if block > 0 && q.k % block != 0 {
+            bail!(
+                "method {} ({}): qlinear '{}' K={} is not a multiple of the {}-element block",
+                method.name(),
+                codec.name(),
+                q.name,
+                q.k,
+                block
+            );
+        }
+        // NVFP4 exposes pluggable block-scale choosers (standard / 4-6 /
+        // search); other codecs use their native recipe
+        let p = if kind == FormatKind::Nvfp4 {
+            crate::quant::scaling::prepare_with_method(w, scale_method)
+        } else {
+            codec.prepare(w)
+        };
         // per-tensor seed variation for stochastic trials
         let scheme_i = match scheme {
             RoundingScheme::Stochastic(s) => {
@@ -183,12 +236,14 @@ fn round_all(
             }
             other => other,
         };
-        out.set(&q.name, crate::quant::round_with(w, &p, scheme_i))?;
+        let v = scheme_i.decisions(&p);
+        packed.insert(q.name.clone(), codec.encode(w, &p, &v));
     }
-    Ok(out)
+    Ok(QuantParamStore::from_store(fp_params, packed))
 }
 
-/// GPTQ path: per-layer Hessians from calibration, column solve per slice.
+/// GPTQ path: per-layer Hessians from calibration, column solve per
+/// slice, result re-encoded on-grid into a packed `QuantTensor`.
 fn gptq_all(
     rt: &Runtime,
     fp_params: &ParamStore,
@@ -196,23 +251,23 @@ fn gptq_all(
     scale_method: ScaleMethod,
     mr_scales: bool,
     cfg: &PipelineConfig,
-) -> Result<ParamStore> {
-    let mut out = fp_params.clone();
+) -> Result<QuantParamStore> {
+    let mut packed = BTreeMap::new();
     for q in &rt.manifest.qlinears {
         let w = fp_params.get(&q.name)?;
         let (scale, s_global) = crate::quant::scaling::scales_for(w, scale_method);
         let hessians = &calib.set(&q.capture)?.hessians;
-        let wq = gptq_quantize_stacked(
+        let (wq, scales_final) = gptq_quantize_stacked_with_scales(
             w,
             hessians,
             &scale,
             &s_global,
             GptqOptions { damp: cfg.gptq_damp, mr_scales },
         )?;
-        out.set(&q.name, wq)?;
+        packed.insert(q.name.clone(), codec::encode_nvfp4_on_grid(&wq, &scales_final, &s_global));
         crate::debug!("gptq done: {}", q.name);
     }
-    Ok(out)
+    Ok(QuantParamStore::from_store(fp_params, packed))
 }
 
 #[cfg(test)]
@@ -228,6 +283,7 @@ mod tests {
             Method::Upper,
             Method::FourSix,
             Method::StrongBaseline,
+            Method::Mxfp4,
             Method::Gptq,
             Method::MrGptq,
             Method::GptqFourSix,
@@ -248,5 +304,13 @@ mod tests {
         assert!(Method::Faar2fa.needs_calibration());
         assert!(!Method::Bf16.w4a4());
         assert!(Method::Rtn.w4a4());
+        assert!(Method::Mxfp4.w4a4());
+    }
+
+    #[test]
+    fn format_axis() {
+        assert_eq!(Method::Rtn.format(), FormatKind::Nvfp4);
+        assert_eq!(Method::Gptq.format(), FormatKind::Nvfp4);
+        assert_eq!(Method::Mxfp4.format(), FormatKind::Mxfp4);
     }
 }

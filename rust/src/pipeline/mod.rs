@@ -6,8 +6,9 @@
 //! * [`faar`] — the learnable part: Stage-1 layer-wise adaptive rounding
 //!   and Stage-2 full-model alignment, driven through the AOT step graphs
 //!   with rust owning the β/λ schedules, the job order and the state.
-//! * [`harden`] — continuous V → binary decisions → dequantized weights
-//!   and true packed `.nvfp4` payloads.
+//! * [`harden`] — continuous V → binary decisions → packed
+//!   `QuantTensor`s (the canonical quantized representation; the eval
+//!   graphs dequantize lazily through `train::QuantParamStore`).
 
 pub mod faar;
 pub mod harden;
@@ -15,6 +16,6 @@ pub mod methods;
 pub mod workbench;
 
 pub use faar::{stage1, stage2, FaarState};
-pub use harden::{harden_to_params, pack_model};
+pub use harden::{harden_to_params, load_packed, pack_model};
 pub use methods::{quantize, Method, QuantOutcome};
 pub use workbench::Workbench;

@@ -14,4 +14,4 @@ pub mod rounding;
 pub mod scaling;
 
 pub use rounding::{round_with, RoundingScheme};
-pub use scaling::scales_for;
+pub use scaling::{prepare_with_method, scales_for};

@@ -1,11 +1,12 @@
-//! Rounding schemes over a prepared NVFP4 interval context (Table 1).
+//! Rounding schemes over a prepared interval context (Table 1).
 //!
 //! All schemes produce a binary decision tensor `v` (1 → upper node) that
-//! plugs into `formats::nvfp4::hard_quant`. Stochastic rounding picks the
-//! upper node with probability = relative position in the interval
-//! (unbiased: E[q] = w̃).
+//! plugs into `formats::codec::hard_quant` — they are format-agnostic:
+//! any [`crate::formats::FormatCodec`]'s `Prepared` context works.
+//! Stochastic rounding picks the upper node with probability = relative
+//! position in the interval (unbiased: E[q] = w̃).
 
-use crate::formats::nvfp4::{hard_quant, Prepared};
+use crate::formats::codec::{hard_quant, rtn_decisions, Prepared};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -34,7 +35,7 @@ impl RoundingScheme {
     /// Binary decisions for this scheme.
     pub fn decisions(&self, p: &Prepared) -> Tensor {
         match self {
-            RoundingScheme::Rtn => p.v_init.map(|v| if v > 0.5 { 1.0 } else { 0.0 }),
+            RoundingScheme::Rtn => rtn_decisions(p),
             RoundingScheme::Lower => Tensor::zeros(&p.v_init.shape),
             RoundingScheme::Upper => Tensor::full(&p.v_init.shape, 1.0),
             RoundingScheme::Stochastic(seed) => {

@@ -9,6 +9,7 @@
 //! baseline; DESIGN.md §7).
 
 use crate::config::ScaleMethod;
+use crate::formats::codec::{self, Prepared};
 use crate::formats::{e2m1, e4m3, nvfp4};
 use crate::tensor::Tensor;
 
@@ -20,6 +21,14 @@ pub fn scales_for(w: &Tensor, method: ScaleMethod) -> (Tensor, Vec<f32>) {
         ScaleMethod::FourSix => four_six_scales(w),
         ScaleMethod::Search => search_scales(w),
     }
+}
+
+/// Build the NVFP4 interval context for `w` under a scale method — the
+/// single entry point pipeline code uses (no `Prepared` construction
+/// outside `formats/`).
+pub fn prepare_with_method(w: &Tensor, method: ScaleMethod) -> Prepared {
+    let (scale, s_global) = scales_for(w, method);
+    codec::prepare_with_scales(w, scale, s_global)
 }
 
 /// Block MSE of RTN quantization for a candidate *effective* scale.
@@ -121,9 +130,8 @@ pub fn search_scales(w: &Tensor) -> (Tensor, Vec<f32>) {
 /// Total RTN quantization MSE of a weight tensor under a scale method —
 /// used by tests and the ablation bench.
 pub fn rtn_mse(w: &Tensor, method: ScaleMethod) -> f64 {
-    let (scale, s_global) = scales_for(w, method);
-    let p = nvfp4::prepare_with_scales(w, scale, s_global);
-    let q = nvfp4::rtn_quant(w, &p);
+    let p = prepare_with_method(w, method);
+    let q = codec::rtn_quant(w, &p);
     crate::util::stats::mse(&q.data, &w.data)
 }
 

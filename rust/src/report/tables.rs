@@ -245,58 +245,40 @@ pub fn sweep_config(base: &PipelineConfig) -> PipelineConfig {
 
 /// Format ablation (extension — DESIGN.md §6 footnote): NVFP4's
 /// 16-element E4M3 block scales vs MXFP4's 32-element power-of-two
-/// scales, on the same checkpoint. Weight MSE + end-task PPL (weights
-/// swapped per format; activations stay NVFP4 in-graph).
+/// scales, on the same checkpoint. Both rows are one `Method` through
+/// the unified `FormatCodec` registry — weight MSE, end-task PPL, and
+/// the real packed bits/weight each format pays for its scales.
 pub fn format_ablation(wb: &Workbench) -> Result<Table> {
-    use crate::formats::mxfp4;
     let mut t = Table::new(
         &format!(
-            "Format ablation — NVFP4 vs MXFP4, model {} (weight MSE / PPL ↓)",
+            "Format ablation — NVFP4 vs MXFP4, model {} (weight MSE / PPL ↓ / bits per weight)",
             wb.cfg.model
         ),
-        &["weight_mse", "wiki_ppl", "c4_ppl"],
+        &["weight_mse", "wiki_ppl", "c4_ppl", "bits_per_w"],
     );
 
-    let weight_mse = |params: &crate::train::ParamStore| -> f64 {
+    let weight_mse = |out: &crate::pipeline::QuantOutcome| -> Result<f64> {
         let mut acc = 0.0;
         let mut n = 0usize;
         for q in &wb.rt.manifest.qlinears {
-            let a = wb.fp.get(&q.name).unwrap();
-            let b = params.get(&q.name).unwrap();
+            let a = wb.fp.get(&q.name)?;
+            let b = out.params.get(&q.name)?;
             acc += stats::mse(&a.data, &b.data) * a.data.len() as f64;
             n += a.data.len();
         }
-        acc / n as f64
+        Ok(acc / n as f64)
     };
 
-    // NVFP4 RTN (the repo's native path)
-    let nv = wb.quantize(Method::Rtn)?;
-    let nv_mse = weight_mse(&nv.params);
-    t.row_f("nvfp4 (rtn)", &[
-        nv_mse,
-        wb.ppl(&nv, "wiki")?,
-        wb.ppl(&nv, "c4")?,
-    ]);
-
-    // MXFP4 RTN: swap every quantized linear for its MXFP4 quantization
-    let mut mx_params = wb.fp.clone();
-    for q in &wb.rt.manifest.qlinears {
-        let w = wb.fp.get(&q.name)?;
-        mx_params.set(&q.name, mxfp4::mxfp4_rtn_quant(w))?;
+    let mut mses = vec![];
+    for (label, m) in [("nvfp4 (rtn)", Method::Rtn), ("mxfp4 (rtn)", Method::Mxfp4)] {
+        let out = wb.quantize(m)?;
+        let mse = weight_mse(&out)?;
+        let bits = out.params.packed_payload_bytes() as f64 * 8.0
+            / (out.params.packed_dense_bytes() / 4).max(1) as f64;
+        t.row_f(label, &[mse, wb.ppl(&out, "wiki")?, wb.ppl(&out, "c4")?, bits]);
+        mses.push(mse);
     }
-    let mx = crate::pipeline::QuantOutcome {
-        params: mx_params,
-        method: Method::Rtn,
-        wall_s: 0.0,
-        faar: None,
-    };
-    let mx_mse = weight_mse(&mx.params);
-    t.row_f("mxfp4 (rtn)", &[
-        mx_mse,
-        wb.ppl(&mx, "wiki")?,
-        wb.ppl(&mx, "c4")?,
-    ]);
     t.precision = 4;
-    crate::info!("format ablation: nvfp4 mse {nv_mse:.3e} vs mxfp4 {mx_mse:.3e}");
+    crate::info!("format ablation: nvfp4 mse {:.3e} vs mxfp4 {:.3e}", mses[0], mses[1]);
     Ok(t)
 }

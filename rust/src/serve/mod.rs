@@ -17,18 +17,32 @@ use anyhow::{anyhow, Result};
 
 use crate::data::Tokenizer;
 use crate::runtime::{Runtime, Value};
-use crate::train::ParamStore;
+use crate::train::{ParamSource, QuantParamStore};
 use crate::util::json::Json;
 
 pub struct Generator<'r> {
     pub rt: &'r Runtime,
-    pub params: ParamStore,
+    /// quantized layers held packed (~4.5 bits/weight); dequantized
+    /// lazily on first forward and memoized for the process lifetime
+    pub params: QuantParamStore,
     pub tokenizer: Tokenizer,
 }
 
 impl<'r> Generator<'r> {
-    pub fn new(rt: &'r Runtime, params: ParamStore) -> Generator<'r> {
+    pub fn new(rt: &'r Runtime, params: QuantParamStore) -> Generator<'r> {
         let tokenizer = Tokenizer::new(rt.config().vocab);
+        let packed = params.packed_payload_bytes();
+        if packed > 0 {
+            let dense = params.packed_dense_bytes();
+            crate::info!(
+                "model payload: {} quantized layers packed at {:.2} MiB ({:.2} MiB as fp32, \
+                 {:.1}x smaller); dense copies are decoded lazily per layer and memoized",
+                params.n_packed(),
+                packed as f64 / (1 << 20) as f64,
+                dense as f64 / (1 << 20) as f64,
+                dense as f64 / packed as f64
+            );
+        }
         Generator { rt, params, tokenizer }
     }
 
@@ -42,7 +56,7 @@ impl<'r> Generator<'r> {
         let mut pos = plen.saturating_sub(1);
         let mut out = Vec::with_capacity(max_tokens);
 
-        let mut args = self.params.values();
+        let mut args = self.params.values()?;
         args.push(Value::I32(buf.clone(), vec![1, t]));
         args.push(Value::scalar_i32(pos as i32));
         let tok_idx = args.len() - 2;

@@ -9,5 +9,5 @@
 pub mod params;
 pub mod pretrain;
 
-pub use params::ParamStore;
+pub use params::{ParamSource, ParamStore, QuantParamStore};
 pub use pretrain::{pretrain, PretrainReport};

@@ -1,10 +1,22 @@
-//! Ordered parameter store matching the manifest weight layout.
+//! Ordered parameter stores matching the manifest weight layout.
+//!
+//! * [`ParamStore`] — dense fp32 tensors (the pretrained checkpoint, the
+//!   optimizer state, the bf16 reference).
+//! * [`QuantParamStore`] — the canonical *quantized* model: dense fp32
+//!   for the non-quantized params, packed [`QuantTensor`]s for every
+//!   quantized linear, dequantized lazily (per layer, memoized) when an
+//!   eval graph needs f32.
+//! * [`ParamSource`] — the common "give me all weights in manifest
+//!   order" interface the runtime/eval/serve layers consume, so either
+//!   store drives the graphs without conversion.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::formats::codec::QuantTensor;
 use crate::runtime::{manifest::Init, Manifest, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -171,6 +183,135 @@ impl ParamStore {
     }
 }
 
+// ---------------------------------------------------------------------------
+// ParamSource: the weight interface the graphs consume
+
+/// Anything that can hand the runtime a full weight set in manifest
+/// order. Dense and packed stores both implement it, so eval/serve run
+/// off either without materializing a conversion.
+pub trait ParamSource {
+    /// Flat values in manifest order (artifact marshalling).
+    fn values(&self) -> Result<Vec<Value>>;
+
+    /// One tensor by name (owned; implementations may decode on demand).
+    fn tensor(&self, name: &str) -> Result<Tensor>;
+}
+
+impl ParamSource for ParamStore {
+    fn values(&self) -> Result<Vec<Value>> {
+        Ok(ParamStore::values(self))
+    }
+
+    fn tensor(&self, name: &str) -> Result<Tensor> {
+        Ok(self.get(name)?.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantParamStore: packed quantized layers, lazily dequantized
+
+/// The canonical quantized-model representation: non-quantized params
+/// stay dense fp32; every quantized linear is held as a packed
+/// [`QuantTensor`] (~4.5 bits/weight for NVFP4) and dequantized lazily —
+/// per layer, on first demand — when an eval graph asks for f32.
+///
+/// Dequantized layers are memoized so repeated forwards don't re-decode;
+/// that cache trades memory for speed (packed payload + dense copies
+/// while warm). `packed_payload_bytes` reports the payload itself (the
+/// store/disk footprint); call [`Self::clear_dequant_cache`] to drop the
+/// warm dense copies between requests if memory matters more than
+/// latency.
+#[derive(Clone, Debug)]
+pub struct QuantParamStore {
+    names: Vec<String>,
+    dense: BTreeMap<String, Tensor>,
+    packed: BTreeMap<String, QuantTensor>,
+    cache: RefCell<BTreeMap<String, Tensor>>,
+}
+
+impl QuantParamStore {
+    /// A store with no packed layers (the bf16 reference path).
+    pub fn dense_only(fp: ParamStore) -> QuantParamStore {
+        Self::from_store(&fp, BTreeMap::new())
+    }
+
+    /// Build from a dense store plus packed payloads. The fp32 copies of
+    /// packed layers are dropped — packed is the representation.
+    pub fn from_store(fp: &ParamStore, packed: BTreeMap<String, QuantTensor>) -> QuantParamStore {
+        let mut dense = BTreeMap::new();
+        for name in &fp.names {
+            if !packed.contains_key(name) {
+                dense.insert(name.clone(), fp.get(name).expect("name in layout").clone());
+            }
+        }
+        QuantParamStore {
+            names: fp.names.clone(),
+            dense,
+            packed,
+            cache: RefCell::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The packed payload for a quantized layer, if `name` is one.
+    pub fn packed(&self, name: &str) -> Option<&QuantTensor> {
+        self.packed.get(name)
+    }
+
+    pub fn n_packed(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Bytes of the packed payloads (codes + block scales + globals) —
+    /// the real memory footprint of the quantized layers.
+    pub fn packed_payload_bytes(&self) -> usize {
+        self.packed.values().map(|q| q.payload_bytes()).sum()
+    }
+
+    /// fp32 bytes the packed layers would cost dequantized.
+    pub fn packed_dense_bytes(&self) -> usize {
+        self.packed.values().map(|q| q.numel() * 4).sum()
+    }
+
+    /// Drop the memoized dequantized copies (they repopulate on demand).
+    pub fn clear_dequant_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    /// Get one tensor, dequantizing (and memoizing) packed layers on
+    /// demand.
+    pub fn get(&self, name: &str) -> Result<Tensor> {
+        if let Some(t) = self.dense.get(name) {
+            return Ok(t.clone());
+        }
+        let q = self.packed.get(name).ok_or_else(|| anyhow!("no param '{name}'"))?;
+        if let Some(t) = self.cache.borrow().get(name) {
+            return Ok(t.clone());
+        }
+        let t = q.dequantize()?;
+        self.cache.borrow_mut().insert(name.to_string(), t.clone());
+        Ok(t)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.dense.values().map(|t| t.numel()).sum::<usize>()
+            + self.packed.values().map(|q| q.numel()).sum::<usize>()
+    }
+}
+
+impl ParamSource for QuantParamStore {
+    fn values(&self) -> Result<Vec<Value>> {
+        self.names.iter().map(|n| Ok(Value::F32(self.get(n)?))).collect()
+    }
+
+    fn tensor(&self, name: &str) -> Result<Tensor> {
+        self.get(name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +398,63 @@ mod tests {
         assert!(p.set("out_norm", Tensor::zeros(&[16])).is_err());
         assert!(p.set("nope", Tensor::zeros(&[32])).is_err());
         assert!(p.set("out_norm", Tensor::zeros(&[32])).is_ok());
+    }
+
+    fn packed_store() -> (ParamStore, QuantParamStore, QuantTensor) {
+        use crate::formats::codec::{codec_for, rtn_decisions, FormatCodec, FormatKind};
+        let m = mini_manifest();
+        let fp = ParamStore::init(&m, 7);
+        let codec = codec_for(FormatKind::Nvfp4);
+        let w = fp.get("layers.wq").unwrap();
+        let p = codec.prepare(w);
+        let q = codec.encode(w, &p, &rtn_decisions(&p));
+        let mut packed = BTreeMap::new();
+        packed.insert("layers.wq".to_string(), q.clone());
+        let store = QuantParamStore::from_store(&fp, packed);
+        (fp, store, q)
+    }
+
+    #[test]
+    fn quant_store_holds_packed_payload_size() {
+        let (_, store, q) = packed_store();
+        let numel = q.numel();
+        assert_eq!(numel, 1024);
+        // payload ≈ numel/2 code bytes + numel/16 E4M3 scale bytes + one
+        // f32 global per slice — exactly, for this layout
+        assert_eq!(q.payload_bytes(), numel / 2 + numel / 16 + 4);
+        assert_eq!(store.packed_payload_bytes(), q.payload_bytes());
+        assert_eq!(store.n_packed(), 1);
+        // the fp32 copy of the quantized layer is gone: packed is ~7x
+        // smaller than its dense form
+        assert!(store.packed_payload_bytes() * 4 < store.packed_dense_bytes());
+        assert_eq!(store.packed_dense_bytes(), numel * 4);
+    }
+
+    #[test]
+    fn quant_store_lazy_dequant_and_passthrough() {
+        let (fp, store, q) = packed_store();
+        // lazy dequant equals direct decode, twice (memoized path)
+        let deq = store.get("layers.wq").unwrap();
+        assert_eq!(deq.data, q.dequantize().unwrap().data);
+        assert_eq!(store.get("layers.wq").unwrap().data, deq.data);
+        // dropping the memoized copies is safe; they repopulate on demand
+        store.clear_dequant_cache();
+        assert_eq!(store.get("layers.wq").unwrap().data, deq.data);
+        // non-quantized params pass through untouched
+        assert_eq!(store.get("out_norm").unwrap().data, fp.get("out_norm").unwrap().data);
+        assert!(store.get("nope").is_err());
+        assert_eq!(store.total_params(), fp.total_params());
+        // manifest-order values: same count and shapes as the dense store
+        let vals = ParamSource::values(&store).unwrap();
+        let dense_vals = ParamStore::values(&fp);
+        assert_eq!(vals.len(), dense_vals.len());
+        for (a, b) in vals.iter().zip(&dense_vals) {
+            assert_eq!(a.shape(), b.shape());
+        }
+        // dense_only keeps everything dense
+        let plain = QuantParamStore::dense_only(fp.clone());
+        assert_eq!(plain.n_packed(), 0);
+        assert_eq!(plain.packed_payload_bytes(), 0);
+        assert_eq!(plain.get("layers.wq").unwrap().data, fp.get("layers.wq").unwrap().data);
     }
 }

@@ -1,12 +1,16 @@
-//! Property-based tests over the NVFP4 codec stack (util::prop — the
+//! Property-based tests over the format-codec stack (util::prop — the
 //! offline stand-in for proptest). These pin the invariants the whole
-//! pipeline leans on, over adversarial input distributions.
+//! pipeline leans on, over adversarial input distributions — including
+//! the `FormatCodec`/`QuantTensor` contract for all three codecs.
 
+use nvfp4_faar::formats::codec::{self, rtn_decisions, FormatCodec, FormatKind, QuantTensor};
 use nvfp4_faar::formats::{e2m1, e4m3, nvfp4};
 use nvfp4_faar::quant::rounding::RoundingScheme;
 use nvfp4_faar::quant::round_with;
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::util::prop::{check_msg, gen};
+
+const ALL_KINDS: [FormatKind; 3] = [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1];
 
 fn tensor_from(v: Vec<f32>, cols: usize) -> Tensor {
     let rows = v.len() / cols;
@@ -162,6 +166,132 @@ fn prop_pack_roundtrip_arbitrary_decisions() {
                 let tol = 1e-6 * expect.data[i].abs().max(1e-5);
                 if d > tol {
                     return Err(format!("i={i}: {} vs {}", deq.data[i], expect.data[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_tensor_roundtrip_all_codecs() {
+    // pack → to_bytes → from_bytes → dequantize equals hard_quant, for
+    // every codec, under arbitrary binary decisions (K=64 satisfies both
+    // the 16- and 32-element block constraints)
+    for kind in ALL_KINDS {
+        let c = codec::codec_for(kind);
+        check_msg(
+            &format!("qt_roundtrip_{}", c.name()),
+            30,
+            |rng| {
+                let w = gen::f32_heavy(rng, 64 * 16);
+                let v: Vec<f32> =
+                    (0..64 * 16).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+                (w, v)
+            },
+            |(wv, vv)| {
+                let w = tensor_from(wv.clone(), 16);
+                let v = tensor_from(vv.clone(), 16);
+                let p = c.prepare(&w);
+                let expect = nvfp4::hard_quant(&w, &p, &v);
+                let q = c.encode(&w, &p, &v);
+                let back = QuantTensor::from_bytes(&q.to_bytes()).map_err(|e| e.to_string())?;
+                if back != q {
+                    return Err(format!("{}: container round-trip not identical", c.name()));
+                }
+                let deq = back.dequantize().map_err(|e| e.to_string())?;
+                for i in 0..w.numel() {
+                    let d = (deq.data[i] - expect.data[i]).abs();
+                    let tol = 1e-5 * expect.data[i].abs().max(1e-5);
+                    if d > tol {
+                        return Err(format!(
+                            "{}: i={i}: {} vs {}",
+                            c.name(),
+                            deq.data[i],
+                            expect.data[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_double_quantization_is_identity() {
+    // quantizing an already-quantized tensor (with its own scale context)
+    // must be the identity for every codec
+    for kind in ALL_KINDS {
+        let c = codec::codec_for(kind);
+        check_msg(
+            &format!("qt_idempotent_{}", c.name()),
+            30,
+            |rng| gen::f32_normal(rng, 64 * 16, 0.5),
+            |xs| {
+                let w = tensor_from(xs.clone(), 16);
+                let p = c.prepare(&w);
+                let t1 = c
+                    .encode(&w, &p, &rtn_decisions(&p))
+                    .dequantize()
+                    .map_err(|e| e.to_string())?;
+                let p2 = codec::prepare_with_scales(&t1, p.scale.clone(), p.s_global.clone());
+                let t2 = c
+                    .encode(&t1, &p2, &rtn_decisions(&p2))
+                    .dequantize()
+                    .map_err(|e| e.to_string())?;
+                for i in 0..t1.numel() {
+                    let d = (t2.data[i] - t1.data[i]).abs();
+                    if d > 1e-6 * t1.data[i].abs().max(1e-6) {
+                        return Err(format!(
+                            "{}: i={i}: requantized {} != {}",
+                            c.name(),
+                            t2.data[i],
+                            t1.data[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn grid_monotone_and_block_sizes() {
+    for c in codec::all_codecs() {
+        let g = c.grid();
+        assert_eq!(g[0], 0.0, "{} grid must start at 0", c.name());
+        assert!(
+            g.windows(2).all(|w| w[0] < w[1]),
+            "{} grid not strictly increasing: {g:?}",
+            c.name()
+        );
+        assert!(g.iter().all(|x| x.is_finite()));
+        // the grid must agree with the E2M1 decode table the codes index
+        for (i, &node) in g.iter().enumerate() {
+            assert_eq!(e2m1::decode(i as u8), node);
+        }
+    }
+    assert_eq!(codec::codec_for(FormatKind::Nvfp4).block_size(), 16);
+    assert_eq!(codec::codec_for(FormatKind::Mxfp4).block_size(), 32);
+    assert_eq!(codec::codec_for(FormatKind::E2m1).block_size(), 0);
+}
+
+#[test]
+fn prop_container_rejects_truncation() {
+    check_msg(
+        "qt_truncation",
+        40,
+        |rng| gen::f32_normal(rng, 32 * 16, 0.1),
+        |xs| {
+            let w = tensor_from(xs.clone(), 16);
+            let c = codec::codec_for(FormatKind::Nvfp4);
+            let p = c.prepare(&w);
+            let bytes = c.encode(&w, &p, &rtn_decisions(&p)).to_bytes();
+            for cut in [0usize, 3, 4, 11, 30, bytes.len() / 2, bytes.len() - 1] {
+                if QuantTensor::from_bytes(&bytes[..cut]).is_ok() {
+                    return Err(format!("accepted truncation at {cut}"));
                 }
             }
             Ok(())
