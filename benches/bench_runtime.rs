@@ -1,18 +1,148 @@
 //! Runtime / artifact benches: compile cost, forward latency + token
 //! throughput, stage-1 step latency, and the Pallas-vs-jnp kernel cost
-//! through the real PJRT path. Needs `make artifacts` (nano).
+//! through the real PJRT path (needs `make artifacts`, nano) — plus a
+//! synthetic serving load-generator that measures the concurrent batched
+//! engine end-to-end over TCP (no artifacts needed) and writes
+//! `BENCH_serve.json` with p50/p95/p99 latency and tokens/sec at micro-
+//! batch sizes 1/4/16.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
+use std::time::{Duration, Instant};
 
 use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::serve::{serve_on, ServeOptions, SyntheticBackend};
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::bench::{black_box, Bench};
+use nvfp4_faar::util::json::Json;
 use nvfp4_faar::util::rng::Rng;
+use nvfp4_faar::util::stats;
+
+/// One load-generator client: ping-pong `reqs` token-id requests, return
+/// per-request latencies as measured by the server.
+fn load_client(
+    addr: SocketAddr,
+    id: usize,
+    reqs: usize,
+    max_tokens: usize,
+    vocab: usize,
+) -> Vec<f64> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("timeout");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut latencies = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let prompt: Vec<Json> = (0..4)
+            .map(|j| Json::num(((id * 31 + i * 7 + j) % vocab) as f64))
+            .collect();
+        let req = Json::obj(vec![
+            ("tokens", Json::Arr(prompt)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+        ]);
+        stream.write_all(req.to_string().as_bytes()).expect("write");
+        stream.write_all(b"\n").expect("write");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read");
+        let resp = Json::parse(&line).expect("parse");
+        assert!(resp.get("error").is_none(), "server error: {line}");
+        latencies.push(resp.req("latency_ms").unwrap().as_f64().unwrap());
+    }
+    latencies
+}
+
+/// Synthetic serving load: the cost model charges a fixed per-step
+/// overhead plus a small per-slot cost (the accelerator-step shape that
+/// makes micro-batching pay), so tokens/sec must rise with `max_batch`.
+fn bench_serve_load() {
+    let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+    let (n_clients, reqs, max_tokens) = if fast { (8, 4, 8) } else { (16, 8, 16) };
+    let (vocab, seq_len) = (512, 64);
+    let fixed = Duration::from_micros(250);
+    let per_slot = Duration::from_micros(15);
+
+    println!("serve load generator: {n_clients} clients x {reqs} reqs x {max_tokens} tokens");
+    let mut runs = vec![];
+    for &max_batch in &[1usize, 4, 16] {
+        let backend =
+            SyntheticBackend::new(vocab, seq_len, 42).with_costs(fixed, per_slot);
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let opts = ServeOptions {
+            max_batch,
+            queue_depth: 256,
+            max_tokens_cap: 64,
+            ..ServeOptions::default()
+        };
+        let t0 = Instant::now();
+        let (latencies, sched) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|id| s.spawn(move || load_client(addr, id, reqs, max_tokens, vocab)))
+                .collect();
+            let sched = serve_on(&backend, listener, Some(n_clients), opts).expect("serve");
+            let mut latencies = vec![];
+            for h in handles {
+                latencies.extend(h.join().expect("client panicked"));
+            }
+            (latencies, sched)
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let total_tokens = (n_clients * reqs * max_tokens) as f64;
+        let tok_s = total_tokens / wall;
+        let (p50, p95, p99) = (
+            stats::percentile(&latencies, 50.0),
+            stats::percentile(&latencies, 95.0),
+            stats::percentile(&latencies, 99.0),
+        );
+        println!(
+            "  max_batch {max_batch:>2}: {tok_s:>8.0} tok/s  p50 {p50:>7.2} ms  \
+             p95 {p95:>7.2} ms  p99 {p99:>7.2} ms  ({} steps, peak batch {})",
+            sched.steps, sched.peak_batch
+        );
+        runs.push(Json::obj(vec![
+            ("max_batch", Json::num(max_batch as f64)),
+            ("tokens_per_s", Json::Num(tok_s)),
+            ("p50_ms", Json::Num(p50)),
+            ("p95_ms", Json::Num(p95)),
+            ("p99_ms", Json::Num(p99)),
+            ("steps", Json::num(sched.steps as f64)),
+            ("batched_steps", Json::num(sched.batched_steps as f64)),
+            ("peak_batch", Json::num(sched.peak_batch as f64)),
+            ("completed", Json::num(sched.completed as f64)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("group", Json::str("serve")),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_clients", Json::num(n_clients as f64)),
+                ("reqs_per_client", Json::num(reqs as f64)),
+                ("max_tokens", Json::num(max_tokens as f64)),
+                ("fixed_cost_us", Json::num(fixed.as_micros() as f64)),
+                ("per_slot_cost_us", Json::num(per_slot.as_micros() as f64)),
+                ("vocab", Json::num(vocab as f64)),
+                ("seq_len", Json::num(seq_len as f64)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write("BENCH_serve.json", format!("{}\n", doc.to_string_pretty())) {
+        Ok(()) => println!("→ wrote BENCH_serve.json"),
+        Err(e) => eprintln!("[warn] could not write BENCH_serve.json: {e}"),
+    }
+}
 
 fn main() {
+    // the serving load bench runs everywhere (synthetic backend, no
+    // artifacts or PJRT needed)
+    bench_serve_load();
+
     if !Path::new("artifacts/nano/manifest.json").exists() {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        eprintln!("skipping bench_runtime artifact benches: run `make artifacts` first");
         return;
     }
     let mut b = Bench::new("runtime");

@@ -1,11 +1,15 @@
-//! Serving demo: quantize a model, start the TCP inference server, and
-//! drive it with a batch of client requests, reporting latency stats.
+//! Serving demo: quantize a model, start the concurrent batched TCP
+//! inference server, and drive it with several interleaved clients,
+//! reporting latency stats.
 //!
 //!     cargo run --release --example serve_demo
 //!
-//! The PJRT client is not Send, so the server owns the main thread and
-//! the demo client runs on a worker thread — exactly the deployment shape
-//! of the real binary (`faar serve`).
+//! The PJRT client is not Send, so the scheduler owns the main thread
+//! and the demo clients run on worker threads — exactly the deployment
+//! shape of the real binary (`faar serve`). Requests from all clients
+//! are micro-batched into shared decode steps (`--max-batch` worth per
+//! scheduler tick); per-connection responses still arrive in request
+//! order.
 
 #![allow(clippy::field_reassign_with_default)]
 
@@ -17,10 +21,49 @@ use anyhow::Result;
 use nvfp4_faar::config::PipelineConfig;
 use nvfp4_faar::data::Tokenizer;
 use nvfp4_faar::pipeline::{Method, Workbench};
-use nvfp4_faar::serve::Generator;
+use nvfp4_faar::serve::{Generator, ServeOptions};
 use nvfp4_faar::util::{json::Json, stats};
 
-const N_REQUESTS: usize = 8;
+const N_CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 4;
+const MAX_TOKENS: usize = 12;
+
+fn client(addr: &str, id: usize, vocab: usize) -> Result<Vec<f64>> {
+    let tok = Tokenizer::new(vocab);
+    let mut latencies = vec![];
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    };
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    for i in 0..REQS_PER_CLIENT {
+        let prompt = tok.decode(&[((id * 7 + i * 13) % vocab) as i32, 5, 9, 2]);
+        let req = Json::obj(vec![
+            ("prompt", Json::str(prompt.as_str())),
+            ("max_tokens", Json::num(MAX_TOKENS as f64)),
+        ]);
+        stream.write_all(req.to_string().as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(&line)?;
+        if let Some(err) = resp.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        let ms = resp.req("latency_ms")?.as_f64()?;
+        println!(
+            "  client {id} req {i}: {:>6.1} ms   \"{}\" → \"{}\"",
+            ms,
+            prompt,
+            resp.req("text")?.as_str()?
+        );
+        latencies.push(ms);
+    }
+    Ok(latencies)
+}
 
 fn main() -> Result<()> {
     let mut cfg = PipelineConfig::default();
@@ -35,53 +78,38 @@ fn main() -> Result<()> {
     let vocab = wb.rt.config().vocab;
 
     let addr = "127.0.0.1:7746";
-    // client thread: waits for the listener, fires N requests, collects latency
-    let client = std::thread::spawn(move || -> Result<Vec<f64>> {
-        let tok = Tokenizer::new(vocab);
-        let mut latencies = vec![];
-        let mut stream = loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => break s,
-                Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
-            }
-        };
-        let mut reader = BufReader::new(stream.try_clone()?);
-        for i in 0..N_REQUESTS {
-            let prompt = tok.decode(&[(i as i32 * 13) % vocab as i32, 5, 9, 2]);
-            let req = Json::obj(vec![
-                ("prompt", Json::str(prompt.as_str())),
-                ("max_tokens", Json::num(12.0)),
-            ]);
-            stream.write_all(req.to_string().as_bytes())?;
-            stream.write_all(b"\n")?;
-            let mut line = String::new();
-            reader.read_line(&mut line)?;
-            let resp = Json::parse(&line)?;
-            if let Some(err) = resp.get("error") {
-                anyhow::bail!("server error: {err:?}");
-            }
-            let ms = resp.req("latency_ms")?.as_f64()?;
-            println!(
-                "  req {i}: {:>6.1} ms   \"{}\" → \"{}\"",
-                ms,
-                prompt,
-                resp.req("text")?.as_str()?
-            );
-            latencies.push(ms);
-        }
-        Ok(latencies)
-    });
+    // interleaved clients: each fires a ping-pong request stream; the
+    // scheduler micro-batches across all of them
+    let clients: Vec<_> = (0..N_CLIENTS)
+        .map(|id| std::thread::spawn(move || client(addr, id, vocab)))
+        .collect();
 
-    // server owns the main thread; exits after one connection closes
-    generator.serve(addr, Some(1))?;
+    // scheduler owns the main thread; exits once all demo clients drain
+    let opts = ServeOptions { max_batch: N_CLIENTS, ..ServeOptions::default() };
+    let t0 = std::time::Instant::now();
+    let sched = generator.serve_with(addr, Some(N_CLIENTS), opts)?;
+    let wall = t0.elapsed().as_secs_f64();
 
-    let latencies = client.join().expect("client thread panicked")?;
+    let mut latencies = vec![];
+    for c in clients {
+        latencies.extend(c.join().expect("client thread panicked")?);
+    }
+    let total_tokens = (latencies.len() * MAX_TOKENS) as f64;
     println!(
-        "\nserved {} requests: mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms per 12-token completion",
+        "\nserved {} requests from {N_CLIENTS} clients: mean {:.1} ms  p50 {:.1} ms  \
+         p95 {:.1} ms per {MAX_TOKENS}-token completion",
         latencies.len(),
         stats::mean(&latencies),
         stats::percentile(&latencies, 50.0),
         stats::percentile(&latencies, 95.0),
+    );
+    println!(
+        "throughput {:.0} tok/s over {:.2}s; scheduler: {} steps, {} batched (peak batch {})",
+        total_tokens / wall,
+        wall,
+        sched.steps,
+        sched.batched_steps,
+        sched.peak_batch,
     );
     Ok(())
 }

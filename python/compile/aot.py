@@ -28,6 +28,10 @@ from .kernels import ref, nvfp4
 
 F32, I32 = "f32", "i32"
 
+# micro-batch sizes lowered for the serving scheduler (rust falls back to
+# per-request execution for sizes without a lowered artifact)
+SERVE_BATCH_SIZES = (4, 16)
+
 
 def spec(shape, dtype=F32):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == F32 else jnp.int32)
@@ -152,6 +156,22 @@ def export_config(cfg: ModelConfig, out_dir: str):
     ex.emit("lm_logits_pos_aq", logits_pos_fn,
             weight_inputs(cfg) + [("tokens", [1, T], I32), ("pos", [], I32)],
             ["logits"])
+
+    # batched serve variants: the scheduler's micro-batch sizes. Each row
+    # decodes independently (per-request position), so batched output is
+    # bit-identical to B single-request calls — the invariant the serving
+    # engine's continuous batching relies on.
+    for b in SERVE_BATCH_SIZES:
+        def logits_pos_batch_fn(*flat):
+            params = dict(zip(names, flat[:nW]))
+            tokens, pos = flat[nW], flat[nW + 1]
+            logits, _, _ = model.fwd(cfg, params, tokens, act_quant=True)
+            rows = jnp.take_along_axis(logits, pos[:, None, None], axis=1)
+            return (rows[:, 0, :],)
+
+        ex.emit(f"lm_logits_pos_aq_b{b}", logits_pos_batch_fn,
+                weight_inputs(cfg) + [("tokens", [b, T], I32), ("pos", [b], I32)],
+                ["logits"])
 
     # ---- calibration capture ----------------------------------------------
     def capture_fn(*flat):

@@ -21,6 +21,7 @@ use nvfp4_faar::data::tasks::TaskKind;
 use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
 use nvfp4_faar::runtime::Runtime;
+use nvfp4_faar::serve::ServeOptions;
 use nvfp4_faar::util::cli::Args;
 use nvfp4_faar::{info, util};
 
@@ -35,6 +36,9 @@ USAGE: faar <subcommand> [options]
   tables    --id t1|t3|t4|t5|t6|t7|t8|all [--model tiny] [--models tiny,small]
   figures   --id f2
   serve     --model tiny [--addr 127.0.0.1:7745] [--method faar+2fa]
+            [--workers N] [--max-batch N] [--queue-depth N]
+            [--max-tokens-cap N] [--max-line-bytes N]
+            [--read-timeout-ms MS] [--max-conns N]
   info      --model tiny
 
 Common options: --artifacts DIR (default artifacts), --out DIR (default
@@ -238,11 +242,20 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7745");
     let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
     let max_conns = args.get("max-conns").map(|s| s.parse()).transpose()?;
+    let d = ServeOptions::default();
+    let opts = ServeOptions {
+        max_batch: args.usize_or("max-batch", d.max_batch)?,
+        queue_depth: args.usize_or("queue-depth", d.queue_depth)?,
+        max_tokens_cap: args.usize_or("max-tokens-cap", d.max_tokens_cap)?,
+        max_line_bytes: args.usize_or("max-line-bytes", d.max_line_bytes)?,
+        read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
+        workers: args.usize_or("workers", d.workers)?,
+    };
     let wb = Workbench::open(cfg)?;
     let outcome = wb.quantize(method)?;
     info!("model quantized with {}; starting server", method.name());
     let gen = nvfp4_faar::serve::Generator::new(&wb.rt, outcome.params.clone());
-    gen.serve(&addr, max_conns)
+    gen.serve_with(&addr, max_conns, opts).map(|_| ())
 }
 
 fn cmd_info(cfg: PipelineConfig) -> Result<()> {

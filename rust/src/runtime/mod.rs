@@ -175,6 +175,12 @@ impl Runtime {
         Ok(())
     }
 
+    /// True when the manifest lowered an artifact under `name` (batched
+    /// serve variants like `lm_logits_pos_aq_b4` are optional per preset).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
     /// Execute an artifact with positional values; returns outputs in
     /// manifest order. Validates shapes and dtypes on the way in.
     pub fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
@@ -186,26 +192,58 @@ impl Runtime {
                 spec.inputs.len()
             );
         }
-        for (v, ispec) in args.iter().zip(&spec.inputs) {
-            if v.shape() != ispec.shape.as_slice() {
-                bail!(
-                    "artifact '{name}' input '{}': shape {:?} != expected {:?}",
-                    ispec.name,
-                    v.shape(),
-                    ispec.shape
-                );
-            }
-            if v.dtype() != ispec.dtype {
-                bail!("artifact '{name}' input '{}': dtype mismatch", ispec.name);
-            }
-        }
-        let exe = self.executable(name)?;
+        check_args(&spec, &spec.inputs, args)?;
         let buffers: Vec<xla::PjRtBuffer> =
             args.iter().map(|v| v.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        self.run_buffers(&spec, &refs)
+    }
+
+    /// Upload a shared argument *prefix* (typically the full weight set)
+    /// to device buffers once, returning a handle that executes with only
+    /// the per-call tail marshalled. This is the batched-serving entry:
+    /// a decode step re-sends tokens + positions (a few KiB) instead of
+    /// the whole model (MiBs) on every scheduler tick.
+    pub fn prepare(&self, name: &str, prefix: &[Value]) -> Result<PreparedExec> {
+        Ok(self.prepare_many(&[name], prefix)?.pop().expect("one name, one handle"))
+    }
+
+    /// Like [`Self::prepare`], but binds several artifacts that take the
+    /// same leading inputs (e.g. the single-request and batched serve
+    /// variants, which all start with the full weight set) to ONE
+    /// uploaded copy of the prefix — the device holds the weights once,
+    /// not once per artifact.
+    pub fn prepare_many(&self, names: &[&str], prefix: &[Value]) -> Result<Vec<PreparedExec>> {
+        let buffers: Rc<Vec<xla::PjRtBuffer>> = Rc::new(
+            prefix.iter().map(|v| v.to_buffer(&self.client)).collect::<Result<_>>()?,
+        );
+        names
+            .iter()
+            .map(|name| {
+                let spec = self.manifest.artifact(name)?.clone();
+                if prefix.len() > spec.inputs.len() {
+                    bail!(
+                        "artifact '{name}': prefix of {} args for {} inputs",
+                        prefix.len(),
+                        spec.inputs.len()
+                    );
+                }
+                check_args(&spec, &spec.inputs[..prefix.len()], prefix)?;
+                let exe = self.executable(name)?;
+                Ok(PreparedExec { spec, exe, prefix: buffers.clone() })
+            })
+            .collect()
+    }
+
+    /// Shared back half of every execution path: run the executable over
+    /// already-uploaded buffers and decompose the output tuple.
+    fn run_buffers(&self, spec: &ArtifactSpec, buffers: &[&xla::PjRtBuffer]) -> Result<Vec<Value>> {
+        let name = &spec.name;
+        let exe = self.executable(name)?;
         let result = exe
-            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .execute_b::<&xla::PjRtBuffer>(buffers)
             .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        *self.exec_counts.borrow_mut().entry(name.clone()).or_insert(0) += 1;
 
         let tuple_lit = result[0][0]
             .to_literal_sync()
@@ -231,6 +269,62 @@ impl Runtime {
     /// Execution counters (for metrics / EXPERIMENTS.md).
     pub fn exec_counts(&self) -> HashMap<String, u64> {
         self.exec_counts.borrow().clone()
+    }
+}
+
+fn check_args(spec: &ArtifactSpec, ispecs: &[TensorSpec], args: &[Value]) -> Result<()> {
+    for (v, ispec) in args.iter().zip(ispecs) {
+        if v.shape() != ispec.shape.as_slice() {
+            bail!(
+                "artifact '{}' input '{}': shape {:?} != expected {:?}",
+                spec.name,
+                ispec.name,
+                v.shape(),
+                ispec.shape
+            );
+        }
+        if v.dtype() != ispec.dtype {
+            bail!("artifact '{}' input '{}': dtype mismatch", spec.name, ispec.name);
+        }
+    }
+    Ok(())
+}
+
+/// An artifact with a shared argument prefix resident on device. Created
+/// by [`Runtime::prepare`]/[`Runtime::prepare_many`] (handles from one
+/// `prepare_many` call share the uploaded prefix); not `Send` (device
+/// buffers belong to the thread that owns the PJRT client, i.e. the
+/// scheduler thread).
+pub struct PreparedExec {
+    spec: ArtifactSpec,
+    #[allow(dead_code)] // keeps the compiled executable alive with its buffers
+    exe: Rc<PjRtLoadedExecutable>,
+    prefix: Rc<Vec<xla::PjRtBuffer>>,
+}
+
+impl PreparedExec {
+    /// Number of per-call tail arguments this handle still expects.
+    pub fn n_tail(&self) -> usize {
+        self.spec.inputs.len() - self.prefix.len()
+    }
+
+    /// Execute with the per-call tail; the prefix rides along from device
+    /// memory. Validates the tail against the manifest like `exec`.
+    pub fn exec(&self, rt: &Runtime, tail: &[Value]) -> Result<Vec<Value>> {
+        if tail.len() != self.n_tail() {
+            bail!(
+                "artifact '{}': {} tail args given, {} expected",
+                self.spec.name,
+                tail.len(),
+                self.n_tail()
+            );
+        }
+        check_args(&self.spec, &self.spec.inputs[self.prefix.len()..], tail)?;
+        let tail_bufs: Vec<xla::PjRtBuffer> =
+            tail.iter().map(|v| v.to_buffer(&rt.client)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> =
+            self.prefix.iter().chain(tail_bufs.iter()).collect();
+        rt.run_buffers(&self.spec, &refs)
     }
 }
 

@@ -1,0 +1,466 @@
+//! Decode core shared by the sequential generator and the batched
+//! scheduler.
+//!
+//! Everything that decides *which token comes next* lives here, behind
+//! the [`StepBackend`] trait, so the sequential path
+//! ([`generate_greedy`]), the continuous-batching scheduler
+//! (`serve::scheduler`), the integration tests, and the load-generator
+//! bench all run byte-identical greedy decoding:
+//!
+//! * [`DecodeSlot`] — one in-flight request: the `[T]` token window, the
+//!   current position, the emitted tokens, and the remaining budget. The
+//!   window-slide rule (shift left by one when the buffer is full) is
+//!   encoded once, here.
+//! * [`argmax`] — NaN-safe greedy pick (`f32::total_cmp`, NaN logits are
+//!   ignored rather than panicking the connection).
+//! * [`RuntimeBackend`] — the deployed path: W4A4 logits through the
+//!   `lm_logits_pos_aq` artifact, preferring a batched
+//!   `lm_logits_pos_aq_b{B}` variant when the manifest lowered one, with
+//!   the weight set resident on device via [`Runtime::prepare`].
+//! * [`SyntheticBackend`] — a deterministic pure-rust stand-in with a
+//!   configurable per-step cost model, so the serving engine is fully
+//!   exercisable (tests, benches) without artifacts or a PJRT backend.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{PreparedExec, Runtime, Value};
+use crate::train::ParamSource;
+
+/// The single-request artifact the deployed NVFP4 path decodes through.
+pub const LOGITS_ARTIFACT: &str = "lm_logits_pos_aq";
+
+/// NaN-safe greedy argmax: ignores NaN entries entirely (a NaN logit is
+/// a model bug, not a reason to kill the connection), breaks ties toward
+/// the later index via `total_cmp`, and returns 0 for an empty or all-NaN
+/// row.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// One in-flight greedy decode: the fixed `[T]` token window plus
+/// progress. Construction rejects empty prompts — decoding from a zeroed
+/// buffer is never meaningful output.
+#[derive(Clone, Debug)]
+pub struct DecodeSlot {
+    /// token window, length = model seq_len
+    pub buf: Vec<i32>,
+    /// index of the last real token in `buf`
+    pub pos: usize,
+    /// tokens emitted so far
+    pub out: Vec<i32>,
+    remaining: usize,
+}
+
+impl DecodeSlot {
+    /// Seed a slot from a prompt (keeps the last `seq_len` tokens).
+    pub fn new(prompt: &[i32], max_tokens: usize, seq_len: usize) -> Result<DecodeSlot> {
+        if prompt.is_empty() {
+            bail!("empty prompt: nothing to condition the decode on");
+        }
+        if seq_len == 0 {
+            bail!("model seq_len is 0");
+        }
+        let mut buf = vec![0i32; seq_len];
+        let plen = prompt.len().min(seq_len);
+        buf[..plen].copy_from_slice(&prompt[prompt.len() - plen..]);
+        Ok(DecodeSlot {
+            buf,
+            // plen >= 1, so this never underflows to a zeroed-buffer decode
+            pos: plen - 1,
+            out: Vec::with_capacity(max_tokens),
+            remaining: max_tokens,
+        })
+    }
+
+    /// Accept the next token: append to the output and advance the
+    /// window (slide left by one once the buffer is full).
+    pub fn advance(&mut self, next: i32) {
+        debug_assert!(self.remaining > 0, "advance on a finished slot");
+        self.out.push(next);
+        self.remaining -= 1;
+        let t = self.buf.len();
+        if self.pos + 1 < t {
+            self.pos += 1;
+            self.buf[self.pos] = next;
+        } else {
+            self.buf.copy_within(1..t, 0);
+            self.buf[t - 1] = next;
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+/// Anything that can turn a micro-batch of decode slots into per-slot
+/// logits rows. The contract that makes batched output token-identical
+/// to sequential output: **row `i` depends only on slot `i`** — never on
+/// the batch composition.
+pub trait StepBackend {
+    fn vocab(&self) -> usize;
+    fn seq_len(&self) -> usize;
+
+    /// One logits row (length = vocab) per slot, in slot order.
+    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// One decode step over a micro-batch: logits → NaN-safe argmax →
+/// advance. Slots that are already done are left untouched (their logits
+/// row is computed but discarded — the scheduler retires them before the
+/// next step).
+pub fn decode_step<B: StepBackend + ?Sized>(backend: &B, slots: &mut [DecodeSlot]) -> Result<()> {
+    if slots.is_empty() {
+        return Ok(());
+    }
+    let rows = backend.logits(slots)?;
+    if rows.len() != slots.len() {
+        bail!("backend returned {} logits rows for {} slots", rows.len(), slots.len());
+    }
+    let vmax = backend.vocab() as i32 - 1;
+    for (slot, row) in slots.iter_mut().zip(rows) {
+        if slot.done() {
+            continue;
+        }
+        let next = (argmax(&row) as i32).min(vmax);
+        slot.advance(next);
+    }
+    Ok(())
+}
+
+/// Sequential greedy decode of one prompt — the reference path the
+/// batched scheduler must match token-for-token. Errors on an empty
+/// prompt (at this layer, not just in the JSON protocol).
+pub fn generate_greedy<B: StepBackend + ?Sized>(
+    backend: &B,
+    prompt: &[i32],
+    max_tokens: usize,
+) -> Result<Vec<i32>> {
+    let mut slot = DecodeSlot::new(prompt, max_tokens, backend.seq_len())?;
+    while !slot.done() {
+        decode_step(backend, std::slice::from_mut(&mut slot))?;
+    }
+    Ok(slot.out)
+}
+
+// ---------------------------------------------------------------------------
+// RuntimeBackend: the deployed W4A4 path
+
+/// Logits through the AOT artifacts, weights resident on device.
+///
+/// The full weight set is uploaded once per decode artifact via
+/// [`Runtime::prepare`] at construction; each step marshals only tokens
+/// + positions. A step's micro-batch is chunked greedily into the
+/// largest lowered `lm_logits_pos_aq_b{B}` sizes, short tails are padded
+/// (rows are independent; padded rows are discarded), and presets
+/// without batched artifacts fall back to per-slot executions — still
+/// one scheduler tick, still prefix-resident.
+pub struct RuntimeBackend<'r> {
+    rt: &'r Runtime,
+    /// batch sizes with a lowered `lm_logits_pos_aq_b{B}` artifact, ascending
+    batch_sizes: Vec<usize>,
+    prepared: HashMap<String, PreparedExec>,
+}
+
+impl<'r> RuntimeBackend<'r> {
+    /// Compiles and uploads every decode artifact (single-request plus
+    /// all lowered batched variants) up front: the dense f32 weight set
+    /// is materialized once, shipped to device, and dropped — the host
+    /// keeps only the packed store, and the server fails fast (here, at
+    /// startup) if an artifact cannot compile.
+    pub fn new(rt: &'r Runtime, params: &dyn ParamSource) -> Result<RuntimeBackend<'r>> {
+        let prefix = format!("{LOGITS_ARTIFACT}_b");
+        let mut batch_sizes: Vec<usize> = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).and_then(|s| s.parse().ok()))
+            .filter(|&b| b > 1)
+            .collect();
+        batch_sizes.sort_unstable();
+        // transient dense copy: dropped at the end of this function. All
+        // decode artifacts share ONE uploaded device copy of the weights.
+        let vals = params.values()?;
+        let mut names = vec![LOGITS_ARTIFACT.to_string()];
+        names.extend(batch_sizes.iter().map(|b| format!("{LOGITS_ARTIFACT}_b{b}")));
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let preps = rt.prepare_many(&name_refs, &vals)?;
+        let prepared: HashMap<String, PreparedExec> = names.into_iter().zip(preps).collect();
+        Ok(RuntimeBackend { rt, batch_sizes, prepared })
+    }
+
+    fn prepared(&self, name: &str) -> Result<&PreparedExec> {
+        self.prepared.get(name).ok_or_else(|| anyhow!("artifact '{name}' not prepared"))
+    }
+
+    /// One single-request execution.
+    fn logits_one(&self, slot: &DecodeSlot) -> Result<Vec<f32>> {
+        let t = self.seq_len();
+        let prep = self.prepared(LOGITS_ARTIFACT)?;
+        let out = prep.exec(
+            self.rt,
+            &[Value::I32(slot.buf.clone(), vec![1, t]), Value::scalar_i32(slot.pos as i32)],
+        )?;
+        Ok(out[0].as_tensor()?.data.clone())
+    }
+
+    /// One `lm_logits_pos_aq_b{size}` execution over up to `size` slots,
+    /// padding short chunks by repeating the first slot (padded rows are
+    /// computed and discarded — each row depends only on its own slot, so
+    /// padding never changes real outputs).
+    fn logits_chunk(&self, size: usize, chunk: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        let (t, v) = (self.seq_len(), self.vocab());
+        let prep = self.prepared(&format!("{LOGITS_ARTIFACT}_b{size}"))?;
+        let mut toks = Vec::with_capacity(size * t);
+        let mut pos = Vec::with_capacity(size);
+        for i in 0..size {
+            let s = chunk.get(i).unwrap_or(&chunk[0]);
+            toks.extend_from_slice(&s.buf);
+            pos.push(s.pos as i32);
+        }
+        let out = prep
+            .exec(self.rt, &[Value::I32(toks, vec![size, t]), Value::I32(pos, vec![size])])?;
+        let all = out[0].as_tensor()?;
+        Ok(all.data.chunks(v).take(chunk.len()).map(|c| c.to_vec()).collect())
+    }
+}
+
+impl StepBackend for RuntimeBackend<'_> {
+    fn vocab(&self) -> usize {
+        self.rt.config().vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.rt.config().seq_len
+    }
+
+    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        let b = slots.len();
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(b);
+        let mut i = 0;
+        while i < b {
+            let rem = b - i;
+            // largest lowered batch that fits; else (tail smaller than
+            // every lowered size, but more than one slot left) pad up to
+            // the smallest lowered batch; else single-request execution
+            let size = self
+                .batch_sizes
+                .iter()
+                .rev()
+                .find(|&&s| s <= rem)
+                .or_else(|| if rem > 1 { self.batch_sizes.first() } else { None })
+                .copied();
+            match size {
+                Some(s) => {
+                    let chunk = &slots[i..i + rem.min(s)];
+                    rows.extend(self.logits_chunk(s, chunk)?);
+                    i += chunk.len();
+                }
+                None => {
+                    rows.push(self.logits_one(&slots[i])?);
+                    i += 1;
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SyntheticBackend: deterministic stand-in for tests and load benches
+
+/// A pure-rust logits oracle: each row is a deterministic function of
+/// (last token, position, seed) only, so batched and sequential decodes
+/// agree by construction — exactly the invariant the scheduler must
+/// preserve. The cost model (`fixed_cost` burned once per step,
+/// `per_slot_cost` once per slot) mimics a real accelerator step, which
+/// is what makes micro-batching measurably win in the load bench.
+pub struct SyntheticBackend {
+    vocab: usize,
+    seq_len: usize,
+    seed: u64,
+    /// simulated per-step overhead (kernel launch, arg marshalling)
+    pub fixed_cost: Duration,
+    /// simulated per-slot compute
+    pub per_slot_cost: Duration,
+}
+
+impl SyntheticBackend {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> SyntheticBackend {
+        SyntheticBackend {
+            vocab,
+            seq_len,
+            seed,
+            fixed_cost: Duration::ZERO,
+            per_slot_cost: Duration::ZERO,
+        }
+    }
+
+    pub fn with_costs(mut self, fixed: Duration, per_slot: Duration) -> SyntheticBackend {
+        self.fixed_cost = fixed;
+        self.per_slot_cost = per_slot;
+        self
+    }
+
+    fn row(&self, last: i32, pos: usize) -> Vec<f32> {
+        let mut x = (last as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((pos as u64) << 32)
+            ^ self.seed;
+        (0..self.vocab)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((x >> 33) as f32) / (u32::MAX as f32)
+            })
+            .collect()
+    }
+}
+
+/// Busy-wait (rather than sleep) so simulated step costs in the tens of
+/// microseconds stay accurate — OS sleep granularity is far coarser.
+fn spin(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+impl StepBackend for SyntheticBackend {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        spin(self.fixed_cost);
+        Ok(slots
+            .iter()
+            .map(|s| {
+                spin(self.per_slot_cost);
+                self.row(s.buf[s.pos], s.pos)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        // later index wins ties (matches max_by semantics of the old path)
+        assert_eq!(argmax(&[1.0, 5.0, 5.0]), 2);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_nan_regression() {
+        // the old `partial_cmp(..).unwrap()` panicked on exactly this row
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NAN, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN, -1.0]), 2);
+    }
+
+    #[test]
+    fn slot_rejects_empty_prompt() {
+        assert!(DecodeSlot::new(&[], 4, 8).is_err());
+        assert!(DecodeSlot::new(&[1], 4, 8).is_ok());
+    }
+
+    #[test]
+    fn slot_window_slide() {
+        // prompt shorter than the window: fills the head, pos on last token
+        let mut s = DecodeSlot::new(&[5, 6], 4, 4).unwrap();
+        assert_eq!(s.buf, vec![5, 6, 0, 0]);
+        assert_eq!(s.pos, 1);
+        s.advance(7);
+        s.advance(8);
+        assert_eq!(s.buf, vec![5, 6, 7, 8]);
+        assert_eq!(s.pos, 3);
+        // buffer full: slides left by one
+        s.advance(9);
+        assert_eq!(s.buf, vec![6, 7, 8, 9]);
+        assert_eq!(s.pos, 3);
+        s.advance(1);
+        assert_eq!(s.buf, vec![7, 8, 9, 1]);
+        assert_eq!(s.out, vec![7, 8, 9, 1]);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn slot_long_prompt_keeps_tail() {
+        let s = DecodeSlot::new(&[1, 2, 3, 4, 5, 6], 2, 4).unwrap();
+        assert_eq!(s.buf, vec![3, 4, 5, 6]);
+        assert_eq!(s.pos, 3);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_vocab() {
+        let b = SyntheticBackend::new(32, 8, 42);
+        let out = generate_greedy(&b, &[1, 2, 3], 16).unwrap();
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|&t| t >= 0 && t < 32));
+        assert_eq!(out, generate_greedy(&b, &[1, 2, 3], 16).unwrap());
+        // different prompt, different continuation (overwhelmingly likely)
+        assert_ne!(out, generate_greedy(&b, &[4, 5], 16).unwrap());
+        // empty prompt errors at this layer, not just in the JSON protocol
+        assert!(generate_greedy(&b, &[], 4).is_err());
+    }
+
+    #[test]
+    fn batched_step_matches_sequential() {
+        let b = SyntheticBackend::new(64, 8, 7);
+        let prompts: Vec<Vec<i32>> = (0..5).map(|i| vec![i, i + 3, 2 * i]).collect();
+        let sequential: Vec<Vec<i32>> =
+            prompts.iter().map(|p| generate_greedy(&b, p, 12).unwrap()).collect();
+        // decode all five interleaved in one micro-batch
+        let mut slots: Vec<DecodeSlot> =
+            prompts.iter().map(|p| DecodeSlot::new(p, 12, 8).unwrap()).collect();
+        while slots.iter().any(|s| !s.done()) {
+            decode_step(&b, &mut slots).unwrap();
+        }
+        for (slot, expect) in slots.iter().zip(&sequential) {
+            assert_eq!(&slot.out, expect);
+        }
+    }
+
+    struct NanBackend;
+
+    impl StepBackend for NanBackend {
+        fn vocab(&self) -> usize {
+            4
+        }
+
+        fn seq_len(&self) -> usize {
+            8
+        }
+
+        fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+            Ok(slots.iter().map(|_| vec![f32::NAN, 1.0, f32::NAN, 0.5]).collect())
+        }
+    }
+
+    #[test]
+    fn nan_logits_decode_without_panicking() {
+        let out = generate_greedy(&NanBackend, &[1], 3).unwrap();
+        assert_eq!(out, vec![1, 1, 1]);
+    }
+}

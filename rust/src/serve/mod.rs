@@ -1,24 +1,64 @@
-//! Minimal inference server over a quantized model.
+//! Concurrent batched inference server over a quantized model.
 //!
 //! Line-delimited JSON over TCP (the offline image has no HTTP stack):
 //! each request line is `{"prompt": "text...", "max_tokens": N}` (or
 //! `"tokens": [...]`), each response line is
-//! `{"tokens": [...], "text": "...", "latency_ms": x}`.
+//! `{"tokens": [...], "text": "...", "latency_ms": x, "queue_ms": y}` —
+//! or `{"error": {"code": "...", "message": "..."}}` for a rejected
+//! request. Responses on a connection always come back in request order.
 //!
-//! Decoding is greedy through the `lm_logits_pos_aq` artifact (W4A4 —
-//! the deployed NVFP4 path). The PJRT client is not Send, so the server
-//! is a single accept loop; concurrency comes from XLA's intra-op pool.
-//! Throughput numbers for EXPERIMENTS.md come from `bench_pipeline`.
+//! Architecture (see DESIGN.md §8):
+//!
+//! ```text
+//!            ┌ reader thread ┐                       ┌ writer thread ┐
+//!  conn 0 ──▶│ parse+validate│──┐                ┌──▶│ reorder+write │──▶ conn 0
+//!  conn 1 ──▶│ (1 per conn)  │──┤  bounded queue │   │ (1 per conn)  │──▶ conn 1
+//!   ...      └───────────────┘  ▼                │   └───────────────┘
+//!                        ┌──────────────┐        │
+//!                        │  scheduler   │────────┘
+//!                        │ micro-batches│  per-conn bounded writer queues
+//!                        └──────────────┘
+//! ```
+//!
+//! The PJRT client is not `Send`, so the scheduler runs on the thread
+//! that calls [`Generator::serve`] and owns every model execution;
+//! concurrency comes from micro-batching decode steps over the `[B, T]`
+//! token window (continuous batching: requests join and retire at step
+//! boundaries). Readers validate and enqueue; the bounded request queue
+//! and bounded per-connection writer queues provide backpressure instead
+//! of unbounded buffering, and a client that stops reading its responses
+//! is force-disconnected rather than allowed to stall the scheduler.
+//! Greedy decode output is token-identical to the sequential
+//! [`Generator::generate`] path: both run the `serve::batch` core, whose
+//! backends compute each logits row from its own slot only (exact by
+//! construction for `SyntheticBackend` and per-slot execution; verified
+//! against the lowered batched artifacts by the artifact-gated
+//! `serve_runtime_batched_matches_sequential` test).
 
-use std::io::{BufRead, BufReader, Write};
+pub mod batch;
+pub mod scheduler;
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write as _};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{bail, Result};
+
+pub use batch::{
+    argmax, generate_greedy, DecodeSlot, RuntimeBackend, StepBackend, SyntheticBackend,
+};
+pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions};
+use scheduler::{DecodeRequest, Decoded, WriterMsg};
 
 use crate::data::Tokenizer;
-use crate::runtime::{Runtime, Value};
-use crate::train::{ParamSource, QuantParamStore};
+use crate::runtime::Runtime;
+use crate::train::QuantParamStore;
 use crate::util::json::Json;
+use crate::util::threads::{spawn_named, WaitGroup};
 
 pub struct Generator<'r> {
     pub rt: &'r Runtime,
@@ -46,121 +86,596 @@ impl<'r> Generator<'r> {
         Generator { rt, params, tokenizer }
     }
 
-    /// Greedy-decode `max_tokens` continuations of `prompt`.
-    pub fn generate(&self, prompt: &[i32], max_tokens: usize) -> Result<Vec<i32>> {
-        let t = self.rt.config().seq_len;
-        let vocab = self.rt.config().vocab as i32;
-        let mut buf = vec![0i32; t];
-        let plen = prompt.len().min(t);
-        buf[..plen].copy_from_slice(&prompt[prompt.len() - plen..]);
-        let mut pos = plen.saturating_sub(1);
-        let mut out = Vec::with_capacity(max_tokens);
-
-        let mut args = self.params.values()?;
-        args.push(Value::I32(buf.clone(), vec![1, t]));
-        args.push(Value::scalar_i32(pos as i32));
-        let tok_idx = args.len() - 2;
-        let pos_idx = args.len() - 1;
-
-        for _ in 0..max_tokens {
-            args[tok_idx] = Value::I32(buf.clone(), vec![1, t]);
-            args[pos_idx] = Value::scalar_i32(pos as i32);
-            let outv = self.rt.exec("lm_logits_pos_aq", &args)?;
-            let logits = outv[0].as_tensor()?;
-            let next = logits
-                .data
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0)
-                .min(vocab - 1);
-            out.push(next);
-            if pos + 1 < t {
-                pos += 1;
-                buf[pos] = next;
-            } else {
-                // slide the window left by one
-                buf.copy_within(1..t, 0);
-                buf[t - 1] = next;
-            }
-        }
-        Ok(out)
+    /// The deployed W4A4 decode backend (weights resident on device).
+    pub fn backend(&self) -> Result<RuntimeBackend<'_>> {
+        RuntimeBackend::new(self.rt, &self.params)
     }
 
-    fn handle_line(&self, line: &str) -> Result<String> {
-        let req = Json::parse(line)?;
-        let max_tokens = req.get("max_tokens").and_then(|v| v.as_usize().ok()).unwrap_or(16);
-        let prompt: Vec<i32> = if let Some(toks) = req.get("tokens") {
-            toks.as_arr()?
-                .iter()
-                .map(|t| Ok(t.as_f64()? as i32))
-                .collect::<Result<Vec<_>>>()?
-        } else if let Some(text) = req.get("prompt") {
-            self.tokenizer.encode(text.as_str()?)
-        } else {
-            return Err(anyhow!("request needs 'prompt' or 'tokens'"));
-        };
+    /// Greedy-decode `max_tokens` continuations of `prompt`. Errors on an
+    /// empty prompt — decoding from a zeroed buffer is not a completion.
+    pub fn generate(&self, prompt: &[i32], max_tokens: usize) -> Result<Vec<i32>> {
         if prompt.is_empty() {
-            return Err(anyhow!("empty prompt"));
+            bail!("empty prompt: nothing to condition the decode on");
         }
-        let t0 = std::time::Instant::now();
-        let tokens = self.generate(&prompt, max_tokens)?;
-        let latency = t0.elapsed().as_secs_f64() * 1e3;
-        Ok(Json::obj(vec![
+        generate_greedy(&self.backend()?, prompt, max_tokens)
+    }
+
+    /// Serve forever (or until `max_conns` connections, for tests) with
+    /// default engine options.
+    pub fn serve(&self, addr: &str, max_conns: Option<usize>) -> Result<()> {
+        self.serve_with(addr, max_conns, ServeOptions::default()).map(|_| ())
+    }
+
+    /// Serve with explicit engine options; returns scheduler counters
+    /// when the engine drains (test/max_conns mode).
+    pub fn serve_with(
+        &self,
+        addr: &str,
+        max_conns: Option<usize>,
+        opts: ServeOptions,
+    ) -> Result<SchedStats> {
+        let listener = TcpListener::bind(addr)?;
+        crate::info!(
+            "serving on {} (model {}, max_batch {}, queue_depth {}, workers {})",
+            listener.local_addr()?,
+            self.rt.config().name,
+            opts.max_batch,
+            opts.queue_depth,
+            opts.workers
+        );
+        serve_on(&self.backend()?, listener, max_conns, opts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol: request validation + response serialization
+
+/// Parse and validate one request line. Every rejection is a structured
+/// [`ServeError`] so clients can match on `code` instead of scraping
+/// message strings.
+pub fn parse_request(
+    line: &str,
+    tok: &Tokenizer,
+    vocab: usize,
+    opts: &ServeOptions,
+) -> std::result::Result<(Vec<i32>, usize), ServeError> {
+    if line.len() > opts.max_line_bytes {
+        return Err(ServeError::new(
+            "oversized",
+            format!("request line exceeds {} bytes", opts.max_line_bytes),
+        ));
+    }
+    let req = Json::parse(line).map_err(|e| ServeError::new("bad_json", e.to_string()))?;
+    let max_tokens = match req.get("max_tokens") {
+        None => 16,
+        Some(v) => v.as_usize().map_err(|_| {
+            ServeError::new("bad_request", "'max_tokens' must be a non-negative integer")
+        })?,
+    };
+    // clamp to the server cap rather than reject: the cap is an
+    // operational limit, not a protocol violation
+    let max_tokens = max_tokens.min(opts.max_tokens_cap);
+    let prompt: Vec<i32> = if let Some(toks) = req.get("tokens") {
+        let arr = toks
+            .as_arr()
+            .map_err(|_| ServeError::new("bad_request", "'tokens' must be an array"))?;
+        let mut prompt = Vec::with_capacity(arr.len());
+        for t in arr {
+            let x = t.as_f64().map_err(|_| {
+                ServeError::new("bad_token", "token ids must be integers")
+            })?;
+            if x.fract() != 0.0 || x < 0.0 || x >= vocab as f64 {
+                return Err(ServeError::new(
+                    "bad_token",
+                    format!("token id {x} outside [0, {vocab})"),
+                ));
+            }
+            prompt.push(x as i32);
+        }
+        prompt
+    } else if let Some(text) = req.get("prompt") {
+        let s = text
+            .as_str()
+            .map_err(|_| ServeError::new("bad_request", "'prompt' must be a string"))?;
+        tok.encode(s)
+    } else {
+        return Err(ServeError::new("bad_request", "request needs 'prompt' or 'tokens'"));
+    };
+    if prompt.is_empty() {
+        return Err(ServeError::new(
+            "empty_prompt",
+            "empty prompt: nothing to condition the decode on",
+        ));
+    }
+    Ok((prompt, max_tokens))
+}
+
+fn format_response(result: &std::result::Result<Decoded, ServeError>, tok: &Tokenizer) -> String {
+    match result {
+        Ok(d) => Json::obj(vec![
             (
                 "tokens",
-                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                Json::Arr(d.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
             ),
-            ("text", Json::str(self.tokenizer.decode(&tokens))),
-            ("latency_ms", Json::Num(latency)),
+            ("text", Json::str(tok.decode(&d.tokens))),
+            ("latency_ms", Json::Num(d.latency_ms)),
+            ("queue_ms", Json::Num(d.queue_ms)),
         ])
-        .to_string())
+        .to_string(),
+        Err(e) => Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(e.code)),
+                ("message", Json::str(e.message.as_str())),
+            ]),
+        )])
+        .to_string(),
     }
+}
 
-    fn handle_conn(&self, stream: TcpStream) {
-        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-        let mut writer = match stream.try_clone() {
-            Ok(w) => w,
-            Err(_) => return,
+// ---------------------------------------------------------------------------
+// Engine: acceptor + per-connection reader/writer threads around the
+// scheduler. Generic over the backend so tests and benches drive the
+// whole TCP path with `SyntheticBackend`.
+
+/// Run the serving engine on an already-bound listener. The calling
+/// thread becomes the scheduler (the backend — and with it the PJRT
+/// client — never crosses threads). Returns once `max_conns` connections
+/// have been accepted and fully drained; never returns when
+/// `max_conns` is `None`.
+pub fn serve_on<B: StepBackend + ?Sized>(
+    backend: &B,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+    opts: ServeOptions,
+) -> Result<SchedStats> {
+    // one tokenizer shared by every connection thread (vocab-sized build)
+    let tok = Arc::new(Tokenizer::new(backend.vocab()));
+    let registry = Arc::new(Registry::default());
+    let (req_tx, req_rx) = sync_channel::<DecodeRequest>(opts.queue_depth.max(1));
+    let wg = WaitGroup::new();
+    let acceptor = {
+        let registry = registry.clone();
+        let opts = opts.clone();
+        let wg = wg.clone();
+        spawn_named("serve-acceptor".into(), move || {
+            accept_loop(listener, req_tx, registry, wg, opts, max_conns, tok);
+        })
+    };
+    let stats = scheduler::run(backend, req_rx, &registry, &opts)?;
+    // the scheduler only exits once the acceptor and every reader dropped
+    // their queue handles; wait for writers to flush in-flight responses
+    let _ = acceptor.join();
+    wg.wait();
+    crate::info!(
+        "serve drained: {} completed, {} cancelled, {} errors, {} steps ({} batched, peak batch {})",
+        stats.completed,
+        stats.cancelled,
+        stats.errors,
+        stats.steps,
+        stats.batched_steps,
+        stats.peak_batch
+    );
+    Ok(stats)
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    req_tx: SyncSender<DecodeRequest>,
+    registry: Arc<Registry>,
+    wg: WaitGroup,
+    opts: ServeOptions,
+    max_conns: Option<usize>,
+    tok: Arc<Tokenizer>,
+) {
+    let mut served = 0usize;
+    let mut next_conn = 0u64;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::warn!("accept: {e}");
+                continue;
+            }
         };
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) if !l.trim().is_empty() => l,
-                Ok(_) => continue,
-                Err(_) => break,
-            };
-            let resp = match self.handle_line(&line) {
-                Ok(r) => r,
-                Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
-            };
-            if writer.write_all(resp.as_bytes()).is_err()
-                || writer.write_all(b"\n").is_err()
-            {
+        // admission control: at most `workers` connections in flight
+        registry.wait_below(opts.workers);
+        let conn = next_conn;
+        next_conn += 1;
+        if opts.read_timeout_ms > 0 {
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(opts.read_timeout_ms)));
+        }
+        let _ = stream.set_nodelay(true);
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        // two extra handles: one for the writer thread, one kept in the
+        // registry so the scheduler can force-disconnect a stalled client
+        match (stream.try_clone(), stream.try_clone()) {
+            (Ok(write_half), Ok(shutdown_half)) => {
+                let (w_tx, w_rx) = sync_channel::<WriterMsg>(opts.queue_depth.max(1));
+                registry.register(conn, w_tx.clone(), Some(shutdown_half));
+                let progress = Arc::new(ConnProgress::default());
+                {
+                    let registry = registry.clone();
+                    let wg = wg.clone();
+                    let tok = tok.clone();
+                    let progress = progress.clone();
+                    let max_pending = opts.queue_depth;
+                    spawn_named(format!("serve-writer-{conn}"), move || {
+                        writer_loop(write_half, conn, w_rx, &registry, &tok, &progress, max_pending);
+                        drop(wg);
+                    });
+                }
+                {
+                    let req_tx = req_tx.clone();
+                    let opts = opts.clone();
+                    let wg = wg.clone();
+                    let tok = tok.clone();
+                    spawn_named(format!("serve-reader-{conn}"), move || {
+                        reader_loop(stream, conn, &peer, req_tx, w_tx, &opts, &tok, &progress);
+                        drop(wg);
+                    });
+                }
+                served += 1;
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                crate::warn!("connection {peer}: clone failed: {e}");
+            }
+        }
+        // checked even when the clone failed, so a failed connection can
+        // never push the acceptor past max_conns
+        if let Some(n) = max_conns {
+            if served >= n {
                 break;
             }
         }
-        crate::debug!("connection {peer} closed");
     }
+    // dropping our req_tx handle lets the scheduler drain and exit once
+    // every reader is done
+}
 
-    /// Serve forever (or until `max_conns` connections, for tests).
-    pub fn serve(&self, addr: &str, max_conns: Option<usize>) -> Result<()> {
-        let listener = TcpListener::bind(addr)?;
-        crate::info!("serving on {} (model {})", listener.local_addr()?, self.rt.config().name);
-        let mut served = 0usize;
-        for stream in listener.incoming() {
-            match stream {
-                Ok(s) => self.handle_conn(s),
-                Err(e) => crate::warn!("accept: {e}"),
+/// Shared per-connection progress counters: requests the reader has
+/// issued vs responses the writer has written. At read-timeout time they
+/// distinguish an *idle* connection (reap it) from one waiting on its
+/// own decode (keep it). The writer stores `u64::MAX` into `written` on
+/// exit so a reader never waits on a writer that is gone.
+#[derive(Default)]
+struct ConnProgress {
+    issued: AtomicU64,
+    written: AtomicU64,
+}
+
+/// Per-connection reader: length-bounded line reads, validation, and
+/// blocking enqueue into the scheduler queue (the backpressure point).
+fn reader_loop(
+    stream: TcpStream,
+    conn: u64,
+    peer: &str,
+    req_tx: SyncSender<DecodeRequest>,
+    w_tx: SyncSender<WriterMsg>,
+    opts: &ServeOptions,
+    tok: &Tokenizer,
+    progress: &ConnProgress,
+) {
+    let vocab = tok.vocab();
+    let mut reader = BufReader::new(stream);
+    let mut seq = 0u64;
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        match read_line_bounded(&mut reader, &mut line, opts.max_line_bytes) {
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::TooLong) => {
+                let this = seq;
+                seq += 1;
+                progress.issued.store(seq, Ordering::Release);
+                line.clear();
+                let err = ServeError::new(
+                    "oversized",
+                    format!("request line exceeds {} bytes", opts.max_line_bytes),
+                );
+                if w_tx.send(WriterMsg::Resp { seq: this, result: Err(err) }).is_err() {
+                    break;
+                }
+                continue;
             }
-            served += 1;
-            if let Some(n) = max_conns {
-                if served >= n {
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // the timeout reaps *idle* connections only: while
+                // responses are still owed (issued > written, and the
+                // writer is alive — written becomes MAX when it exits),
+                // keep waiting; partial line bytes stay in `line`
+                if progress.issued.load(Ordering::Acquire)
+                    > progress.written.load(Ordering::Acquire)
+                {
+                    continue;
+                }
+                crate::debug!("connection {peer}: idle past read timeout, closing");
+                break;
+            }
+            Err(_) => break,
+        }
+        let parsed = {
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if text.is_empty() {
+                None
+            } else {
+                Some(parse_request(text, tok, vocab, opts))
+            }
+        };
+        line.clear();
+        let Some(parsed) = parsed else { continue };
+        let this = seq;
+        seq += 1;
+        progress.issued.store(seq, Ordering::Release);
+        match parsed {
+            Ok((prompt, max_tokens)) => {
+                let req = DecodeRequest {
+                    conn,
+                    seq: this,
+                    prompt,
+                    max_tokens,
+                    enqueued: Instant::now(),
+                };
+                if req_tx.send(req).is_err() {
+                    // scheduler gone: this request will never be answered —
+                    // don't make the writer wait for it
+                    seq = this;
+                    break;
+                }
+            }
+            Err(e) => {
+                if w_tx.send(WriterMsg::Resp { seq: this, result: Err(e) }).is_err() {
                     break;
                 }
             }
         }
-        Ok(())
+    }
+    // tell the writer exactly how many responses to expect, then let it
+    // flush whatever is still decoding
+    let _ = w_tx.send(WriterMsg::Done { next_seq: seq });
+    crate::debug!("connection {peer}: reader closed after {seq} requests");
+}
+
+/// Per-connection writer: responses arrive in completion order (the
+/// scheduler retires short requests before long ones); a reorder buffer
+/// restores per-connection request order before writing. The buffer is
+/// bounded by `max_pending`: a connection that racks up that many
+/// buffered responses behind a missing sequence number (e.g. error spam
+/// pipelined behind a long decode) is closed instead of growing it.
+fn writer_loop(
+    mut stream: TcpStream,
+    conn: u64,
+    rx: Receiver<WriterMsg>,
+    registry: &Registry,
+    tok: &Tokenizer,
+    progress: &ConnProgress,
+    max_pending: usize,
+) {
+    let mut pending: BTreeMap<u64, std::result::Result<Decoded, ServeError>> = BTreeMap::new();
+    let mut next = 0u64;
+    let mut end: Option<u64> = None;
+    'conn: loop {
+        if let Some(e) = end {
+            if next >= e {
+                break;
+            }
+        }
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        match msg {
+            WriterMsg::Done { next_seq } => end = Some(next_seq),
+            WriterMsg::Resp { seq, result } => {
+                pending.insert(seq, result);
+                while let Some(result) = pending.remove(&next) {
+                    let body = format_response(&result, tok);
+                    if stream.write_all(body.as_bytes()).is_err()
+                        || stream.write_all(b"\n").is_err()
+                        || stream.flush().is_err()
+                    {
+                        break 'conn;
+                    }
+                    next += 1;
+                    progress.written.store(next, Ordering::Release);
+                }
+                if pending.len() > max_pending.max(1) {
+                    crate::warn!(
+                        "connection {conn}: {} responses buffered out of order; closing",
+                        pending.len()
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    // the MAX sentinel stops the reader from waiting on us; unregistering
+    // cancels our remaining slots at the next step boundary and closes
+    // the channel so scheduler sends fail fast
+    progress.written.store(u64::MAX, Ordering::Release);
+    registry.unregister(conn);
+    crate::debug!("connection {conn}: writer closed after {next} responses");
+}
+
+enum LineRead {
+    Line,
+    Eof,
+    /// the line exceeded the byte cap; it was consumed and discarded
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into `buf`, never buffering more than
+/// `max` bytes of it — an oversized line is consumed to its end and
+/// reported as [`LineRead::TooLong`] instead of ballooning memory.
+fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    let mut overflow = false;
+    loop {
+        let (n_consume, done) = {
+            let available = loop {
+                match r.fill_buf() {
+                    Ok(b) => break b,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            if available.is_empty() {
+                return Ok(if overflow {
+                    LineRead::TooLong
+                } else if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line
+                });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    let fits = !overflow && buf.len() + i <= max;
+                    if fits {
+                        buf.extend_from_slice(&available[..i]);
+                    }
+                    (i + 1, Some(if fits { LineRead::Line } else { LineRead::TooLong }))
+                }
+                None => {
+                    let n = available.len();
+                    if !overflow && buf.len() + n <= max {
+                        buf.extend_from_slice(available);
+                    } else {
+                        overflow = true;
+                    }
+                    (n, None)
+                }
+            }
+        };
+        r.consume(n_consume);
+        if let Some(res) = done {
+            return Ok(res);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ServeOptions {
+        ServeOptions { max_tokens_cap: 32, max_line_bytes: 256, ..ServeOptions::default() }
+    }
+
+    #[test]
+    fn parse_valid_prompt_and_tokens() {
+        let tok = Tokenizer::new(64);
+        let o = opts();
+        let text = tok.decode(&[3, 9, 2]);
+        let (p, n) =
+            parse_request(&format!(r#"{{"prompt":"{text}","max_tokens":4}}"#), &tok, 64, &o)
+                .unwrap();
+        assert_eq!(p, vec![3, 9, 2]);
+        assert_eq!(n, 4);
+        let (p, n) = parse_request(r#"{"tokens":[0,5,63]}"#, &tok, 64, &o).unwrap();
+        assert_eq!(p, vec![0, 5, 63]);
+        assert_eq!(n, 16); // default
+    }
+
+    #[test]
+    fn parse_clamps_max_tokens_to_cap() {
+        let tok = Tokenizer::new(64);
+        let (_, n) =
+            parse_request(r#"{"tokens":[1],"max_tokens":100000}"#, &tok, 64, &opts()).unwrap();
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests_with_codes() {
+        let tok = Tokenizer::new(64);
+        let o = opts();
+        let code = |line: &str| parse_request(line, &tok, 64, &o).unwrap_err().code;
+        assert_eq!(code("not json at all"), "bad_json");
+        assert_eq!(code(r#"{"nothing":1}"#), "bad_request");
+        assert_eq!(code(r#"{"tokens":"nope"}"#), "bad_request");
+        assert_eq!(code(r#"{"tokens":[1],"max_tokens":-3}"#), "bad_request");
+        assert_eq!(code(r#"{"tokens":[1],"max_tokens":1.5}"#), "bad_request");
+        // out-of-vocab / negative / fractional ids are rejected, not truncated
+        assert_eq!(code(r#"{"tokens":[64]}"#), "bad_token");
+        assert_eq!(code(r#"{"tokens":[-1]}"#), "bad_token");
+        assert_eq!(code(r#"{"tokens":[1.5]}"#), "bad_token");
+        assert_eq!(code(r#"{"tokens":[null]}"#), "bad_token");
+        assert_eq!(code(r#"{"tokens":[]}"#), "empty_prompt");
+        assert_eq!(code(r#"{"prompt":""}"#), "empty_prompt");
+        let long = format!(r#"{{"prompt":"{}"}}"#, "a".repeat(300));
+        assert_eq!(code(&long), "oversized");
+    }
+
+    #[test]
+    fn response_shapes() {
+        let tok = Tokenizer::new(64);
+        let ok = format_response(
+            &Ok(Decoded { tokens: vec![1, 2], latency_ms: 1.5, queue_ms: 0.25 }),
+            &tok,
+        );
+        let v = Json::parse(&ok).unwrap();
+        assert_eq!(v.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.req("text").unwrap().as_str().unwrap(), tok.decode(&[1, 2]));
+        assert!(v.req("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+        let err = format_response(&Err(ServeError::new("bad_token", "nope")), &tok);
+        let v = Json::parse(&err).unwrap();
+        assert_eq!(v.req("error").unwrap().req("code").unwrap().as_str().unwrap(), "bad_token");
+    }
+
+    #[test]
+    fn writer_pending_cap_closes_connection() {
+        use std::sync::mpsc::sync_channel;
+        // real loopback socket pair so writer_loop has something to write to
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_stream, _) = listener.accept().unwrap();
+        let registry = Registry::default();
+        let (tx, rx) = sync_channel(16);
+        registry.register(1, tx.clone(), None);
+        let tok = Tokenizer::new(8);
+        let progress = ConnProgress::default();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| writer_loop(server_stream, 1, rx, &registry, &tok, &progress, 2));
+            // responses 1..=4 arrive while seq 0 is still decoding: the
+            // reorder buffer hits the cap (2) and the writer must close
+            // the connection instead of buffering without bound
+            for seq in [1u64, 2, 3, 4] {
+                let _ = tx.send(WriterMsg::Resp {
+                    seq,
+                    result: Err(ServeError::new("bad_json", "spam")),
+                });
+            }
+            h.join().unwrap();
+        });
+        assert!(!registry.contains(1));
+        // the exit sentinel stops the reader from waiting on this writer
+        assert_eq!(progress.written.load(Ordering::Acquire), u64::MAX);
+        drop(client);
+    }
+
+    #[test]
+    fn bounded_line_reader() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+        let mut r = Cursor::new(b"short\nlooooooooong line\nnext\n".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"short");
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::TooLong));
+        buf.clear();
+        // the oversized line was fully consumed; the stream recovers
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"next");
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Eof));
+        // trailing bytes without a newline still form a line
+        let mut r = Cursor::new(b"tail".to_vec());
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"tail");
     }
 }

@@ -1,0 +1,468 @@
+//! Continuous-batching scheduler: the single thread that owns the model
+//! backend and turns a bounded queue of decode requests into micro-batched
+//! decode steps.
+//!
+//! ```text
+//!  readers ──▶ bounded request queue ──▶ scheduler ──▶ per-conn writer queues
+//!  (1/conn)    (sync_channel, depth=Q)   (this file)   (bounded, reordered)
+//! ```
+//!
+//! Invariants:
+//!
+//! * **Token identity** — a request decodes to exactly the tokens the
+//!   sequential path produces, because every step goes through the same
+//!   [`decode_step`] core and logits row `i` depends only on slot `i`.
+//! * **Continuous batching** — new requests are admitted between steps
+//!   (never mid-step) up to `max_batch`; finished slots retire
+//!   immediately, so a short request never waits for a long neighbour to
+//!   finish, only for its next step boundary.
+//! * **Backpressure without starvation** — the request queue and the
+//!   writer queues are bounded; *readers* block when the request queue
+//!   fills (per-connection backpressure). The scheduler itself never
+//!   blocks on a client: a connection whose writer queue is full has
+//!   queue-depth unread responses outstanding and is force-disconnected
+//!   rather than allowed to wedge every other connection.
+//! * **Isolation** — a backend failure fails the in-flight requests with
+//!   a structured error; the scheduler itself keeps serving.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batch::{decode_step, DecodeSlot, StepBackend};
+
+/// Serving engine knobs (`faar serve --max-batch 16 --queue-depth 128 ...`).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// micro-batch ceiling for one scheduler step
+    pub max_batch: usize,
+    /// bounded request-queue depth (readers block when full)
+    pub queue_depth: usize,
+    /// server-side cap on a request's `max_tokens` (requests are clamped)
+    pub max_tokens_cap: usize,
+    /// reject request lines longer than this many bytes
+    pub max_line_bytes: usize,
+    /// per-connection read timeout in ms; 0 disables
+    pub read_timeout_ms: u64,
+    /// max concurrently served connections (accept blocks beyond this)
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            max_batch: 8,
+            queue_depth: 64,
+            max_tokens_cap: 256,
+            max_line_bytes: 64 * 1024,
+            read_timeout_ms: 30_000,
+            workers: 64,
+        }
+    }
+}
+
+/// A structured protocol error: `code` is machine-matchable, `message`
+/// human-readable. Serialized as `{"error":{"code":...,"message":...}}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> ServeError {
+        ServeError { code, message: message.into() }
+    }
+}
+
+/// A validated request on its way to the scheduler.
+#[derive(Debug)]
+pub struct DecodeRequest {
+    pub conn: u64,
+    /// per-connection sequence number (writers restore request order)
+    pub seq: u64,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub enqueued: Instant,
+}
+
+/// A finished decode, ready for the protocol layer to serialize.
+#[derive(Debug)]
+pub struct Decoded {
+    pub tokens: Vec<i32>,
+    /// request-to-completion wall time
+    pub latency_ms: f64,
+    /// time spent waiting in the request queue before the first step
+    pub queue_ms: f64,
+}
+
+/// What flows into a per-connection writer thread.
+#[derive(Debug)]
+pub enum WriterMsg {
+    Resp {
+        seq: u64,
+        result: Result<Decoded, ServeError>,
+    },
+    /// The reader is gone: exactly `next_seq` requests were issued on
+    /// this connection; the writer exits once all of them are written.
+    Done { next_seq: u64 },
+}
+
+/// One registered connection: the writer queue plus a handle to force
+/// the socket shut if the connection stops draining responses.
+struct ConnEntry {
+    tx: SyncSender<WriterMsg>,
+    stream: Option<TcpStream>,
+}
+
+/// Routes scheduler responses back to connection writers. Connections
+/// register on accept and unregister when their writer exits, which also
+/// cancels their in-flight slots at the next step boundary.
+#[derive(Default)]
+pub struct Registry {
+    conns: Mutex<HashMap<u64, ConnEntry>>,
+    cv: Condvar,
+}
+
+impl Registry {
+    /// `stream` (a clone of the connection socket) lets the scheduler
+    /// force-disconnect a client whose writer queue stopped draining;
+    /// `None` is fine for in-process tests.
+    pub fn register(&self, conn: u64, tx: SyncSender<WriterMsg>, stream: Option<TcpStream>) {
+        self.conns.lock().expect("registry poisoned").insert(conn, ConnEntry { tx, stream });
+    }
+
+    pub fn unregister(&self, conn: u64) {
+        self.conns.lock().expect("registry poisoned").remove(&conn);
+        self.cv.notify_all();
+    }
+
+    pub fn contains(&self, conn: u64) -> bool {
+        self.conns.lock().expect("registry poisoned").contains_key(&conn)
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.lock().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn sender(&self, conn: u64) -> Option<SyncSender<WriterMsg>> {
+        self.conns.lock().expect("registry poisoned").get(&conn).map(|e| e.tx.clone())
+    }
+
+    /// Unregister and shut the socket down, unblocking a writer stuck in
+    /// `write_all` to a client that stopped reading.
+    fn force_disconnect(&self, conn: u64) {
+        let entry = self.conns.lock().expect("registry poisoned").remove(&conn);
+        if let Some(e) = entry {
+            if let Some(s) = e.stream {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until fewer than `n` connections are live (the acceptor's
+    /// `--workers` admission control).
+    pub fn wait_below(&self, n: usize) {
+        let mut conns = self.conns.lock().expect("registry poisoned");
+        while conns.len() >= n.max(1) {
+            conns = self.cv.wait(conns).expect("registry poisoned");
+        }
+    }
+}
+
+/// Counters the engine reports when it exits (tests assert on these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    pub steps: u64,
+    /// steps that carried more than one slot
+    pub batched_steps: u64,
+    pub completed: u64,
+    /// responses dropped because the connection was gone
+    pub cancelled: u64,
+    /// requests failed by a backend error
+    pub errors: u64,
+    pub peak_batch: usize,
+}
+
+struct SlotMeta {
+    conn: u64,
+    seq: u64,
+    enqueued: Instant,
+    started: Instant,
+}
+
+/// Run the scheduler until the request queue disconnects (all readers and
+/// the acceptor are gone) and every in-flight slot has drained. Never
+/// returns in serve-forever mode.
+pub fn run<B: StepBackend + ?Sized>(
+    backend: &B,
+    rx: Receiver<DecodeRequest>,
+    registry: &Registry,
+    opts: &ServeOptions,
+) -> Result<SchedStats> {
+    let seq_len = backend.seq_len();
+    let max_batch = opts.max_batch.max(1);
+    let mut stats = SchedStats::default();
+    // `slots` and `meta` move in lockstep (same index = same request)
+    let mut slots: Vec<DecodeSlot> = Vec::new();
+    let mut meta: Vec<SlotMeta> = Vec::new();
+
+    loop {
+        // admit up to max_batch; block only when fully idle
+        while slots.len() < max_batch {
+            let req = if slots.is_empty() {
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return Ok(stats), // queue closed, nothing in flight
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            };
+            admit(req, seq_len, registry, &mut slots, &mut meta, &mut stats);
+        }
+        stats.peak_batch = stats.peak_batch.max(slots.len());
+
+        // cancel slots whose connection already went away
+        for i in (0..slots.len()).rev() {
+            if !registry.contains(meta[i].conn) {
+                slots.swap_remove(i);
+                meta.swap_remove(i);
+                stats.cancelled += 1;
+            }
+        }
+        if slots.is_empty() {
+            continue;
+        }
+
+        stats.steps += 1;
+        if slots.len() > 1 {
+            stats.batched_steps += 1;
+        }
+        if let Err(e) = decode_step(backend, &mut slots) {
+            // fail the in-flight requests, keep the server up (each
+            // request lands in exactly one of errors/cancelled)
+            let err = ServeError::new("backend", format!("decode step failed: {e:#}"));
+            for m in meta.drain(..) {
+                if respond(registry, m.conn, m.seq, Err(err.clone())) {
+                    stats.errors += 1;
+                } else {
+                    stats.cancelled += 1;
+                }
+            }
+            slots.clear();
+            continue;
+        }
+
+        // retire finished slots immediately (continuous batching)
+        for i in (0..slots.len()).rev() {
+            if slots[i].done() {
+                let slot = slots.swap_remove(i);
+                let m = meta.swap_remove(i);
+                let now = Instant::now();
+                let decoded = Decoded {
+                    tokens: slot.out,
+                    latency_ms: (now - m.enqueued).as_secs_f64() * 1e3,
+                    queue_ms: (m.started - m.enqueued).as_secs_f64() * 1e3,
+                };
+                if respond(registry, m.conn, m.seq, Ok(decoded)) {
+                    stats.completed += 1;
+                } else {
+                    stats.cancelled += 1;
+                }
+            }
+        }
+    }
+}
+
+fn admit(
+    req: DecodeRequest,
+    seq_len: usize,
+    registry: &Registry,
+    slots: &mut Vec<DecodeSlot>,
+    meta: &mut Vec<SlotMeta>,
+    stats: &mut SchedStats,
+) {
+    let started = Instant::now();
+    if req.max_tokens == 0 {
+        // nothing to decode; complete immediately (still a valid request)
+        let decoded = Decoded {
+            tokens: vec![],
+            latency_ms: (started - req.enqueued).as_secs_f64() * 1e3,
+            queue_ms: (started - req.enqueued).as_secs_f64() * 1e3,
+        };
+        if respond(registry, req.conn, req.seq, Ok(decoded)) {
+            stats.completed += 1;
+        } else {
+            stats.cancelled += 1;
+        }
+        return;
+    }
+    match DecodeSlot::new(&req.prompt, req.max_tokens, seq_len) {
+        Ok(slot) => {
+            slots.push(slot);
+            meta.push(SlotMeta {
+                conn: req.conn,
+                seq: req.seq,
+                enqueued: req.enqueued,
+                started,
+            });
+        }
+        // the protocol layer validates first; this is the backstop
+        // (each request lands in exactly one of errors/cancelled)
+        Err(e) => {
+            let err = ServeError::new("bad_request", e.to_string());
+            if respond(registry, req.conn, req.seq, Err(err)) {
+                stats.errors += 1;
+            } else {
+                stats.cancelled += 1;
+            }
+        }
+    }
+}
+
+/// Route one response to its connection's writer without ever blocking
+/// the scheduler: a missing or closed writer means the client is gone
+/// (drop the response); a *full* writer queue means the client has
+/// queue-depth responses outstanding and is not reading — keeping the
+/// scheduler's single thread alive matters more than that client, so it
+/// is force-disconnected (socket shutdown unblocks its writer thread).
+/// Returns whether delivery succeeded.
+fn respond(
+    registry: &Registry,
+    conn: u64,
+    seq: u64,
+    result: Result<Decoded, ServeError>,
+) -> bool {
+    match registry.sender(conn) {
+        Some(tx) => match tx.try_send(WriterMsg::Resp { seq, result }) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                crate::warn!(
+                    "connection {conn}: writer queue full (client not reading); disconnecting"
+                );
+                registry.force_disconnect(conn);
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        },
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batch::{generate_greedy, SyntheticBackend};
+    use std::sync::mpsc::sync_channel;
+
+    fn req(conn: u64, seq: u64, prompt: Vec<i32>, max_tokens: usize) -> DecodeRequest {
+        DecodeRequest { conn, seq, prompt, max_tokens, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn scheduler_drains_and_matches_sequential() {
+        let backend = SyntheticBackend::new(32, 8, 3);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(16);
+        registry.register(1, w_tx, None);
+        let (tx, rx) = sync_channel(16);
+        for i in 0..6u64 {
+            tx.send(req(1, i, vec![i as i32 + 1, 2], 4 + i as usize)).unwrap();
+        }
+        drop(tx);
+        let opts = ServeOptions { max_batch: 4, ..ServeOptions::default() };
+        let stats = run(&backend, rx, &registry, &opts).unwrap();
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.cancelled, 0);
+        assert!(stats.batched_steps > 0, "expected micro-batched steps");
+        assert!(stats.peak_batch > 1 && stats.peak_batch <= 4);
+        let mut got: Vec<(u64, Vec<i32>)> = (0..6)
+            .map(|_| match w_rx.recv().unwrap() {
+                WriterMsg::Resp { seq, result } => (seq, result.unwrap().tokens),
+                WriterMsg::Done { .. } => panic!("unexpected Done"),
+            })
+            .collect();
+        got.sort_by_key(|(s, _)| *s);
+        for (i, (seq, tokens)) in got.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            let expect =
+                generate_greedy(&backend, &[i as i32 + 1, 2], 4 + i).unwrap();
+            assert_eq!(tokens, &expect, "request {i} diverged from sequential decode");
+        }
+    }
+
+    #[test]
+    fn disconnected_conn_slots_are_cancelled() {
+        let backend = SyntheticBackend::new(16, 8, 9);
+        let registry = Registry::default();
+        // conn 7 never registers a writer: its requests cancel
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(7, 0, vec![1, 2], 50)).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    #[test]
+    fn zero_max_tokens_completes_empty() {
+        let backend = SyntheticBackend::new(16, 8, 1);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(2, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(2, 0, vec![3], 0)).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.completed, 1);
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { seq: 0, result } => assert!(result.unwrap().tokens.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_writer_queue_forces_disconnect() {
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(1);
+        registry.register(9, w_tx, None);
+        let ok = Decoded { tokens: vec![], latency_ms: 0.0, queue_ms: 0.0 };
+        // first response fills the depth-1 queue (nobody draining)
+        assert!(respond(&registry, 9, 0, Ok(ok)));
+        // second finds it full: the scheduler must not block — the
+        // connection is dropped instead
+        let ok = Decoded { tokens: vec![1], latency_ms: 0.0, queue_ms: 0.0 };
+        assert!(!respond(&registry, 9, 1, Ok(ok)));
+        assert!(!registry.contains(9));
+        drop(w_rx);
+    }
+
+    #[test]
+    fn empty_prompt_backstop_errors() {
+        let backend = SyntheticBackend::new(16, 8, 1);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(3, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(3, 0, vec![], 4)).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.errors, 1);
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "bad_request"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -10,9 +10,9 @@
 //!   order" interface the runtime/eval/serve layers consume, so either
 //!   store drives the graphs without conversion.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -221,12 +221,29 @@ impl ParamSource for ParamStore {
 /// store/disk footprint); call [`Self::clear_dequant_cache`] to drop the
 /// warm dense copies between requests if memory matters more than
 /// latency.
-#[derive(Clone, Debug)]
+///
+/// The memoization is guarded by a `Mutex`, so the store is `Send + Sync`
+/// and can be shared across the serving engine's threads behind an `Arc`
+/// (connection readers never touch it; the scheduler thread and any
+/// metrics thread may race on `get` — worst case both decode the same
+/// layer once, which is benign).
+#[derive(Debug)]
 pub struct QuantParamStore {
     names: Vec<String>,
     dense: BTreeMap<String, Tensor>,
     packed: BTreeMap<String, QuantTensor>,
-    cache: RefCell<BTreeMap<String, Tensor>>,
+    cache: Mutex<BTreeMap<String, Tensor>>,
+}
+
+impl Clone for QuantParamStore {
+    fn clone(&self) -> QuantParamStore {
+        QuantParamStore {
+            names: self.names.clone(),
+            dense: self.dense.clone(),
+            packed: self.packed.clone(),
+            cache: Mutex::new(self.cache.lock().expect("dequant cache poisoned").clone()),
+        }
+    }
 }
 
 impl QuantParamStore {
@@ -248,7 +265,7 @@ impl QuantParamStore {
             names: fp.names.clone(),
             dense,
             packed,
-            cache: RefCell::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -278,21 +295,25 @@ impl QuantParamStore {
 
     /// Drop the memoized dequantized copies (they repopulate on demand).
     pub fn clear_dequant_cache(&self) {
-        self.cache.borrow_mut().clear();
+        self.cache.lock().expect("dequant cache poisoned").clear();
     }
 
     /// Get one tensor, dequantizing (and memoizing) packed layers on
-    /// demand.
+    /// demand. Safe to call from multiple threads; the decode itself runs
+    /// outside the lock so a slow dequant never blocks cache hits.
     pub fn get(&self, name: &str) -> Result<Tensor> {
         if let Some(t) = self.dense.get(name) {
             return Ok(t.clone());
         }
         let q = self.packed.get(name).ok_or_else(|| anyhow!("no param '{name}'"))?;
-        if let Some(t) = self.cache.borrow().get(name) {
+        if let Some(t) = self.cache.lock().expect("dequant cache poisoned").get(name) {
             return Ok(t.clone());
         }
         let t = q.dequantize()?;
-        self.cache.borrow_mut().insert(name.to_string(), t.clone());
+        self.cache
+            .lock()
+            .expect("dequant cache poisoned")
+            .insert(name.to_string(), t.clone());
         Ok(t)
     }
 
@@ -456,5 +477,31 @@ mod tests {
         assert_eq!(plain.n_packed(), 0);
         assert_eq!(plain.packed_payload_bytes(), 0);
         assert_eq!(plain.get("layers.wq").unwrap().data, fp.get("layers.wq").unwrap().data);
+    }
+
+    #[test]
+    fn quant_store_shared_across_threads() {
+        // the serving scheduler shares the store via Arc; concurrent
+        // lazy dequant must be race-free and agree with a direct decode
+        let (_, store, q) = packed_store();
+        let expect = q.dequantize().unwrap().data;
+        let store = std::sync::Arc::new(store);
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let s = store.clone();
+            let e = expect.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    assert_eq!(s.get("layers.wq").unwrap().data, e);
+                    s.clear_dequant_cache();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // a clone carries the warm cache but is independent afterwards
+        let copy = store.as_ref().clone();
+        assert_eq!(copy.get("layers.wq").unwrap().data, expect);
     }
 }

@@ -47,6 +47,74 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
 }
 
+/// Spawn a detached thread with a name (shows up in panics / debuggers).
+/// Used for the serving engine's per-connection reader/writer threads.
+pub fn spawn_named<F>(name: String, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(f)
+        .expect("thread spawn failed")
+}
+
+/// Completion barrier for detached threads (crossbeam-style): every clone
+/// registers a participant, dropping it deregisters, and [`WaitGroup::wait`]
+/// blocks until every other participant is gone. The serving engine hands a
+/// clone to each connection thread and waits on shutdown so responses in
+/// flight are flushed before `serve` returns.
+pub struct WaitGroup {
+    inner: std::sync::Arc<WgInner>,
+}
+
+struct WgInner {
+    count: std::sync::Mutex<usize>,
+    cv: std::sync::Condvar,
+}
+
+impl Default for WaitGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WaitGroup {
+    pub fn new() -> WaitGroup {
+        WaitGroup {
+            inner: std::sync::Arc::new(WgInner {
+                count: std::sync::Mutex::new(1),
+                cv: std::sync::Condvar::new(),
+            }),
+        }
+    }
+
+    /// Block until this handle is the only participant left.
+    pub fn wait(self) {
+        let mut n = self.inner.count.lock().unwrap();
+        while *n > 1 {
+            n = self.inner.cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Clone for WaitGroup {
+    fn clone(&self) -> WaitGroup {
+        *self.inner.count.lock().unwrap() += 1;
+        WaitGroup { inner: self.inner.clone() }
+    }
+}
+
+impl Drop for WaitGroup {
+    fn drop(&mut self) {
+        let mut n = self.inner.count.lock().unwrap();
+        *n -= 1;
+        if *n <= 1 {
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +149,29 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(par_map(vec![1, 2], 64, |x: i32| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn waitgroup_waits_for_all() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let wg = WaitGroup::new();
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let child = wg.clone();
+            let done = done.clone();
+            spawn_named("wg-test".into(), move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                done.fetch_add(1, Ordering::SeqCst);
+                drop(child);
+            });
+        }
+        wg.wait();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn waitgroup_no_children_returns() {
+        WaitGroup::new().wait();
     }
 }
