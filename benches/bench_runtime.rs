@@ -1,17 +1,26 @@
 //! Runtime / artifact benches: compile cost, forward latency + token
 //! throughput, stage-1 step latency, and the Pallas-vs-jnp kernel cost
-//! through the real PJRT path (needs `make artifacts`, nano) — plus a
-//! synthetic serving load-generator that measures the concurrent batched
-//! engine end-to-end over TCP (no artifacts needed) and writes
-//! `BENCH_serve.json` with p50/p95/p99 latency and tokens/sec at micro-
-//! batch sizes 1/4/16.
+//! through the real PJRT path (needs `make artifacts`, nano) — plus two
+//! artifact-free benches that run everywhere:
+//!
+//! * a synthetic serving load-generator measuring the concurrent batched
+//!   engine end-to-end over TCP → `BENCH_serve.json` (p50/p95/p99 +
+//!   tokens/sec at micro-batch 1/4/16), and
+//! * the NATIVE pure-rust backend's decode throughput at batch 1/4/16
+//!   with and without the paged KV cache → `BENCH_native.json` (the KV
+//!   cache must clear ≥2x at a 256-token window — asserted here, not
+//!   just recorded).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::preset::{manifest_from_config, native_config};
+use nvfp4_faar::infer::{quantize_store, NativeBackend, NativeModel, NativeOptions};
 use nvfp4_faar::runtime::{Runtime, Value};
+use nvfp4_faar::serve::batch::{decode_step, DecodeSlot, StepBackend};
 use nvfp4_faar::serve::{serve_on, ServeOptions, SyntheticBackend};
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::train::ParamStore;
@@ -136,10 +145,114 @@ fn bench_serve_load() {
     }
 }
 
+/// Decode `new_tokens` continuations for `batch` slots through the
+/// native backend; returns (wall seconds, generated tokens).
+fn native_decode_run(
+    backend: &NativeBackend,
+    batch: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> (f64, usize) {
+    let seq_len = backend.seq_len();
+    let mut slots: Vec<DecodeSlot> = (0..batch)
+        .map(|b| {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|i| ((b * 131 + i * 7) % 256) as i32).collect();
+            DecodeSlot::new(&prompt, new_tokens, seq_len).expect("slot")
+        })
+        .collect();
+    let t0 = Instant::now();
+    while slots.iter().any(|s| !s.done()) {
+        decode_step(backend, &mut slots).expect("decode step");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    for slot in &slots {
+        backend.release(slot);
+    }
+    assert_eq!(backend.kv_outstanding(), 0, "bench leaked KV pages");
+    (wall, batch * new_tokens)
+}
+
+/// Native-backend decode throughput: tokens/sec at batch 1/4/16, KV
+/// cache on vs off, on a seq_len-256 model so the window reaches the
+/// T >= 256 regime where the O(T) cached step must beat the O(T²)
+/// recompute by >= 2x. Runs everywhere — pure rust, no artifacts.
+fn bench_native() {
+    let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+    // full mode fills the 256-token window exactly (224 prompt + 32 new)
+    let (prompt_len, new_tokens) = if fast { (56, 8) } else { (224, 32) };
+    let cfg = native_config("bench", 256, 64, 2, 2, 256).expect("bench config");
+    let manifest = manifest_from_config(cfg);
+    let fp = ParamStore::init(&manifest, 42);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    println!(
+        "native decode: {} layers packed ({:.2} MiB), prompt {prompt_len} + {new_tokens} new tokens",
+        model.n_packed(),
+        model.packed_payload_bytes() as f64 / (1 << 20) as f64
+    );
+
+    let mut runs = vec![];
+    for &batch in &[1usize, 4, 16] {
+        let mut tok_s = [0.0f64; 2];
+        for (slot_idx, use_cache) in [(0usize, true), (1usize, false)] {
+            let backend = NativeBackend::new(
+                model.clone(),
+                NativeOptions { use_cache, max_pages: 2048, ..NativeOptions::default() },
+            );
+            let (wall, tokens) = native_decode_run(&backend, batch, prompt_len, new_tokens);
+            tok_s[slot_idx] = tokens as f64 / wall;
+            println!(
+                "  batch {batch:>2} kv={:<5} {:>9.1} tok/s  ({:.3}s wall)",
+                use_cache,
+                tok_s[slot_idx],
+                wall
+            );
+            runs.push(Json::obj(vec![
+                ("batch", Json::num(batch as f64)),
+                ("kv_cache", Json::Bool(use_cache)),
+                ("tokens_per_s", Json::Num(tok_s[slot_idx])),
+                ("wall_s", Json::Num(wall)),
+            ]));
+        }
+        let speedup = tok_s[0] / tok_s[1].max(1e-12);
+        println!("  batch {batch:>2} kv-cache speedup: {speedup:.1}x");
+        if !fast {
+            assert!(
+                speedup >= 2.0,
+                "KV cache speedup {speedup:.2}x below the 2x floor at batch {batch}"
+            );
+        }
+    }
+    let doc = Json::obj(vec![
+        ("group", Json::str("native")),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::str("bench")),
+                ("vocab", Json::num(256.0)),
+                ("d_model", Json::num(64.0)),
+                ("n_layers", Json::num(2.0)),
+                ("seq_len", Json::num(256.0)),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("new_tokens", Json::num(new_tokens as f64)),
+                ("format", Json::str("nvfp4")),
+                ("act_quant", Json::Bool(true)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write("BENCH_native.json", format!("{}\n", doc.to_string_pretty())) {
+        Ok(()) => println!("→ wrote BENCH_native.json"),
+        Err(e) => eprintln!("[warn] could not write BENCH_native.json: {e}"),
+    }
+}
+
 fn main() {
-    // the serving load bench runs everywhere (synthetic backend, no
-    // artifacts or PJRT needed)
+    // the serving load bench and the native decode bench run everywhere
+    // (no artifacts or PJRT needed)
     bench_serve_load();
+    bench_native();
 
     if !Path::new("artifacts/nano/manifest.json").exists() {
         eprintln!("skipping bench_runtime artifact benches: run `make artifacts` first");

@@ -28,11 +28,14 @@ pub struct CaptureSet {
 
 /// All capture points.
 pub struct Calibration {
+    /// capture sets keyed by capture-point name
     pub sets: BTreeMap<String, CaptureSet>,
+    /// calibration batches that were captured
     pub n_batches: usize,
 }
 
 impl Calibration {
+    /// The capture set for one capture point, or error.
     pub fn set(&self, capture: &str) -> Result<&CaptureSet> {
         self.sets.get(capture).ok_or_else(|| anyhow!("no capture set '{capture}'"))
     }

@@ -14,7 +14,9 @@ use crate::util::{cli::Args, json::Json};
 /// β annealing schedule: log-linear from `beta_start` to `beta_end`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BetaSchedule {
+    /// β at the start of stage 1
     pub start: f32,
+    /// β at the end of stage 1
     pub end: f32,
 }
 
@@ -38,6 +40,7 @@ pub enum ScaleMethod {
 }
 
 impl ScaleMethod {
+    /// Parse a scale-method name (`standard|foursix|search`).
     pub fn parse(s: &str) -> Result<ScaleMethod> {
         match s {
             "standard" => Ok(ScaleMethod::Standard),
@@ -47,6 +50,7 @@ impl ScaleMethod {
         }
     }
 
+    /// Canonical name (matches [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             ScaleMethod::Standard => "standard",
@@ -57,44 +61,64 @@ impl ScaleMethod {
 }
 
 #[derive(Clone, Debug)]
+/// Every hyperparameter of one pipeline run. Field groups follow
+/// the pipeline stages; defaults are DESIGN.md §7.
 pub struct PipelineConfig {
     /// model preset (must match an artifacts/<name>/ directory)
     pub model: String,
+    /// directory holding `artifacts/<model>/`
     pub artifact_root: String,
+    /// results/checkpoint output directory
     pub out_dir: String,
+    /// global seed (init, data streams, trials)
     pub seed: u64,
 
     // pretraining
+    /// pretraining optimizer steps
     pub pretrain_steps: usize,
+    /// pretraining peak learning rate
     pub pretrain_lr: f32,
+    /// linear LR warmup steps
     pub pretrain_warmup: usize,
 
     // calibration
+    /// calibration batches captured from the frozen model
     pub calib_batches: usize,
 
     // FAAR stage 1 (per layer)
+    /// FAAR stage-1 steps per layer
     pub stage1_steps: usize,
+    /// stage-1 learning rate
     pub stage1_lr: f32,
+    /// rounding-regularizer weight λ_round
     pub lam_round: f32,
     /// fraction of steps before λ_round reaches full strength
     pub lam_warmup_frac: f32,
+    /// β annealing schedule for the soft-round sigmoid
     pub beta: BetaSchedule,
 
     // 2FA stage 2 (global alignment)
+    /// 2FA stage-2 global-alignment steps
     pub stage2_steps: usize,
+    /// stage-2 learning rate
     pub stage2_lr: f32,
+    /// stage-2 KL-alignment weight
     pub lam_kl: f32,
+    /// stage-2 distillation temperature
     pub tau: f32,
 
     // quantization options
+    /// block-scale selection recipe
     pub scale_method: ScaleMethod,
     /// evaluate with activation quantization (W4A4) — paper setting
     pub act_quant_eval: bool,
 
     // evaluation
+    /// evaluation batches per metric
     pub eval_batches: usize,
 
     // GPTQ
+    /// GPTQ Hessian damping factor
     pub gptq_damp: f64,
 }
 
@@ -136,6 +160,7 @@ impl PipelineConfig {
         Ok(c)
     }
 
+    /// Apply JSON overrides onto this config (unknown keys error).
     pub fn apply_json(&mut self, v: &Json) -> Result<()> {
         let obj = v.as_obj()?;
         for (k, val) in obj {
@@ -196,6 +221,7 @@ impl PipelineConfig {
         Ok(())
     }
 
+    /// Serialize the experiment-relevant fields (results provenance).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(self.model.as_str())),

@@ -8,8 +8,11 @@ use super::corpus::Corpus;
 /// Stream role → disjoint seed space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// Pretraining stream.
     Train,
+    /// Calibration stream.
     Calib,
+    /// Evaluation stream.
     Eval,
 }
 
@@ -26,16 +29,21 @@ impl Split {
 /// Deterministic batch producer: batch `i` of a (corpus, split, seed)
 /// triple is always the same tokens.
 pub struct Batcher<'c> {
+    /// the generative corpus
     pub corpus: &'c Corpus,
+    /// which disjoint stream
     pub split: Split,
+    /// rows per batch
     pub batch: usize,
     /// tokens per row INCLUDING the shifted target (T+1 for training/eval)
     pub row_len: usize,
+    /// run seed, mixed into every row's stream
     pub seed: u64,
     next: usize,
 }
 
 impl<'c> Batcher<'c> {
+    /// A batcher over (corpus, split, seed), starting at batch 0.
     pub fn new(corpus: &'c Corpus, split: Split, batch: usize, row_len: usize, seed: u64) -> Self {
         Batcher { corpus, split, batch, row_len, seed, next: 0 }
     }
@@ -59,6 +67,7 @@ impl<'c> Batcher<'c> {
         b
     }
 
+    /// Rewind sequential iteration to batch 0.
     pub fn reset(&mut self) {
         self.next = 0;
     }

@@ -25,8 +25,11 @@ const N_MOTIFS: usize = 24;
 const MOTIF_LEN: usize = 5;
 
 #[derive(Clone, Debug)]
+/// Generative parameters of one named corpus.
 pub struct CorpusSpec {
+    /// corpus name (`synthwiki` / `synthc4`)
     pub name: &'static str,
+    /// uniform-sampling mix-in fraction
     pub noise: f64,
     /// probability of starting a motif at any position
     pub motif_rate: f64,
@@ -37,6 +40,7 @@ pub struct CorpusSpec {
 }
 
 impl CorpusSpec {
+    /// Spec of a named corpus, if known.
     pub fn by_name(name: &str) -> Option<CorpusSpec> {
         match name {
             "synthwiki" => Some(CorpusSpec {
@@ -60,7 +64,9 @@ impl CorpusSpec {
 
 /// A generative corpus over `vocab` tokens with order-2 context.
 pub struct Corpus {
+    /// the generative parameters
     pub spec: CorpusSpec,
+    /// token vocabulary size
     pub vocab: usize,
     /// preferred successors per (prev2, prev) context, [vocab*vocab]
     succ: Vec<[u32; SUCC]>,
@@ -72,6 +78,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Build the corpus structure (successor sets, motifs) for `vocab`.
     pub fn new(spec: CorpusSpec, vocab: usize) -> Corpus {
         assert!(vocab >= 16);
         let mut rng = Rng::new(spec.seed);
@@ -131,6 +138,7 @@ impl Corpus {
         }
     }
 
+    /// Build a named corpus over `vocab` tokens, if known.
     pub fn by_name(name: &str, vocab: usize) -> Option<Corpus> {
         CorpusSpec::by_name(name).map(|s| Corpus::new(s, vocab))
     }

@@ -20,14 +20,20 @@ use crate::util::rng::Rng;
 use super::corpus::Corpus;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// The four zero-shot probe families (Table 5 analogues).
 pub enum TaskKind {
+    /// 2-way process-consistency judgment.
     BoolQ,
+    /// 4-way with unlikely-successor distractors.
     ArcEasy,
+    /// 4-way with near-gold distractors.
     ArcChallenge,
+    /// 4-way multi-token continuations, length-normalized.
     HellaSwag,
 }
 
 impl TaskKind {
+    /// Canonical task name (table row labels).
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::BoolQ => "boolq",
@@ -37,6 +43,7 @@ impl TaskKind {
         }
     }
 
+    /// Every task, in table order.
     pub fn all() -> [TaskKind; 4] {
         [TaskKind::BoolQ, TaskKind::ArcEasy, TaskKind::ArcChallenge, TaskKind::HellaSwag]
     }
@@ -48,14 +55,21 @@ impl TaskKind {
 }
 
 #[derive(Clone, Debug)]
+/// One multiple-choice probe.
 pub struct Probe {
+    /// conditioning prefix
     pub prompt: Vec<i32>,
+    /// candidate continuations
     pub candidates: Vec<Vec<i32>>,
+    /// index of the gold candidate
     pub answer: usize,
 }
 
+/// A generated probe set for one task.
 pub struct TaskSuite {
+    /// which task family
     pub kind: TaskKind,
+    /// the probes
     pub probes: Vec<Probe>,
 }
 

@@ -10,12 +10,15 @@ use std::collections::HashMap;
 const CONSONANTS: [&str; 12] = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t"];
 const VOWELS: [&str; 5] = ["a", "e", "i", "o", "u"];
 
+/// Word-level tokenizer over deterministic pseudo-words, one unique
+/// word per token id.
 pub struct Tokenizer {
     words: Vec<String>,
     index: HashMap<String, i32>,
 }
 
 impl Tokenizer {
+    /// Build the vocabulary of `vocab` pseudo-words.
     pub fn new(vocab: usize) -> Tokenizer {
         let mut words = Vec::with_capacity(vocab);
         let mut index = HashMap::with_capacity(vocab);
@@ -44,10 +47,12 @@ impl Tokenizer {
         s
     }
 
+    /// Vocabulary size.
     pub fn vocab(&self) -> usize {
         self.words.len()
     }
 
+    /// Token ids → space-joined pseudo-words (`?` for out-of-range).
     pub fn decode(&self, tokens: &[i32]) -> String {
         tokens
             .iter()
@@ -56,6 +61,7 @@ impl Tokenizer {
             .join(" ")
     }
 
+    /// Whitespace-split words → token ids (unknown words map to 0).
     pub fn encode(&self, text: &str) -> Vec<i32> {
         text.split_whitespace()
             .map(|w| self.index.get(w).copied().unwrap_or(0))

@@ -176,10 +176,13 @@ pub fn task_accuracy(
 
 /// Full metric row for one (model, corpus): PPL + cosine vs reference.
 pub struct LmMetrics {
+    /// perplexity on the corpus
     pub ppl: f64,
+    /// last-hidden cosine similarity vs the fp reference, in percent
     pub cosine_pct: f64,
 }
 
+/// PPL + hidden-cosine for one (model, corpus) pair.
 pub fn lm_metrics(
     rt: &Runtime,
     fp_params: &dyn ParamSource,

@@ -19,7 +19,7 @@
 //!   only in how the effective-scale tensor is built, not in the E2M1
 //!   element grid itself.
 //!
-//! Encode/decode are block-parallel ([`util::threads::par_map`]) above
+//! Encode/decode are block-parallel ([`threads::par_map`]) above
 //! [`PAR_THRESHOLD`] elements; `bench_formats` records the scalar-vs-
 //! parallel comparison in `BENCH_formats.json`.
 
@@ -38,9 +38,13 @@ use crate::util::threads;
 /// `quant::scaling::prepare_with_method`.
 #[derive(Clone, Debug)]
 pub struct Prepared {
+    /// lower enclosing node per element (normalized magnitude)
     pub lower: Tensor,
+    /// upper enclosing node per element
     pub upper: Tensor,
+    /// elementwise effective scale
     pub scale: Tensor,
+    /// relative position of each element inside its interval
     pub v_init: Tensor,
     /// per leading-slice global scale (1.0 placeholders for formats
     /// without a global level)
@@ -99,6 +103,7 @@ pub fn rtn_quant(w: &Tensor, p: &Prepared) -> Tensor {
 }
 
 #[inline]
+/// Sign as ±1.0 (0.0 for exact zero) — the paper's sign convention.
 pub fn sign(x: f32) -> f32 {
     if x > 0.0 {
         1.0
@@ -118,6 +123,7 @@ pub fn rtn_decisions(p: &Prepared) -> Tensor {
 // Format identity
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Identity tag for the three 4-bit formats.
 pub enum FormatKind {
     /// 16-elem blocks, FP8-E4M3 block scales, fp32 global scale
     Nvfp4,
@@ -128,6 +134,7 @@ pub enum FormatKind {
 }
 
 impl FormatKind {
+    /// Canonical lowercase format name.
     pub fn name(self) -> &'static str {
         match self {
             FormatKind::Nvfp4 => "nvfp4",
@@ -136,6 +143,7 @@ impl FormatKind {
         }
     }
 
+    /// Parse a format name (`nvfp4|mxfp4|e2m1`).
     pub fn parse(s: &str) -> Result<FormatKind> {
         match s {
             "nvfp4" => Ok(FormatKind::Nvfp4),
@@ -165,9 +173,35 @@ impl FormatKind {
 
 /// A 4-bit block-format codec. All implementations share the E2M1
 /// element grid; they differ in scale granularity and storage.
+///
+/// The round trip — `prepare` → `encode` → `decode` — is the canonical
+/// way in and out of the packed representation:
+///
+/// ```
+/// use nvfp4_faar::formats::codec::{codec_for, rtn_decisions, FormatKind};
+/// use nvfp4_faar::tensor::Tensor;
+///
+/// // a [K=16, N=4] weight matrix (K must tile the format's block size)
+/// let w = Tensor::new((0..64).map(|i| (i as f32 - 32.0) / 40.0).collect(), vec![16, 4]);
+/// let codec = codec_for(FormatKind::Nvfp4);
+/// let prepared = codec.prepare(&w);
+/// let q = codec.encode(&w, &prepared, &rtn_decisions(&prepared));
+/// assert_eq!(q.numel(), 64);
+/// assert_eq!(q.codes.len(), 32); // two 4-bit codes per byte
+///
+/// let back = codec.decode(&q).unwrap();
+/// assert_eq!(back.shape, w.shape);
+/// // worst-case absolute grid error: one half-gap at the top of the
+/// // grid, i.e. ~amax/6 per element (plus E4M3 scale rounding slack)
+/// for (a, b) in back.data.iter().zip(&w.data) {
+///     assert!((a - b).abs() <= 0.15, "{a} vs {b}");
+/// }
+/// ```
 pub trait FormatCodec: Sync {
+    /// The format this codec packs and decodes.
     fn kind(&self) -> FormatKind;
 
+    /// Canonical lowercase format name.
     fn name(&self) -> &'static str {
         self.kind().name()
     }
@@ -201,6 +235,7 @@ pub fn codec_for(kind: FormatKind) -> &'static dyn FormatCodec {
     }
 }
 
+/// Every registered codec, NVFP4 first.
 pub fn all_codecs() -> [&'static dyn FormatCodec; 3] {
     [
         codec_for(FormatKind::Nvfp4),
@@ -219,7 +254,9 @@ pub fn all_codecs() -> [&'static dyn FormatCodec; 3] {
 /// `harden::pack_model` writes to disk.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantTensor {
+    /// which codec packed (and can decode) this payload
     pub format: FormatKind,
+    /// logical tensor shape (`[..., K, N]`)
     pub shape: Vec<usize>,
     /// packed E2M1 codes, two per byte (low nibble first), row-major
     pub codes: Vec<u8>,
@@ -250,6 +287,7 @@ const MAGIC: &[u8; 4] = b"FAQ1";
 const LEGACY_MAGIC: &[u8; 4] = b"NVF4";
 
 impl QuantTensor {
+    /// Logical element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -260,6 +298,7 @@ impl QuantTensor {
         self.codes.len() + self.scales.len() + self.s_global.len() * 4
     }
 
+    /// Payload bits per logical weight (≈4.5 for NVFP4).
     pub fn bits_per_weight(&self) -> f64 {
         self.payload_bytes() as f64 * 8.0 / self.numel().max(1) as f64
     }
@@ -335,6 +374,23 @@ impl QuantTensor {
     /// Parse a `FAQ1` container (or a legacy `NVF4` payload, which has
     /// the same layout minus the format tag). Every length is validated
     /// against the remaining buffer and the declared shape.
+    ///
+    /// ```
+    /// use nvfp4_faar::formats::codec::{codec_for, rtn_decisions, FormatKind, QuantTensor};
+    /// use nvfp4_faar::tensor::Tensor;
+    ///
+    /// let w = Tensor::new(vec![0.5; 64], vec![16, 4]);
+    /// let codec = codec_for(FormatKind::Nvfp4);
+    /// let p = codec.prepare(&w);
+    /// let q = codec.encode(&w, &p, &rtn_decisions(&p));
+    ///
+    /// let bytes = q.to_bytes();
+    /// let back = QuantTensor::from_bytes(&bytes).unwrap();
+    /// assert_eq!(back, q);
+    /// // truncated or corrupted payloads error instead of panicking
+    /// assert!(QuantTensor::from_bytes(&bytes[..10]).is_err());
+    /// assert!(QuantTensor::from_bytes(b"not a container").is_err());
+    /// ```
     pub fn from_bytes(buf: &[u8]) -> Result<QuantTensor> {
         let mut r = Reader { buf, off: 0 };
         let magic = r.take(4)?;
@@ -416,6 +472,7 @@ pub const PAR_THRESHOLD: usize = 1 << 16;
 const MIN_CHUNK: usize = 1 << 14;
 
 #[derive(Clone, Copy, Debug)]
+/// Threading policy for encode/decode.
 pub enum Parallelism {
     /// single-threaded reference path
     Scalar,
@@ -610,6 +667,210 @@ pub(crate) fn unpack_block_scaled(
         }
         out
     }))
+}
+
+// ---------------------------------------------------------------------------
+// BlockDecode: zero-copy block-wise decode view for fused kernels
+
+/// A zero-copy, block-wise decode view over a packed [`QuantTensor`],
+/// built for kernels that dequantize *inside* their inner loop (the
+/// native inference backend's fused dequant-GEMM) instead of
+/// materializing the full f32 tensor first.
+///
+/// The view pre-builds two lookup tables — the signed E2M1 element grid
+/// (16 entries) and the raw block-scale factor per scale byte (256
+/// entries) — so the per-element cost in a GEMM loop is two table reads
+/// and a multiply. Rows are exposed as packed nibble bytes
+/// ([`Self::code_row`]) plus per-column effective scales
+/// ([`Self::scale_row_into`]), which is exactly the granularity a
+/// row-major `y += x[row] * W[row, :]` update consumes.
+///
+/// Formats without block structure (plain E2M1) are presented as a
+/// single block spanning all of K, so callers need no per-format
+/// branches.
+pub struct BlockDecode<'a> {
+    q: &'a QuantTensor,
+    /// signed element value per 4-bit code
+    elem: [f32; 16],
+    /// raw block-scale factor per scale byte (unused entries stay 1.0)
+    scale_byte: [f32; 256],
+    lead: usize,
+    k: usize,
+    n: usize,
+    /// rows sharing one scale row (all of K when the format is unblocked)
+    block: usize,
+}
+
+/// Precomputed decode LUTs for one format: the signed E2M1 element grid
+/// (16 entries) and the per-byte block-scale factors (256 entries).
+/// Build once — e.g. per packed layer at model construction — and pass
+/// to [`QuantTensor::block_decode_cached`], so per-call view setup in a
+/// GEMM hot loop is a memcpy instead of 272 float decodes.
+#[derive(Clone, Copy)]
+pub struct DecodeTables {
+    kind: FormatKind,
+    elem: [f32; 16],
+    scale_byte: [f32; 256],
+}
+
+impl std::fmt::Debug for DecodeTables {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecodeTables").field("kind", &self.kind).finish_non_exhaustive()
+    }
+}
+
+impl FormatKind {
+    /// Precompute the decode tables for this format.
+    pub fn decode_tables(self) -> DecodeTables {
+        let mut elem = [0.0f32; 16];
+        for (c, e) in elem.iter_mut().enumerate() {
+            *e = e2m1::decode(c as u8);
+        }
+        let mut scale_byte = [1.0f32; 256];
+        match self {
+            FormatKind::Nvfp4 => {
+                for (b, s) in scale_byte.iter_mut().enumerate() {
+                    *s = e4m3::decode(b as u8);
+                }
+            }
+            FormatKind::Mxfp4 => {
+                for (b, s) in scale_byte.iter_mut().enumerate() {
+                    *s = mxfp4::e8m0_decode(b as u8);
+                }
+            }
+            // no block-scale bytes; the 1.0 fill is never indexed
+            FormatKind::E2m1 => {}
+        }
+        DecodeTables { kind: self, elem, scale_byte }
+    }
+}
+
+impl QuantTensor {
+    /// Build a [`BlockDecode`] view over this payload.
+    ///
+    /// Validates the payload first and errors when the trailing dimension
+    /// is odd (rows would straddle nibble-pair byte boundaries); callers
+    /// fall back to [`Self::dequantize`] in that case. Hot loops that
+    /// build views repeatedly should precompute the tables once with
+    /// [`FormatKind::decode_tables`] and use [`Self::block_decode_cached`].
+    pub fn block_decode(&self) -> Result<BlockDecode<'_>> {
+        self.block_decode_cached(&self.format.decode_tables())
+    }
+
+    /// [`Self::block_decode`] reusing precomputed tables (errors when
+    /// `tables` was built for a different format).
+    pub fn block_decode_cached(&self, tables: &DecodeTables) -> Result<BlockDecode<'_>> {
+        if tables.kind != self.format {
+            bail!(
+                "decode tables for {} fed a {} tensor",
+                tables.kind.name(),
+                self.format.name()
+            );
+        }
+        self.validate()?;
+        let g = geometry(&self.shape)?;
+        if g.n % 2 != 0 {
+            bail!("block_decode: trailing dim {} is odd (rows not byte-aligned)", g.n);
+        }
+        let block = match self.format {
+            FormatKind::Nvfp4 => nvfp4::BLOCK,
+            FormatKind::Mxfp4 => mxfp4::BLOCK,
+            // one block spanning all of K (per-slice scale only)
+            FormatKind::E2m1 => g.k.max(1),
+        };
+        Ok(BlockDecode {
+            q: self,
+            elem: tables.elem,
+            scale_byte: tables.scale_byte,
+            lead: g.lead,
+            k: g.k,
+            n: g.n,
+            block,
+        })
+    }
+}
+
+impl BlockDecode<'_> {
+    /// Leading (stacked) slices.
+    pub fn lead(&self) -> usize {
+        self.lead
+    }
+
+    /// Contraction rows per slice.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns per slice.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Rows sharing one scale row (`k` for unblocked formats).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Block rows per slice (`k / block`).
+    pub fn block_rows(&self) -> usize {
+        self.k / self.block
+    }
+
+    /// Per-slice global scale factor (1.0 for formats without one).
+    fn s_global(&self, l: usize) -> f32 {
+        match self.q.format {
+            FormatKind::Nvfp4 | FormatKind::E2m1 => self.q.s_global[l],
+            FormatKind::Mxfp4 => 1.0,
+        }
+    }
+
+    /// Decoded element value for a 4-bit code (sign bit included).
+    #[inline]
+    pub fn elem(&self, code: u8) -> f32 {
+        self.elem[(code & 0x0F) as usize]
+    }
+
+    /// Fill `out` (length `n`) with the effective per-column scales of
+    /// block-row `kb` in slice `l`.
+    pub fn scale_row_into(&self, l: usize, kb: usize, out: &mut [f32]) {
+        self.scale_range_into(l, kb, 0, self.n, out);
+    }
+
+    /// Fill `out` (length `c1 - c0`) with the effective scales of columns
+    /// `[c0, c1)` of block-row `kb` in slice `l` — the column-parallel
+    /// kernels decode only their own chunk instead of the full row.
+    pub fn scale_range_into(&self, l: usize, kb: usize, c0: usize, c1: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), c1 - c0, "scale range buffer length");
+        let sg = self.s_global(l);
+        if self.q.scales.is_empty() {
+            out.fill(sg);
+            return;
+        }
+        let base = (l * self.block_rows() + kb) * self.n;
+        for (o, &b) in out.iter_mut().zip(&self.q.scales[base + c0..base + c1]) {
+            *o = self.scale_byte[b as usize] * sg;
+        }
+    }
+
+    /// Packed nibble codes of row `row` in slice `l` (`n / 2` bytes, low
+    /// nibble first).
+    #[inline]
+    pub fn code_row(&self, l: usize, row: usize) -> &[u8] {
+        let e = (l * self.k + row) * self.n;
+        &self.q.codes[e / 2..e / 2 + self.n / 2]
+    }
+
+    /// Decode one full row into `out` (length `n`), given that row's
+    /// block scales from [`Self::scale_row_into`].
+    pub fn decode_row_into(&self, l: usize, row: usize, scales: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.n, "row buffer length");
+        assert_eq!(scales.len(), self.n, "scale row length");
+        for (j2, &b) in self.code_row(l, row).iter().enumerate() {
+            let j = 2 * j2;
+            out[j] = self.elem[(b & 0x0F) as usize] * scales[j];
+            out[j + 1] = self.elem[(b >> 4) as usize] * scales[j + 1];
+        }
+    }
 }
 
 /// Re-encode an on-grid dequantized tensor (e.g. a GPTQ solution) into a
@@ -834,6 +1095,70 @@ mod tests {
                 assert!(chunks.is_empty());
             }
         }
+    }
+
+    #[test]
+    fn block_decode_rows_match_dequantize() {
+        // the fused-kernel view must reproduce the reference decode
+        // exactly, row by row, for every format
+        let w = rand_w(&[2, 32, 8], 9, 0.1);
+        for codec in all_codecs() {
+            let p = codec.prepare(&w);
+            let q = codec.encode(&w, &p, &rtn_decisions(&p));
+            let full = q.dequantize().unwrap();
+            let dec = q.block_decode().unwrap();
+            assert_eq!(dec.lead(), 2);
+            assert_eq!(dec.k(), 32);
+            assert_eq!(dec.n(), 8);
+            assert_eq!(dec.block_rows() * dec.block(), dec.k());
+            let mut scales = vec![0.0f32; dec.n()];
+            let mut row = vec![0.0f32; dec.n()];
+            for l in 0..dec.lead() {
+                for kb in 0..dec.block_rows() {
+                    dec.scale_row_into(l, kb, &mut scales);
+                    for r in 0..dec.block() {
+                        let ri = kb * dec.block() + r;
+                        dec.decode_row_into(l, ri, &scales, &mut row);
+                        let base = (l * 32 + ri) * 8;
+                        assert_eq!(
+                            &row[..],
+                            &full.data[base..base + 8],
+                            "{}: slice {l} row {ri}",
+                            codec.name()
+                        );
+                    }
+                }
+            }
+        }
+        // odd trailing dim: view construction errors, decode still works
+        let odd = rand_w(&[16, 3], 10, 0.1);
+        let c = codec_for(FormatKind::E2m1);
+        let p = c.prepare(&odd);
+        let q = c.encode(&odd, &p, &rtn_decisions(&p));
+        assert!(q.block_decode().is_err());
+        assert!(q.dequantize().is_ok());
+
+        // precomputed tables: same rows as the self-built view, and a
+        // format mismatch is rejected
+        let w2 = rand_w(&[32, 4], 11, 0.1);
+        let c = codec_for(FormatKind::Nvfp4);
+        let p = c.prepare(&w2);
+        let q = c.encode(&w2, &p, &rtn_decisions(&p));
+        let tables = FormatKind::Nvfp4.decode_tables();
+        let cached = q.block_decode_cached(&tables).unwrap();
+        let fresh = q.block_decode().unwrap();
+        let mut scales = vec![0.0f32; 4];
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        for kb in 0..cached.block_rows() {
+            cached.scale_row_into(0, kb, &mut scales);
+            for r in 0..cached.block() {
+                cached.decode_row_into(0, kb * cached.block() + r, &scales, &mut a);
+                fresh.decode_row_into(0, kb * fresh.block() + r, &scales, &mut b);
+                assert_eq!(a, b);
+            }
+        }
+        assert!(q.block_decode_cached(&FormatKind::Mxfp4.decode_tables()).is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 /// Positive node values indexed by the 3 magnitude bits (exp<<1 | man).
 pub const NODES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+/// Largest representable E2M1 magnitude.
 pub const FP4_MAX: f32 = 6.0;
 
 /// Decode a 4-bit code (low nibble) to f32.

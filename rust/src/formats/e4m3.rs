@@ -6,7 +6,9 @@
 //! `jnp.float8_e4m3fn` bit-for-bit (verified by the parity tests against
 //! the AOT `prepare_*` artifacts, which embed jax's own conversion).
 
+/// Largest finite E4M3 magnitude.
 pub const E4M3_MAX: f32 = 448.0;
+/// The (positive) E4M3 NaN code.
 pub const E4M3_NAN: u8 = 0x7F;
 
 /// Decode one E4M3 byte to f32 (exact — every finite code is an f32).

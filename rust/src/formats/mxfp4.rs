@@ -20,6 +20,7 @@ use crate::formats::codec::{self, FormatKind, Parallelism, Prepared, QuantTensor
 use crate::formats::e2m1;
 use crate::tensor::Tensor;
 
+/// MXFP4 block size along the contraction axis (the OCP spec fixes 32).
 pub const BLOCK: usize = 32;
 
 /// Encode a positive raw scale to E8M0: the nearest power of two that
@@ -40,6 +41,7 @@ pub fn e8m0_encode_ceil(raw: f32) -> (u8, f32) {
     ((e + 127) as u8, 2.0f32.powi(e))
 }
 
+/// Decode an E8M0 byte: `2^(byte - 127)`.
 pub fn e8m0_decode(byte: u8) -> f32 {
     2.0f32.powi(byte as i32 - 127)
 }

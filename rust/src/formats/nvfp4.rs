@@ -27,6 +27,7 @@ use crate::tensor::Tensor;
 
 pub use super::codec::{hard_quant, prepare_with_scales, rtn_quant, sign, Prepared};
 
+/// NVFP4 block size along the contraction axis (the format fixes 16).
 pub const BLOCK: usize = 16;
 
 /// Compute the effective elementwise scale tensor for `w[..., K, N]`
@@ -156,6 +157,7 @@ impl Nvfp4 {
 /// generalization the pipeline carries in memory.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedTensor {
+    /// logical tensor shape (`[..., K, N]`)
     pub shape: Vec<usize>,
     /// packed E2M1 codes, two per byte, row-major
     pub codes: Vec<u8>,

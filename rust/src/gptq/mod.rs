@@ -25,13 +25,16 @@ use crate::tensor::Tensor;
 /// Accumulated layer-input statistics for one linear: H = 2 XᵀX.
 #[derive(Clone, Debug)]
 pub struct Hessian {
+    /// contraction dimension of the layer
     pub k: usize,
     /// row-major [K, K], f64
     pub h: Vec<f64>,
+    /// input rows accumulated so far
     pub n_rows: usize,
 }
 
 impl Hessian {
+    /// A zeroed accumulator for a `[K, N]` linear.
     pub fn new(k: usize) -> Hessian {
         Hessian { k, h: vec![0.0; k * k], n_rows: 0 }
     }
@@ -148,6 +151,7 @@ fn gptq_factor(h_damped: &[f64], k: usize) -> Result<Vec<f64>> {
 /// Options for the GPTQ solve.
 #[derive(Clone, Copy, Debug)]
 pub struct GptqOptions {
+    /// relative Hessian damping (λ · mean diag)
     pub damp: f64,
     /// MR-GPTQ: re-optimize each block's scale on compensated weights
     pub mr_scales: bool,

@@ -1,0 +1,339 @@
+//! Fused nibble-decode + matmul kernels over packed weights.
+//!
+//! The native backend's whole linear stack funnels through
+//! [`Linear::matvec`]: `y += x @ W[l]` for one `[K] → [N]` layer slice,
+//! where `W` stays in its 4-bit packed form and every element is decoded
+//! *inside* the GEMM inner loop — two table lookups and a multiply per
+//! weight, via [`BlockDecode`]. No dense f32 copy of a quantized layer
+//! ever materializes on the serving path.
+//!
+//! Layout intuition: codes are packed row-major two-per-byte along the
+//! output (`N`) axis, so the kernel walks `y += x[row] * W[row, :]`
+//! row by row — each row is one contiguous byte run, each 16/32-row
+//! block shares one decoded scale row. Per-element work:
+//!
+//! ```text
+//! y[j] += xv * elem_lut[nibble] * scale_row[j]
+//! ```
+//!
+//! When the caller allows it (decode at batch 1 — never nested under the
+//! backend's per-slot fan-out), large matvecs split their output columns
+//! across [`threads::par_map`] workers; every column is accumulated by
+//! exactly one worker in row order, so parallel results are bitwise
+//! identical to scalar results regardless of worker count.
+
+use anyhow::{bail, Result};
+
+use crate::formats::codec::{BlockDecode, DecodeTables, QuantTensor};
+use crate::tensor::Tensor;
+use crate::util::threads;
+
+/// MAC count above which a single matvec fans out across threads.
+pub const PAR_MACS: usize = 1 << 18;
+
+/// A packed layer stack plus its precomputed decode tables, so the GEMM
+/// hot loop builds its [`BlockDecode`] view with a memcpy instead of
+/// re-deriving 272 LUT entries per call.
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    q: QuantTensor,
+    tables: DecodeTables,
+}
+
+impl PackedLinear {
+    /// Wrap a packed payload, precomputing its format's decode tables.
+    pub fn new(q: QuantTensor) -> PackedLinear {
+        let tables = q.format.decode_tables();
+        PackedLinear { q, tables }
+    }
+
+    /// The packed payload.
+    pub fn quant(&self) -> &QuantTensor {
+        &self.q
+    }
+}
+
+/// One weight stack (`[L, K, N]` or `[K, N]`) in whichever form it is
+/// held: packed 4-bit (the quantized linears) or dense f32 (the
+/// embedding/norm/head parameters and any non-quantized fallback).
+#[derive(Clone, Debug)]
+pub enum Linear {
+    /// dense f32 weights
+    Dense(Tensor),
+    /// packed 4-bit payload, decoded on the fly inside the GEMM loop
+    Packed(PackedLinear),
+}
+
+impl From<QuantTensor> for Linear {
+    fn from(q: QuantTensor) -> Linear {
+        Linear::Packed(PackedLinear::new(q))
+    }
+}
+
+impl Linear {
+    /// Contraction (input) dimension.
+    pub fn k(&self) -> usize {
+        let shape = self.shape();
+        shape[shape.len() - 2]
+    }
+
+    /// Output dimension.
+    pub fn n(&self) -> usize {
+        let shape = self.shape();
+        shape[shape.len() - 1]
+    }
+
+    /// The full weight shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Linear::Dense(t) => &t.shape,
+            Linear::Packed(p) => &p.q.shape,
+        }
+    }
+
+    /// True when the layer is held packed.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, Linear::Packed(_))
+    }
+
+    /// Packed payload bytes (0 for dense layers).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(_) => 0,
+            Linear::Packed(p) => p.q.payload_bytes(),
+        }
+    }
+
+    /// `y += x @ W[l]` for slice `l`: `x` is `[K]`, `y` is `[N]`.
+    ///
+    /// `scratch` holds the decoded scale row between calls so the hot
+    /// loop never allocates. `workers > 1` allows the column-parallel
+    /// path for matvecs above [`PAR_MACS`]; callers already inside a
+    /// batch fan-out pass 1 so thread pools never nest. Accumulation is
+    /// plain f32 in row order — bitwise identical between the scalar and
+    /// column-parallel paths.
+    pub fn matvec(
+        &self,
+        l: usize,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut Vec<f32>,
+        workers: usize,
+    ) -> Result<()> {
+        let (k, n) = (self.k(), self.n());
+        if x.len() != k || y.len() != n {
+            bail!("matvec: x[{}] @ W[{k}, {n}] -> y[{}]", x.len(), y.len());
+        }
+        match self {
+            Linear::Dense(t) => {
+                let base = l * k * n;
+                for (row, &xv) in x.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &t.data[base + row * n..base + (row + 1) * n];
+                    for (yj, &w) in y.iter_mut().zip(wrow) {
+                        *yj += xv * w;
+                    }
+                }
+                Ok(())
+            }
+            Linear::Packed(p) => {
+                let dec = p.q.block_decode_cached(&p.tables)?;
+                if workers > 1 && k * n >= PAR_MACS {
+                    return matvec_packed_par(&dec, l, x, y, workers);
+                }
+                scratch.resize(n, 0.0);
+                matvec_packed_cols(&dec, l, x, y, 0, n, scratch);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The fused inner loop over an output-column range `[c0, c1)`:
+/// `y[0..c1-c0] += x @ W[l, :, c0..c1]`, decoding nibbles and block
+/// scales in place. `scale_row` is `c1 - c0` long — each worker decodes
+/// only its own chunk's scales. `c0` and `c1` must be even (nibble pairs
+/// share a byte).
+fn matvec_packed_cols(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    y: &mut [f32],
+    c0: usize,
+    c1: usize,
+    scale_row: &mut [f32],
+) {
+    debug_assert!(c0 % 2 == 0 && c1 % 2 == 0, "column range must be nibble-aligned");
+    let block = dec.block();
+    for kb in 0..dec.block_rows() {
+        dec.scale_range_into(l, kb, c0, c1, scale_row);
+        for r in 0..block {
+            let row = kb * block + r;
+            let xv = x[row];
+            if xv == 0.0 {
+                continue;
+            }
+            let bytes = &dec.code_row(l, row)[c0 / 2..c1 / 2];
+            for (j2, &b) in bytes.iter().enumerate() {
+                let j = 2 * j2;
+                y[j] += xv * dec.elem(b & 0x0F) * scale_row[j];
+                y[j + 1] += xv * dec.elem(b >> 4) * scale_row[j + 1];
+            }
+        }
+    }
+}
+
+/// Column-parallel fused matvec: output columns are split into
+/// nibble-aligned ranges, one worker per range; each column is still
+/// accumulated sequentially in row order, so the result is bitwise
+/// identical to the scalar path.
+fn matvec_packed_par(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    y: &mut [f32],
+    workers: usize,
+) -> Result<()> {
+    let n = dec.n();
+    let chunk = (n.div_ceil(workers) + 1) & !1;
+    let ranges: Vec<(usize, usize)> = (0..n)
+        .step_by(chunk.max(2))
+        .map(|c0| (c0, (c0 + chunk.max(2)).min(n)))
+        .collect();
+    let parts = threads::par_map(ranges.clone(), workers, |(c0, c1)| {
+        let mut part = vec![0.0f32; c1 - c0];
+        let mut scale_row = vec![0.0f32; c1 - c0];
+        matvec_packed_cols(dec, l, x, &mut part, c0, c1, &mut scale_row);
+        part
+    });
+    for ((c0, c1), part) in ranges.into_iter().zip(parts) {
+        for (j, v) in (c0..c1).zip(part) {
+            y[j] += v;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::codec::{codec_for, rtn_decisions, FormatKind};
+    use crate::util::rng::Rng;
+
+    fn rand_w(shape: &[usize], seed: u64, std: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, std);
+        t
+    }
+
+    fn rand_x(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    /// reference: dense matvec over the dequantized tensor
+    fn reference(w: &Tensor, l: usize, x: &[f32]) -> Vec<f32> {
+        let (k, n) = (w.shape[w.rank() - 2], w.shape[w.rank() - 1]);
+        let base = l * k * n;
+        let mut y = vec![0.0f32; n];
+        for row in 0..k {
+            for col in 0..n {
+                y[col] += x[row] * w.data[base + row * n + col];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn fused_matvec_matches_dequantized_dense() {
+        for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+            let w = rand_w(&[2, 64, 32], 3, 0.1);
+            let c = codec_for(kind);
+            let p = c.prepare(&w);
+            let q = c.encode(&w, &p, &rtn_decisions(&p));
+            let deq = q.dequantize().unwrap();
+            let lin = Linear::from(q);
+            assert!(lin.is_packed());
+            assert_eq!((lin.k(), lin.n()), (64, 32));
+            let x = rand_x(64, 7);
+            let mut scratch = Vec::new();
+            for l in 0..2 {
+                let mut y = vec![0.0f32; 32];
+                lin.matvec(l, &x, &mut y, &mut scratch, 1).unwrap();
+                let expect = reference(&deq, l, &x);
+                for (a, b) in y.iter().zip(&expect) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * b.abs().max(1e-3),
+                        "{}: {a} vs {b}",
+                        c.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matvec_matches_reference() {
+        let w = rand_w(&[3, 16, 8], 5, 0.2);
+        let lin = Linear::Dense(w.clone());
+        assert!(!lin.is_packed());
+        assert_eq!(lin.payload_bytes(), 0);
+        let x = rand_x(16, 9);
+        let mut scratch = Vec::new();
+        for l in 0..3 {
+            let mut y = vec![0.0f32; 8];
+            lin.matvec(l, &x, &mut y, &mut scratch, 1).unwrap();
+            let expect = reference(&w, l, &x);
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-4), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_columns_bitwise_match_scalar() {
+        // big enough to cross PAR_MACS with default workers; compare the
+        // forced-parallel path against the forced-scalar path bit-for-bit
+        let w = rand_w(&[1, 128, 64], 11, 0.1);
+        let c = codec_for(FormatKind::Nvfp4);
+        let p = c.prepare(&w);
+        let q = c.encode(&w, &p, &rtn_decisions(&p));
+        let dec = q.block_decode().unwrap();
+        let x = rand_x(128, 13);
+        let mut scalar = vec![0.0f32; 64];
+        let mut scale_row = vec![0.0f32; 64];
+        matvec_packed_cols(&dec, 0, &x, &mut scalar, 0, 64, &mut scale_row);
+        let mut par = vec![0.0f32; 64];
+        matvec_packed_par(&dec, 0, &x, &mut par, 4).unwrap();
+        assert_eq!(scalar, par, "column-parallel result must be bitwise identical");
+
+        // the public matvec path: above PAR_MACS, workers>1 takes the
+        // parallel branch and must still match workers=1 bit-for-bit
+        let w = rand_w(&[1, 512, 512], 12, 0.1);
+        let p = c.prepare(&w);
+        let lin = Linear::from(c.encode(&w, &p, &rtn_decisions(&p)));
+        let x = rand_x(512, 17);
+        let mut scratch = Vec::new();
+        let mut a = vec![0.0f32; 512];
+        lin.matvec(0, &x, &mut a, &mut scratch, 1).unwrap();
+        let mut b = vec![0.0f32; 512];
+        lin.matvec(0, &x, &mut b, &mut scratch, 4).unwrap();
+        assert_eq!(a, b, "auto-parallel matvec diverged from scalar");
+    }
+
+    #[test]
+    fn matvec_rejects_bad_shapes() {
+        let w = rand_w(&[16, 8], 1, 0.1);
+        let lin = Linear::Dense(w);
+        let mut scratch = Vec::new();
+        let mut y = vec![0.0f32; 8];
+        assert!(lin.matvec(0, &[0.0; 4], &mut y, &mut scratch, 1).is_err());
+        let mut short = vec![0.0f32; 4];
+        assert!(lin.matvec(0, &[0.0; 16], &mut short, &mut scratch, 1).is_err());
+    }
+}

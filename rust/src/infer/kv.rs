@@ -1,0 +1,319 @@
+//! Paged key/value cache for the native inference backend.
+//!
+//! The cache turns batched greedy decode from O(T²) per emitted token
+//! (recompute attention over the whole window every step) into O(T): a
+//! slot's keys and values are computed once, stored, and only the newest
+//! token runs through the linear stack each step.
+//!
+//! Two pieces:
+//!
+//! * [`KvPool`] — the shared page budget. Pages are fixed-size boxed
+//!   float buffers; freed pages go to a free list and are handed back out
+//!   before anything new is allocated, so steady-state serving does no
+//!   allocation. `take` fails once `max_pages` buffers are outstanding —
+//!   callers (the native backend) fall back to uncached compute rather
+//!   than grow without bound.
+//! * [`KvSeq`] — one slot's cache: a queue of pages it exclusively owns,
+//!   holding `[n_layers, 2, d_model]` floats per cached token (keys are
+//!   stored *post-RoPE*, values raw). Because each sequence owns its
+//!   pages outright, a batch of slots can be processed fully in parallel
+//!   with no locking on the hot path; the pool mutex is touched only at
+//!   page-boundary alloc/free.
+//!
+//! Slot lifecycle (allocate on admit, free on completion/disconnect) is
+//! driven by the scheduler through `StepBackend::release` — see
+//! `serve::scheduler` and [`super::NativeBackend`].
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+/// Typed error returned by [`KvPool::take`] when the page budget is
+/// spent. The native backend downcasts to this (`downcast_ref`, which
+/// survives any `context` wrapping) to pick the uncached-compute
+/// fallback instead of failing the request.
+#[derive(Clone, Copy, Debug)]
+pub struct KvExhausted {
+    /// pages outstanding when the take failed
+    pub outstanding: usize,
+}
+
+impl std::fmt::Display for KvExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv pool exhausted ({} pages outstanding)", self.outstanding)
+    }
+}
+
+impl std::error::Error for KvExhausted {}
+
+/// Geometry of one cached token slot: how many floats a token occupies
+/// and how tokens tile into pages.
+#[derive(Clone, Copy, Debug)]
+pub struct KvLayout {
+    /// decoder layers
+    pub n_layers: usize,
+    /// model width (keys and values are `[d_model]` each per layer)
+    pub d_model: usize,
+    /// cached tokens per page
+    pub page_tokens: usize,
+}
+
+impl KvLayout {
+    /// Floats one cached token occupies (`n_layers * 2 * d_model`).
+    pub fn token_floats(&self) -> usize {
+        self.n_layers * 2 * self.d_model
+    }
+
+    /// Floats per page.
+    pub fn page_floats(&self) -> usize {
+        self.page_tokens * self.token_floats()
+    }
+}
+
+/// Bounded page allocator shared by every slot of a native backend.
+///
+/// Freed pages are recycled (LIFO) before new ones are allocated, and the
+/// total outstanding count never exceeds `max_pages`.
+#[derive(Debug)]
+pub struct KvPool {
+    page_floats: usize,
+    max_pages: usize,
+    outstanding: usize,
+    free: Vec<Box<[f32]>>,
+}
+
+impl KvPool {
+    /// A pool handing out pages of `page_floats` floats, at most
+    /// `max_pages` outstanding at once.
+    pub fn new(page_floats: usize, max_pages: usize) -> KvPool {
+        KvPool { page_floats, max_pages, outstanding: 0, free: Vec::new() }
+    }
+
+    /// An effectively unbounded pool (scratch compute, tests).
+    pub fn unbounded(page_floats: usize) -> KvPool {
+        KvPool::new(page_floats, usize::MAX)
+    }
+
+    /// Take one page, reusing a freed buffer when available. Errors once
+    /// the outstanding count reaches the pool cap.
+    pub fn take(&mut self) -> Result<Box<[f32]>> {
+        if let Some(mut page) = self.free.pop() {
+            page.fill(0.0);
+            self.outstanding += 1;
+            return Ok(page);
+        }
+        if self.outstanding >= self.max_pages {
+            return Err(anyhow::Error::new(KvExhausted { outstanding: self.outstanding }));
+        }
+        self.outstanding += 1;
+        Ok(vec![0.0f32; self.page_floats].into_boxed_slice())
+    }
+
+    /// Return a page to the free list.
+    pub fn put(&mut self, page: Box<[f32]>) {
+        debug_assert_eq!(page.len(), self.page_floats, "foreign page returned");
+        debug_assert!(self.outstanding > 0, "put without matching take");
+        self.outstanding = self.outstanding.saturating_sub(1);
+        self.free.push(page);
+    }
+
+    /// Pages currently held by sequences (not in the free list).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Recycled pages waiting to be reused.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// The outstanding-page cap.
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+}
+
+/// One slot's cached keys/values: an append-only queue of owned pages.
+///
+/// Token `t`'s layer-`l` entries live at a fixed offset for the slot's
+/// lifetime, so references handed out by [`Self::k`]/[`Self::v`] stay
+/// valid across appends (pages are never moved, only pushed). The
+/// sequence must be drained back into its pool with [`Self::clear`]
+/// before it is dropped — the backend does this in `release`.
+#[derive(Debug)]
+pub struct KvSeq {
+    layout: KvLayout,
+    pages: VecDeque<Box<[f32]>>,
+    len: usize,
+}
+
+impl KvSeq {
+    /// An empty sequence for `layout`.
+    pub fn new(layout: KvLayout) -> KvSeq {
+        KvSeq { layout, pages: VecDeque::new(), len: 0 }
+    }
+
+    /// Cached tokens.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no tokens are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pages currently held.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Append one token slot (zero-initialized), taking a new page from
+    /// `pool` when the tail page is full. On pool exhaustion the sequence
+    /// is left unchanged and the caller decides the fallback.
+    pub fn push(&mut self, pool: &mut KvPool) -> Result<()> {
+        if self.len % self.layout.page_tokens == 0 {
+            self.pages.push_back(pool.take()?);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Drop every cached token, returning all pages to `pool`.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        for page in self.pages.drain(..) {
+            pool.put(page);
+        }
+        self.len = 0;
+    }
+
+    #[inline]
+    fn offsets(&self, t: usize, layer: usize) -> (usize, usize) {
+        debug_assert!(t < self.len, "token {t} beyond cached {len}", len = self.len);
+        debug_assert!(layer < self.layout.n_layers);
+        let page = t / self.layout.page_tokens;
+        let within = (t % self.layout.page_tokens) * self.layout.token_floats()
+            + layer * 2 * self.layout.d_model;
+        (page, within)
+    }
+
+    /// Cached (post-RoPE) key of token `t` at `layer`.
+    #[inline]
+    pub fn k(&self, t: usize, layer: usize) -> &[f32] {
+        let d = self.layout.d_model;
+        let (page, off) = self.offsets(t, layer);
+        &self.pages[page][off..off + d]
+    }
+
+    /// Cached value of token `t` at `layer`.
+    #[inline]
+    pub fn v(&self, t: usize, layer: usize) -> &[f32] {
+        let d = self.layout.d_model;
+        let (page, off) = self.offsets(t, layer);
+        &self.pages[page][off + d..off + 2 * d]
+    }
+
+    /// Mutable key/value buffers of token `t` at `layer` (for the write
+    /// right after the projection matvecs).
+    #[inline]
+    pub fn kv_mut(&mut self, t: usize, layer: usize) -> (&mut [f32], &mut [f32]) {
+        let d = self.layout.d_model;
+        let (page, off) = self.offsets(t, layer);
+        let slot = &mut self.pages[page][off..off + 2 * d];
+        slot.split_at_mut(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { n_layers: 2, d_model: 8, page_tokens: 4 }
+    }
+
+    #[test]
+    fn layout_sizes() {
+        let l = layout();
+        assert_eq!(l.token_floats(), 32);
+        assert_eq!(l.page_floats(), 128);
+    }
+
+    #[test]
+    fn push_write_read_roundtrip_across_pages() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l.page_floats());
+        let mut seq = KvSeq::new(l);
+        // 10 tokens spans 3 pages (4 tokens each)
+        for t in 0..10 {
+            seq.push(&mut pool).unwrap();
+            for layer in 0..l.n_layers {
+                let (k, v) = seq.kv_mut(t, layer);
+                for (i, x) in k.iter_mut().enumerate() {
+                    *x = (t * 100 + layer * 10 + i) as f32;
+                }
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x = -((t * 100 + layer * 10 + i) as f32);
+                }
+            }
+        }
+        assert_eq!(seq.len(), 10);
+        assert_eq!(seq.n_pages(), 3);
+        assert_eq!(pool.outstanding(), 3);
+        for t in 0..10 {
+            for layer in 0..l.n_layers {
+                let k = seq.k(t, layer);
+                let v = seq.v(t, layer);
+                for i in 0..l.d_model {
+                    assert_eq!(k[i], (t * 100 + layer * 10 + i) as f32);
+                    assert_eq!(v[i], -((t * 100 + layer * 10 + i) as f32));
+                }
+            }
+        }
+        seq.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.free_pages(), 3);
+    }
+
+    #[test]
+    fn pool_reuses_freed_pages() {
+        let l = layout();
+        let mut pool = KvPool::new(l.page_floats(), 4);
+        let page = pool.take().unwrap();
+        let ptr = page.as_ptr();
+        pool.put(page);
+        assert_eq!(pool.outstanding(), 0);
+        // the very same buffer comes back (LIFO reuse), zeroed
+        let page = pool.take().unwrap();
+        assert_eq!(page.as_ptr(), ptr);
+        assert!(page.iter().all(|&x| x == 0.0));
+        pool.put(page);
+    }
+
+    #[test]
+    fn pool_capacity_rejection_and_recovery() {
+        let l = layout();
+        let mut pool = KvPool::new(l.page_floats(), 2);
+        let mut a = KvSeq::new(l);
+        // 2 pages worth of tokens fit; the 9th token needs a 3rd page
+        for _ in 0..8 {
+            a.push(&mut pool).unwrap();
+        }
+        assert_eq!(pool.outstanding(), 2);
+        let err = a.push(&mut pool).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // the typed error survives downcasting (the backend's fallback key)
+        let typed = err.downcast_ref::<KvExhausted>().expect("typed exhaustion error");
+        assert_eq!(typed.outstanding, 2);
+        // a failed push leaves the sequence usable and consistent
+        assert_eq!(a.len(), 8);
+        // freeing makes capacity available again
+        a.clear(&mut pool);
+        let mut b = KvSeq::new(l);
+        for _ in 0..8 {
+            b.push(&mut pool).unwrap();
+        }
+        b.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+}

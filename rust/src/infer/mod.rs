@@ -1,0 +1,687 @@
+//! Native quantized inference backend: the full transformer forward pass
+//! in pure rust, computing directly on packed [`QuantTensor`] weights.
+//!
+//! This is the serving path that needs **no artifacts and no XLA
+//! backend**: where `serve::RuntimeBackend` executes AOT-lowered graphs
+//! through PJRT, [`NativeBackend`] runs the same Llama-style decoder
+//! (RoPE + RMSNorm + SwiGLU, mirroring `python/compile/model.py`) with
+//! fused nibble-decode GEMM kernels ([`kernels`]) that dequantize
+//! NVFP4/MXFP4 blocks on the fly inside the inner loop — the weights
+//! stay in the ~4.5-bit packed numerical space end to end, the
+//! discipline FAAR argues for.
+//!
+//! Decode cost: a paged per-slot KV cache ([`kv`]) makes each batched
+//! decode step O(window) instead of O(window²) — only the newest token
+//! runs through the linear stack; keys (post-RoPE) and values are
+//! appended once and reused. Cached and uncached decode are **bit
+//! identical**: the cached step replays exactly the float ops the
+//! full-window recompute would, so the parity tests assert token
+//! equality, not closeness.
+//!
+//! Module map:
+//!
+//! * [`preset`] — rust-side mirror of `configs.py` (stand up a model with
+//!   no `artifacts/` directory) plus pure-rust RTN quantization
+//! * [`kernels`] — fused dequant-GEMM over [`formats::codec::BlockDecode`]
+//! * [`ops`] — RMSNorm / RoPE / softmax / SiLU / activation fake-quant
+//! * [`kv`] — the paged KV pool and per-slot sequences
+//!
+//! See DESIGN.md §9 for the architecture, the slot lifecycle, and the
+//! native-vs-XLA parity/tolerance story.
+//!
+//! [`QuantTensor`]: crate::formats::codec::QuantTensor
+//! [`formats::codec::BlockDecode`]: crate::formats::codec::BlockDecode
+
+pub mod kernels;
+pub mod kv;
+pub mod ops;
+pub mod preset;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use kernels::Linear;
+pub use kv::{KvLayout, KvPool, KvSeq};
+pub use preset::{native_manifest, quantize_store};
+
+use crate::runtime::ModelConfig;
+use crate::serve::batch::{DecodeSlot, StepBackend};
+use crate::tensor::Tensor;
+use crate::train::QuantParamStore;
+use crate::util::threads;
+
+/// Reusable per-decode buffers: one per in-flight forward, so the hot
+/// loop allocates nothing per token.
+struct Scratch {
+    /// residual stream `[d]`
+    x: Vec<f32>,
+    /// normed linear input `[d]`
+    a: Vec<f32>,
+    /// query / key / value projections `[d]`
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention mix `[d]`
+    attn: Vec<f32>,
+    /// projection accumulator `[d]`
+    proj: Vec<f32>,
+    /// SwiGLU gate / up `[mlp_hidden]`
+    g: Vec<f32>,
+    u: Vec<f32>,
+    /// attention scores `[seq_len]`
+    scores: Vec<f32>,
+    /// decoded block-scale row for the fused kernels
+    scale_row: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &ModelConfig) -> Scratch {
+        let (d, h) = (cfg.d_model, cfg.mlp_hidden);
+        Scratch {
+            x: vec![0.0; d],
+            a: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d],
+            g: vec![0.0; h],
+            u: vec![0.0; h],
+            scores: vec![0.0; cfg.seq_len],
+            scale_row: Vec::new(),
+        }
+    }
+}
+
+/// The decoder weights in serving form: quantized linear stacks packed
+/// ([`Linear::Packed`]), everything else dense f32, plus precomputed
+/// RoPE tables. Cloning is cheap relative to a dense model — the seven
+/// linear stacks stay packed.
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    cfg: ModelConfig,
+    /// quantize every quantized-linear input per token (the W4A4
+    /// discipline the deployed artifacts use)
+    act_quant: bool,
+    tok_emb: Tensor,
+    lm_head: Linear,
+    attn_norm: Tensor,
+    mlp_norm: Tensor,
+    out_norm: Tensor,
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    w_gate: Linear,
+    w_up: Linear,
+    w_down: Linear,
+    /// RoPE tables, `[seq_len, head_dim/2]` row-major
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl NativeModel {
+    /// Assemble a model from a quantized store: packed layers are carried
+    /// packed, everything else dense. Every shape is validated against
+    /// `cfg` so a mismatched store fails here, not mid-decode.
+    pub fn new(cfg: &ModelConfig, store: &QuantParamStore, act_quant: bool) -> Result<NativeModel> {
+        if cfg.head_dim * cfg.n_heads != cfg.d_model {
+            bail!("head_dim * n_heads != d_model");
+        }
+        if cfg.head_dim % 2 != 0 {
+            bail!("rope needs an even head_dim");
+        }
+        let (l, d, h, v) = (cfg.n_layers, cfg.d_model, cfg.mlp_hidden, cfg.vocab);
+        let dense = |name: &str, shape: &[usize]| -> Result<Tensor> {
+            let t = store.get(name)?;
+            if t.shape != shape {
+                bail!("weight '{name}': shape {:?} != expected {shape:?}", t.shape);
+            }
+            Ok(t)
+        };
+        let linear = |name: &str, shape: &[usize]| -> Result<Linear> {
+            if let Some(q) = store.packed(name) {
+                if q.shape != shape {
+                    bail!("packed weight '{name}': shape {:?} != expected {shape:?}", q.shape);
+                }
+                Ok(Linear::from(q.clone()))
+            } else {
+                Ok(Linear::Dense(dense(name, shape)?))
+            }
+        };
+        let (cos, sin) = ops::rope_tables(cfg.seq_len, cfg.head_dim);
+        Ok(NativeModel {
+            cfg: cfg.clone(),
+            act_quant,
+            tok_emb: dense("tok_emb", &[v, d])?,
+            lm_head: Linear::Dense(dense("lm_head", &[d, v])?),
+            attn_norm: dense("layers.attn_norm", &[l, d])?,
+            mlp_norm: dense("layers.mlp_norm", &[l, d])?,
+            out_norm: dense("out_norm", &[d])?,
+            wq: linear("layers.wq", &[l, d, d])?,
+            wk: linear("layers.wk", &[l, d, d])?,
+            wv: linear("layers.wv", &[l, d, d])?,
+            wo: linear("layers.wo", &[l, d, d])?,
+            w_gate: linear("layers.w_gate", &[l, d, h])?,
+            w_up: linear("layers.w_up", &[l, d, h])?,
+            w_down: linear("layers.w_down", &[l, h, d])?,
+            cos,
+            sin,
+        })
+    }
+
+    /// The model configuration.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// True when quantized-linear inputs are fake-quantized per token.
+    pub fn act_quant(&self) -> bool {
+        self.act_quant
+    }
+
+    /// Linear stacks held packed (0–7).
+    pub fn n_packed(&self) -> usize {
+        self.linears().iter().filter(|l| l.is_packed()).count()
+    }
+
+    /// Bytes of packed payload across the linear stacks.
+    pub fn packed_payload_bytes(&self) -> usize {
+        self.linears().iter().map(|l| l.payload_bytes()).sum()
+    }
+
+    fn linears(&self) -> [&Linear; 7] {
+        [&self.wq, &self.wk, &self.wv, &self.wo, &self.w_gate, &self.w_up, &self.w_down]
+    }
+
+    /// The KV layout one cached token occupies for this model.
+    pub fn kv_layout(&self, page_tokens: usize) -> KvLayout {
+        KvLayout {
+            n_layers: self.cfg.n_layers,
+            d_model: self.cfg.d_model,
+            page_tokens: page_tokens.max(1),
+        }
+    }
+
+    /// Full-window forward: run every token of `tokens` through the
+    /// decoder (with a scratch cache) and return the **last position's**
+    /// logits — the reference the cached incremental path must match
+    /// bit-for-bit. `tokens.len()` must be in `[1, seq_len]`.
+    pub fn logits_window(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.logits_window_par(tokens, threads::default_workers())
+    }
+
+    /// [`Self::logits_window`] with an explicit column-parallelism
+    /// budget for the fused kernels (1 when the caller is already inside
+    /// a batch fan-out — thread pools must not nest).
+    pub fn logits_window_par(&self, tokens: &[i32], col_workers: usize) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("empty decode window");
+        }
+        if tokens.len() > self.cfg.seq_len {
+            bail!("window of {} tokens exceeds seq_len {}", tokens.len(), self.cfg.seq_len);
+        }
+        let layout = self.kv_layout(32);
+        let pool = Mutex::new(KvPool::unbounded(layout.page_floats()));
+        let mut seq = KvSeq::new(layout);
+        let mut s = Scratch::new(&self.cfg);
+        let mut out = None;
+        for (i, &tok) in tokens.iter().enumerate() {
+            let last = i + 1 == tokens.len();
+            out = self.feed(&mut seq, &pool, tok, i, last, &mut s, col_workers)?;
+        }
+        out.ok_or_else(|| anyhow!("empty decode window"))
+    }
+
+    /// Run one token through the decoder at window index `idx`, appending
+    /// its keys/values to `seq`, and return the logits row when
+    /// `want_logits` (the last window position). `col_workers` bounds the
+    /// fused kernels' column parallelism (1 = scalar).
+    fn feed(
+        &self,
+        seq: &mut KvSeq,
+        pool: &Mutex<KvPool>,
+        token: i32,
+        idx: usize,
+        want_logits: bool,
+        s: &mut Scratch,
+        col_workers: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, hd, heads) = (cfg.d_model, cfg.head_dim, cfg.n_heads);
+        if token < 0 || (token as usize) >= cfg.vocab {
+            bail!("token id {token} outside [0, {})", cfg.vocab);
+        }
+        if idx >= cfg.seq_len {
+            bail!("window index {idx} beyond seq_len {}", cfg.seq_len);
+        }
+        {
+            let mut pool = pool.lock().expect("kv pool poisoned");
+            seq.push(&mut pool)?;
+        }
+        let t_new = seq.len() - 1;
+        debug_assert_eq!(t_new, idx, "cache length out of sync with window index");
+
+        let tok = token as usize;
+        s.x.copy_from_slice(&self.tok_emb.data[tok * d..(tok + 1) * d]);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+
+        for l in 0..cfg.n_layers {
+            // ---- attention ------------------------------------------------
+            ops::rmsnorm_into(&s.x, &self.attn_norm.data[l * d..(l + 1) * d], &mut s.a);
+            if self.act_quant {
+                ops::act_fake_quant(&mut s.a);
+            }
+            s.q.fill(0.0);
+            self.wq.matvec(l, &s.a, &mut s.q, &mut s.scale_row, col_workers)?;
+            s.k.fill(0.0);
+            self.wk.matvec(l, &s.a, &mut s.k, &mut s.scale_row, col_workers)?;
+            s.v.fill(0.0);
+            self.wv.matvec(l, &s.a, &mut s.v, &mut s.scale_row, col_workers)?;
+            ops::rope_inplace(&mut s.q, heads, hd, &self.cos, &self.sin, idx);
+            ops::rope_inplace(&mut s.k, heads, hd, &self.cos, &self.sin, idx);
+            {
+                let (ck, cv) = seq.kv_mut(t_new, l);
+                ck.copy_from_slice(&s.k);
+                cv.copy_from_slice(&s.v);
+            }
+            let len = t_new + 1;
+            s.attn.fill(0.0);
+            for h_ in 0..heads {
+                let q_h = &s.q[h_ * hd..(h_ + 1) * hd];
+                let scores = &mut s.scores[..len];
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    *sc = ops::dot(q_h, &seq.k(t, l)[h_ * hd..(h_ + 1) * hd]) * inv_sqrt;
+                }
+                ops::softmax_inplace(scores);
+                let attn_h = &mut s.attn[h_ * hd..(h_ + 1) * hd];
+                for (t, &p) in scores.iter().enumerate() {
+                    let v_h = &seq.v(t, l)[h_ * hd..(h_ + 1) * hd];
+                    for (o, &vv) in attn_h.iter_mut().zip(v_h) {
+                        *o += p * vv;
+                    }
+                }
+            }
+            if self.act_quant {
+                ops::act_fake_quant(&mut s.attn);
+            }
+            s.proj.fill(0.0);
+            self.wo.matvec(l, &s.attn, &mut s.proj, &mut s.scale_row, col_workers)?;
+            for (x, &p) in s.x.iter_mut().zip(&s.proj) {
+                *x += p;
+            }
+
+            // ---- SwiGLU mlp -----------------------------------------------
+            ops::rmsnorm_into(&s.x, &self.mlp_norm.data[l * d..(l + 1) * d], &mut s.a);
+            if self.act_quant {
+                ops::act_fake_quant(&mut s.a);
+            }
+            s.g.fill(0.0);
+            self.w_gate.matvec(l, &s.a, &mut s.g, &mut s.scale_row, col_workers)?;
+            s.u.fill(0.0);
+            self.w_up.matvec(l, &s.a, &mut s.u, &mut s.scale_row, col_workers)?;
+            for (g, &u) in s.g.iter_mut().zip(&s.u) {
+                *g = ops::silu(*g) * u;
+            }
+            if self.act_quant {
+                ops::act_fake_quant(&mut s.g);
+            }
+            s.proj.fill(0.0);
+            self.w_down.matvec(l, &s.g, &mut s.proj, &mut s.scale_row, col_workers)?;
+            for (x, &p) in s.x.iter_mut().zip(&s.proj) {
+                *x += p;
+            }
+        }
+
+        if !want_logits {
+            return Ok(None);
+        }
+        ops::rmsnorm_into(&s.x, &self.out_norm.data, &mut s.a);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        self.lm_head.matvec(0, &s.a, &mut logits, &mut s.scale_row, col_workers)?;
+        Ok(Some(logits))
+    }
+}
+
+/// Serving knobs for the native backend.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeOptions {
+    /// reuse cached keys/values across steps (the O(T) decode path);
+    /// false recomputes the full window every step (the reference path)
+    pub use_cache: bool,
+    /// cached tokens per KV page
+    pub page_tokens: usize,
+    /// KV pool cap, in pages, across all in-flight slots
+    pub max_pages: usize,
+    /// worker threads for the per-slot batch fan-out (0 = auto)
+    pub workers: usize,
+}
+
+impl Default for NativeOptions {
+    fn default() -> NativeOptions {
+        NativeOptions { use_cache: true, page_tokens: 16, max_pages: 4096, workers: 0 }
+    }
+}
+
+/// Per-slot cache entry: the KV pages, the window tokens they represent
+/// (the resync key the `StepBackend` impl on [`NativeBackend`]
+/// re-derives every step), and the slot's reusable forward buffers — so
+/// steady-state decode allocates nothing per token.
+struct SlotCache {
+    kv: KvSeq,
+    history: Vec<i32>,
+    scratch: Scratch,
+}
+
+/// [`StepBackend`] over a [`NativeModel`]: batched greedy decode in pure
+/// rust, with per-slot KV caches shared out of one bounded page pool.
+///
+/// Row `i` of a batched step depends only on slot `i` (each slot's
+/// forward runs independently, fanned out over `par_map`), so batched
+/// output is token-identical to sequential output by construction — the
+/// same invariant the synthetic and XLA backends keep.
+///
+/// Cache coherence is re-derived every step from the slot's visible
+/// window: if the cached token history is a strict prefix of the window,
+/// only the missing suffix is fed (O(1) per decode step); anything else
+/// — a fresh slot, or a window that slid past `seq_len` — rebuilds the
+/// slot's cache from scratch. On pool exhaustion a slot falls back to
+/// uncached full-window compute instead of failing the request. Both
+/// paths produce bit-identical logits.
+pub struct NativeBackend {
+    model: NativeModel,
+    opts: NativeOptions,
+    layout: KvLayout,
+    pool: Mutex<KvPool>,
+    seqs: Mutex<HashMap<u64, SlotCache>>,
+}
+
+impl NativeBackend {
+    /// Wrap a model with a KV pool sized by `opts`.
+    pub fn new(model: NativeModel, opts: NativeOptions) -> NativeBackend {
+        let layout = model.kv_layout(opts.page_tokens);
+        let pool = Mutex::new(KvPool::new(layout.page_floats(), opts.max_pages));
+        NativeBackend { model, opts, layout, pool, seqs: Mutex::new(HashMap::new()) }
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// KV pages currently held by live slots (0 once every request has
+    /// been released — the leak regression tests assert on this).
+    pub fn kv_outstanding(&self) -> usize {
+        self.pool.lock().expect("kv pool poisoned").outstanding()
+    }
+
+    /// Slots with a live cache entry.
+    pub fn cached_slots(&self) -> usize {
+        self.seqs.lock().expect("kv registry poisoned").len()
+    }
+
+    fn workers_for(&self, batch: usize) -> usize {
+        let w = if self.opts.workers > 0 { self.opts.workers } else { threads::default_workers() };
+        w.min(batch).max(1)
+    }
+
+    /// One slot's step: feed whatever suffix of the window the cache is
+    /// missing. Returns the logits row and the (possibly rebuilt) cache
+    /// entry; the entry always comes back so its pages are never lost,
+    /// even on error. `col_workers` is 1 whenever this runs under the
+    /// batch fan-out (thread pools must not nest).
+    fn step_slot(
+        &self,
+        slot: &DecodeSlot,
+        entry: Option<SlotCache>,
+        col_workers: usize,
+    ) -> (Result<Vec<f32>>, Option<SlotCache>) {
+        let want = &slot.buf[..=slot.pos];
+        if !self.opts.use_cache {
+            return (self.model.logits_window_par(want, col_workers), None);
+        }
+        let mut entry = entry.unwrap_or_else(|| SlotCache {
+            kv: KvSeq::new(self.layout),
+            history: Vec::new(),
+            scratch: Scratch::new(&self.model.cfg),
+        });
+        match self.step_cached(want, &mut entry, col_workers) {
+            Ok(row) => (Ok(row), Some(entry)),
+            Err(e) if e.downcast_ref::<kv::KvExhausted>().is_some() => {
+                // free this slot's pages for its neighbours and fall back
+                // to uncached compute — same logits, O(window²) cost
+                self.clear_entry(&mut entry);
+                crate::debug!(
+                    "kv pool exhausted; slot {} falling back to uncached decode",
+                    slot.id
+                );
+                (self.model.logits_window_par(want, col_workers), Some(entry))
+            }
+            Err(e) => {
+                self.clear_entry(&mut entry);
+                (Err(e), Some(entry))
+            }
+        }
+    }
+
+    fn step_cached(
+        &self,
+        want: &[i32],
+        entry: &mut SlotCache,
+        col_workers: usize,
+    ) -> Result<Vec<f32>> {
+        let cached = entry.history.len();
+        let prefix_ok = cached < want.len()
+            && cached == entry.kv.len()
+            && want[..cached] == entry.history[..];
+        if !prefix_ok {
+            self.clear_entry(entry);
+        }
+        let start = entry.history.len();
+        let mut out = None;
+        for i in start..want.len() {
+            let last = i + 1 == want.len();
+            out = self.model.feed(
+                &mut entry.kv,
+                &self.pool,
+                want[i],
+                i,
+                last,
+                &mut entry.scratch,
+                col_workers,
+            )?;
+            entry.history.push(want[i]);
+        }
+        out.ok_or_else(|| anyhow!("empty decode window"))
+    }
+
+    fn clear_entry(&self, entry: &mut SlotCache) {
+        entry.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
+        entry.history.clear();
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.cfg.seq_len
+    }
+
+    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        if slots.is_empty() {
+            return Ok(vec![]);
+        }
+        // take each slot's cache entry out of the shared map so the batch
+        // fans out without holding any lock on the hot path (entries own
+        // their pages outright)
+        let entries: Vec<Option<SlotCache>> = if self.opts.use_cache {
+            let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+            slots.iter().map(|s| seqs.remove(&s.id)).collect()
+        } else {
+            slots.iter().map(|_| None).collect()
+        };
+        // parallelism lives on exactly one level: across slots when the
+        // batch has several, inside the kernels (column-parallel) when it
+        // is a single slot — never both, so worker pools don't nest
+        let col_workers = if slots.len() == 1 { threads::default_workers() } else { 1 };
+        let jobs: Vec<(usize, Option<SlotCache>)> = entries.into_iter().enumerate().collect();
+        let results = threads::par_map(jobs, self.workers_for(slots.len()), |(i, entry)| {
+            let slot = &slots[i];
+            if slot.done() {
+                // decode_step discards finished slots' rows without
+                // reading them — skip the forward (and the cache churn a
+                // non-growing window would cause) instead of recomputing
+                return (Ok(Vec::new()), entry);
+            }
+            self.step_slot(slot, entry, col_workers)
+        });
+        // reinsert every returned entry before surfacing any error, so a
+        // failed step never strands pages outside the registry
+        let mut rows = Vec::with_capacity(slots.len());
+        let mut first_err = None;
+        {
+            let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+            for ((res, entry), slot) in results.into_iter().zip(slots) {
+                if let Some(e) = entry {
+                    seqs.insert(slot.id, e);
+                }
+                match res {
+                    Ok(row) => rows.push(row),
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        rows.push(vec![]);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(rows),
+        }
+    }
+
+    fn release(&self, slot: &DecodeSlot) {
+        let entry = self.seqs.lock().expect("kv registry poisoned").remove(&slot.id);
+        if let Some(mut e) = entry {
+            e.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batch::{decode_step, generate_greedy};
+    use crate::train::ParamStore;
+
+    fn nano_backend(use_cache: bool) -> NativeBackend {
+        let m = preset::native_manifest("nano").unwrap();
+        let fp = ParamStore::init(&m, 42);
+        let store =
+            preset::quantize_store(&m, &fp, crate::formats::codec::FormatKind::Nvfp4).unwrap();
+        let model = NativeModel::new(&m.config, &store, true).unwrap();
+        assert_eq!(model.n_packed(), 7);
+        assert!(model.packed_payload_bytes() > 0);
+        NativeBackend::new(model, NativeOptions { use_cache, ..NativeOptions::default() })
+    }
+
+    #[test]
+    fn cached_decode_matches_uncached_exactly() {
+        let cached = nano_backend(true);
+        let plain = nano_backend(false);
+        for (prompt, n) in [(vec![1, 2, 3], 12usize), (vec![200, 7], 8), (vec![5], 20)] {
+            let a = generate_greedy(&cached, &prompt, n).unwrap();
+            let b = generate_greedy(&plain, &prompt, n).unwrap();
+            assert_eq!(a, b, "cached vs uncached diverged for {prompt:?}");
+            assert_eq!(a.len(), n);
+            assert!(a.iter().all(|&t| t >= 0 && t < 256));
+        }
+        // all pages released once every greedy decode finished
+        assert_eq!(cached.kv_outstanding(), 0);
+        assert_eq!(cached.cached_slots(), 0);
+    }
+
+    #[test]
+    fn batched_decode_matches_sequential() {
+        let backend = nano_backend(true);
+        let prompts: Vec<Vec<i32>> = (0..5).map(|i| vec![i * 17 + 1, i + 2, 40 - i]).collect();
+        // varying budgets: short slots finish early and ride along done
+        // (decode_step keeps them in the batch; their rows are skipped)
+        let budget = |i: usize| 6 + 2 * i;
+        let sequential: Vec<Vec<i32>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| generate_greedy(&backend, p, budget(i)).unwrap())
+            .collect();
+        let mut slots: Vec<DecodeSlot> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| DecodeSlot::new(p, budget(i), backend.seq_len()).unwrap())
+            .collect();
+        while slots.iter().any(|s| !s.done()) {
+            decode_step(&backend, &mut slots).unwrap();
+        }
+        for (slot, expect) in slots.iter().zip(&sequential) {
+            assert_eq!(&slot.out, expect, "batched native decode diverged");
+            backend.release(slot);
+        }
+        assert_eq!(backend.kv_outstanding(), 0);
+    }
+
+    #[test]
+    fn logits_window_deterministic_and_validated() {
+        let backend = nano_backend(true);
+        let model = backend.model();
+        let a = model.logits_window(&[3, 5, 7]).unwrap();
+        let b = model.logits_window(&[3, 5, 7]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 256);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(model.logits_window(&[]).is_err());
+        assert!(model.logits_window(&[999]).is_err());
+        assert!(model.logits_window(&[1; 65]).is_err());
+    }
+
+    #[test]
+    fn pool_exhaustion_falls_back_not_fails() {
+        // a pool too small for even one slot's window: every step falls
+        // back to uncached compute, and output still matches the
+        // reference exactly
+        let m = preset::native_manifest("nano").unwrap();
+        let fp = ParamStore::init(&m, 42);
+        let store =
+            preset::quantize_store(&m, &fp, crate::formats::codec::FormatKind::Nvfp4).unwrap();
+        let model = NativeModel::new(&m.config, &store, true).unwrap();
+        let tiny_pool = NativeBackend::new(
+            model.clone(),
+            NativeOptions { max_pages: 1, page_tokens: 4, ..NativeOptions::default() },
+        );
+        let reference = NativeBackend::new(model, NativeOptions::default());
+        let a = generate_greedy(&tiny_pool, &[9, 8, 7, 6, 5], 10).unwrap();
+        let b = generate_greedy(&reference, &[9, 8, 7, 6, 5], 10).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(tiny_pool.kv_outstanding(), 0);
+    }
+
+    #[test]
+    fn act_quant_changes_logits_but_stays_deterministic() {
+        let m = preset::native_manifest("nano").unwrap();
+        let fp = ParamStore::init(&m, 42);
+        let store =
+            preset::quantize_store(&m, &fp, crate::formats::codec::FormatKind::Nvfp4).unwrap();
+        let w4a4 = NativeModel::new(&m.config, &store, true).unwrap();
+        let w4a16 = NativeModel::new(&m.config, &store, false).unwrap();
+        assert!(w4a4.act_quant());
+        assert!(!w4a16.act_quant());
+        let a = w4a4.logits_window(&[1, 2, 3]).unwrap();
+        let b = w4a16.logits_window(&[1, 2, 3]).unwrap();
+        assert_ne!(a, b, "activation quantization must be live");
+    }
+}

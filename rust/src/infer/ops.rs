@@ -1,0 +1,237 @@
+//! Scalar transformer ops for the native backend, mirroring the JAX
+//! graphs in `python/compile/model.py` op-for-op:
+//!
+//! * [`rmsnorm_into`] — `x * rsqrt(mean(x²) + 1e-5) * g`
+//! * [`rope_tables`] / [`rope_inplace`] — rotate-half RoPE with
+//!   `inv_freq = 10000^(-2i/hd)` per head
+//! * [`softmax_inplace`] — max-subtracted softmax
+//! * [`silu`] — `x * sigmoid(x)` (the SwiGLU gate)
+//! * [`act_fake_quant`] — dynamic NVFP4 activation fake-quant
+//!   (`ref.rtn_fake_quant_act`), computed **per token** — see the module
+//!   note below
+//!
+//! ### Per-token activation scales
+//!
+//! The AOT graphs compute the activation global scale over the whole
+//! `[B, T, F]` tensor (a graph-mode artifact: padding rows past `pos`
+//! leak into the scale-of-scales). Incremental decode sees one token at
+//! a time, so the native backend computes the two-level scale over the
+//! single `[F]` vector instead — the deployable per-token recipe. The
+//! difference only enters through E4M3 rounding of the block scales,
+//! which is why native-vs-XLA parity is a documented tolerance rather
+//! than bit identity (DESIGN.md §9), while native cached-vs-uncached
+//! decode stays bit-exact.
+
+use crate::formats::{e2m1, e4m3};
+
+/// RMSNorm epsilon shared with `model.rmsnorm` (1e-5).
+pub const RMS_EPS: f32 = 1e-5;
+
+/// `out = x * rsqrt(mean(x²) + eps) * g`, elementwise over one token.
+pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len().max(1);
+    let mean_sq = x.iter().map(|&v| v * v).sum::<f32>() / n as f32;
+    let r = 1.0 / (mean_sq + RMS_EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * r * g[i];
+    }
+}
+
+/// Precompute RoPE tables for `seq_len` positions of one head:
+/// `cos[t * hd/2 + i] = cos(t * 10000^(-2i/hd))`, likewise `sin`.
+/// Matches `model.rope_tables`.
+pub fn rope_tables(seq_len: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = Vec::with_capacity(seq_len * half);
+    let mut sin = Vec::with_capacity(seq_len * half);
+    for t in 0..seq_len {
+        for i in 0..half {
+            // inv_freq = 1 / 10000^(2i / hd), computed in f32 like jnp
+            let inv = 1.0f32 / 10000.0f32.powf((2 * i) as f32 / head_dim as f32);
+            let f = t as f32 * inv;
+            cos.push(f.cos());
+            sin.push(f.sin());
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply rotate-half RoPE in place to one token's `[n_heads * head_dim]`
+/// vector, using the position-`idx` rows of the precomputed tables.
+/// Matches `model.apply_rope` (first/second half of each head rotate as
+/// a pair).
+pub fn rope_inplace(
+    x: &mut [f32],
+    n_heads: usize,
+    head_dim: usize,
+    cos: &[f32],
+    sin: &[f32],
+    idx: usize,
+) {
+    let half = head_dim / 2;
+    debug_assert_eq!(x.len(), n_heads * head_dim);
+    let c = &cos[idx * half..(idx + 1) * half];
+    let s = &sin[idx * half..(idx + 1) * half];
+    for h in 0..n_heads {
+        let head = &mut x[h * head_dim..(h + 1) * head_dim];
+        for i in 0..half {
+            let x1 = head[i];
+            let x2 = head[half + i];
+            head[i] = x1 * c[i] - x2 * s[i];
+            head[half + i] = x1 * s[i] + x2 * c[i];
+        }
+    }
+}
+
+/// Max-subtracted softmax in place (all entries finite on the decode
+/// path — no causal mask is needed because the cache only holds
+/// positions `<=` the query).
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in x.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// SwiGLU gate nonlinearity: `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Dot product of two equal-length vectors (f32 accumulation, like the
+/// XLA einsum on the CPU backend).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Dynamic NVFP4 activation fake-quant over one token's feature vector,
+/// in place: blocks of 16 along the feature axis, E4M3 block scales over
+/// a per-token fp32 global scale, E2M1 elements with RTN (ties toward
+/// the lower node) — `ref.rtn_fake_quant_act` restricted to one token.
+///
+/// `x.len()` must be a multiple of 16 (guaranteed for every quantized
+/// linear input: `d_model` and `mlp_hidden` are validated multiples of
+/// the block size).
+pub fn act_fake_quant(x: &mut [f32]) {
+    const BLOCK: usize = 16;
+    debug_assert_eq!(x.len() % BLOCK, 0, "activation dim must tile the block size");
+    let amax_tot = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let s_global = (amax_tot / (e2m1::FP4_MAX * e4m3::E4M3_MAX)).max(1e-30);
+    for block in x.chunks_mut(BLOCK) {
+        let amax_blk = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s_eff = e4m3::roundtrip(amax_blk / e2m1::FP4_MAX / s_global) * s_global;
+        if s_eff <= 0.0 {
+            block.fill(0.0);
+            continue;
+        }
+        for v in block.iter_mut() {
+            let wt = (v.abs() / s_eff.max(1e-30)).min(e2m1::FP4_MAX);
+            let signed = if *v < 0.0 { -wt } else { wt };
+            *v = e2m1::decode(e2m1::encode_rtn(signed)) * s_eff;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let g = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        rmsnorm_into(&x, &g, &mut out);
+        // mean square is 9 → rsqrt ≈ 1/3
+        for (o, v) in out.iter().zip(&x) {
+            assert!((o - v / 3.0).abs() < 1e-3, "{o} vs {v}");
+        }
+        // gain vector scales per element
+        let g2 = vec![2.0f32, 1.0, 0.5, 0.0];
+        rmsnorm_into(&x, &g2, &mut out);
+        assert_eq!(out[3], 0.0);
+        assert!((out[0] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let (cos, sin) = rope_tables(4, 8);
+        let orig: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut x = orig.clone();
+        rope_inplace(&mut x, 2, 8, &cos, &sin, 0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // nonzero positions rotate (norm preserved per pair)
+        let mut y = orig.clone();
+        rope_inplace(&mut y, 2, 8, &cos, &sin, 3);
+        assert_ne!(y, orig);
+        for h in 0..2 {
+            for i in 0..4 {
+                let (a1, a2) = (orig[h * 8 + i], orig[h * 8 + 4 + i]);
+                let (b1, b2) = (y[h * 8 + i], y[h * 8 + 4 + i]);
+                let na = a1 * a1 + a2 * a2;
+                let nb = b1 * b1 + b2 * b2;
+                assert!((na - nb).abs() < 1e-3 * na.max(1.0), "{na} vs {nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        // large magnitudes stay finite (max subtraction)
+        let mut y = vec![1000.0f32, 999.0];
+        softmax_inplace(&mut y);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(y[0] > y[1]);
+    }
+
+    #[test]
+    fn silu_shape() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0) > -1e-3 && silu(-10.0) < 0.0);
+    }
+
+    #[test]
+    fn act_quant_bounded_error_and_signs() {
+        let mut x: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) / 5.0).collect();
+        let orig = x.clone();
+        act_fake_quant(&mut x);
+        for (q, o) in x.iter().zip(&orig) {
+            // worst-case half-gap at the top of the grid ≈ amax/6 ≈ 0.53,
+            // plus E4M3 scale rounding slack
+            assert!((q - o).abs() <= 0.6, "{q} vs {o}");
+            // sign is preserved (magnitude-only quantization)
+            assert!(q * o >= 0.0, "sign flip: {q} vs {o}");
+        }
+        // deterministic: same input, same output
+        let mut again = orig.clone();
+        act_fake_quant(&mut again);
+        assert_eq!(again, x);
+        // all-zero token stays zero
+        let mut z = vec![0.0f32; 16];
+        act_fake_quant(&mut z);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,238 @@
+//! Native model presets: the rust-side mirror of
+//! `python/compile/configs.py`, so a model can be stood up — weights
+//! initialized, quantized, and served — on a machine with **no
+//! `artifacts/` directory and no XLA backend at all**.
+//!
+//! The weight layout (names, shapes, init specs, quantized flags, and
+//! crucially the *order*, which seeds the per-weight init RNG) must stay
+//! byte-identical to `configs.weight_specs`; the artifact-gated parity
+//! test in `tests/integration_serve.rs` cross-checks the two whenever a
+//! real manifest is present.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::formats::codec::{codec_for, rtn_decisions, FormatKind, QuantTensor};
+use crate::runtime::{manifest::Init, Manifest, ModelConfig, QLinear, WeightSpec};
+use crate::train::{ParamStore, QuantParamStore};
+use crate::util::threads::{self, par_map};
+
+/// Round `x` up to a multiple of `m` (mlp sizing, mirrors configs.py).
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Build a [`ModelConfig`] with the derived fields (`head_dim`,
+/// `mlp_hidden`) computed the way `configs.ModelConfig` computes them.
+pub fn native_config(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    seq_len: usize,
+) -> Result<ModelConfig> {
+    if n_heads == 0 || d_model % n_heads != 0 {
+        bail!("d_model {d_model} not divisible by n_heads {n_heads}");
+    }
+    let head_dim = d_model / n_heads;
+    if head_dim % 2 != 0 {
+        bail!("rope needs an even head_dim, got {head_dim}");
+    }
+    let block = 16;
+    let mlp_hidden = round_up(d_model * 8 / 3, 32);
+    if d_model % block != 0 || mlp_hidden % block != 0 {
+        bail!("dims must tile the NVFP4 block size {block}");
+    }
+    Ok(ModelConfig {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        seq_len,
+        block,
+        mlp_hidden,
+        head_dim,
+        train_batch: 8,
+        eval_batch: 8,
+        stage1_rows: 512,
+        stage2_batch: 8,
+    })
+}
+
+/// The named presets from `configs.CONFIGS` (nano / tiny / small / med).
+pub fn preset_config(preset: &str) -> Result<ModelConfig> {
+    let mut cfg = match preset {
+        "nano" => native_config("nano", 256, 64, 2, 2, 64)?,
+        "tiny" => native_config("tiny", 512, 128, 4, 4, 128)?,
+        "small" => native_config("small", 1024, 192, 6, 6, 128)?,
+        "med" => native_config("med", 4096, 384, 8, 8, 256)?,
+        other => bail!("unknown model preset '{other}' (nano|tiny|small|med)"),
+    };
+    if preset == "nano" {
+        cfg.train_batch = 4;
+        cfg.eval_batch = 4;
+        cfg.stage1_rows = 128;
+        cfg.stage2_batch = 4;
+    }
+    Ok(cfg)
+}
+
+/// The canonical weight layout for a config — same names, shapes, init
+/// specs, quantized flags, and order as `configs.weight_specs`.
+pub fn weight_specs(cfg: &ModelConfig) -> Vec<WeightSpec> {
+    let (l, d, h, v) = (cfg.n_layers, cfg.d_model, cfg.mlp_hidden, cfg.vocab);
+    let spec = |name: &str, shape: Vec<usize>, init: Init, quantized: bool| WeightSpec {
+        name: name.to_string(),
+        shape,
+        init,
+        quantized,
+    };
+    vec![
+        spec("tok_emb", vec![v, d], Init::Normal(0.02), false),
+        spec("layers.attn_norm", vec![l, d], Init::Ones, false),
+        spec("layers.wq", vec![l, d, d], Init::Normal(0.02), true),
+        spec("layers.wk", vec![l, d, d], Init::Normal(0.02), true),
+        spec("layers.wv", vec![l, d, d], Init::Normal(0.02), true),
+        spec("layers.wo", vec![l, d, d], Init::NormalScaled(0.02), true),
+        spec("layers.mlp_norm", vec![l, d], Init::Ones, false),
+        spec("layers.w_gate", vec![l, d, h], Init::Normal(0.02), true),
+        spec("layers.w_up", vec![l, d, h], Init::Normal(0.02), true),
+        spec("layers.w_down", vec![l, h, d], Init::NormalScaled(0.02), true),
+        spec("out_norm", vec![d], Init::Ones, false),
+        spec("lm_head", vec![d, v], Init::Normal(0.02), false),
+    ]
+}
+
+/// Assemble a [`Manifest`] for a config without touching disk. The
+/// artifact table is empty — this manifest drives native (pure-rust)
+/// inference, never the XLA runtime.
+pub fn manifest_from_config(cfg: ModelConfig) -> Manifest {
+    let weights = weight_specs(&cfg);
+    let ql = |name: &str, capture: &str, k: usize, n: usize| QLinear {
+        name: name.to_string(),
+        capture: capture.to_string(),
+        k,
+        n,
+    };
+    let (d, h) = (cfg.d_model, cfg.mlp_hidden);
+    let qlinears = vec![
+        ql("layers.wq", "attn_in", d, d),
+        ql("layers.wk", "attn_in", d, d),
+        ql("layers.wv", "attn_in", d, d),
+        ql("layers.wo", "attn_o_in", d, d),
+        ql("layers.w_gate", "mlp_in", d, h),
+        ql("layers.w_up", "mlp_in", d, h),
+        ql("layers.w_down", "mlp_down_in", h, d),
+    ];
+    let captures =
+        ["attn_in", "attn_o_in", "mlp_in", "mlp_down_in"].map(String::from).to_vec();
+    Manifest { config: cfg, weights, qlinears, captures, artifacts: BTreeMap::new() }
+}
+
+/// One-call preset manifest: `native_manifest("tiny")` is everything the
+/// native serving path needs where the XLA path would load
+/// `artifacts/tiny/manifest.json`.
+pub fn native_manifest(preset: &str) -> Result<Manifest> {
+    Ok(manifest_from_config(preset_config(preset)?))
+}
+
+/// RTN-quantize every `quantized` weight of `fp` through `format`'s
+/// codec, layer stacks in parallel, producing the packed store the
+/// native backend serves from. Pure rust — no artifacts, no calibration.
+pub fn quantize_store(
+    manifest: &Manifest,
+    fp: &ParamStore,
+    format: FormatKind,
+) -> Result<QuantParamStore> {
+    let names: Vec<String> =
+        manifest.weights.iter().filter(|w| w.quantized).map(|w| w.name.clone()).collect();
+    let codec = codec_for(format);
+    let pairs: Vec<Result<(String, QuantTensor)>> =
+        par_map(names, threads::default_workers(), |name| {
+            let w = fp.get(&name)?;
+            let p = codec.prepare(w);
+            let q = codec.encode(w, &p, &rtn_decisions(&p));
+            Ok((name, q))
+        });
+    let mut packed = BTreeMap::new();
+    for pair in pairs {
+        let (name, q) = pair?;
+        packed.insert(name, q);
+    }
+    Ok(QuantParamStore::from_store(fp, packed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_mirror_configs_py() {
+        let nano = preset_config("nano").unwrap();
+        assert_eq!((nano.vocab, nano.d_model, nano.n_layers), (256, 64, 2));
+        assert_eq!((nano.n_heads, nano.seq_len, nano.head_dim), (2, 64, 32));
+        // mlp_hidden = round_up(64 * 8 / 3, 32) = round_up(170, 32)
+        assert_eq!(nano.mlp_hidden, 192);
+        assert_eq!((nano.train_batch, nano.stage1_rows), (4, 128));
+        let tiny = preset_config("tiny").unwrap();
+        assert_eq!(tiny.mlp_hidden, 352); // round_up(341, 32)
+        assert_eq!(tiny.train_batch, 8);
+        let med = preset_config("med").unwrap();
+        assert_eq!((med.d_model, med.seq_len), (384, 256));
+        assert!(preset_config("huge").is_err());
+    }
+
+    #[test]
+    fn manifest_layout_and_init() {
+        let m = native_manifest("nano").unwrap();
+        assert_eq!(m.weights.len(), 12);
+        assert_eq!(m.qlinears.len(), 7);
+        assert_eq!(m.captures.len(), 4);
+        assert!(m.artifacts.is_empty());
+        // order is load-bearing (per-index init seeding)
+        let names: Vec<&str> = m.weights.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names[0], "tok_emb");
+        assert_eq!(names[2], "layers.wq");
+        assert_eq!(names[11], "lm_head");
+        // init works and respects the layout
+        let fp = ParamStore::init(&m, 42);
+        fp.check_layout(&m).unwrap();
+        assert_eq!(fp.get("layers.wq").unwrap().shape, vec![2, 64, 64]);
+        // deterministic
+        let fp2 = ParamStore::init(&m, 42);
+        assert_eq!(
+            fp.get("lm_head").unwrap().data,
+            fp2.get("lm_head").unwrap().data
+        );
+    }
+
+    #[test]
+    fn quantize_store_packs_the_seven_linears() {
+        let m = native_manifest("nano").unwrap();
+        let fp = ParamStore::init(&m, 7);
+        for format in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+            let store = quantize_store(&m, &fp, format).unwrap();
+            assert_eq!(store.n_packed(), 7, "{}", format.name());
+            assert!(store.packed("layers.wq").is_some());
+            assert!(store.packed("tok_emb").is_none());
+            assert!(store.packed_payload_bytes() > 0);
+            // packed is several times smaller than dense fp32
+            assert!(store.packed_payload_bytes() * 4 < store.packed_dense_bytes());
+            // dequant passthrough still serves every weight
+            assert_eq!(store.get("out_norm").unwrap().shape, vec![64]);
+            assert_eq!(store.get("layers.w_down").unwrap().shape, vec![2, 192, 64]);
+        }
+    }
+
+    #[test]
+    fn custom_config_validation() {
+        assert!(native_config("x", 64, 30, 1, 4, 8).is_err()); // 30 % 4 != 0
+        assert!(native_config("x", 64, 48, 1, 16, 8).is_err()); // head_dim 3 is odd
+        let c = native_config("bench", 256, 64, 2, 2, 256).unwrap();
+        assert_eq!(c.seq_len, 256);
+        assert_eq!(c.head_dim, 32);
+    }
+}

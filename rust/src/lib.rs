@@ -20,6 +20,10 @@
 // Index-heavy numeric kernels: iterating several parallel arrays by index
 // is the idiom here, and the hot signatures mirror the AOT artifacts.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Every public item carries rustdoc; CI builds `cargo doc --no-deps` with
+// `-D warnings`, so a missing doc is a build failure there, not just lint
+// noise here.
+#![warn(missing_docs)]
 
 pub mod calib;
 pub mod config;
@@ -27,6 +31,7 @@ pub mod data;
 pub mod eval;
 pub mod formats;
 pub mod gptq;
+pub mod infer;
 pub mod pipeline;
 pub mod quant;
 pub mod report;

@@ -18,12 +18,17 @@ use anyhow::{bail, Result};
 
 use nvfp4_faar::config::PipelineConfig;
 use nvfp4_faar::data::tasks::TaskKind;
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::{
+    native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
+};
 use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
 use nvfp4_faar::runtime::Runtime;
-use nvfp4_faar::serve::ServeOptions;
+use nvfp4_faar::serve::{serve_backend, ServeOptions, SyntheticBackend};
+use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::cli::Args;
-use nvfp4_faar::{info, util};
+use nvfp4_faar::{info, util, warn};
 
 const USAGE: &str = "\
 faar — FAAR/NVFP4 quantization framework (paper reproduction)
@@ -35,11 +40,18 @@ USAGE: faar <subcommand> [options]
   eval      --model tiny --method rtn[,gptq,...] [--tasks]
   tables    --id t1|t3|t4|t5|t6|t7|t8|all [--model tiny] [--models tiny,small]
   figures   --id f2
-  serve     --model tiny [--addr 127.0.0.1:7745] [--method faar+2fa]
+  serve     --model tiny [--addr 127.0.0.1:7745] [--backend native|xla|synthetic]
+            [--method faar+2fa (xla only)] [--format nvfp4|mxfp4|e2m1 (native only)]
             [--workers N] [--max-batch N] [--queue-depth N]
             [--max-tokens-cap N] [--max-line-bytes N]
-            [--read-timeout-ms MS] [--max-conns N]
+            [--read-timeout-ms MS] [--max-conns N] [--kv-pages N]
+            [--no-kv] [--no-act-quant]
   info      --model tiny
+
+The native serve backend runs the quantized transformer in pure rust
+(packed weights, fused dequant kernels, paged KV cache) and needs no
+artifacts/ directory; xla is the AOT/PJRT path; synthetic is the
+deterministic load-testing stand-in.
 
 Common options: --artifacts DIR (default artifacts), --out DIR (default
 results), --seed N, plus every pipeline hyperparameter (see README).";
@@ -54,7 +66,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["tasks", "pack", "help"])?;
+    let args = Args::from_env(&["tasks", "pack", "help", "no-kv", "no-act-quant"])?;
     if args.positional.is_empty() || args.flag("help") {
         println!("{USAGE}");
         return Ok(());
@@ -240,7 +252,6 @@ fn cmd_figures(cfg: PipelineConfig, args: &Args) -> Result<()> {
 
 fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7745");
-    let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
     let max_conns = args.get("max-conns").map(|s| s.parse()).transpose()?;
     let d = ServeOptions::default();
     let opts = ServeOptions {
@@ -251,11 +262,102 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
         read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
         workers: args.usize_or("workers", d.workers)?,
     };
-    let wb = Workbench::open(cfg)?;
-    let outcome = wb.quantize(method)?;
-    info!("model quantized with {}; starting server", method.name());
-    let gen = nvfp4_faar::serve::Generator::new(&wb.rt, outcome.params.clone());
-    gen.serve_with(&addr, max_conns, opts).map(|_| ())
+    let backend = args.str_or("backend", "xla");
+    if backend != "xla" && args.get("method").is_some() {
+        bail!(
+            "--method applies to the xla backend only; the native backend serves \
+             RTN-packed weights (pick the element format with --format)"
+        );
+    }
+    match backend.as_str() {
+        "xla" => {
+            let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
+            let wb = Workbench::open(cfg)?;
+            let outcome = wb.quantize(method)?;
+            info!("model quantized with {}; starting server (xla backend)", method.name());
+            let gen = nvfp4_faar::serve::Generator::new(&wb.rt, outcome.params.clone());
+            gen.serve_with(&addr, max_conns, opts).map(|_| ())
+        }
+        "native" => serve_native(cfg, args, &addr, max_conns, opts),
+        "synthetic" => {
+            let manifest = native_manifest(&cfg.model)?;
+            let backend = SyntheticBackend::new(
+                manifest.config.vocab,
+                manifest.config.seq_len,
+                cfg.seed,
+            );
+            serve_backend(&backend, &addr, max_conns, opts).map(|_| ())
+        }
+        other => bail!("unknown backend '{other}' (native|xla|synthetic)"),
+    }
+}
+
+/// The artifact-free serving path: deterministic (or checkpointed)
+/// weights, pure-rust RTN quantization through the chosen codec, and the
+/// native fused-kernel backend with a paged KV cache.
+fn serve_native(
+    cfg: PipelineConfig,
+    args: &Args,
+    addr: &str,
+    max_conns: Option<usize>,
+    opts: ServeOptions,
+) -> Result<()> {
+    let manifest = native_manifest(&cfg.model)?;
+    let ckpt = Workbench::ckpt_path(&cfg);
+    let fp = if ckpt.exists() {
+        match ParamStore::load(&ckpt).and_then(|p| {
+            p.check_layout(&manifest)?;
+            Ok(p)
+        }) {
+            Ok(p) => {
+                info!("loaded checkpoint {}", ckpt.display());
+                p
+            }
+            Err(e) => {
+                warn!(
+                    "checkpoint {} unusable ({e}); serving deterministic init weights",
+                    ckpt.display()
+                );
+                ParamStore::init(&manifest, cfg.seed)
+            }
+        }
+    } else {
+        info!(
+            "no checkpoint at {}; serving deterministic init weights (seed {})",
+            ckpt.display(),
+            cfg.seed
+        );
+        ParamStore::init(&manifest, cfg.seed)
+    };
+    let format = FormatKind::parse(&args.str_or("format", "nvfp4"))?;
+    let store = quantize_store(&manifest, &fp, format)?;
+    info!(
+        "{} layers RTN-packed as {} ({:.2} MiB vs {:.2} MiB fp32, {:.1}x smaller)",
+        store.n_packed(),
+        format.name(),
+        store.packed_payload_bytes() as f64 / (1 << 20) as f64,
+        store.packed_dense_bytes() as f64 / (1 << 20) as f64,
+        store.packed_dense_bytes() as f64 / store.packed_payload_bytes().max(1) as f64
+    );
+    let model = NativeModel::new(&manifest.config, &store, !args.flag("no-act-quant"))?;
+    let nd = NativeOptions::default();
+    // KV budget: two full windows per micro-batch lane by default, so
+    // retiring slots never starve admissions
+    let pages_per_window = manifest.config.seq_len.div_ceil(nd.page_tokens);
+    let max_pages =
+        args.usize_or("kv-pages", 2 * opts.max_batch.max(1) * pages_per_window)?;
+    let backend = NativeBackend::new(
+        model,
+        NativeOptions { use_cache: !args.flag("no-kv"), max_pages, ..nd },
+    );
+    info!(
+        "native backend ready (model {}, kv {} pages x {} tokens, cache {})",
+        manifest.config.name,
+        max_pages,
+        nd.page_tokens,
+        if args.flag("no-kv") { "off" } else { "on" }
+    );
+    serve_backend(&backend, addr, max_conns, opts).map(|_| ())
 }
 
 fn cmd_info(cfg: PipelineConfig) -> Result<()> {

@@ -26,6 +26,7 @@ use super::faar::{prepare_all, stage1, stage2, FaarState};
 use super::harden::harden_to_params;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Every quantization method the tables compare.
 pub enum Method {
     /// unquantized reference
     Bf16,
@@ -33,6 +34,7 @@ pub enum Method {
     Rtn,
     /// always-lower / always-upper rounding (Table 1)
     Lower,
+    /// always-upper rounding (Table 1)
     Upper,
     /// stochastic rounding trial (Table 1)
     Stochastic(u64),
@@ -55,6 +57,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Canonical method name (table row labels).
     pub fn name(&self) -> String {
         match self {
             Method::Bf16 => "bf16".into(),
@@ -73,6 +76,7 @@ impl Method {
         }
     }
 
+    /// Parse a method name (accepts the aliases the CLI documents).
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "bf16" | "fp" => Method::Bf16,
@@ -123,7 +127,9 @@ impl Method {
 pub struct QuantOutcome {
     /// the quantized model: packed layers + dense passthrough
     pub params: QuantParamStore,
+    /// which method produced it
     pub method: Method,
+    /// quantization wall time
     pub wall_s: f64,
     /// FAAR-family state (for packing / inspection); None for baselines
     pub faar: Option<FaarState>,

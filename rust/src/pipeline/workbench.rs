@@ -15,12 +15,20 @@ use crate::train::{pretrain, ParamStore};
 
 use super::methods::{quantize, Method, QuantOutcome};
 
+/// Shared experiment context: runtime + checkpoint + calibration +
+/// corpora, with per-method quantization memoization.
 pub struct Workbench {
+    /// the artifact runtime
     pub rt: Runtime,
+    /// pipeline hyperparameters
     pub cfg: PipelineConfig,
+    /// the frozen full-precision checkpoint
     pub fp: ParamStore,
+    /// captured calibration activations
     pub calib: Calibration,
+    /// the structured corpus (`synthwiki`)
     pub wiki: Corpus,
+    /// the noisy corpus (`synthc4`)
     pub c4: Corpus,
     /// memoized quantization outcomes per method (tables reuse methods
     /// across metrics; FAAR+2FA costs minutes — never run it twice)
@@ -85,6 +93,7 @@ impl Workbench {
         })
     }
 
+    /// Checkpoint path for (model, seed, steps).
     pub fn ckpt_path(cfg: &PipelineConfig) -> PathBuf {
         PathBuf::from(&cfg.out_dir).join(format!(
             "models/{}_s{}_p{}.fwts",
@@ -92,6 +101,7 @@ impl Workbench {
         ))
     }
 
+    /// Quantize with a method, memoized per method name.
     pub fn quantize(&self, method: Method) -> Result<std::rc::Rc<QuantOutcome>> {
         if let Some(out) = self.cache.borrow().get(&method.name()) {
             return Ok(out.clone());
@@ -101,10 +111,12 @@ impl Workbench {
         Ok(out)
     }
 
+    /// Quantize with explicit config (no memoization).
     pub fn quantize_with(&self, method: Method, cfg: &PipelineConfig) -> Result<QuantOutcome> {
         quantize(&self.rt, &self.fp, method, cfg, Some(&self.calib), Some(&[&self.wiki, &self.c4]))
     }
 
+    /// A corpus by name (`wiki` / `c4`), panicking on unknown names.
     pub fn corpus(&self, name: &str) -> &Corpus {
         match name {
             "synthwiki" | "wiki" => &self.wiki,
@@ -134,6 +146,7 @@ impl Workbench {
         )
     }
 
+    /// Perplexity of a quantized outcome on one corpus.
     pub fn ppl(&self, outcome: &QuantOutcome, corpus: &str) -> Result<f64> {
         eval::perplexity(
             &self.rt,

@@ -11,6 +11,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Elementwise rounding decision rules (Table 1's comparison axis).
 pub enum RoundingScheme {
     /// nearest node, ties → lower (the paper's baseline)
     Rtn,
@@ -23,6 +24,7 @@ pub enum RoundingScheme {
 }
 
 impl RoundingScheme {
+    /// Canonical scheme name (table row labels).
     pub fn name(&self) -> String {
         match self {
             RoundingScheme::Rtn => "rtn".into(),

@@ -13,15 +13,20 @@ use anyhow::Result;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
+/// One paper-style result table: labeled rows of optional values.
 pub struct Table {
+    /// table caption
     pub title: String,
+    /// column headers
     pub columns: Vec<String>,
+    /// labeled rows (`None` renders as an em dash)
     pub rows: Vec<(String, Vec<Option<f64>>)>,
     /// printf precision per value
     pub precision: usize,
 }
 
 impl Table {
+    /// An empty table with the given caption and columns.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -31,11 +36,13 @@ impl Table {
         }
     }
 
+    /// Append a row (width-checked against the columns).
     pub fn row(&mut self, label: &str, values: Vec<Option<f64>>) {
         assert_eq!(values.len(), self.columns.len(), "row width mismatch");
         self.rows.push((label.to_string(), values));
     }
 
+    /// Append a row of plain values.
     pub fn row_f(&mut self, label: &str, values: &[f64]) {
         self.row(label, values.iter().map(|&v| Some(v)).collect());
     }
@@ -73,6 +80,7 @@ impl Table {
         out
     }
 
+    /// CSV rendering (empty cells for `None`).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str("method");
@@ -94,6 +102,7 @@ impl Table {
         out
     }
 
+    /// JSON rendering (title, columns, rows).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("title", Json::str(self.title.as_str())),

@@ -11,8 +11,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Artifact tensor dtype (the runtime marshals only these two).
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit integer.
     I32,
 }
 
@@ -27,13 +30,18 @@ impl DType {
 }
 
 #[derive(Clone, Debug)]
+/// One artifact input/output: name, shape, dtype.
 pub struct TensorSpec {
+    /// tensor name as lowered
     pub name: String,
+    /// static shape
     pub shape: Vec<usize>,
+    /// element type
     pub dtype: DType,
 }
 
 impl TensorSpec {
+    /// Total element count of the spec'd shape.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -48,14 +56,20 @@ impl TensorSpec {
 }
 
 #[derive(Clone, Debug)]
+/// One AOT-lowered artifact: HLO file plus exact positional IO.
 pub struct ArtifactSpec {
+    /// artifact name (the manifest key)
     pub name: String,
+    /// HLO text filename within the artifact directory
     pub file: String,
+    /// positional inputs, in lowering order
     pub inputs: Vec<TensorSpec>,
+    /// positional outputs, in lowering order
     pub outputs: Vec<TensorSpec>,
 }
 
 impl ArtifactSpec {
+    /// Position of a named input, or error.
     pub fn input_index(&self, name: &str) -> Result<usize> {
         self.inputs
             .iter()
@@ -63,6 +77,7 @@ impl ArtifactSpec {
             .ok_or_else(|| anyhow!("artifact {}: no input '{name}'", self.name))
     }
 
+    /// Position of a named output, or error.
     pub fn output_index(&self, name: &str) -> Result<usize> {
         self.outputs
             .iter()
@@ -75,9 +90,11 @@ impl ArtifactSpec {
 /// "normal_scaled:0.02", "ones").
 #[derive(Clone, Debug, PartialEq)]
 pub enum Init {
+    /// N(0, std).
     Normal(f32),
     /// std scaled by 1/sqrt(2 L) — residual-out projections
     NormalScaled(f32),
+    /// All ones (norm gains).
     Ones,
 }
 
@@ -97,50 +114,80 @@ impl Init {
 }
 
 #[derive(Clone, Debug)]
+/// One model weight: name, shape, init recipe, quantization flag.
 pub struct WeightSpec {
+    /// canonical weight name
     pub name: String,
+    /// weight shape (per-layer tensors stacked on a leading L axis)
     pub shape: Vec<usize>,
+    /// initialization recipe
     pub init: Init,
+    /// true for the NVFP4-target linears
     pub quantized: bool,
 }
 
 /// The model configuration as exported by configs.py.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
+    /// preset name
     pub name: String,
+    /// vocabulary size
     pub vocab: usize,
+    /// model width
     pub d_model: usize,
+    /// decoder layers
     pub n_layers: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// context window length
     pub seq_len: usize,
+    /// NVFP4 block size the dims must tile (16)
     pub block: usize,
+    /// SwiGLU hidden width
     pub mlp_hidden: usize,
+    /// per-head width (`d_model / n_heads`)
     pub head_dim: usize,
+    /// pretraining batch size
     pub train_batch: usize,
+    /// evaluation batch size
     pub eval_batch: usize,
+    /// calibration rows per stage-1 layer problem
     pub stage1_rows: usize,
+    /// stage-2 batch size
     pub stage2_batch: usize,
 }
 
 /// One quantized linear: weight stack name + the capture tensor feeding it.
 #[derive(Clone, Debug)]
 pub struct QLinear {
+    /// weight-stack name of this linear
     pub name: String,
+    /// capture tensor feeding this linear
     pub capture: String,
+    /// input (contraction) dimension
     pub k: usize,
+    /// output dimension
     pub n: usize,
 }
 
 #[derive(Clone, Debug)]
+/// The full artifact manifest: model config, weight layout,
+/// quantized-linear map, capture points, and artifact IO specs.
 pub struct Manifest {
+    /// model configuration
     pub config: ModelConfig,
+    /// canonical weight layout, in artifact parameter order
     pub weights: Vec<WeightSpec>,
+    /// the quantized linears and their capture points
     pub qlinears: Vec<QLinear>,
+    /// capture tensor names
     pub captures: Vec<String>,
+    /// artifact specs by name
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -148,6 +195,7 @@ impl Manifest {
         Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse and validate a manifest from JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let v = Json::parse(text)?;
         let c = v.req("config")?;
@@ -248,12 +296,14 @@ impl Manifest {
         Ok(())
     }
 
+    /// Spec of a named artifact, or error.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
     }
 
+    /// Spec of a named weight, or error.
     pub fn weight(&self, name: &str) -> Result<&WeightSpec> {
         self.weights
             .iter()

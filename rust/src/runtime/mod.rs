@@ -26,19 +26,24 @@ pub use manifest::{ArtifactSpec, DType, Manifest, ModelConfig, QLinear, TensorSp
 /// Host value: what flows in and out of artifacts.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// An f32 tensor.
     F32(Tensor),
+    /// An i32 tensor as flat data plus shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Value {
+    /// A rank-0 f32 value.
     pub fn scalar_f32(x: f32) -> Value {
         Value::F32(Tensor::scalar(x))
     }
 
+    /// A rank-0 i32 value.
     pub fn scalar_i32(x: i32) -> Value {
         Value::I32(vec![x], vec![])
     }
 
+    /// The value's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.shape,
@@ -46,6 +51,7 @@ impl Value {
         }
     }
 
+    /// The value's dtype.
     pub fn dtype(&self) -> DType {
         match self {
             Value::F32(_) => DType::F32,
@@ -53,6 +59,7 @@ impl Value {
         }
     }
 
+    /// Borrow as an f32 tensor, or error.
     pub fn as_tensor(&self) -> Result<&Tensor> {
         match self {
             Value::F32(t) => Ok(t),
@@ -60,6 +67,7 @@ impl Value {
         }
     }
 
+    /// Consume into an f32 tensor, or error.
     pub fn into_tensor(self) -> Result<Tensor> {
         match self {
             Value::F32(t) => Ok(t),
@@ -67,6 +75,7 @@ impl Value {
         }
     }
 
+    /// The single f32 element of a scalar value, or error.
     pub fn as_f32_scalar(&self) -> Result<f32> {
         let t = self.as_tensor()?;
         if t.numel() != 1 {
@@ -121,8 +130,11 @@ impl From<Tensor> for Value {
 
 /// Compiled-executable cache + manifest for one artifact directory.
 pub struct Runtime {
+    /// the PJRT client every executable runs on
     pub client: PjRtClient,
+    /// artifact directory (`artifacts/<config>/`)
     pub dir: PathBuf,
+    /// the artifact manifest loaded from that directory
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     /// cumulative executions per artifact (metrics)
@@ -144,6 +156,7 @@ impl Runtime {
         })
     }
 
+    /// The model configuration from the manifest.
     pub fn config(&self) -> &ModelConfig {
         &self.manifest.config
     }

@@ -22,6 +22,7 @@
 //!   exercisable (tests, benches) without artifacts or a PJRT backend.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -46,11 +47,20 @@ pub fn argmax(logits: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
+/// Process-unique slot-identity source (see [`DecodeSlot::id`]).
+static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1);
+
 /// One in-flight greedy decode: the fixed `[T]` token window plus
 /// progress. Construction rejects empty prompts — decoding from a zeroed
 /// buffer is never meaningful output.
 #[derive(Clone, Debug)]
 pub struct DecodeSlot {
+    /// process-unique slot identity, assigned at construction. Stateful
+    /// backends key per-slot resources (the native backend's KV cache
+    /// pages) on it; [`StepBackend::release`] frees them when the slot
+    /// leaves the decode loop. Clones share the identity — a clone is the
+    /// same logical request, not a new one.
+    pub id: u64,
     /// token window, length = model seq_len
     pub buf: Vec<i32>,
     /// index of the last real token in `buf`
@@ -73,6 +83,7 @@ impl DecodeSlot {
         let plen = prompt.len().min(seq_len);
         buf[..plen].copy_from_slice(&prompt[prompt.len() - plen..]);
         Ok(DecodeSlot {
+            id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
             buf,
             // plen >= 1, so this never underflows to a zeroed-buffer decode
             pos: plen - 1,
@@ -97,6 +108,7 @@ impl DecodeSlot {
         }
     }
 
+    /// True once the token budget is spent.
     pub fn done(&self) -> bool {
         self.remaining == 0
     }
@@ -107,11 +119,22 @@ impl DecodeSlot {
 /// to sequential output: **row `i` depends only on slot `i`** — never on
 /// the batch composition.
 pub trait StepBackend {
+    /// Vocabulary size (logits row length).
     fn vocab(&self) -> usize;
+
+    /// Model window length (slot buffer length).
     fn seq_len(&self) -> usize;
 
     /// One logits row (length = vocab) per slot, in slot order.
     fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
+
+    /// Notification that `slot` has permanently left the decode loop —
+    /// completed, cancelled (client disconnect), or failed. Stateful
+    /// backends free per-slot resources keyed on [`DecodeSlot::id`] here
+    /// (the native backend returns the slot's KV pages to the pool);
+    /// stateless backends ignore it. Must be idempotent and safe for
+    /// slots the backend never saw.
+    fn release(&self, _slot: &DecodeSlot) {}
 }
 
 /// One decode step over a micro-batch: logits → NaN-safe argmax →
@@ -139,7 +162,9 @@ pub fn decode_step<B: StepBackend + ?Sized>(backend: &B, slots: &mut [DecodeSlot
 
 /// Sequential greedy decode of one prompt — the reference path the
 /// batched scheduler must match token-for-token. Errors on an empty
-/// prompt (at this layer, not just in the JSON protocol).
+/// prompt (at this layer, not just in the JSON protocol). The slot is
+/// released on every exit path, so stateful backends never leak cache
+/// state to a one-shot generation.
 pub fn generate_greedy<B: StepBackend + ?Sized>(
     backend: &B,
     prompt: &[i32],
@@ -147,8 +172,12 @@ pub fn generate_greedy<B: StepBackend + ?Sized>(
 ) -> Result<Vec<i32>> {
     let mut slot = DecodeSlot::new(prompt, max_tokens, backend.seq_len())?;
     while !slot.done() {
-        decode_step(backend, std::slice::from_mut(&mut slot))?;
+        if let Err(e) = decode_step(backend, std::slice::from_mut(&mut slot)) {
+            backend.release(&slot);
+            return Err(e);
+        }
     }
+    backend.release(&slot);
     Ok(slot.out)
 }
 
@@ -295,6 +324,7 @@ pub struct SyntheticBackend {
 }
 
 impl SyntheticBackend {
+    /// A zero-cost deterministic backend over `vocab` tokens.
     pub fn new(vocab: usize, seq_len: usize, seed: u64) -> SyntheticBackend {
         SyntheticBackend {
             vocab,
@@ -305,6 +335,7 @@ impl SyntheticBackend {
         }
     }
 
+    /// Attach a simulated per-step / per-slot cost model.
     pub fn with_costs(mut self, fixed: Duration, per_slot: Duration) -> SyntheticBackend {
         self.fixed_cost = fixed;
         self.per_slot_cost = per_slot;

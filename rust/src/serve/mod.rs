@@ -60,15 +60,20 @@ use crate::train::QuantParamStore;
 use crate::util::json::Json;
 use crate::util::threads::{spawn_named, WaitGroup};
 
+/// A runtime + quantized model + tokenizer bundle: the XLA-backed
+/// serving entry point (generate once, or serve over TCP).
 pub struct Generator<'r> {
+    /// the PJRT runtime the decode artifacts execute on
     pub rt: &'r Runtime,
     /// quantized layers held packed (~4.5 bits/weight); dequantized
     /// lazily on first forward and memoized for the process lifetime
     pub params: QuantParamStore,
+    /// word-level tokenizer sized to the model vocab
     pub tokenizer: Tokenizer,
 }
 
 impl<'r> Generator<'r> {
+    /// Bundle a runtime and a quantized store (logs the packed footprint).
     pub fn new(rt: &'r Runtime, params: QuantParamStore) -> Generator<'r> {
         let tokenizer = Tokenizer::new(rt.config().vocab);
         let packed = params.packed_payload_bytes();
@@ -217,6 +222,30 @@ fn format_response(result: &std::result::Result<Decoded, ServeError>, tok: &Toke
 // Engine: acceptor + per-connection reader/writer threads around the
 // scheduler. Generic over the backend so tests and benches drive the
 // whole TCP path with `SyntheticBackend`.
+
+/// Bind `addr` and run the serving engine over `backend` — the entry
+/// point for backends that don't go through [`Generator`] (the native
+/// pure-rust backend, the synthetic load backend). Returns the scheduler
+/// counters once `max_conns` connections have drained; never returns
+/// when `max_conns` is `None`.
+pub fn serve_backend<B: StepBackend + ?Sized>(
+    backend: &B,
+    addr: &str,
+    max_conns: Option<usize>,
+    opts: ServeOptions,
+) -> Result<SchedStats> {
+    let listener = TcpListener::bind(addr)?;
+    crate::info!(
+        "serving on {} (vocab {}, seq_len {}, max_batch {}, queue_depth {}, workers {})",
+        listener.local_addr()?,
+        backend.vocab(),
+        backend.seq_len(),
+        opts.max_batch,
+        opts.queue_depth,
+        opts.workers
+    );
+    serve_on(backend, listener, max_conns, opts)
+}
 
 /// Run the serving engine on an already-bound listener. The calling
 /// thread becomes the scheduler (the backend — and with it the PJRT

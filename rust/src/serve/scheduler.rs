@@ -69,11 +69,14 @@ impl Default for ServeOptions {
 /// human-readable. Serialized as `{"error":{"code":...,"message":...}}`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeError {
+    /// machine-matchable error class (`bad_json`, `backend`, ...)
     pub code: &'static str,
+    /// human-readable detail
     pub message: String,
 }
 
 impl ServeError {
+    /// A structured error from a code and message.
     pub fn new(code: &'static str, message: impl Into<String>) -> ServeError {
         ServeError { code, message: message.into() }
     }
@@ -82,17 +85,22 @@ impl ServeError {
 /// A validated request on its way to the scheduler.
 #[derive(Debug)]
 pub struct DecodeRequest {
+    /// connection the request arrived on
     pub conn: u64,
     /// per-connection sequence number (writers restore request order)
     pub seq: u64,
+    /// validated prompt token ids
     pub prompt: Vec<i32>,
+    /// tokens to decode (already clamped to the server cap)
     pub max_tokens: usize,
+    /// when the reader enqueued the request (latency accounting)
     pub enqueued: Instant,
 }
 
 /// A finished decode, ready for the protocol layer to serialize.
 #[derive(Debug)]
 pub struct Decoded {
+    /// the decoded continuation
     pub tokens: Vec<i32>,
     /// request-to-completion wall time
     pub latency_ms: f64,
@@ -103,13 +111,19 @@ pub struct Decoded {
 /// What flows into a per-connection writer thread.
 #[derive(Debug)]
 pub enum WriterMsg {
+    /// One response, tagged with its request sequence number.
     Resp {
+        /// reader-assigned per-connection sequence number
         seq: u64,
+        /// the decode result (or a structured rejection)
         result: Result<Decoded, ServeError>,
     },
     /// The reader is gone: exactly `next_seq` requests were issued on
     /// this connection; the writer exits once all of them are written.
-    Done { next_seq: u64 },
+    Done {
+        /// total requests issued on the connection
+        next_seq: u64,
+    },
 }
 
 /// One registered connection: the writer queue plus a handle to force
@@ -136,19 +150,23 @@ impl Registry {
         self.conns.lock().expect("registry poisoned").insert(conn, ConnEntry { tx, stream });
     }
 
+    /// Remove a connection (its in-flight slots cancel at the next step).
     pub fn unregister(&self, conn: u64) {
         self.conns.lock().expect("registry poisoned").remove(&conn);
         self.cv.notify_all();
     }
 
+    /// True while `conn` is registered.
     pub fn contains(&self, conn: u64) -> bool {
         self.conns.lock().expect("registry poisoned").contains_key(&conn)
     }
 
+    /// Live connection count.
     pub fn len(&self) -> usize {
         self.conns.lock().expect("registry poisoned").len()
     }
 
+    /// True when no connections are live.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -182,14 +200,17 @@ impl Registry {
 /// Counters the engine reports when it exits (tests assert on these).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SchedStats {
+    /// decode steps executed
     pub steps: u64,
     /// steps that carried more than one slot
     pub batched_steps: u64,
+    /// requests answered successfully
     pub completed: u64,
     /// responses dropped because the connection was gone
     pub cancelled: u64,
     /// requests failed by a backend error
     pub errors: u64,
+    /// largest micro-batch seen
     pub peak_batch: usize,
 }
 
@@ -234,10 +255,14 @@ pub fn run<B: StepBackend + ?Sized>(
         }
         stats.peak_batch = stats.peak_batch.max(slots.len());
 
-        // cancel slots whose connection already went away
+        // cancel slots whose connection already went away — including
+        // one admitted and dropped before its first step. The backend is
+        // told on every cancellation so per-slot state (KV cache pages)
+        // is freed instead of leaking for the life of the process.
         for i in (0..slots.len()).rev() {
             if !registry.contains(meta[i].conn) {
-                slots.swap_remove(i);
+                let slot = slots.swap_remove(i);
+                backend.release(&slot);
                 meta.swap_remove(i);
                 stats.cancelled += 1;
             }
@@ -252,16 +277,17 @@ pub fn run<B: StepBackend + ?Sized>(
         }
         if let Err(e) = decode_step(backend, &mut slots) {
             // fail the in-flight requests, keep the server up (each
-            // request lands in exactly one of errors/cancelled)
+            // request lands in exactly one of errors/cancelled); every
+            // failed slot is released so backend state never outlives it
             let err = ServeError::new("backend", format!("decode step failed: {e:#}"));
-            for m in meta.drain(..) {
+            for (slot, m) in slots.drain(..).zip(meta.drain(..)) {
+                backend.release(&slot);
                 if respond(registry, m.conn, m.seq, Err(err.clone())) {
                     stats.errors += 1;
                 } else {
                     stats.cancelled += 1;
                 }
             }
-            slots.clear();
             continue;
         }
 
@@ -269,6 +295,7 @@ pub fn run<B: StepBackend + ?Sized>(
         for i in (0..slots.len()).rev() {
             if slots[i].done() {
                 let slot = slots.swap_remove(i);
+                backend.release(&slot);
                 let m = meta.swap_remove(i);
                 let now = Instant::now();
                 let decoded = Decoded {
@@ -447,6 +474,112 @@ mod tests {
         assert!(!respond(&registry, 9, 1, Ok(ok)));
         assert!(!registry.contains(9));
         drop(w_rx);
+    }
+
+    /// Wraps the synthetic backend and records which slot ids were
+    /// released — the probe for the KV/slot-state leak regressions.
+    struct ReleaseProbe {
+        inner: SyntheticBackend,
+        released: Mutex<Vec<u64>>,
+    }
+
+    impl ReleaseProbe {
+        fn new(inner: SyntheticBackend) -> ReleaseProbe {
+            ReleaseProbe { inner, released: Mutex::new(Vec::new()) }
+        }
+
+        fn released(&self) -> Vec<u64> {
+            self.released.lock().unwrap().clone()
+        }
+    }
+
+    impl StepBackend for ReleaseProbe {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn seq_len(&self) -> usize {
+            self.inner.seq_len()
+        }
+
+        fn logits(&self, slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.inner.logits(slots)
+        }
+
+        fn release(&self, slot: &DecodeSlot) {
+            self.released.lock().unwrap().push(slot.id);
+        }
+    }
+
+    #[test]
+    fn disconnect_between_admit_and_first_step_releases_slot() {
+        // regression: a connection that disappears after its request was
+        // admitted but before its first decode step used to leave the
+        // slot's backend state (KV pages) stranded — the cancellation
+        // path must release it exactly like the completion path does
+        let backend = ReleaseProbe::new(SyntheticBackend::new(16, 8, 9));
+        let registry = Registry::default();
+        // conn 7 never registers a writer: cancelled before any step
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(7, 0, vec![1, 2], 50)).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(backend.released().len(), 1, "cancelled slot was not released");
+    }
+
+    #[test]
+    fn completion_and_backend_error_release_every_slot() {
+        // completion path: every finished slot is released exactly once
+        let backend = ReleaseProbe::new(SyntheticBackend::new(32, 8, 3));
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(16);
+        registry.register(1, w_tx, None);
+        let (tx, rx) = sync_channel(16);
+        for i in 0..3u64 {
+            tx.send(req(1, i, vec![i as i32 + 1], 4)).unwrap();
+        }
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.completed, 3);
+        let released = backend.released();
+        assert_eq!(released.len(), 3);
+        let mut unique = released.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), 3, "slots must be released exactly once each");
+        drop(w_rx);
+
+        // error path: a failing backend still releases the in-flight slot
+        struct FailingBackend(ReleaseProbe);
+        impl StepBackend for FailingBackend {
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn seq_len(&self) -> usize {
+                self.0.seq_len()
+            }
+            fn logits(&self, _slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
+                anyhow::bail!("injected backend failure")
+            }
+            fn release(&self, slot: &DecodeSlot) {
+                self.0.release(slot);
+            }
+        }
+        let failing = FailingBackend(ReleaseProbe::new(SyntheticBackend::new(16, 8, 1)));
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(2, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(2, 0, vec![3], 4)).unwrap();
+        drop(tx);
+        let stats = run(&failing, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(failing.0.released().len(), 1, "failed slot was not released");
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "backend"),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -5,12 +5,16 @@
 use anyhow::{bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
+/// Row-major f32 host tensor: flat data plus shape.
 pub struct Tensor {
+    /// flat row-major elements
     pub data: Vec<f32>,
+    /// dimensions, outermost first
     pub shape: Vec<usize>,
 }
 
 impl Tensor {
+    /// A tensor from flat data and a shape (panics on length mismatch).
     pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
         assert_eq!(
             data.len(),
@@ -22,22 +26,27 @@ impl Tensor {
         Tensor { data, shape }
     }
 
+    /// An all-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
     }
 
+    /// A constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], v: f32) -> Self {
         Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
     }
 
+    /// A rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Tensor { data: vec![v], shape: vec![] }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -55,6 +64,7 @@ impl Tensor {
         self.shape[..self.rank().saturating_sub(2)].iter().product::<usize>().max(1)
     }
 
+    /// Reinterpret the shape (same element count, no data movement).
     pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
         if shape.iter().product::<usize>() != self.numel() {
             bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
@@ -94,6 +104,7 @@ impl Tensor {
         Tensor::new(data, shape)
     }
 
+    /// Elementwise transform into a new tensor.
     pub fn map(&self, mut f: impl FnMut(f32) -> f32) -> Tensor {
         Tensor::new(self.data.iter().map(|&x| f(x)).collect(), self.shape.clone())
     }
@@ -107,6 +118,7 @@ impl Tensor {
         )
     }
 
+    /// Largest absolute element (0 for empty tensors).
     pub fn abs_max(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
@@ -135,6 +147,7 @@ impl Tensor {
     // ---- binary IO ---------------------------------------------------------
     // Simple self-describing format: magic "FT32", rank, dims (u64 LE), data.
 
+    /// Write the `FT32` container (magic, rank, dims, LE f32 data).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         let mut buf = Vec::with_capacity(16 + self.numel() * 4);
         buf.extend_from_slice(b"FT32");
@@ -149,6 +162,7 @@ impl Tensor {
         Ok(())
     }
 
+    /// Read an `FT32` container, validating rank and length.
     pub fn load(path: &std::path::Path) -> Result<Tensor> {
         let buf = std::fs::read(path)?;
         if buf.len() < 8 || &buf[..4] != b"FT32" {

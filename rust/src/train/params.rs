@@ -25,6 +25,7 @@ use crate::util::rng::Rng;
 /// its leading parameters in).
 #[derive(Clone, Debug)]
 pub struct ParamStore {
+    /// weight names in manifest order
     pub names: Vec<String>,
     tensors: BTreeMap<String, Tensor>,
 }
@@ -61,10 +62,12 @@ impl ParamStore {
         ParamStore { names: self.names.clone(), tensors }
     }
 
+    /// Borrow one tensor by name, or error.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors.get(name).ok_or_else(|| anyhow!("no param '{name}'"))
     }
 
+    /// Replace one tensor (shape-checked), or error.
     pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
         let cur = self.tensors.get(name).ok_or_else(|| anyhow!("no param '{name}'"))?;
         if cur.shape != t.shape {
@@ -91,12 +94,14 @@ impl ParamStore {
         Ok(out)
     }
 
+    /// Total parameter count.
     pub fn total_params(&self) -> usize {
         self.tensors.values().map(|t| t.numel()).sum()
     }
 
     // ---- single-file container: "FWTS" ------------------------------------
 
+    /// Write the `FWTS` container (all tensors, manifest order).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(b"FWTS");
@@ -120,6 +125,7 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Read an `FWTS` container, validating every section length.
     pub fn load(path: &Path) -> Result<ParamStore> {
         let buf = std::fs::read(path)?;
         if buf.len() < 8 || &buf[..4] != b"FWTS" {
@@ -269,6 +275,7 @@ impl QuantParamStore {
         }
     }
 
+    /// Weight names in manifest order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
@@ -278,6 +285,7 @@ impl QuantParamStore {
         self.packed.get(name)
     }
 
+    /// Number of packed (quantized) layers.
     pub fn n_packed(&self) -> usize {
         self.packed.len()
     }
@@ -317,6 +325,7 @@ impl QuantParamStore {
         Ok(t)
     }
 
+    /// Total parameter count (dense + packed).
     pub fn total_params(&self) -> usize {
         self.dense.values().map(|t| t.numel()).sum::<usize>()
             + self.packed.values().map(|q| q.numel()).sum::<usize>()

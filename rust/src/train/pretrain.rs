@@ -15,11 +15,17 @@ use crate::util::json::Json;
 
 use super::ParamStore;
 
+/// Summary of one pretraining run.
 pub struct PretrainReport {
+    /// per-step training losses
     pub losses: Vec<f64>,
+    /// loss at the last step
     pub final_loss: f64,
+    /// optimizer steps executed
     pub steps: usize,
+    /// wall-clock seconds
     pub wall_s: f64,
+    /// training throughput
     pub tokens_per_s: f64,
 }
 

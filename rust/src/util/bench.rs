@@ -17,6 +17,8 @@ use std::time::Instant;
 
 use super::{json::Json, stats};
 
+/// One bench group: collects measurements and writes
+/// `results/bench/<group>.json` on [`Self::finish`].
 pub struct Bench {
     group: String,
     records: Vec<Json>,
@@ -26,15 +28,22 @@ pub struct Bench {
     pub samples: usize,
 }
 
+/// Timing summary for one benchmarked closure.
 pub struct Report {
+    /// bench name within the group
     pub name: String,
+    /// mean seconds per iteration
     pub mean_s: f64,
+    /// median seconds per iteration
     pub p50_s: f64,
+    /// p95 seconds per iteration
     pub p95_s: f64,
+    /// iterations per measurement sample (auto-calibrated)
     pub iters: u64,
 }
 
 impl Bench {
+    /// A bench group named `group` (FAAR_BENCH_FAST=1 slashes costs).
     pub fn new(group: &str) -> Self {
         // Keep default costs modest; FAAR_BENCH_FAST=1 slashes them for CI.
         let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
@@ -116,6 +125,7 @@ impl Bench {
     }
 }
 
+/// Human-readable seconds (`1.5 ms`, `370 ns`, ...).
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")

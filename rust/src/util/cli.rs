@@ -8,9 +8,14 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Default)]
+/// Parsed command line: positionals, `--key value` options, and
+/// boolean `--flag`s.
 pub struct Args {
+    /// positional arguments, in order (subcommand first)
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options
     pub options: BTreeMap<String, String>,
+    /// boolean flags that were present
     pub flags: Vec<String>,
     known_flags: Vec<&'static str>,
 }
@@ -43,26 +48,32 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env(flag_names: &[&'static str]) -> Result<Args> {
         Self::parse(std::env::args().skip(1), flag_names)
     }
 
+    /// True when the boolean flag `name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Option value, or an error naming the missing option.
     pub fn req(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
 
+    /// Parsed `usize` option with a default.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -70,6 +81,7 @@ impl Args {
         }
     }
 
+    /// Parsed `u64` option with a default.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -77,6 +89,7 @@ impl Args {
         }
     }
 
+    /// Parsed `f64` option with a default.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -84,6 +97,7 @@ impl Args {
         }
     }
 
+    /// Parsed `f32` option with a default.
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         Ok(self.f64_or(name, default as f64)? as f32)
     }
@@ -96,6 +110,7 @@ impl Args {
         }
     }
 
+    /// The first positional (the subcommand), or an error.
     pub fn subcommand(&self) -> Result<&str> {
         self.positional
             .first()
@@ -103,6 +118,7 @@ impl Args {
             .ok_or_else(|| anyhow!("expected a subcommand"))
     }
 
+    /// Error on any option/flag not in `known` (strict subcommands).
     pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
         for k in self.options.keys() {
             if !known.contains(&k.as_str()) {

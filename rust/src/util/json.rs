@@ -10,34 +10,46 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed JSON value (object keys keep their source order).
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always carried as f64).
     Num(f64),
+    /// A string (escapes already decoded).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, as ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
     // ---- constructors -----------------------------------------------------
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number.
     pub fn num(x: impl Into<f64>) -> Json {
         Json::Num(x.into())
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     // ---- accessors --------------------------------------------------------
+    /// Object field lookup (`None` for missing keys or non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -45,10 +57,12 @@ impl Json {
         }
     }
 
+    /// Object field lookup that errors on a missing key.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// The value as a number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -56,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, or an error.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -64,6 +79,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a string, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -71,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -78,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The value as an array, or an error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -85,6 +103,7 @@ impl Json {
         }
     }
 
+    /// The value as ordered key/value pairs, or an error.
     pub fn as_obj(&self) -> Result<&[(String, Json)]> {
         match self {
             Json::Obj(v) => Ok(v),
@@ -92,15 +111,18 @@ impl Json {
         }
     }
 
+    /// The value as an array of non-negative integers.
     pub fn usize_arr(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|x| x.as_usize()).collect()
     }
 
+    /// The value as a key-sorted map (clones; drops duplicate keys).
     pub fn to_map(&self) -> Result<BTreeMap<String, Json>> {
         Ok(self.as_obj()?.iter().cloned().collect())
     }
 
     // ---- parse ------------------------------------------------------------
+    /// Parse one complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -113,12 +135,14 @@ impl Json {
     }
 
     // ---- serialize ----------------------------------------------------------
+    /// Serialize compactly (no whitespace).
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(2), 0);

@@ -36,6 +36,7 @@ pub fn log_level() -> u8 {
 }
 
 #[macro_export]
+/// Log at info level to stderr (respects `FAAR_LOG`).
 macro_rules! info {
     ($($arg:tt)*) => {
         if $crate::util::log_level() >= 2 {
@@ -45,6 +46,7 @@ macro_rules! info {
 }
 
 #[macro_export]
+/// Log at debug level to stderr (visible with `FAAR_LOG=debug`).
 macro_rules! debug {
     ($($arg:tt)*) => {
         if $crate::util::log_level() >= 3 {
@@ -54,6 +56,7 @@ macro_rules! debug {
 }
 
 #[macro_export]
+/// Log at warn level to stderr (respects `FAAR_LOG`).
 macro_rules! warn {
     ($($arg:tt)*) => {
         if $crate::util::log_level() >= 1 {

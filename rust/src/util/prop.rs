@@ -58,6 +58,7 @@ pub fn check_msg<T: std::fmt::Debug>(
 pub mod gen {
     use super::Rng;
 
+    /// `n` samples from N(0, std).
     pub fn f32_normal(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
         let mut v = vec![0.0; n];
         rng.fill_normal(&mut v, 0.0, std);

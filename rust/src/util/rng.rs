@@ -5,6 +5,8 @@
 //! so every experiment in EXPERIMENTS.md is reproducible from its seed.
 
 #[derive(Clone, Debug)]
+/// xoshiro256** generator with a splitmix64-seeded state and a
+/// cached Box-Muller normal sample.
 pub struct Rng {
     s: [u64; 4],
     /// cached second Box-Muller sample
@@ -20,6 +22,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// A generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -36,6 +39,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -54,6 +58,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform in [0, 1) as f32.
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -88,6 +93,7 @@ impl Rng {
         }
     }
 
+    /// N(mean, std) sample as f32.
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         (self.normal() as f32) * std + mean
     }
@@ -99,6 +105,7 @@ impl Rng {
         }
     }
 
+    /// True with probability `p`.
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -116,6 +123,7 @@ impl Rng {
         weights.len() - 1
     }
 
+    /// Fisher-Yates shuffle in place.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.below(i + 1);

@@ -17,10 +17,12 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
+/// Minimum (`+inf` for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (`-inf` for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }

@@ -80,6 +80,7 @@ impl Default for WaitGroup {
 }
 
 impl WaitGroup {
+    /// A group with one participant (the creating handle).
     pub fn new() -> WaitGroup {
         WaitGroup {
             inner: std::sync::Arc::new(WgInner {

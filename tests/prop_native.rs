@@ -1,0 +1,257 @@
+//! Property-based tests over the native inference stack: the paged KV
+//! cache (round-trips, page reuse, capacity), the fused dequant-GEMM
+//! kernels against their dense reference, and decode parity between the
+//! cached, uncached, batched, and sequential native paths.
+
+use nvfp4_faar::formats::codec::{codec_for, rtn_decisions, FormatKind};
+use nvfp4_faar::infer::kernels::Linear;
+use nvfp4_faar::infer::kv::{KvLayout, KvPool, KvSeq};
+use nvfp4_faar::infer::{
+    native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
+};
+use nvfp4_faar::serve::batch::{decode_step, DecodeSlot};
+use nvfp4_faar::serve::{generate_greedy, StepBackend};
+use nvfp4_faar::tensor::Tensor;
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::prop::{check_msg, gen};
+
+// ---------------------------------------------------------------------------
+// KV cache properties
+
+#[test]
+fn prop_kv_append_read_roundtrip() {
+    check_msg(
+        "kv_roundtrip",
+        40,
+        |rng| {
+            let layers = 1 + rng.below(3);
+            let d = 4 * (1 + rng.below(4));
+            let page_tokens = 1 + rng.below(5);
+            let tokens = 1 + rng.below(20);
+            (layers, d, page_tokens, tokens, rng.next_u64())
+        },
+        |&(layers, d, page_tokens, tokens, seed)| {
+            let layout = KvLayout { n_layers: layers, d_model: d, page_tokens };
+            let mut pool = KvPool::unbounded(layout.page_floats());
+            let mut seq = KvSeq::new(layout);
+            // write a distinct recognizable pattern per (token, layer)
+            for t in 0..tokens {
+                seq.push(&mut pool).map_err(|e| e.to_string())?;
+                for l in 0..layers {
+                    let (k, v) = seq.kv_mut(t, l);
+                    for (i, x) in k.iter_mut().enumerate() {
+                        *x = (seed % 97) as f32 + (t * 1000 + l * 100 + i) as f32;
+                    }
+                    for (i, x) in v.iter_mut().enumerate() {
+                        *x = -((t * 1000 + l * 100 + i) as f32);
+                    }
+                }
+            }
+            if seq.len() != tokens {
+                return Err(format!("len {} != {tokens}", seq.len()));
+            }
+            let expect_pages = tokens.div_ceil(page_tokens);
+            if seq.n_pages() != expect_pages || pool.outstanding() != expect_pages {
+                return Err(format!(
+                    "pages {} / outstanding {} != {expect_pages}",
+                    seq.n_pages(),
+                    pool.outstanding()
+                ));
+            }
+            // read back every entry, including across page boundaries
+            for t in 0..tokens {
+                for l in 0..layers {
+                    let k = seq.k(t, l);
+                    let v = seq.v(t, l);
+                    for i in 0..d {
+                        let want_k = (seed % 97) as f32 + (t * 1000 + l * 100 + i) as f32;
+                        if k[i] != want_k {
+                            return Err(format!("k[{t}][{l}][{i}] = {} != {want_k}", k[i]));
+                        }
+                        if v[i] != -((t * 1000 + l * 100 + i) as f32) {
+                            return Err(format!("v[{t}][{l}][{i}] corrupted"));
+                        }
+                    }
+                }
+            }
+            seq.clear(&mut pool);
+            if pool.outstanding() != 0 || pool.free_pages() != expect_pages {
+                return Err("clear did not return every page".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_page_reuse_after_free() {
+    check_msg(
+        "kv_page_reuse",
+        30,
+        |rng| (1 + rng.below(4), 1 + rng.below(6)),
+        |&(page_tokens, rounds)| {
+            let layout = KvLayout { n_layers: 2, d_model: 8, page_tokens };
+            let mut pool = KvPool::new(layout.page_floats(), 8);
+            let mut high_water = 0;
+            for _ in 0..rounds {
+                let mut seq = KvSeq::new(layout);
+                for _ in 0..page_tokens * 3 {
+                    seq.push(&mut pool).map_err(|e| e.to_string())?;
+                }
+                high_water = high_water.max(pool.outstanding());
+                seq.clear(&mut pool);
+            }
+            // repeated fill/free cycles never allocate past one round's
+            // footprint: freed pages are reused, not abandoned
+            if high_water != 3 {
+                return Err(format!("expected 3 pages per round, saw {high_water}"));
+            }
+            if pool.outstanding() != 0 {
+                return Err("pages left outstanding".into());
+            }
+            if pool.free_pages() != 3 {
+                return Err(format!("free list holds {} pages, expected 3", pool.free_pages()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_capacity_rejection() {
+    check_msg(
+        "kv_capacity",
+        30,
+        |rng| (1 + rng.below(3), 1 + rng.below(4)),
+        |&(page_tokens, max_pages)| {
+            let layout = KvLayout { n_layers: 1, d_model: 4, page_tokens };
+            let mut pool = KvPool::new(layout.page_floats(), max_pages);
+            let mut seq = KvSeq::new(layout);
+            // exactly max_pages * page_tokens pushes fit
+            for _ in 0..max_pages * page_tokens {
+                seq.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            let err = match seq.push(&mut pool) {
+                Err(e) => e,
+                Ok(()) => return Err("push past capacity succeeded".into()),
+            };
+            if err.downcast_ref::<nvfp4_faar::infer::kv::KvExhausted>().is_none() {
+                return Err(format!("wrong rejection error: {err}"));
+            }
+            // rejection is non-destructive
+            if seq.len() != max_pages * page_tokens {
+                return Err("failed push mutated the sequence".into());
+            }
+            seq.clear(&mut pool);
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fused kernel vs dense reference
+
+#[test]
+fn prop_fused_matvec_matches_dense_reference() {
+    for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+        let codec = codec_for(kind);
+        check_msg(
+            &format!("fused_matvec_{}", codec.name()),
+            20,
+            |rng| {
+                let w = gen::f32_heavy(rng, 64 * 16);
+                let x = gen::f32_normal(rng, 64, 1.0);
+                (w, x)
+            },
+            |(wv, x)| {
+                let w = Tensor::new(wv.clone(), vec![64, 16]);
+                let p = codec.prepare(&w);
+                let q = codec.encode(&w, &p, &rtn_decisions(&p));
+                let deq = q.dequantize().map_err(|e| e.to_string())?;
+                let lin = Linear::from(q);
+                let mut y = vec![0.0f32; 16];
+                let mut scratch = Vec::new();
+                lin.matvec(0, x, &mut y, &mut scratch, 1).map_err(|e| e.to_string())?;
+                for col in 0..16 {
+                    let mut want = 0.0f32;
+                    for row in 0..64 {
+                        want += x[row] * deq.data[row * 16 + col];
+                    }
+                    let tol = 1e-3 * want.abs().max(1e-2);
+                    if (y[col] - want).abs() > tol {
+                        return Err(format!(
+                            "{}: col {col}: fused {} vs dense {want}",
+                            codec.name(),
+                            y[col]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode parity across every native path
+
+fn nano_backend(use_cache: bool, seed: u64) -> NativeBackend {
+    let manifest = native_manifest("nano").expect("preset");
+    let fp = ParamStore::init(&manifest, seed);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    NativeBackend::new(model, NativeOptions { use_cache, ..NativeOptions::default() })
+}
+
+#[test]
+fn prop_native_cached_batched_sequential_all_agree() {
+    let cached = nano_backend(true, 42);
+    let plain = nano_backend(false, 42);
+    check_msg(
+        "native_decode_parity",
+        6,
+        |rng| {
+            let n_prompts = 2 + rng.below(3);
+            let prompts: Vec<Vec<i32>> = (0..n_prompts)
+                .map(|_| (0..1 + rng.below(5)).map(|_| rng.below(256) as i32).collect())
+                .collect();
+            let max_tokens = 4 + rng.below(8);
+            (prompts, max_tokens)
+        },
+        |(prompts, max_tokens)| {
+            let n = *max_tokens;
+            // sequential, KV-cached
+            let seq_cached: Vec<Vec<i32>> = prompts
+                .iter()
+                .map(|p| generate_greedy(&cached, p, n))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            // sequential, uncached
+            for (p, expect) in prompts.iter().zip(&seq_cached) {
+                let got = generate_greedy(&plain, p, n).map_err(|e| e.to_string())?;
+                if &got != expect {
+                    return Err(format!("uncached diverged for {p:?}"));
+                }
+            }
+            // batched, KV-cached
+            let mut slots: Vec<DecodeSlot> = prompts
+                .iter()
+                .map(|p| DecodeSlot::new(p, n, 64))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            while slots.iter().any(|s| !s.done()) {
+                decode_step(&cached, &mut slots).map_err(|e| e.to_string())?;
+            }
+            for (slot, expect) in slots.iter().zip(&seq_cached) {
+                if &slot.out != expect {
+                    return Err("batched diverged from sequential".into());
+                }
+                cached.release(slot);
+            }
+            if cached.kv_outstanding() != 0 {
+                return Err(format!("{} KV pages leaked", cached.kv_outstanding()));
+            }
+            Ok(())
+        },
+    );
+}
