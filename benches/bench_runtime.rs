@@ -11,8 +11,7 @@
 //!   cache must clear ≥2x at a 256-token window — asserted here, not
 //!   just recorded).
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -21,6 +20,7 @@ use nvfp4_faar::infer::preset::{manifest_from_config, native_config};
 use nvfp4_faar::infer::{quantize_store, NativeBackend, NativeModel, NativeOptions};
 use nvfp4_faar::runtime::{Runtime, Value};
 use nvfp4_faar::serve::batch::{decode_step, DecodeSlot, StepBackend};
+use nvfp4_faar::serve::client::{Client, ClientRequest};
 use nvfp4_faar::serve::{serve_on, ServeOptions, SyntheticBackend};
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::train::ParamStore;
@@ -29,8 +29,9 @@ use nvfp4_faar::util::json::Json;
 use nvfp4_faar::util::rng::Rng;
 use nvfp4_faar::util::stats;
 
-/// One load-generator client: ping-pong `reqs` token-id requests, return
-/// per-request latencies as measured by the server.
+/// One load-generator client: ping-pong `reqs` token-id requests through
+/// the typed protocol client, return per-request latencies as measured
+/// by the server.
 fn load_client(
     addr: SocketAddr,
     id: usize,
@@ -38,27 +39,15 @@ fn load_client(
     max_tokens: usize,
     vocab: usize,
 ) -> Vec<f64> {
-    let mut stream = TcpStream::connect(addr).expect("connect");
-    stream
-        .set_read_timeout(Some(Duration::from_secs(60)))
-        .expect("timeout");
-    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut client =
+        Client::connect_timeout(addr, Duration::from_secs(60)).expect("connect");
     let mut latencies = Vec::with_capacity(reqs);
     for i in 0..reqs {
-        let prompt: Vec<Json> = (0..4)
-            .map(|j| Json::num(((id * 31 + i * 7 + j) % vocab) as f64))
-            .collect();
-        let req = Json::obj(vec![
-            ("tokens", Json::Arr(prompt)),
-            ("max_tokens", Json::num(max_tokens as f64)),
-        ]);
-        stream.write_all(req.to_string().as_bytes()).expect("write");
-        stream.write_all(b"\n").expect("write");
-        let mut line = String::new();
-        reader.read_line(&mut line).expect("read");
-        let resp = Json::parse(&line).expect("parse");
-        assert!(resp.get("error").is_none(), "server error: {line}");
-        latencies.push(resp.req("latency_ms").unwrap().as_f64().unwrap());
+        let prompt: Vec<i32> =
+            (0..4).map(|j| ((id * 31 + i * 7 + j) % vocab) as i32).collect();
+        let req = ClientRequest::tokens(prompt).max_tokens(max_tokens);
+        let resp = client.request(&req).expect("transport").expect("server error");
+        latencies.push(resp.latency_ms);
     }
     latencies
 }

@@ -13,16 +13,14 @@
 
 #![allow(clippy::field_reassign_with_default)]
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
-
 use anyhow::Result;
 
 use nvfp4_faar::config::PipelineConfig;
 use nvfp4_faar::data::Tokenizer;
 use nvfp4_faar::pipeline::{Method, Workbench};
+use nvfp4_faar::serve::client::{Client, ClientRequest};
 use nvfp4_faar::serve::{Generator, ServeOptions};
-use nvfp4_faar::util::{json::Json, stats};
+use nvfp4_faar::util::stats;
 
 const N_CLIENTS: usize = 4;
 const REQS_PER_CLIENT: usize = 4;
@@ -31,36 +29,24 @@ const MAX_TOKENS: usize = 12;
 fn client(addr: &str, id: usize, vocab: usize) -> Result<Vec<f64>> {
     let tok = Tokenizer::new(vocab);
     let mut latencies = vec![];
-    let mut stream = loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => break s,
+    // retry until the server thread has bound the listener
+    let mut cl = loop {
+        match Client::connect_timeout(addr, std::time::Duration::from_secs(120)) {
+            Ok(c) => break c,
             Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
         }
     };
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
     for i in 0..REQS_PER_CLIENT {
         let prompt = tok.decode(&[((id * 7 + i * 13) % vocab) as i32, 5, 9, 2]);
-        let req = Json::obj(vec![
-            ("prompt", Json::str(prompt.as_str())),
-            ("max_tokens", Json::num(MAX_TOKENS as f64)),
-        ]);
-        stream.write_all(req.to_string().as_bytes())?;
-        stream.write_all(b"\n")?;
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        let resp = Json::parse(&line)?;
-        if let Some(err) = resp.get("error") {
-            anyhow::bail!("server error: {err:?}");
-        }
-        let ms = resp.req("latency_ms")?.as_f64()?;
+        let req = ClientRequest::text(prompt.as_str()).max_tokens(MAX_TOKENS);
+        let resp = cl
+            .request(&req)?
+            .map_err(|e| anyhow::anyhow!("server error: {}: {}", e.code, e.message))?;
         println!(
             "  client {id} req {i}: {:>6.1} ms   \"{}\" → \"{}\"",
-            ms,
-            prompt,
-            resp.req("text")?.as_str()?
+            resp.latency_ms, prompt, resp.text
         );
-        latencies.push(ms);
+        latencies.push(resp.latency_ms);
     }
     Ok(latencies)
 }

@@ -46,12 +46,17 @@ USAGE: faar <subcommand> [options]
             [--max-tokens-cap N] [--max-line-bytes N]
             [--read-timeout-ms MS] [--max-conns N] [--kv-pages N]
             [--no-kv] [--no-act-quant]
+            [--temperature T] [--top-k K] [--top-p P]
+            [--repetition-penalty R] [--seed S]
   info      --model tiny
 
 The native serve backend runs the quantized transformer in pure rust
 (packed weights, fused dequant kernels, paged KV cache) and needs no
 artifacts/ directory; xla is the AOT/PJRT path; synthetic is the
-deterministic load-testing stand-in.
+deterministic load-testing stand-in. The sampling flags set the server's
+DEFAULT generation parameters (greedy unless --temperature is given);
+any request can override them with a protocol-v2 "params" object, and
+"stream": true turns on incremental token frames.
 
 Common options: --artifacts DIR (default artifacts), --out DIR (default
 results), --seed N, plus every pipeline hyperparameter (see README).";
@@ -261,6 +266,7 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
         max_line_bytes: args.usize_or("max-line-bytes", d.max_line_bytes)?,
         read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
         workers: args.usize_or("workers", d.workers)?,
+        defaults: default_gen_params(args, cfg.seed)?,
     };
     let backend = args.str_or("backend", "xla");
     if backend != "xla" && args.get("method").is_some() {
@@ -290,6 +296,33 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
         }
         other => bail!("unknown backend '{other}' (native|xla|synthetic)"),
     }
+}
+
+/// Build the server-default `GenParams` from the serve CLI flags
+/// (greedy unless `--temperature` is given). Explicitly passing a
+/// non-positive temperature or `--top-k 0` is rejected here, exactly as
+/// the protocol boundary rejects it per request.
+fn default_gen_params(args: &Args, seed: u64) -> Result<nvfp4_faar::serve::GenParams> {
+    let mut p = nvfp4_faar::serve::GenParams::default();
+    if let Some(t) = args.get("temperature") {
+        let t: f32 = t.parse().map_err(|e| anyhow::anyhow!("--temperature: {e}"))?;
+        if !t.is_finite() || t <= 0.0 {
+            bail!("--temperature must be finite and > 0 (omit it for greedy)");
+        }
+        p.temperature = t;
+    }
+    if let Some(k) = args.get("top-k") {
+        let k: usize = k.parse().map_err(|e| anyhow::anyhow!("--top-k: {e}"))?;
+        if k == 0 {
+            bail!("--top-k must be >= 1 (omit it to sample the full vocabulary)");
+        }
+        p.top_k = k;
+    }
+    p.top_p = args.f32_or("top-p", p.top_p)?;
+    p.repetition_penalty = args.f32_or("repetition-penalty", p.repetition_penalty)?;
+    p.seed = seed;
+    p.validate()?;
+    Ok(p)
 }
 
 /// The artifact-free serving path: deterministic (or checkpointed)

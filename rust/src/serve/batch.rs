@@ -1,16 +1,22 @@
 //! Decode core shared by the sequential generator and the batched
 //! scheduler.
 //!
-//! Everything that decides *which token comes next* lives here, behind
-//! the [`StepBackend`] trait, so the sequential path
-//! ([`generate_greedy`]), the continuous-batching scheduler
-//! (`serve::scheduler`), the integration tests, and the load-generator
-//! bench all run byte-identical greedy decoding:
+//! The generation API v2 contract is **logits-out**: a
+//! [`StepBackend::step`] returns one raw `[vocab]` logits row per slot
+//! and never selects a token. Selection — greedy argmax or sampled
+//! through per-request [`GenParams`] — happens here, in
+//! [`decode_step`], through the [`Sampler`] each [`DecodeSlot`] carries.
+//! The sequential path ([`generate`] / [`generate_greedy`]), the
+//! continuous-batching scheduler (`serve::scheduler`), the integration
+//! tests, and the load-generator bench all run this one decode core, so
+//! batched output is token-identical to sequential output for greedy
+//! *and* seeded sampling alike:
 //!
 //! * [`DecodeSlot`] — one in-flight request: the `[T]` token window, the
-//!   current position, the emitted tokens, and the remaining budget. The
-//!   window-slide rule (shift left by one when the buffer is full) is
-//!   encoded once, here.
+//!   current position, the emitted tokens, the remaining budget, and the
+//!   request's [`Sampler`] (selection state survives micro-batched
+//!   scheduling unchanged). The window-slide rule (shift left by one
+//!   when the buffer is full) is encoded once, here.
 //! * [`argmax`] — NaN-safe greedy pick (`f32::total_cmp`, NaN logits are
 //!   ignored rather than panicking the connection).
 //! * [`RuntimeBackend`] — the deployed path: W4A4 logits through the
@@ -27,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::sampling::{GenParams, Sampler};
 use crate::runtime::{PreparedExec, Runtime, Value};
 use crate::train::ParamSource;
 
@@ -50,9 +57,9 @@ pub fn argmax(logits: &[f32]) -> usize {
 /// Process-unique slot-identity source (see [`DecodeSlot::id`]).
 static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// One in-flight greedy decode: the fixed `[T]` token window plus
-/// progress. Construction rejects empty prompts — decoding from a zeroed
-/// buffer is never meaningful output.
+/// One in-flight decode: the fixed `[T]` token window, progress, and the
+/// request's token-selection state. Construction rejects empty prompts —
+/// decoding from a zeroed buffer is never meaningful output.
 #[derive(Clone, Debug)]
 pub struct DecodeSlot {
     /// process-unique slot identity, assigned at construction. Stateful
@@ -68,17 +75,32 @@ pub struct DecodeSlot {
     /// tokens emitted so far
     pub out: Vec<i32>,
     remaining: usize,
+    /// the request's selection state (greedy by default); lives in the
+    /// slot so micro-batched scheduling carries it across steps exactly
+    /// like sequential decoding does
+    sampler: Sampler,
 }
 
 impl DecodeSlot {
-    /// Seed a slot from a prompt (keeps the last `seq_len` tokens).
+    /// Seed a greedy slot from a prompt (keeps the last `seq_len` tokens).
     pub fn new(prompt: &[i32], max_tokens: usize, seq_len: usize) -> Result<DecodeSlot> {
+        DecodeSlot::with_params(prompt, max_tokens, seq_len, GenParams::default())
+    }
+
+    /// Seed a slot with explicit generation parameters.
+    pub fn with_params(
+        prompt: &[i32],
+        max_tokens: usize,
+        seq_len: usize,
+        params: GenParams,
+    ) -> Result<DecodeSlot> {
         if prompt.is_empty() {
             bail!("empty prompt: nothing to condition the decode on");
         }
         if seq_len == 0 {
             bail!("model seq_len is 0");
         }
+        params.validate()?;
         let mut buf = vec![0i32; seq_len];
         let plen = prompt.len().min(seq_len);
         buf[..plen].copy_from_slice(&prompt[prompt.len() - plen..]);
@@ -89,7 +111,32 @@ impl DecodeSlot {
             pos: plen - 1,
             out: Vec::with_capacity(max_tokens),
             remaining: max_tokens,
+            sampler: Sampler::new(params),
         })
+    }
+
+    /// The generation parameters this slot decodes under.
+    pub fn params(&self) -> &GenParams {
+        self.sampler.params()
+    }
+
+    /// Select the next token from a logits row (greedy or sampled, per
+    /// the slot's [`GenParams`]), apply the stop conditions, and advance
+    /// the window. `vmax` clamps the selection to the backend vocab.
+    pub fn accept(&mut self, logits: &[f32], vmax: i32) {
+        debug_assert!(self.remaining > 0, "accept on a finished slot");
+        let next = (self.sampler.select(logits, &self.buf[..=self.pos]) as i32).min(vmax);
+        if self.sampler.params().is_stop_token(next) {
+            // a stop token ends the request without being emitted
+            self.remaining = 0;
+            return;
+        }
+        self.advance(next);
+        if self.sampler.params().stops_output(&self.out) {
+            // a matched stop sequence stays in the output, so streamed
+            // token frames always concatenate to the final response
+            self.remaining = 0;
+        }
     }
 
     /// Accept the next token: append to the output and advance the
@@ -108,16 +155,19 @@ impl DecodeSlot {
         }
     }
 
-    /// True once the token budget is spent.
+    /// True once the token budget is spent or a stop condition matched.
     pub fn done(&self) -> bool {
         self.remaining == 0
     }
 }
 
 /// Anything that can turn a micro-batch of decode slots into per-slot
-/// logits rows. The contract that makes batched output token-identical
-/// to sequential output: **row `i` depends only on slot `i`** — never on
-/// the batch composition.
+/// logits rows — the **logits-out** contract of the generation API v2:
+/// a backend computes raw logits and never selects tokens (selection is
+/// [`decode_step`]'s job, through each slot's [`Sampler`]). The
+/// invariant that makes batched output token-identical to sequential
+/// output: **row `i` depends only on slot `i`** — never on the batch
+/// composition.
 pub trait StepBackend {
     /// Vocabulary size (logits row length).
     fn vocab(&self) -> usize;
@@ -125,8 +175,8 @@ pub trait StepBackend {
     /// Model window length (slot buffer length).
     fn seq_len(&self) -> usize;
 
-    /// One logits row (length = vocab) per slot, in slot order.
-    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
+    /// One raw logits row (length = vocab) per slot, in slot order.
+    fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
 
     /// Notification that `slot` has permanently left the decode loop —
     /// completed, cancelled (client disconnect), or failed. Stateful
@@ -137,7 +187,8 @@ pub trait StepBackend {
     fn release(&self, _slot: &DecodeSlot) {}
 }
 
-/// One decode step over a micro-batch: logits → NaN-safe argmax →
+/// One decode step over a micro-batch: backend logits → per-slot
+/// selection (greedy argmax or the slot's sampler) → stop conditions →
 /// advance. Slots that are already done are left untouched (their logits
 /// row is computed but discarded — the scheduler retires them before the
 /// next step).
@@ -145,7 +196,7 @@ pub fn decode_step<B: StepBackend + ?Sized>(backend: &B, slots: &mut [DecodeSlot
     if slots.is_empty() {
         return Ok(());
     }
-    let rows = backend.logits(slots)?;
+    let rows = backend.step(slots)?;
     if rows.len() != slots.len() {
         bail!("backend returned {} logits rows for {} slots", rows.len(), slots.len());
     }
@@ -154,23 +205,24 @@ pub fn decode_step<B: StepBackend + ?Sized>(backend: &B, slots: &mut [DecodeSlot
         if slot.done() {
             continue;
         }
-        let next = (argmax(&row) as i32).min(vmax);
-        slot.advance(next);
+        slot.accept(&row, vmax);
     }
     Ok(())
 }
 
-/// Sequential greedy decode of one prompt — the reference path the
-/// batched scheduler must match token-for-token. Errors on an empty
-/// prompt (at this layer, not just in the JSON protocol). The slot is
-/// released on every exit path, so stateful backends never leak cache
-/// state to a one-shot generation.
-pub fn generate_greedy<B: StepBackend + ?Sized>(
+/// Sequential decode of one prompt under explicit [`GenParams`] — the
+/// reference path the batched scheduler must match token-for-token
+/// (greedy and seeded sampling alike). Errors on an empty prompt (at
+/// this layer, not just in the JSON protocol). The slot is released on
+/// every exit path, so stateful backends never leak cache state to a
+/// one-shot generation.
+pub fn generate<B: StepBackend + ?Sized>(
     backend: &B,
     prompt: &[i32],
     max_tokens: usize,
+    params: GenParams,
 ) -> Result<Vec<i32>> {
-    let mut slot = DecodeSlot::new(prompt, max_tokens, backend.seq_len())?;
+    let mut slot = DecodeSlot::with_params(prompt, max_tokens, backend.seq_len(), params)?;
     while !slot.done() {
         if let Err(e) = decode_step(backend, std::slice::from_mut(&mut slot)) {
             backend.release(&slot);
@@ -179,6 +231,16 @@ pub fn generate_greedy<B: StepBackend + ?Sized>(
     }
     backend.release(&slot);
     Ok(slot.out)
+}
+
+/// [`generate`] with default (greedy) parameters — token-identical to
+/// the pre-v2 greedy decode path.
+pub fn generate_greedy<B: StepBackend + ?Sized>(
+    backend: &B,
+    prompt: &[i32],
+    max_tokens: usize,
+) -> Result<Vec<i32>> {
+    generate(backend, prompt, max_tokens, GenParams::default())
 }
 
 // ---------------------------------------------------------------------------
@@ -272,7 +334,7 @@ impl StepBackend for RuntimeBackend<'_> {
         self.rt.config().seq_len
     }
 
-    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+    fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
         let b = slots.len();
         let mut rows: Vec<Vec<f32>> = Vec::with_capacity(b);
         let mut i = 0;
@@ -377,7 +439,7 @@ impl StepBackend for SyntheticBackend {
         self.seq_len
     }
 
-    fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+    fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
         spin(self.fixed_cost);
         Ok(slots
             .iter()
@@ -484,7 +546,7 @@ mod tests {
             8
         }
 
-        fn logits(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
             Ok(slots.iter().map(|_| vec![f32::NAN, 1.0, f32::NAN, 0.5]).collect())
         }
     }
@@ -493,5 +555,91 @@ mod tests {
     fn nan_logits_decode_without_panicking() {
         let out = generate_greedy(&NanBackend, &[1], 3).unwrap();
         assert_eq!(out, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn sampled_generate_is_seed_reproducible_and_in_vocab() {
+        let b = SyntheticBackend::new(48, 8, 5);
+        let params = GenParams { temperature: 0.8, top_p: 0.9, seed: 11, ..GenParams::default() };
+        let a = generate(&b, &[1, 2, 3], 16, params.clone()).unwrap();
+        let c = generate(&b, &[1, 2, 3], 16, params.clone()).unwrap();
+        assert_eq!(a, c, "same seed must reproduce the same continuation");
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&t| t >= 0 && t < 48));
+        let d = generate(&b, &[1, 2, 3], 16, GenParams { seed: 12, ..params }).unwrap();
+        assert_ne!(a, d, "different seeds should diverge");
+    }
+
+    #[test]
+    fn sampled_batched_step_matches_sequential() {
+        // the invariant greedy decode has always had, now for sampling:
+        // the sampler lives in the slot, so batch composition cannot
+        // perturb a request's token stream
+        let b = SyntheticBackend::new(64, 8, 7);
+        let params = |i: u64| GenParams {
+            temperature: 1.1,
+            top_k: 12,
+            top_p: 0.95,
+            repetition_penalty: 1.2,
+            seed: 100 + i,
+            ..GenParams::default()
+        };
+        let prompts: Vec<Vec<i32>> = (0..5).map(|i| vec![i, i + 3, 2 * i]).collect();
+        let sequential: Vec<Vec<i32>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| generate(&b, p, 12, params(i as u64)).unwrap())
+            .collect();
+        let mut slots: Vec<DecodeSlot> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| DecodeSlot::with_params(p, 12, 8, params(i as u64)).unwrap())
+            .collect();
+        while slots.iter().any(|s| !s.done()) {
+            decode_step(&b, &mut slots).unwrap();
+        }
+        for (slot, expect) in slots.iter().zip(&sequential) {
+            assert_eq!(&slot.out, expect, "sampled batched decode diverged from sequential");
+        }
+    }
+
+    /// First index `k >= 1` whose token does not occur earlier in `out`
+    /// (so a stop condition anchored at `k` cannot fire prematurely).
+    fn first_fresh(out: &[i32]) -> usize {
+        (1..out.len())
+            .find(|&k| !out[..k].contains(&out[k]))
+            .expect("greedy stream has no fresh token")
+    }
+
+    #[test]
+    fn stop_token_ends_decode_without_emitting() {
+        let b = SyntheticBackend::new(32, 8, 42);
+        let greedy = generate_greedy(&b, &[1, 2, 3], 12).unwrap();
+        let k = first_fresh(&greedy);
+        // stop on the token greedy would emit at k: the continuation is
+        // cut to the first k tokens, stop token excluded
+        let params = GenParams { stop_tokens: vec![greedy[k]], ..GenParams::default() };
+        let stopped = generate(&b, &[1, 2, 3], 12, params).unwrap();
+        assert_eq!(stopped, &greedy[..k]);
+    }
+
+    #[test]
+    fn stop_sequence_ends_decode_and_stays_in_output() {
+        let b = SyntheticBackend::new(32, 8, 42);
+        let greedy = generate_greedy(&b, &[1, 2, 3], 12).unwrap();
+        let k = first_fresh(&greedy);
+        // the pair ending at k first occurs at k (its tail token is fresh)
+        let params = GenParams {
+            stop_sequences: vec![greedy[k - 1..=k].to_vec()],
+            ..GenParams::default()
+        };
+        let stopped = generate(&b, &[1, 2, 3], 12, params).unwrap();
+        assert_eq!(stopped, &greedy[..=k], "matched stop sequence must stay in the output");
+    }
+
+    #[test]
+    fn slot_rejects_invalid_params() {
+        let bad = GenParams { temperature: f32::NAN, ..GenParams::default() };
+        assert!(DecodeSlot::with_params(&[1], 4, 8, bad).is_err());
     }
 }

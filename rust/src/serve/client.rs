@@ -1,0 +1,365 @@
+//! Small typed client for the line-delimited JSON serving protocol.
+//!
+//! One place that knows how to connect, build v1/v2 request lines
+//! (sampling `params`, `stream`), and read response lines / token
+//! frames back — so the integration tests, the load-generator bench,
+//! and example snippets stop hand-rolling the wire format. Protocol
+//! rejections surface as typed [`ProtocolError`]s (match on
+//! [`ProtocolError::code`]); transport failures surface as `Err`.
+//!
+//! ```no_run
+//! use nvfp4_faar::serve::client::{Client, ClientRequest};
+//! # fn main() -> anyhow::Result<()> {
+//! let mut c = Client::connect("127.0.0.1:7745")?;
+//! let req = ClientRequest::text("ba kuto").max_tokens(8).sampled(0.8, 42).top_p(0.9);
+//! let reply = c.request(&req)?.map_err(|e| anyhow::anyhow!("{}: {}", e.code, e.message))?;
+//! println!("{} -> {}", reply.tokens.len(), reply.text);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A request under construction: `None` / empty fields stay off the
+/// wire, so a default request is a plain v1 greedy line.
+#[derive(Clone, Debug, Default)]
+pub struct ClientRequest {
+    /// text prompt (mutually exclusive with `tokens`; `tokens` wins)
+    pub prompt: Option<String>,
+    /// prompt as raw token ids
+    pub tokens: Option<Vec<i32>>,
+    /// continuation length (server default when `None`)
+    pub max_tokens: Option<usize>,
+    /// sampling temperature (`params.temperature`)
+    pub temperature: Option<f64>,
+    /// top-k restriction (`params.top_k`)
+    pub top_k: Option<usize>,
+    /// nucleus restriction (`params.top_p`)
+    pub top_p: Option<f64>,
+    /// repetition penalty (`params.repetition_penalty`)
+    pub repetition_penalty: Option<f64>,
+    /// sampler seed (`params.seed`)
+    pub seed: Option<u64>,
+    /// stop token ids (`params.stop_tokens`)
+    pub stop_tokens: Vec<i32>,
+    /// text stop sequences (`params.stop`)
+    pub stop: Vec<String>,
+    /// request incremental token frames
+    pub stream: bool,
+}
+
+impl ClientRequest {
+    /// A greedy request from a text prompt.
+    pub fn text(prompt: impl Into<String>) -> ClientRequest {
+        ClientRequest { prompt: Some(prompt.into()), ..ClientRequest::default() }
+    }
+
+    /// A greedy request from raw token ids.
+    pub fn tokens(tokens: impl Into<Vec<i32>>) -> ClientRequest {
+        ClientRequest { tokens: Some(tokens.into()), ..ClientRequest::default() }
+    }
+
+    /// Set the continuation length.
+    pub fn max_tokens(mut self, n: usize) -> ClientRequest {
+        self.max_tokens = Some(n);
+        self
+    }
+
+    /// Enable seeded temperature sampling.
+    pub fn sampled(mut self, temperature: f64, seed: u64) -> ClientRequest {
+        self.temperature = Some(temperature);
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Restrict sampling to the `k` highest logits.
+    pub fn top_k(mut self, k: usize) -> ClientRequest {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Restrict sampling to the nucleus of cumulative probability `p`.
+    pub fn top_p(mut self, p: f64) -> ClientRequest {
+        self.top_p = Some(p);
+        self
+    }
+
+    /// Penalize tokens already visible in the decode window.
+    pub fn repetition_penalty(mut self, x: f64) -> ClientRequest {
+        self.repetition_penalty = Some(x);
+        self
+    }
+
+    /// Request incremental token frames (`"stream": true`).
+    pub fn streaming(mut self) -> ClientRequest {
+        self.stream = true;
+        self
+    }
+
+    /// Serialize to one protocol line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(toks) = &self.tokens {
+            fields.push((
+                "tokens",
+                Json::Arr(toks.iter().map(|&t| Json::num(t as f64)).collect()),
+            ));
+        } else if let Some(p) = &self.prompt {
+            fields.push(("prompt", Json::str(p.as_str())));
+        }
+        if let Some(n) = self.max_tokens {
+            fields.push(("max_tokens", Json::num(n as f64)));
+        }
+        let mut params: Vec<(&str, Json)> = Vec::new();
+        if let Some(t) = self.temperature {
+            params.push(("temperature", Json::Num(t)));
+        }
+        if let Some(k) = self.top_k {
+            params.push(("top_k", Json::num(k as f64)));
+        }
+        if let Some(p) = self.top_p {
+            params.push(("top_p", Json::Num(p)));
+        }
+        if let Some(x) = self.repetition_penalty {
+            params.push(("repetition_penalty", Json::Num(x)));
+        }
+        if let Some(s) = self.seed {
+            params.push(("seed", Json::num(s as f64)));
+        }
+        if !self.stop_tokens.is_empty() {
+            params.push((
+                "stop_tokens",
+                Json::Arr(self.stop_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ));
+        }
+        if !self.stop.is_empty() {
+            params.push((
+                "stop",
+                Json::Arr(self.stop.iter().map(|s| Json::str(s.as_str())).collect()),
+            ));
+        }
+        if !params.is_empty() {
+            fields.push(("params", Json::obj(params)));
+        }
+        if self.stream {
+            fields.push(("stream", Json::Bool(true)));
+        }
+        Json::obj(fields).to_string()
+    }
+}
+
+/// A completed decode as reported by the server.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Completion {
+    /// the decoded continuation
+    pub tokens: Vec<i32>,
+    /// the continuation rendered through the server tokenizer
+    pub text: String,
+    /// request-to-completion wall time, server-side
+    pub latency_ms: f64,
+    /// time the request waited before its first decode step
+    pub queue_ms: f64,
+}
+
+/// A structured protocol rejection (`{"error":{code,message}}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProtocolError {
+    /// machine-matchable error class (`bad_json`, `bad_params`, ...)
+    pub code: String,
+    /// human-readable detail
+    pub message: String,
+}
+
+/// One incremental token frame of a streaming request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamFrame {
+    /// zero-based position in the request's output
+    pub index: usize,
+    /// the decoded token
+    pub token: i32,
+    /// the token rendered through the server tokenizer
+    pub text: String,
+}
+
+/// What one response line held: a completion or a protocol rejection.
+pub type Reply = std::result::Result<Completion, ProtocolError>;
+
+/// A connected protocol client (blocking, line-oriented).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect with a 60 s read timeout (tests and benches must fail,
+    /// not hang, if the server wedges).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        Client::connect_timeout(addr, Duration::from_secs(60))
+    }
+
+    /// Connect with an explicit read timeout.
+    pub fn connect_timeout(addr: impl ToSocketAddrs, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request line without waiting for the reply (pipelining).
+    pub fn send(&mut self, req: &ClientRequest) -> Result<()> {
+        self.send_raw(&req.to_line())
+    }
+
+    /// Send a raw protocol line verbatim (malformed-input tests).
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one line and parse it as a terminal reply (completion or
+    /// structured error). Fails on EOF, transport errors, or a token
+    /// frame where a terminal reply was expected.
+    pub fn read_reply(&mut self) -> Result<Reply> {
+        match self.read_line()? {
+            Line::Reply(r) => Ok(r),
+            Line::Frame(f) => bail!("expected a terminal reply, got token frame {f:?}"),
+        }
+    }
+
+    /// Round-trip one non-streaming request. The request is sent with
+    /// `"stream": false` regardless of `req.stream` (the symmetric guard
+    /// to [`Client::request_stream`]) — a streamed reply would leave
+    /// frames buffered on the connection and desync every later read.
+    pub fn request(&mut self, req: &ClientRequest) -> Result<Reply> {
+        let req = ClientRequest { stream: false, ..req.clone() };
+        self.send(&req)?;
+        self.read_reply()
+    }
+
+    /// Round-trip one streaming request: returns the token frames (in
+    /// order) and the terminal reply. The request is sent with
+    /// `"stream": true` regardless of `req.stream`.
+    pub fn request_stream(&mut self, req: &ClientRequest) -> Result<(Vec<StreamFrame>, Reply)> {
+        let req = ClientRequest { stream: true, ..req.clone() };
+        self.send(&req)?;
+        let mut frames = Vec::new();
+        loop {
+            match self.read_line()? {
+                Line::Frame(f) => frames.push(f),
+                Line::Reply(r) => return Ok((frames, r)),
+            }
+        }
+    }
+
+    /// Shut the connection down abruptly (disconnect-mid-decode tests).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    fn read_line(&mut self) -> Result<Line> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 || line.trim().is_empty() {
+            bail!("server closed the connection");
+        }
+        parse_line(&line)
+    }
+}
+
+enum Line {
+    Frame(StreamFrame),
+    Reply(Reply),
+}
+
+fn parse_line(line: &str) -> Result<Line> {
+    let v = Json::parse(line).with_context(|| format!("response is not JSON: {line:?}"))?;
+    if let Some(err) = v.get("error") {
+        return Ok(Line::Reply(Err(ProtocolError {
+            code: err.req("code")?.as_str()?.to_string(),
+            message: err.req("message")?.as_str()?.to_string(),
+        })));
+    }
+    if let Some(t) = v.get("token") {
+        return Ok(Line::Frame(StreamFrame {
+            index: v.req("index")?.as_usize()?,
+            token: t.as_f64()? as i32,
+            text: v.req("text")?.as_str()?.to_string(),
+        }));
+    }
+    let tokens = v
+        .req("tokens")?
+        .as_arr()?
+        .iter()
+        .map(|t| Ok(t.as_f64()? as i32))
+        .collect::<Result<Vec<i32>>>()?;
+    Ok(Line::Reply(Ok(Completion {
+        tokens,
+        text: v.req("text")?.as_str()?.to_string(),
+        latency_ms: v.req("latency_ms")?.as_f64()?,
+        queue_ms: v.req("queue_ms")?.as_f64()?,
+    })))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lines_stay_v1_when_no_sampling_fields_set() {
+        let line = ClientRequest::tokens(vec![1, 2]).max_tokens(4).to_line();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("params").is_none(), "default request must be a bare v1 line");
+        assert!(v.get("stream").is_none());
+        assert_eq!(v.req("tokens").unwrap().usize_arr().unwrap(), vec![1, 2]);
+        assert_eq!(v.req("max_tokens").unwrap().as_usize().unwrap(), 4);
+    }
+
+    #[test]
+    fn request_lines_carry_v2_params() {
+        let req = ClientRequest::text("ba")
+            .max_tokens(8)
+            .sampled(0.8, 42)
+            .top_k(5)
+            .top_p(0.9)
+            .repetition_penalty(1.1)
+            .streaming();
+        let v = Json::parse(&req.to_line()).unwrap();
+        assert_eq!(v.req("prompt").unwrap().as_str().unwrap(), "ba");
+        assert!(v.req("stream").unwrap().as_bool().unwrap());
+        let p = v.req("params").unwrap();
+        assert_eq!(p.req("temperature").unwrap().as_f64().unwrap(), 0.8);
+        assert_eq!(p.req("top_k").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(p.req("top_p").unwrap().as_f64().unwrap(), 0.9);
+        assert_eq!(p.req("seed").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn parse_line_distinguishes_frames_replies_and_errors() {
+        match parse_line(r#"{"token":3,"index":0,"text":"fa"}"#).unwrap() {
+            Line::Frame(f) => {
+                assert_eq!(f, StreamFrame { index: 0, token: 3, text: "fa".into() })
+            }
+            _ => panic!("expected a frame"),
+        }
+        match parse_line(r#"{"tokens":[1,2],"text":"da fa","latency_ms":1.0,"queue_ms":0.1}"#)
+            .unwrap()
+        {
+            Line::Reply(Ok(c)) => assert_eq!(c.tokens, vec![1, 2]),
+            _ => panic!("expected a completion"),
+        }
+        match parse_line(r#"{"error":{"code":"bad_params","message":"nope"}}"#).unwrap() {
+            Line::Reply(Err(e)) => assert_eq!(e.code, "bad_params"),
+            _ => panic!("expected an error"),
+        }
+        assert!(parse_line("not json").is_err());
+    }
+}

@@ -1,11 +1,29 @@
 //! Concurrent batched inference server over a quantized model.
 //!
-//! Line-delimited JSON over TCP (the offline image has no HTTP stack):
-//! each request line is `{"prompt": "text...", "max_tokens": N}` (or
-//! `"tokens": [...]`), each response line is
-//! `{"tokens": [...], "text": "...", "latency_ms": x, "queue_ms": y}` —
-//! or `{"error": {"code": "...", "message": "..."}}` for a rejected
-//! request. Responses on a connection always come back in request order.
+//! Line-delimited JSON over TCP (the offline image has no HTTP stack).
+//! Protocol **v2** (see DESIGN.md §10): a request line is
+//!
+//! ```json
+//! {"prompt": "text...", "max_tokens": N,
+//!  "params": {"temperature": 0.8, "top_k": 40, "top_p": 0.9,
+//!             "repetition_penalty": 1.1, "seed": 7,
+//!             "stop": ["text"], "stop_tokens": [3]},
+//!  "stream": true}
+//! ```
+//!
+//! where `params` and `stream` are optional — a bare v1 line
+//! (`{"prompt": ..., "max_tokens": N}` or `"tokens": [...]`) still
+//! parses and decodes greedily, token-identical to the v1 server. A
+//! non-streaming response line is
+//! `{"tokens": [...], "text": "...", "latency_ms": x, "queue_ms": y}`;
+//! with `"stream": true` the server first emits one frame line
+//! `{"token": t, "index": i, "text": "word"}` per decoded token, then
+//! the same terminal response object (so the frames always concatenate
+//! to the final `tokens`). Rejections are structured
+//! `{"error": {"code": "...", "message": "..."}}` lines; sampling
+//! parameters are validated at this boundary (code `bad_params`).
+//! Responses on a connection always come back in request order, frames
+//! ordered within their request.
 //!
 //! Architecture (see DESIGN.md §8):
 //!
@@ -36,6 +54,8 @@
 //! `serve_runtime_batched_matches_sequential` test).
 
 pub mod batch;
+pub mod client;
+pub mod sampling;
 pub mod scheduler;
 
 use std::collections::BTreeMap;
@@ -49,8 +69,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 pub use batch::{
-    argmax, generate_greedy, DecodeSlot, RuntimeBackend, StepBackend, SyntheticBackend,
+    argmax, generate, generate_greedy, DecodeSlot, RuntimeBackend, StepBackend, SyntheticBackend,
 };
+pub use client::Client;
+pub use sampling::{GenParams, Sampler};
 pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions};
 use scheduler::{DecodeRequest, Decoded, WriterMsg};
 
@@ -99,10 +121,21 @@ impl<'r> Generator<'r> {
     /// Greedy-decode `max_tokens` continuations of `prompt`. Errors on an
     /// empty prompt — decoding from a zeroed buffer is not a completion.
     pub fn generate(&self, prompt: &[i32], max_tokens: usize) -> Result<Vec<i32>> {
+        self.generate_with(prompt, max_tokens, GenParams::default())
+    }
+
+    /// Decode under explicit generation parameters (temperature / top-k /
+    /// top-p / repetition penalty / stops; seeded for reproducibility).
+    pub fn generate_with(
+        &self,
+        prompt: &[i32],
+        max_tokens: usize,
+        params: GenParams,
+    ) -> Result<Vec<i32>> {
         if prompt.is_empty() {
             bail!("empty prompt: nothing to condition the decode on");
         }
-        generate_greedy(&self.backend()?, prompt, max_tokens)
+        generate(&self.backend()?, prompt, max_tokens, params)
     }
 
     /// Serve forever (or until `max_conns` connections, for tests) with
@@ -135,15 +168,29 @@ impl<'r> Generator<'r> {
 // ---------------------------------------------------------------------------
 // Protocol: request validation + response serialization
 
-/// Parse and validate one request line. Every rejection is a structured
-/// [`ServeError`] so clients can match on `code` instead of scraping
-/// message strings.
+/// One fully validated v1/v2 request line, ready for the scheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedRequest {
+    /// validated prompt token ids
+    pub prompt: Vec<i32>,
+    /// tokens to decode, clamped to the server cap
+    pub max_tokens: usize,
+    /// generation parameters (server defaults merged with the request's
+    /// `params` object)
+    pub params: GenParams,
+    /// emit incremental token frames while decoding
+    pub stream: bool,
+}
+
+/// Parse and validate one request line (v1 bare lines or v2 with
+/// `params` / `stream`). Every rejection is a structured [`ServeError`]
+/// so clients can match on `code` instead of scraping message strings.
 pub fn parse_request(
     line: &str,
     tok: &Tokenizer,
     vocab: usize,
     opts: &ServeOptions,
-) -> std::result::Result<(Vec<i32>, usize), ServeError> {
+) -> std::result::Result<ParsedRequest, ServeError> {
     if line.len() > opts.max_line_bytes {
         return Err(ServeError::new(
             "oversized",
@@ -164,20 +211,7 @@ pub fn parse_request(
         let arr = toks
             .as_arr()
             .map_err(|_| ServeError::new("bad_request", "'tokens' must be an array"))?;
-        let mut prompt = Vec::with_capacity(arr.len());
-        for t in arr {
-            let x = t.as_f64().map_err(|_| {
-                ServeError::new("bad_token", "token ids must be integers")
-            })?;
-            if x.fract() != 0.0 || x < 0.0 || x >= vocab as f64 {
-                return Err(ServeError::new(
-                    "bad_token",
-                    format!("token id {x} outside [0, {vocab})"),
-                ));
-            }
-            prompt.push(x as i32);
-        }
-        prompt
+        parse_token_ids(arr, vocab, "bad_token", "token")?
     } else if let Some(text) = req.get("prompt") {
         let s = text
             .as_str()
@@ -192,7 +226,152 @@ pub fn parse_request(
             "empty prompt: nothing to condition the decode on",
         ));
     }
-    Ok((prompt, max_tokens))
+    // a request WITHOUT a params object inherits the server defaults; a
+    // request WITH one is self-contained, starting from the greedy
+    // baseline — so `"params": {}` is the documented way to force greedy
+    // on a server launched with sampling defaults (explicit
+    // `"temperature": 0` stays rejected by contract)
+    let params = match req.get("params") {
+        None => opts.defaults.clone(),
+        Some(p) => parse_params(p, tok, vocab)?,
+    };
+    let stream = match req.get("stream") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .map_err(|_| ServeError::new("bad_request", "'stream' must be a boolean"))?,
+    };
+    Ok(ParsedRequest { prompt, max_tokens, params, stream })
+}
+
+/// Validate a JSON array of token ids (rejects non-integers, negatives,
+/// and out-of-vocab ids). `code` is the structured error class for
+/// rejections; `what` names the field in error messages.
+fn parse_token_ids(
+    arr: &[Json],
+    vocab: usize,
+    code: &'static str,
+    what: &str,
+) -> std::result::Result<Vec<i32>, ServeError> {
+    let mut out = Vec::with_capacity(arr.len());
+    for t in arr {
+        let x = t
+            .as_f64()
+            .map_err(|_| ServeError::new(code, format!("{what} ids must be integers")))?;
+        if x.fract() != 0.0 || x < 0.0 || x >= vocab as f64 {
+            return Err(ServeError::new(code, format!("{what} id {x} outside [0, {vocab})")));
+        }
+        out.push(x as i32);
+    }
+    Ok(out)
+}
+
+/// Validate a v2 `params` object against the sampling contract: explicit
+/// `temperature` must be finite and positive, `top_p` in (0, 1],
+/// `top_k >= 1`, stop lists bounded, and no unknown keys (a typo'd knob
+/// silently decoding greedily would be worse than a rejection). The
+/// object is self-contained: fields it omits take their greedy-baseline
+/// defaults, NOT the server's `--temperature ...` defaults — which makes
+/// an empty `"params": {}` the explicit greedy opt-out on a server
+/// launched with sampling defaults.
+fn parse_params(
+    obj: &Json,
+    tok: &Tokenizer,
+    vocab: usize,
+) -> std::result::Result<GenParams, ServeError> {
+    let bad = |msg: String| ServeError::new("bad_params", msg);
+    let pairs = obj
+        .as_obj()
+        .map_err(|_| bad("'params' must be an object".into()))?;
+    let mut p = GenParams::default();
+    for (key, v) in pairs {
+        match key.as_str() {
+            "temperature" => {
+                let t = v.as_f64().map_err(|_| bad("'temperature' must be a number".into()))?;
+                if !t.is_finite() || t <= 0.0 {
+                    return Err(bad(format!(
+                        "'temperature' must be finite and > 0, got {t} (send an empty \
+                         'params' object for greedy)"
+                    )));
+                }
+                p.temperature = t as f32;
+            }
+            "top_k" => {
+                let k = v
+                    .as_usize()
+                    .map_err(|_| bad("'top_k' must be a positive integer".into()))?;
+                if k == 0 {
+                    return Err(bad(
+                        "'top_k' must be >= 1 (omit it to sample the full vocabulary)".into(),
+                    ));
+                }
+                p.top_k = k;
+            }
+            "top_p" => {
+                let x = v.as_f64().map_err(|_| bad("'top_p' must be a number".into()))?;
+                if !(x > 0.0 && x <= 1.0) {
+                    return Err(bad(format!("'top_p' must be in (0, 1], got {x}")));
+                }
+                p.top_p = x as f32;
+            }
+            "repetition_penalty" => {
+                let x = v
+                    .as_f64()
+                    .map_err(|_| bad("'repetition_penalty' must be a number".into()))?;
+                if !x.is_finite() || x <= 0.0 {
+                    return Err(bad(format!(
+                        "'repetition_penalty' must be finite and > 0, got {x}"
+                    )));
+                }
+                p.repetition_penalty = x as f32;
+            }
+            "seed" => {
+                let s = v
+                    .as_usize()
+                    .map_err(|_| bad("'seed' must be a non-negative integer".into()))?;
+                p.seed = s as u64;
+            }
+            "stop_tokens" => {
+                let arr = v
+                    .as_arr()
+                    .map_err(|_| bad("'stop_tokens' must be an array of token ids".into()))?;
+                p.stop_tokens = parse_token_ids(arr, vocab, "bad_params", "stop token")?;
+            }
+            "stop" => {
+                let arr = v
+                    .as_arr()
+                    .map_err(|_| bad("'stop' must be an array of strings".into()))?;
+                let mut seqs = Vec::with_capacity(arr.len());
+                for s in arr {
+                    let text = s
+                        .as_str()
+                        .map_err(|_| bad("'stop' entries must be strings".into()))?;
+                    let seq = tok.encode(text);
+                    if seq.is_empty() {
+                        return Err(bad("'stop' entries must encode to at least one token".into()));
+                    }
+                    seqs.push(seq);
+                }
+                p.stop_sequences = seqs;
+            }
+            other => {
+                return Err(bad(format!("unknown sampling parameter '{other}'")));
+            }
+        }
+    }
+    // caps (stop-list sizes and the like) and cross-field invariants
+    p.validate().map_err(|e| bad(e.to_string()))?;
+    Ok(p)
+}
+
+/// One streaming token frame: `{"token": t, "index": i, "text": "word"}`.
+fn format_frame(index: usize, token: i32, tok: &Tokenizer) -> String {
+    Json::obj(vec![
+        ("token", Json::num(token as f64)),
+        ("index", Json::num(index as f64)),
+        ("text", Json::str(tok.decode(&[token]))),
+    ])
+    .to_string()
 }
 
 fn format_response(result: &std::result::Result<Decoded, ServeError>, tok: &Tokenizer) -> String {
@@ -437,12 +616,14 @@ fn reader_loop(
         seq += 1;
         progress.issued.store(seq, Ordering::Release);
         match parsed {
-            Ok((prompt, max_tokens)) => {
+            Ok(ParsedRequest { prompt, max_tokens, params, stream }) => {
                 let req = DecodeRequest {
                     conn,
                     seq: this,
                     prompt,
                     max_tokens,
+                    params,
+                    stream,
                     enqueued: Instant::now(),
                 };
                 if req_tx.send(req).is_err() {
@@ -465,12 +646,25 @@ fn reader_loop(
     crate::debug!("connection {peer}: reader closed after {seq} requests");
 }
 
+/// One reorder-buffer entry: token frames buffered for a not-yet-current
+/// request, plus its terminal response once the scheduler produced it.
+#[derive(Default)]
+struct PendingResp {
+    frames: Vec<(usize, i32)>,
+    result: Option<std::result::Result<Decoded, ServeError>>,
+}
+
 /// Per-connection writer: responses arrive in completion order (the
 /// scheduler retires short requests before long ones); a reorder buffer
-/// restores per-connection request order before writing. The buffer is
-/// bounded by `max_pending`: a connection that racks up that many
-/// buffered responses behind a missing sequence number (e.g. error spam
-/// pipelined behind a long decode) is closed instead of growing it.
+/// restores per-connection request order before writing. Streaming
+/// frames for the *current* request pass straight through; frames for a
+/// later request buffer in its reorder entry and flush the moment it
+/// becomes current — so frames stay in index order and always precede
+/// their terminal response, while responses stay in request order. The
+/// buffer is bounded by `max_pending` entries: a connection that racks
+/// up that many buffered requests behind a missing sequence number (e.g.
+/// error spam pipelined behind a long decode) is closed instead of
+/// growing it.
 fn writer_loop(
     mut stream: TcpStream,
     conn: u64,
@@ -480,9 +674,14 @@ fn writer_loop(
     progress: &ConnProgress,
     max_pending: usize,
 ) {
-    let mut pending: BTreeMap<u64, std::result::Result<Decoded, ServeError>> = BTreeMap::new();
+    let mut pending: BTreeMap<u64, PendingResp> = BTreeMap::new();
     let mut next = 0u64;
     let mut end: Option<u64> = None;
+    let write_line = |stream: &mut TcpStream, body: String| -> bool {
+        stream.write_all(body.as_bytes()).is_ok()
+            && stream.write_all(b"\n").is_ok()
+            && stream.flush().is_ok()
+    };
     'conn: loop {
         if let Some(e) = end {
             if next >= e {
@@ -495,14 +694,36 @@ fn writer_loop(
         };
         match msg {
             WriterMsg::Done { next_seq } => end = Some(next_seq),
+            WriterMsg::Frame { seq, index, token } => {
+                if seq == next {
+                    // current request: stream the frame immediately (any
+                    // earlier frames for `next` were flushed when it
+                    // became current, so index order is preserved)
+                    if !write_line(&mut stream, format_frame(index, token, tok)) {
+                        break 'conn;
+                    }
+                } else {
+                    pending.entry(seq).or_default().frames.push((index, token));
+                }
+            }
             WriterMsg::Resp { seq, result } => {
-                pending.insert(seq, result);
-                while let Some(result) = pending.remove(&next) {
-                    let body = format_response(&result, tok);
-                    if stream.write_all(body.as_bytes()).is_err()
-                        || stream.write_all(b"\n").is_err()
-                        || stream.flush().is_err()
-                    {
+                pending.entry(seq).or_default().result = Some(result);
+                // drain everything that is now writable, flushing each
+                // entry's buffered frames before its terminal response
+                while let Some(entry) = pending.get_mut(&next) {
+                    for (index, token) in std::mem::take(&mut entry.frames) {
+                        if !write_line(&mut stream, format_frame(index, token, tok)) {
+                            break 'conn;
+                        }
+                    }
+                    let Some(result) = entry.result.take() else {
+                        // frames flushed but the request is still
+                        // decoding: it is now current, future frames
+                        // pass straight through
+                        break;
+                    };
+                    pending.remove(&next);
+                    if !write_line(&mut stream, format_response(&result, tok)) {
                         break 'conn;
                     }
                     next += 1;
@@ -510,7 +731,7 @@ fn writer_loop(
                 }
                 if pending.len() > max_pending.max(1) {
                     crate::warn!(
-                        "connection {conn}: {} responses buffered out of order; closing",
+                        "connection {conn}: {} requests buffered out of order; closing",
                         pending.len()
                     );
                     break;
@@ -599,22 +820,121 @@ mod tests {
         let tok = Tokenizer::new(64);
         let o = opts();
         let text = tok.decode(&[3, 9, 2]);
-        let (p, n) =
-            parse_request(&format!(r#"{{"prompt":"{text}","max_tokens":4}}"#), &tok, 64, &o)
-                .unwrap();
-        assert_eq!(p, vec![3, 9, 2]);
-        assert_eq!(n, 4);
-        let (p, n) = parse_request(r#"{"tokens":[0,5,63]}"#, &tok, 64, &o).unwrap();
-        assert_eq!(p, vec![0, 5, 63]);
-        assert_eq!(n, 16); // default
+        let r = parse_request(&format!(r#"{{"prompt":"{text}","max_tokens":4}}"#), &tok, 64, &o)
+            .unwrap();
+        assert_eq!(r.prompt, vec![3, 9, 2]);
+        assert_eq!(r.max_tokens, 4);
+        // a bare v1 line is greedy, non-streaming
+        assert!(r.params.is_greedy());
+        assert!(!r.stream);
+        let r = parse_request(r#"{"tokens":[0,5,63]}"#, &tok, 64, &o).unwrap();
+        assert_eq!(r.prompt, vec![0, 5, 63]);
+        assert_eq!(r.max_tokens, 16); // default
     }
 
     #[test]
     fn parse_clamps_max_tokens_to_cap() {
         let tok = Tokenizer::new(64);
-        let (_, n) =
+        let r =
             parse_request(r#"{"tokens":[1],"max_tokens":100000}"#, &tok, 64, &opts()).unwrap();
-        assert_eq!(n, 32);
+        assert_eq!(r.max_tokens, 32);
+    }
+
+    #[test]
+    fn parse_v2_params_and_stream() {
+        let tok = Tokenizer::new(64);
+        let o = opts();
+        let line = r#"{"tokens":[1,2],"max_tokens":4,"stream":true,
+            "params":{"temperature":0.8,"top_k":5,"top_p":0.9,
+                      "repetition_penalty":1.25,"seed":7,
+                      "stop_tokens":[3]}}"#;
+        let r = parse_request(line, &tok, 64, &o).unwrap();
+        assert!(r.stream);
+        assert_eq!(
+            r.params,
+            GenParams {
+                temperature: 0.8,
+                top_k: 5,
+                top_p: 0.9,
+                repetition_penalty: 1.25,
+                seed: 7,
+                stop_tokens: vec![3],
+                ..GenParams::default()
+            }
+        );
+        // text stop sequences are tokenized server-side
+        let stop_text = tok.decode(&[4, 5]);
+        let line = format!(r#"{{"tokens":[1],"params":{{"stop":["{stop_text}"]}}}}"#);
+        let r = parse_request(&line, &tok, 64, &o).unwrap();
+        assert_eq!(r.params.stop_sequences, vec![vec![4, 5]]);
+        // params omitted entirely → server defaults flow in
+        let with_defaults = ServeOptions {
+            defaults: GenParams { temperature: 0.5, seed: 3, ..GenParams::default() },
+            ..opts()
+        };
+        let r = parse_request(r#"{"tokens":[1]}"#, &tok, 64, &with_defaults).unwrap();
+        assert_eq!(r.params.temperature, 0.5);
+        assert_eq!(r.params.seed, 3);
+        // ... but an explicit params object is self-contained: an empty
+        // one is the greedy opt-out on a sampling-defaults server
+        let r = parse_request(r#"{"tokens":[1],"params":{}}"#, &tok, 64, &with_defaults).unwrap();
+        assert!(r.params.is_greedy());
+        assert_eq!(r.params, GenParams::default());
+    }
+
+    #[test]
+    fn parse_rejects_bad_params_with_codes() {
+        let tok = Tokenizer::new(64);
+        let o = opts();
+        let code = |params: &str| {
+            let line = format!(r#"{{"tokens":[1],"params":{params}}}"#);
+            parse_request(&line, &tok, 64, &o).unwrap_err().code
+        };
+        // non-positive / non-finite temperature (1e999 parses to +inf)
+        assert_eq!(code(r#"{"temperature":0}"#), "bad_params");
+        assert_eq!(code(r#"{"temperature":-1}"#), "bad_params");
+        assert_eq!(code(r#"{"temperature":1e999}"#), "bad_params");
+        assert_eq!(code(r#"{"temperature":"hot"}"#), "bad_params");
+        // top_p outside (0, 1]
+        assert_eq!(code(r#"{"top_p":0}"#), "bad_params");
+        assert_eq!(code(r#"{"top_p":1.5}"#), "bad_params");
+        // top_k == 0 (omit it to keep the full vocabulary)
+        assert_eq!(code(r#"{"top_k":0}"#), "bad_params");
+        assert_eq!(code(r#"{"top_k":2.5}"#), "bad_params");
+        // shaping knobs without temperature would be silently ignored by
+        // greedy selection — rejected rather than carried
+        assert_eq!(code(r#"{"top_k":5}"#), "bad_params");
+        assert_eq!(code(r#"{"top_p":0.9}"#), "bad_params");
+        assert_eq!(code(r#"{"repetition_penalty":1.5}"#), "bad_params");
+        assert_eq!(code(r#"{"repetition_penalty":0}"#), "bad_params");
+        assert_eq!(code(r#"{"seed":-1}"#), "bad_params");
+        // oversized / invalid stop lists
+        let many: Vec<String> = (0..20).map(|i| i.to_string()).collect();
+        assert_eq!(code(&format!(r#"{{"stop_tokens":[{}]}}"#, many.join(","))), "bad_params");
+        assert_eq!(code(r#"{"stop_tokens":[99]}"#), "bad_params"); // out of vocab
+        let spam: Vec<String> = (0..9).map(|_| r#""ba""#.to_string()).collect();
+        assert_eq!(code(&format!(r#"{{"stop":[{}]}}"#, spam.join(","))), "bad_params");
+        assert_eq!(code(r#"{"stop":[""]}"#), "bad_params");
+        // unknown keys are rejected, not silently ignored
+        assert_eq!(code(r#"{"temprature":0.8}"#), "bad_params");
+        // params must be an object; stream must be a boolean
+        assert_eq!(
+            parse_request(r#"{"tokens":[1],"params":3}"#, &tok, 64, &o).unwrap_err().code,
+            "bad_params"
+        );
+        assert_eq!(
+            parse_request(r#"{"tokens":[1],"stream":"yes"}"#, &tok, 64, &o).unwrap_err().code,
+            "bad_request"
+        );
+    }
+
+    #[test]
+    fn frame_shape() {
+        let tok = Tokenizer::new(64);
+        let f = Json::parse(&format_frame(2, 7, &tok)).unwrap();
+        assert_eq!(f.req("token").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(f.req("index").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(f.req("text").unwrap().as_str().unwrap(), tok.decode(&[7]));
     }
 
     #[test]
@@ -683,6 +1003,50 @@ mod tests {
         assert!(!registry.contains(1));
         // the exit sentinel stops the reader from waiting on this writer
         assert_eq!(progress.written.load(Ordering::Acquire), u64::MAX);
+        drop(client);
+    }
+
+    #[test]
+    fn writer_buffers_frames_for_later_requests() {
+        use std::sync::mpsc::sync_channel;
+        // frames of request 1 arrive while request 0 is still decoding:
+        // they must buffer and flush — in order, before request 1's
+        // terminal response — once request 0's response is written
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_stream, _) = listener.accept().unwrap();
+        let registry = Registry::default();
+        let (tx, rx) = sync_channel(16);
+        registry.register(1, tx.clone(), None);
+        let tok = Tokenizer::new(16);
+        let progress = ConnProgress::default();
+        let lines = std::thread::scope(|s| {
+            let h =
+                s.spawn(|| writer_loop(server_stream, 1, rx, &registry, &tok, &progress, 8));
+            let ok = |tokens: Vec<i32>| {
+                Ok(Decoded { tokens, latency_ms: 1.0, queue_ms: 0.5 })
+            };
+            tx.send(WriterMsg::Frame { seq: 1, index: 0, token: 4 }).unwrap();
+            tx.send(WriterMsg::Frame { seq: 1, index: 1, token: 5 }).unwrap();
+            tx.send(WriterMsg::Resp { seq: 1, result: ok(vec![4, 5]) }).unwrap();
+            tx.send(WriterMsg::Resp { seq: 0, result: ok(vec![9]) }).unwrap();
+            tx.send(WriterMsg::Done { next_seq: 2 }).unwrap();
+            let mut reader = BufReader::new(client.try_clone().unwrap());
+            let mut lines = vec![];
+            for _ in 0..4 {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                lines.push(Json::parse(&line).unwrap());
+            }
+            h.join().unwrap();
+            lines
+        });
+        // request 0's response, then request 1's frames, then its response
+        assert_eq!(lines[0].req("tokens").unwrap().usize_arr().unwrap(), vec![9]);
+        assert_eq!(lines[1].req("token").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(lines[2].req("token").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(lines[3].req("tokens").unwrap().usize_arr().unwrap(), vec![4, 5]);
         drop(client);
     }
 

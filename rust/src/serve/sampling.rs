@@ -1,0 +1,410 @@
+//! Pluggable token selection for the generation API v2.
+//!
+//! The decode core ([`super::batch`]) is *logits-out*: a
+//! [`StepBackend`](super::batch::StepBackend) step returns one raw
+//! `[vocab]` logits row per slot and never picks a token. Everything
+//! that turns a logits row into the next token id lives here:
+//!
+//! * [`GenParams`] — per-request generation parameters, carried from the
+//!   wire protocol (`"params": {...}`) through the scheduler into each
+//!   [`DecodeSlot`](super::batch::DecodeSlot). The default is greedy:
+//!   `temperature == 0` selects the NaN-safe argmax, bit-identical to
+//!   the pre-v2 decode path.
+//! * [`Sampler`] — the per-slot selection state: the parameters plus a
+//!   deterministic [`Rng`] seeded from `GenParams::seed`. A slot's
+//!   sampler consumes exactly one uniform draw per sampled token, so the
+//!   same seed over the same logits sequence reproduces the same tokens
+//!   — across runs, and identically for batched vs sequential decode
+//!   (the scheduler carries each slot's sampler across micro-batched
+//!   steps; batch composition never touches it).
+//!
+//! Selection pipeline (applied in this order, skipped entirely for
+//! greedy): repetition penalty over the visible token window → divide by
+//! `temperature` → keep the `top_k` highest logits → keep the smallest
+//! nucleus of cumulative probability `top_p` → sample from the
+//! renormalized remainder. Masking is applied *after* the penalty, so a
+//! penalized-but-masked id can never be selected.
+//!
+//! Stop conditions ([`GenParams::stop_tokens`] /
+//! [`GenParams::stop_sequences`]) apply to every mode, greedy included:
+//! a stop token ends the request without being emitted; a stop sequence
+//! ends the request with the matched tokens included in the output (so
+//! streamed token frames always concatenate to the final response).
+
+use anyhow::{bail, Result};
+
+use super::batch::argmax;
+use crate::util::rng::Rng;
+
+/// Protocol cap on `stop_tokens` entries per request.
+pub const MAX_STOP_TOKENS: usize = 16;
+/// Protocol cap on stop sequences per request.
+pub const MAX_STOP_SEQS: usize = 8;
+/// Protocol cap on the token length of one stop sequence.
+pub const MAX_STOP_SEQ_TOKENS: usize = 16;
+
+/// Per-request generation parameters.
+///
+/// The default is pure greedy decoding — argmax over the logits row,
+/// token-identical to the v1 protocol — with no stop conditions. The
+/// shaping knobs (`top_k`, `top_p`, `repetition_penalty`) require
+/// `temperature > 0`: [`GenParams::validate`] rejects a knob that greedy
+/// selection would silently ignore. The stop conditions apply in every
+/// mode, and `seed` is carried harmlessly (greedy consumes no
+/// randomness).
+///
+/// ```
+/// use nvfp4_faar::serve::GenParams;
+/// assert!(GenParams::default().is_greedy());
+/// assert!(!GenParams { temperature: 0.8, ..GenParams::default() }.is_greedy());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenParams {
+    /// softmax temperature; `0` selects greedy argmax decoding
+    pub temperature: f32,
+    /// keep only the `top_k` highest logits before sampling; `0` keeps all
+    pub top_k: usize,
+    /// keep the smallest set of tokens with cumulative probability
+    /// `>= top_p` (nucleus sampling); `1` keeps all
+    pub top_p: f32,
+    /// divide (positive) / multiply (negative) the logits of tokens
+    /// already visible in the decode window by this factor; `1` disables
+    pub repetition_penalty: f32,
+    /// RNG seed for the request's sampler (reproducibility contract)
+    pub seed: u64,
+    /// token ids that end the request when selected (not emitted)
+    pub stop_tokens: Vec<i32>,
+    /// token sequences that end the request once the output ends with
+    /// one of them (the matched tokens stay in the output)
+    pub stop_sequences: Vec<Vec<i32>>,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            stop_sequences: Vec::new(),
+        }
+    }
+}
+
+impl GenParams {
+    /// Greedy decoding (the default).
+    pub fn greedy() -> GenParams {
+        GenParams::default()
+    }
+
+    /// Temperature sampling with a seed, everything else default.
+    pub fn sampled(temperature: f32, seed: u64) -> GenParams {
+        GenParams { temperature, seed, ..GenParams::default() }
+    }
+
+    /// True when selection is the NaN-safe argmax (`temperature == 0`).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// True when selecting `t` should end the request (without emitting).
+    pub fn is_stop_token(&self, t: i32) -> bool {
+        self.stop_tokens.contains(&t)
+    }
+
+    /// True when the emitted output now ends with a stop sequence.
+    pub fn stops_output(&self, out: &[i32]) -> bool {
+        self.stop_sequences.iter().any(|s| !s.is_empty() && out.ends_with(s))
+    }
+
+    /// Core invariants every carried parameter set must satisfy; the
+    /// protocol boundary additionally rejects an *explicit*
+    /// `temperature <= 0` or `top_k == 0` (omitting them is how a client
+    /// asks for greedy / unrestricted).
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("temperature must be a finite number > 0 (omit it for greedy)");
+        }
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            bail!("top_p must be in (0, 1]");
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            bail!("repetition_penalty must be a finite number > 0");
+        }
+        // greedy selection is pure argmax; a shaping knob that would be
+        // silently ignored is rejected, not carried (stop conditions and
+        // the seed are fine — stops apply in every mode, the seed is
+        // just unused randomness)
+        if self.is_greedy()
+            && (self.top_k != 0 || self.top_p != 1.0 || self.repetition_penalty != 1.0)
+        {
+            bail!("top_k/top_p/repetition_penalty require temperature > 0 (greedy ignores them)");
+        }
+        if self.stop_tokens.len() > MAX_STOP_TOKENS {
+            bail!("at most {MAX_STOP_TOKENS} stop_tokens per request");
+        }
+        if self.stop_sequences.len() > MAX_STOP_SEQS {
+            bail!("at most {MAX_STOP_SEQS} stop sequences per request");
+        }
+        for s in &self.stop_sequences {
+            if s.is_empty() {
+                bail!("stop sequences must be non-empty");
+            }
+            if s.len() > MAX_STOP_SEQ_TOKENS {
+                bail!("stop sequences are capped at {MAX_STOP_SEQ_TOKENS} tokens");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-slot token selection: [`GenParams`] plus the request's
+/// deterministic RNG stream. One `Sampler` lives inside each
+/// [`DecodeSlot`](super::batch::DecodeSlot) for the slot's whole
+/// lifetime, so selection state survives micro-batched scheduling
+/// exactly as it would sequential decoding.
+///
+/// ```
+/// use nvfp4_faar::serve::{GenParams, Sampler};
+/// let p = GenParams { temperature: 0.7, seed: 9, ..GenParams::default() };
+/// let mut a = Sampler::new(p.clone());
+/// let mut b = Sampler::new(p);
+/// let row = [0.3f32, 1.9, 0.2, 1.1];
+/// assert_eq!(a.select(&row, &[]), b.select(&row, &[]));
+/// ```
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: GenParams,
+    rng: Rng,
+    // Reusable per-select scratch: the sampler lives in the slot for the
+    // request's lifetime and runs on the single scheduler thread, so the
+    // hot loop must not reallocate vocab-sized buffers per token.
+    cand: Vec<(usize, f32)>,
+    probs: Vec<f64>,
+    seen: Vec<bool>,
+}
+
+impl Sampler {
+    /// A sampler over `params`, its RNG seeded from `params.seed`.
+    pub fn new(params: GenParams) -> Sampler {
+        let rng = Rng::new(params.seed);
+        Sampler { params, rng, cand: Vec::new(), probs: Vec::new(), seen: Vec::new() }
+    }
+
+    /// The request parameters this sampler applies.
+    pub fn params(&self) -> &GenParams {
+        &self.params
+    }
+
+    /// Select the next token id from a logits row. `history` is the
+    /// token window the model conditioned on (prompt tail + emitted
+    /// tokens) — the repetition-penalty support. Greedy parameters take
+    /// the NaN-safe [`argmax`] path and consume no randomness; sampling
+    /// parameters consume exactly one uniform draw per call.
+    pub fn select(&mut self, logits: &[f32], history: &[i32]) -> usize {
+        if self.params.is_greedy() {
+            return argmax(logits);
+        }
+        let (temp, top_k, top_p, penalty) = (
+            self.params.temperature as f64,
+            self.params.top_k,
+            self.params.top_p,
+            self.params.repetition_penalty,
+        );
+        // candidate set: NaN logits are dropped (same policy as argmax —
+        // a NaN is a model bug, not a reason to fail the request)
+        let cand = &mut self.cand;
+        cand.clear();
+        cand.extend(
+            logits.iter().enumerate().filter(|(_, v)| !v.is_nan()).map(|(i, &v)| (i, v)),
+        );
+        if cand.is_empty() {
+            return 0;
+        }
+        // repetition penalty (CTRL rule) over the visible window,
+        // applied BEFORE top-k/top-p so masking bounds what the penalty
+        // can surface
+        if penalty != 1.0 {
+            let seen = &mut self.seen;
+            seen.clear();
+            seen.resize(logits.len(), false);
+            for &t in history {
+                if t >= 0 && (t as usize) < seen.len() {
+                    seen[t as usize] = true;
+                }
+            }
+            for (i, v) in cand.iter_mut() {
+                if seen[*i] {
+                    *v = if *v > 0.0 { *v / penalty } else { *v * penalty };
+                }
+            }
+        }
+        // top-k: keep the k highest logits (descending partial select)
+        let k = if top_k > 0 { top_k.min(cand.len()) } else { cand.len() };
+        if k < cand.len() {
+            cand.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
+            cand.truncate(k);
+        }
+        // only the nucleus truncation needs the candidates in descending
+        // order — a plain weighted draw does not, so temperature-only
+        // sampling skips the O(V log V) sort on the scheduler thread
+        let m = if top_p < 1.0 {
+            cand.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
+            cand[0].1
+        } else {
+            cand.iter().map(|&(_, v)| v).fold(f32::NEG_INFINITY, f32::max)
+        };
+        // temperature-scaled softmax, max-subtracted for stability; the
+        // f64 accumulation keeps tiny temperatures (→ greedy) exact
+        let probs = &mut self.probs;
+        probs.clear();
+        probs.extend(cand.iter().map(|(_, v)| (((*v - m) as f64) / temp).exp()));
+        // top-p: smallest prefix of the descending distribution whose
+        // cumulative mass reaches top_p
+        if top_p < 1.0 {
+            let total: f64 = probs.iter().sum();
+            let mut cum = 0.0;
+            let mut keep = probs.len();
+            for (i, pr) in probs.iter().enumerate() {
+                cum += pr / total.max(f64::MIN_POSITIVE);
+                if cum >= top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            cand.truncate(keep);
+            probs.truncate(keep);
+        }
+        // one uniform draw over the renormalized remainder
+        let total: f64 = probs.iter().sum();
+        if total <= 0.0 {
+            // every candidate underflowed (enormous logit gap at a tiny
+            // temperature): fall back to the best candidate — the argmax
+            return cand
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|&(i, _)| i)
+                .unwrap_or(0);
+        }
+        let mut x = self.rng.f64() * total;
+        for ((i, _), pr) in cand.iter().zip(probs.iter()) {
+            // a zero-mass candidate (underflowed exp) can never win the
+            // draw, even when x lands exactly on 0
+            if *pr <= 0.0 {
+                continue;
+            }
+            x -= pr;
+            if x <= 0.0 {
+                return *i;
+            }
+        }
+        cand.last().map(|(i, _)| *i).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_matches_argmax_including_nan_rows() {
+        let mut s = Sampler::new(GenParams::default());
+        for row in [
+            vec![0.1f32, 3.0, 2.0],
+            vec![1.0, f32::NAN, 3.0, 2.0],
+            vec![f32::NAN, f32::NAN],
+            vec![],
+        ] {
+            assert_eq!(s.select(&row, &[]), argmax(&row));
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic() {
+        let p =
+            GenParams { temperature: 1.2, top_k: 3, top_p: 0.9, seed: 17, ..GenParams::default() };
+        let mut a = Sampler::new(p.clone());
+        let mut b = Sampler::new(p.clone());
+        let mut c = Sampler::new(GenParams { seed: 18, ..p });
+        let row: Vec<f32> = (0..32).map(|i| ((i * 37 % 11) as f32) * 0.3).collect();
+        let picks_a: Vec<usize> = (0..20).map(|_| a.select(&row, &[1, 2])).collect();
+        let picks_b: Vec<usize> = (0..20).map(|_| b.select(&row, &[1, 2])).collect();
+        let picks_c: Vec<usize> = (0..20).map(|_| c.select(&row, &[1, 2])).collect();
+        assert_eq!(picks_a, picks_b);
+        assert_ne!(picks_a, picks_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let p = GenParams { temperature: 2.0, top_k: 1, seed: 5, ..GenParams::default() };
+        let mut s = Sampler::new(p);
+        let row = [0.4f32, 2.5, 1.1, 2.4];
+        for _ in 0..10 {
+            assert_eq!(s.select(&row, &[]), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_temperature_converges_to_greedy() {
+        let p = GenParams { temperature: 1e-6, seed: 3, ..GenParams::default() };
+        let mut s = Sampler::new(p);
+        let row = [0.1f32, 0.9, 0.3, 0.89];
+        for _ in 0..20 {
+            assert_eq!(s.select(&row, &[]), 1);
+        }
+    }
+
+    #[test]
+    fn stop_helpers() {
+        let p = GenParams {
+            stop_tokens: vec![7],
+            stop_sequences: vec![vec![1, 2]],
+            ..GenParams::default()
+        };
+        assert!(p.is_stop_token(7));
+        assert!(!p.is_stop_token(8));
+        assert!(p.stops_output(&[9, 1, 2]));
+        assert!(!p.stops_output(&[1, 2, 9]));
+        assert!(!p.stops_output(&[2]));
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let ok = GenParams::default();
+        assert!(ok.validate().is_ok());
+        let bad = |f: fn(&mut GenParams)| {
+            let mut p = GenParams::default();
+            f(&mut p);
+            p.validate().is_err()
+        };
+        assert!(bad(|p| p.temperature = f32::NAN));
+        assert!(bad(|p| p.temperature = f32::INFINITY));
+        assert!(bad(|p| p.temperature = -0.5));
+        assert!(bad(|p| p.top_p = 0.0));
+        assert!(bad(|p| p.top_p = 1.5));
+        assert!(bad(|p| p.top_p = f32::NAN));
+        assert!(bad(|p| p.repetition_penalty = 0.0));
+        assert!(bad(|p| p.repetition_penalty = f32::NAN));
+        // shaping knobs without temperature would be silently ignored by
+        // greedy argmax — rejected instead
+        assert!(bad(|p| p.top_k = 5));
+        assert!(bad(|p| p.top_p = 0.9));
+        assert!(bad(|p| p.repetition_penalty = 1.5));
+        let ok_with_temp = GenParams { temperature: 0.8, top_k: 5, ..GenParams::default() };
+        assert!(ok_with_temp.validate().is_ok());
+        // seed and stop conditions are legal in greedy mode
+        let greedy_stops = GenParams {
+            seed: 9,
+            stop_tokens: vec![1],
+            stop_sequences: vec![vec![2, 3]],
+            ..GenParams::default()
+        };
+        assert!(greedy_stops.validate().is_ok());
+        assert!(bad(|p| p.stop_tokens = vec![0; MAX_STOP_TOKENS + 1]));
+        assert!(bad(|p| p.stop_sequences = vec![vec![]]));
+        assert!(bad(|p| p.stop_sequences = vec![vec![1]; MAX_STOP_SEQS + 1]));
+        assert!(bad(|p| p.stop_sequences = vec![vec![1; MAX_STOP_SEQ_TOKENS + 1]]));
+    }
+}

@@ -34,6 +34,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batch::{decode_step, DecodeSlot, StepBackend};
+use super::sampling::GenParams;
 
 /// Serving engine knobs (`faar serve --max-batch 16 --queue-depth 128 ...`).
 #[derive(Clone, Debug)]
@@ -50,6 +51,10 @@ pub struct ServeOptions {
     pub read_timeout_ms: u64,
     /// max concurrently served connections (accept blocks beyond this)
     pub workers: usize,
+    /// generation parameters applied when a request carries no `params`
+    /// object (v1 lines, or v2 requests relying on server defaults) —
+    /// `faar serve --temperature 0.8 --top-p 0.9`; greedy by default
+    pub defaults: GenParams,
 }
 
 impl Default for ServeOptions {
@@ -61,6 +66,7 @@ impl Default for ServeOptions {
             max_line_bytes: 64 * 1024,
             read_timeout_ms: 30_000,
             workers: 64,
+            defaults: GenParams::default(),
         }
     }
 }
@@ -93,6 +99,11 @@ pub struct DecodeRequest {
     pub prompt: Vec<i32>,
     /// tokens to decode (already clamped to the server cap)
     pub max_tokens: usize,
+    /// validated generation parameters (defaults merged in by the
+    /// protocol layer)
+    pub params: GenParams,
+    /// emit incremental token frames while the request decodes
+    pub stream: bool,
     /// when the reader enqueued the request (latency accounting)
     pub enqueued: Instant,
 }
@@ -111,6 +122,17 @@ pub struct Decoded {
 /// What flows into a per-connection writer thread.
 #[derive(Debug)]
 pub enum WriterMsg {
+    /// One incremental token frame of a streaming request. Frames for a
+    /// given `seq` arrive in `index` order and always precede that
+    /// request's terminal [`WriterMsg::Resp`].
+    Frame {
+        /// reader-assigned per-connection sequence number
+        seq: u64,
+        /// zero-based position of the token in the request's output
+        index: usize,
+        /// the decoded token
+        token: i32,
+    },
     /// One response, tagged with its request sequence number.
     Resp {
         /// reader-assigned per-connection sequence number
@@ -219,6 +241,10 @@ struct SlotMeta {
     seq: u64,
     enqueued: Instant,
     started: Instant,
+    /// emit per-token frames while decoding
+    stream: bool,
+    /// output tokens already sent as frames
+    sent: usize,
 }
 
 /// Run the scheduler until the request queue disconnects (all readers and
@@ -291,6 +317,20 @@ pub fn run<B: StepBackend + ?Sized>(
             continue;
         }
 
+        // stream newly decoded tokens before retiring anything, so a
+        // request's final frame always precedes its terminal response.
+        // A failed frame send means the connection is gone — stop
+        // streaming it; the cancellation sweep reaps the slot next tick.
+        for (slot, m) in slots.iter().zip(meta.iter_mut()) {
+            while m.stream && m.sent < slot.out.len() {
+                if !send_frame(registry, m.conn, m.seq, m.sent, slot.out[m.sent]) {
+                    m.stream = false;
+                    break;
+                }
+                m.sent += 1;
+            }
+        }
+
         // retire finished slots immediately (continuous batching)
         for i in (0..slots.len()).rev() {
             if slots[i].done() {
@@ -336,7 +376,7 @@ fn admit(
         }
         return;
     }
-    match DecodeSlot::new(&req.prompt, req.max_tokens, seq_len) {
+    match DecodeSlot::with_params(&req.prompt, req.max_tokens, seq_len, req.params) {
         Ok(slot) => {
             slots.push(slot);
             meta.push(SlotMeta {
@@ -344,6 +384,8 @@ fn admit(
                 seq: req.seq,
                 enqueued: req.enqueued,
                 started,
+                stream: req.stream,
+                sent: 0,
             });
         }
         // the protocol layer validates first; this is the backstop
@@ -372,8 +414,20 @@ fn respond(
     seq: u64,
     result: Result<Decoded, ServeError>,
 ) -> bool {
+    deliver(registry, conn, WriterMsg::Resp { seq, result })
+}
+
+/// Route one streaming token frame to its connection's writer under the
+/// same never-block policy as [`respond`]: a streaming client that lets
+/// queue-depth frames pile up unread is force-disconnected rather than
+/// allowed to stall the scheduler.
+fn send_frame(registry: &Registry, conn: u64, seq: u64, index: usize, token: i32) -> bool {
+    deliver(registry, conn, WriterMsg::Frame { seq, index, token })
+}
+
+fn deliver(registry: &Registry, conn: u64, msg: WriterMsg) -> bool {
     match registry.sender(conn) {
-        Some(tx) => match tx.try_send(WriterMsg::Resp { seq, result }) {
+        Some(tx) => match tx.try_send(msg) {
             Ok(()) => true,
             Err(TrySendError::Full(_)) => {
                 crate::warn!(
@@ -395,7 +449,15 @@ mod tests {
     use std::sync::mpsc::sync_channel;
 
     fn req(conn: u64, seq: u64, prompt: Vec<i32>, max_tokens: usize) -> DecodeRequest {
-        DecodeRequest { conn, seq, prompt, max_tokens, enqueued: Instant::now() }
+        DecodeRequest {
+            conn,
+            seq,
+            prompt,
+            max_tokens,
+            params: GenParams::default(),
+            stream: false,
+            enqueued: Instant::now(),
+        }
     }
 
     #[test]
@@ -502,8 +564,8 @@ mod tests {
             self.inner.seq_len()
         }
 
-        fn logits(&self, slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
-            self.inner.logits(slots)
+        fn step(&self, slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.inner.step(slots)
         }
 
         fn release(&self, slot: &DecodeSlot) {
@@ -559,7 +621,7 @@ mod tests {
             fn seq_len(&self) -> usize {
                 self.0.seq_len()
             }
-            fn logits(&self, _slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
+            fn step(&self, _slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
                 anyhow::bail!("injected backend failure")
             }
             fn release(&self, slot: &DecodeSlot) {
@@ -578,6 +640,74 @@ mod tests {
         assert_eq!(failing.0.released().len(), 1, "failed slot was not released");
         match w_rx.recv().unwrap() {
             WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "backend"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn streaming_frames_precede_response_and_concatenate() {
+        let backend = SyntheticBackend::new(32, 8, 3);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(64);
+        registry.register(1, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        tx.send(DecodeRequest {
+            conn: 1,
+            seq: 0,
+            prompt: vec![4, 5],
+            max_tokens: 6,
+            params: GenParams::default(),
+            stream: true,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.completed, 1);
+        let mut streamed = vec![];
+        loop {
+            match w_rx.recv().unwrap() {
+                WriterMsg::Frame { seq: 0, index, token } => {
+                    assert_eq!(index, streamed.len(), "frames must arrive in order");
+                    streamed.push(token);
+                }
+                WriterMsg::Resp { seq: 0, result } => {
+                    let tokens = result.unwrap().tokens;
+                    assert_eq!(streamed, tokens, "frames must concatenate to the response");
+                    assert_eq!(tokens, generate_greedy(&backend, &[4, 5], 6).unwrap());
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_request_matches_sequential_generate() {
+        let backend = SyntheticBackend::new(32, 8, 21);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(16);
+        registry.register(1, w_tx, None);
+        let params = GenParams { temperature: 0.9, top_k: 8, seed: 77, ..GenParams::default() };
+        let (tx, rx) = sync_channel(4);
+        tx.send(DecodeRequest {
+            conn: 1,
+            seq: 0,
+            prompt: vec![2, 3],
+            max_tokens: 10,
+            params: params.clone(),
+            stream: false,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result, .. } => {
+                let expect =
+                    crate::serve::batch::generate(&backend, &[2, 3], 10, params).unwrap();
+                assert_eq!(result.unwrap().tokens, expect);
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -2,23 +2,28 @@
 //! TCP sockets, driven by the deterministic `SyntheticBackend` — no AOT
 //! artifacts or XLA backend needed, so these run everywhere (and in CI
 //! under a hard timeout: a deadlocked scheduler fails the build rather
-//! than hanging it).
+//! than hanging it). All wire traffic goes through the typed
+//! `serve::client` — the same client the load-generator bench uses — so
+//! the protocol has exactly one implementation on each side.
 //!
-//! The load-bearing assertion: responses produced by the micro-batching
-//! scheduler are token-identical to the sequential `generate_greedy`
-//! path for the same prompts.
+//! The load-bearing assertions: responses produced by the micro-batching
+//! scheduler are token-identical to the sequential `generate` /
+//! `generate_greedy` path for the same prompts and parameters, seeded
+//! sampling reproduces across runs, and streaming frames concatenate to
+//! the non-streaming response.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::time::Duration;
 
 use nvfp4_faar::formats::codec::FormatKind;
 use nvfp4_faar::infer::{
     native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
 };
-use nvfp4_faar::serve::{generate_greedy, serve_on, ServeOptions, SyntheticBackend};
+use nvfp4_faar::serve::client::{Client, ClientRequest, Completion};
+use nvfp4_faar::serve::{
+    generate, generate_greedy, serve_on, GenParams, ServeOptions, SyntheticBackend,
+};
 use nvfp4_faar::train::ParamStore;
-use nvfp4_faar::util::json::Json;
 
 const VOCAB: usize = 96;
 const SEQ_LEN: usize = 16;
@@ -27,43 +32,17 @@ fn backend() -> SyntheticBackend {
     SyntheticBackend::new(VOCAB, SEQ_LEN, 1234)
 }
 
-fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
-    let stream = TcpStream::connect(addr).expect("connect");
-    // tests must fail, not hang, if the server wedges
-    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
-    let reader = BufReader::new(stream.try_clone().expect("clone"));
-    (stream, reader)
+/// tests must fail, not hang, if the server wedges
+fn client(addr: SocketAddr) -> Client {
+    Client::connect_timeout(addr, Duration::from_secs(30)).expect("connect")
 }
 
-fn send_line(stream: &mut TcpStream, line: &str) {
-    stream.write_all(line.as_bytes()).expect("write");
-    stream.write_all(b"\n").expect("write");
+fn ok(reply: anyhow::Result<nvfp4_faar::serve::client::Reply>) -> Completion {
+    reply.expect("transport").expect("unexpected protocol error")
 }
 
-fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
-    let mut line = String::new();
-    reader.read_line(&mut line).expect("read");
-    assert!(!line.trim().is_empty(), "server closed the connection early");
-    Json::parse(&line).expect("response is JSON")
-}
-
-fn token_req(prompt: &[i32], max_tokens: usize) -> String {
-    let ids: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-    format!(r#"{{"tokens":[{}],"max_tokens":{}}}"#, ids.join(","), max_tokens)
-}
-
-fn tokens_of(v: &Json) -> Vec<i32> {
-    v.req("tokens")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|t| t.as_f64().unwrap() as i32)
-        .collect()
-}
-
-fn error_code(v: &Json) -> String {
-    v.req("error").unwrap().req("code").unwrap().as_str().unwrap().to_string()
+fn err_code(reply: anyhow::Result<nvfp4_faar::serve::client::Reply>) -> String {
+    reply.expect("transport").expect_err("expected a protocol error").code
 }
 
 #[test]
@@ -82,17 +61,17 @@ fn serve_interleaved_clients_match_sequential() {
         let handles: Vec<_> = (0..N)
             .map(|c| {
                 s.spawn(move || {
-                    let (mut stream, mut reader) = connect(addr);
+                    let mut cl = client(addr);
                     let mut outs = vec![];
                     for r in 0..REQS {
                         let prompt =
                             vec![((c * 11 + r * 5) % VOCAB) as i32, (c % 7) as i32 + 1, 7];
                         let max_tokens = 4 + (c + r) % 5;
-                        send_line(&mut stream, &token_req(&prompt, max_tokens));
-                        let v = read_json(&mut reader);
-                        assert!(v.get("error").is_none(), "unexpected error: {v:?}");
-                        assert!(v.req("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
-                        outs.push((prompt, max_tokens, tokens_of(&v)));
+                        let req =
+                            ClientRequest::tokens(prompt.clone()).max_tokens(max_tokens);
+                        let got = ok(cl.request(&req));
+                        assert!(got.queue_ms >= 0.0);
+                        outs.push((prompt, max_tokens, got.tokens));
                     }
                     outs
                 })
@@ -130,37 +109,162 @@ fn serve_malformed_oversized_and_invalid_requests() {
     };
 
     std::thread::scope(|s| {
-        let client = s.spawn(move || {
-            let (mut stream, mut reader) = connect(addr);
-            send_line(&mut stream, "this is not json");
-            assert_eq!(error_code(&read_json(&mut reader)), "bad_json");
-            send_line(&mut stream, r#"{"tokens":[9999]}"#);
-            assert_eq!(error_code(&read_json(&mut reader)), "bad_token");
-            send_line(&mut stream, r#"{"tokens":[-1],"max_tokens":4}"#);
-            assert_eq!(error_code(&read_json(&mut reader)), "bad_token");
-            send_line(&mut stream, r#"{"prompt":""}"#);
-            assert_eq!(error_code(&read_json(&mut reader)), "empty_prompt");
-            send_line(&mut stream, r#"{"max_tokens":4}"#);
-            assert_eq!(error_code(&read_json(&mut reader)), "bad_request");
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            let raw = |cl: &mut Client, line: &str| {
+                cl.send_raw(line).expect("send");
+                err_code(cl.read_reply())
+            };
+            assert_eq!(raw(&mut cl, "this is not json"), "bad_json");
+            assert_eq!(raw(&mut cl, r#"{"tokens":[9999]}"#), "bad_token");
+            assert_eq!(raw(&mut cl, r#"{"tokens":[-1],"max_tokens":4}"#), "bad_token");
+            assert_eq!(raw(&mut cl, r#"{"prompt":""}"#), "empty_prompt");
+            assert_eq!(raw(&mut cl, r#"{"max_tokens":4}"#), "bad_request");
             // oversized line: consumed and rejected, connection survives
-            send_line(&mut stream, &format!(r#"{{"prompt":"{}"}}"#, "x".repeat(600)));
-            assert_eq!(error_code(&read_json(&mut reader)), "oversized");
+            let long = format!(r#"{{"prompt":"{}"}}"#, "x".repeat(600));
+            assert_eq!(raw(&mut cl, &long), "oversized");
             // zero max_tokens: valid, completes empty
-            send_line(&mut stream, r#"{"tokens":[5],"max_tokens":0}"#);
-            let v = read_json(&mut reader);
-            assert!(v.get("error").is_none());
-            assert!(tokens_of(&v).is_empty());
+            let got = ok(cl.request(&ClientRequest::tokens(vec![5]).max_tokens(0)));
+            assert!(got.tokens.is_empty());
             // valid request afterwards still decodes, clamped to the cap
-            send_line(&mut stream, r#"{"tokens":[1,2],"max_tokens":100000}"#);
-            let v = read_json(&mut reader);
-            assert!(v.get("error").is_none(), "unexpected error: {v:?}");
-            tokens_of(&v)
+            ok(cl.request(&ClientRequest::tokens(vec![1, 2]).max_tokens(100000))).tokens
         });
         let stats = serve_on(&b, listener, Some(1), opts).unwrap();
-        let got = client.join().unwrap();
+        let got = cl.join().unwrap();
         assert_eq!(got, generate_greedy(&b, &[1, 2], 8).unwrap(), "cap-clamped decode");
         // 2 decoded requests completed; the rest were protocol rejections
         assert_eq!(stats.completed, 2);
+    });
+}
+
+/// Sampling parameters are validated at the protocol boundary: every
+/// malformed `params` object is rejected with a structured `bad_params`
+/// error and the connection keeps serving.
+#[test]
+fn serve_rejects_bad_sampling_params() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            let raw = |cl: &mut Client, params: &str| {
+                cl.send_raw(&format!(r#"{{"tokens":[1],"params":{params}}}"#)).expect("send");
+                err_code(cl.read_reply())
+            };
+            assert_eq!(raw(&mut cl, r#"{"temperature":0}"#), "bad_params");
+            assert_eq!(raw(&mut cl, r#"{"temperature":-0.5}"#), "bad_params");
+            assert_eq!(raw(&mut cl, r#"{"temperature":1e999}"#), "bad_params");
+            assert_eq!(raw(&mut cl, r#"{"top_p":0}"#), "bad_params");
+            assert_eq!(raw(&mut cl, r#"{"top_p":1.01}"#), "bad_params");
+            assert_eq!(raw(&mut cl, r#"{"top_k":0}"#), "bad_params");
+            let spam: Vec<String> = (0..17).map(|i| (i % VOCAB).to_string()).collect();
+            assert_eq!(
+                raw(&mut cl, &format!(r#"{{"stop_tokens":[{}]}}"#, spam.join(","))),
+                "bad_params"
+            );
+            assert_eq!(raw(&mut cl, r#"{"typo_knob":1}"#), "bad_params");
+            // the connection is still usable for a valid request
+            ok(cl.request(&ClientRequest::tokens(vec![3, 4]).max_tokens(4))).tokens
+        });
+        let stats = serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+        assert_eq!(cl.join().unwrap(), generate_greedy(&b, &[3, 4], 4).unwrap());
+        assert_eq!(stats.completed, 1);
+    });
+}
+
+/// The acceptance contract of the v2 API: a seeded sampled request is
+/// reproducible across runs (same seed → same tokens), diverges across
+/// seeds, matches the sequential `generate` reference exactly, and
+/// greedy v1 lines are untouched by any of it.
+#[test]
+fn serve_sampled_requests_are_seeded_and_reproducible() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            let sampled = ClientRequest::tokens(vec![2, 9])
+                .max_tokens(12)
+                .sampled(0.8, 42)
+                .top_p(0.9);
+            let a = ok(cl.request(&sampled)).tokens;
+            let b_ = ok(cl.request(&sampled)).tokens;
+            let other_seed = ok(cl.request(&sampled.clone().sampled(0.8, 43))).tokens;
+            let greedy = ok(cl.request(&ClientRequest::tokens(vec![2, 9]).max_tokens(12)));
+            (a, b_, other_seed, greedy.tokens)
+        });
+        serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+        let (a, b_, other_seed, greedy) = cl.join().unwrap();
+        assert_eq!(a, b_, "same seed must reproduce the same continuation");
+        assert_ne!(a, other_seed, "different seeds should diverge");
+        let params = GenParams { temperature: 0.8, top_p: 0.9, seed: 42, ..GenParams::default() };
+        assert_eq!(a, generate(&b, &[2, 9], 12, params).unwrap(), "server != sequential");
+        assert_eq!(greedy, generate_greedy(&b, &[2, 9], 12).unwrap(), "v1 greedy regressed");
+    });
+}
+
+/// `stream: true` emits one frame per token, in order, and the frames
+/// concatenate to exactly the tokens of the equivalent non-streaming
+/// response — for greedy and seeded sampling alike.
+#[test]
+fn serve_streaming_frames_concatenate_to_response() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            for req in [
+                ClientRequest::tokens(vec![4, 5]).max_tokens(9),
+                ClientRequest::tokens(vec![4, 5]).max_tokens(9).sampled(1.1, 7).top_k(20),
+            ] {
+                let reference = ok(cl.request(&req)).tokens;
+                let (frames, terminal) = cl.request_stream(&req).expect("stream transport");
+                let terminal = terminal.expect("unexpected protocol error");
+                let streamed: Vec<i32> = frames.iter().map(|f| f.token).collect();
+                assert_eq!(
+                    streamed, terminal.tokens,
+                    "frames must concatenate to the terminal response"
+                );
+                assert_eq!(terminal.tokens, reference, "streaming changed the decode");
+                for (i, f) in frames.iter().enumerate() {
+                    assert_eq!(f.index, i, "frames out of order");
+                }
+            }
+        });
+        serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+        cl.join().unwrap();
+    });
+}
+
+/// Server-side stop conditions over the wire: a stop token ends the
+/// request early (stop token excluded from the output).
+#[test]
+fn serve_stop_tokens_cut_the_continuation() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let greedy = generate_greedy(&b, &[6, 1], 12).unwrap();
+    // stop on the first token that does not occur earlier in the stream,
+    // so the stop cannot fire before the index we expect
+    let k = (1..greedy.len()).find(|&k| !greedy[..k].contains(&greedy[k])).unwrap();
+    let stop = greedy[k];
+
+    std::thread::scope(|s| {
+        let expect = &greedy[..k];
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            let mut req = ClientRequest::tokens(vec![6, 1]).max_tokens(12);
+            req.stop_tokens = vec![stop];
+            ok(cl.request(&req)).tokens
+        });
+        serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+        assert_eq!(cl.join().unwrap(), expect, "stop token did not cut the continuation");
     });
 }
 
@@ -172,31 +276,31 @@ fn serve_pipelined_responses_keep_request_order() {
     let opts = ServeOptions { max_batch: 4, ..ServeOptions::default() };
 
     std::thread::scope(|s| {
-        let client = s.spawn(move || {
-            let (mut stream, mut reader) = connect(addr);
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
             // fire everything before reading anything: completion order
             // differs (max_tokens vary) but response order must not
             let lens = [9usize, 1, 7, 2, 5];
             for (i, &n) in lens.iter().enumerate() {
-                send_line(&mut stream, &token_req(&[i as i32 + 1], n));
+                cl.send(&ClientRequest::tokens(vec![i as i32 + 1]).max_tokens(n))
+                    .expect("send");
                 if i == 2 {
                     // a malformed line in the middle keeps its position
-                    send_line(&mut stream, "{broken");
+                    cl.send_raw("{broken").expect("send");
                 }
             }
             let mut got = vec![];
             for i in 0..lens.len() + 1 {
-                let v = read_json(&mut reader);
                 if i == 3 {
-                    assert_eq!(error_code(&v), "bad_json", "error out of order");
+                    assert_eq!(err_code(cl.read_reply()), "bad_json", "error out of order");
                 } else {
-                    got.push(tokens_of(&v));
+                    got.push(ok(cl.read_reply()).tokens);
                 }
             }
             (lens, got)
         });
         serve_on(&b, listener, Some(1), opts).unwrap();
-        let (lens, got) = client.join().unwrap();
+        let (lens, got) = cl.join().unwrap();
         assert_eq!(got.len(), lens.len());
         for (i, (&n, tokens)) in lens.iter().zip(&got).enumerate() {
             let expect = generate_greedy(&b, &[i as i32 + 1], n).unwrap();
@@ -215,17 +319,14 @@ fn serve_disconnect_mid_decode_does_not_wedge_the_server() {
     std::thread::scope(|s| {
         s.spawn(move || {
             // fire a long decode and vanish without reading the response
-            let (mut stream, _reader) = connect(addr);
-            send_line(&mut stream, &token_req(&[3], 64));
-            let _ = stream.shutdown(Shutdown::Both);
+            let mut cl = client(addr);
+            cl.send(&ClientRequest::tokens(vec![3]).max_tokens(64)).expect("send");
+            cl.shutdown();
         });
         let survivor = s.spawn(move || {
             std::thread::sleep(Duration::from_millis(100));
-            let (mut stream, mut reader) = connect(addr);
-            send_line(&mut stream, &token_req(&[4, 5], 6));
-            let v = read_json(&mut reader);
-            assert!(v.get("error").is_none(), "unexpected error: {v:?}");
-            tokens_of(&v)
+            let mut cl = client(addr);
+            ok(cl.request(&ClientRequest::tokens(vec![4, 5]).max_tokens(6))).tokens
         });
         let stats = serve_on(&b, listener, Some(2), opts).unwrap();
         let got = survivor.join().unwrap();
@@ -265,7 +366,7 @@ fn serve_native_interleaved_clients_match_sequential() {
         let handles: Vec<_> = (0..N)
             .map(|c| {
                 s.spawn(move || {
-                    let (mut stream, mut reader) = connect(addr);
+                    let mut cl = client(addr);
                     let mut outs = vec![];
                     for r in 0..REQS {
                         let prompt = vec![
@@ -273,10 +374,9 @@ fn serve_native_interleaved_clients_match_sequential() {
                             ((c * 7 + 3) % vocab) as i32,
                         ];
                         let max_tokens = 3 + (c + r) % 4;
-                        send_line(&mut stream, &token_req(&prompt, max_tokens));
-                        let v = read_json(&mut reader);
-                        assert!(v.get("error").is_none(), "unexpected error: {v:?}");
-                        outs.push((prompt, max_tokens, tokens_of(&v)));
+                        let req =
+                            ClientRequest::tokens(prompt.clone()).max_tokens(max_tokens);
+                        outs.push((prompt, max_tokens, ok(cl.request(&req)).tokens));
                     }
                     outs
                 })
@@ -296,6 +396,38 @@ fn serve_native_interleaved_clients_match_sequential() {
     // every request's KV pages were freed as its slot retired
     assert_eq!(backend.kv_outstanding(), 0, "KV pages leaked across requests");
     assert_eq!(backend.cached_slots(), 0, "slot cache entries leaked");
+}
+
+/// Sampling + streaming through the NATIVE backend over real TCP: a
+/// seeded `temperature=0.8, top_p=0.9` request reproduces across
+/// requests, its stream frames concatenate to the non-streaming
+/// response, and no KV state leaks.
+#[test]
+fn serve_native_sampled_streaming_reproducible() {
+    let backend = native_backend(true);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let backend = &backend;
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            let req = ClientRequest::tokens(vec![9, 33]).max_tokens(6).sampled(0.8, 5).top_p(0.9);
+            let a = ok(cl.request(&req)).tokens;
+            let (frames, terminal) = cl.request_stream(&req).expect("stream transport");
+            let terminal = terminal.expect("unexpected protocol error");
+            let streamed: Vec<i32> = frames.iter().map(|f| f.token).collect();
+            assert_eq!(streamed, terminal.tokens);
+            assert_eq!(a, terminal.tokens, "seeded native sampling did not reproduce");
+            a
+        });
+        serve_on(backend, listener, Some(1), ServeOptions::default()).unwrap();
+        let got = cl.join().unwrap();
+        let params = GenParams { temperature: 0.8, top_p: 0.9, seed: 5, ..GenParams::default() };
+        assert_eq!(got, generate(backend, &[9, 33], 6, params).unwrap());
+    });
+    assert_eq!(backend.kv_outstanding(), 0);
+    assert_eq!(backend.cached_slots(), 0);
 }
 
 /// KV-cached decode and no-cache decode must be token-identical on the
@@ -325,16 +457,14 @@ fn serve_native_disconnect_frees_kv_pages() {
     let stats = std::thread::scope(|s| {
         let backend = &backend;
         s.spawn(move || {
-            let (mut stream, _reader) = connect(addr);
-            send_line(&mut stream, &token_req(&[3], 48));
-            let _ = stream.shutdown(Shutdown::Both);
+            let mut cl = client(addr);
+            cl.send(&ClientRequest::tokens(vec![3]).max_tokens(48)).expect("send");
+            cl.shutdown();
         });
         s.spawn(move || {
             std::thread::sleep(Duration::from_millis(100));
-            let (mut stream, mut reader) = connect(addr);
-            send_line(&mut stream, &token_req(&[4, 5], 4));
-            let v = read_json(&mut reader);
-            assert!(v.get("error").is_none(), "unexpected error: {v:?}");
+            let mut cl = client(addr);
+            ok(cl.request(&ClientRequest::tokens(vec![4, 5]).max_tokens(4)));
         });
         serve_on(backend, listener, Some(2), opts).unwrap()
     });
@@ -463,15 +593,12 @@ fn serve_slow_decode_outlives_read_timeout() {
     let opts = ServeOptions { read_timeout_ms: 100, ..ServeOptions::default() };
 
     std::thread::scope(|s| {
-        let client = s.spawn(move || {
-            let (mut stream, mut reader) = connect(addr);
-            send_line(&mut stream, &token_req(&[2], 64));
-            let v = read_json(&mut reader);
-            assert!(v.get("error").is_none(), "unexpected error: {v:?}");
-            tokens_of(&v)
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            ok(cl.request(&ClientRequest::tokens(vec![2]).max_tokens(64))).tokens
         });
         let stats = serve_on(&b, listener, Some(1), opts).unwrap();
-        let got = client.join().unwrap();
+        let got = cl.join().unwrap();
         assert_eq!(got, generate_greedy(&b, &[2], 64).unwrap());
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.cancelled, 0);
@@ -488,9 +615,9 @@ fn serve_idle_connection_times_out_and_server_drains() {
     std::thread::scope(|s| {
         s.spawn(move || {
             // connect, say nothing, hold the socket open past the timeout
-            let (stream, _reader) = connect(addr);
+            let cl = client(addr);
             std::thread::sleep(Duration::from_millis(800));
-            drop(stream);
+            drop(cl);
         });
         let t0 = std::time::Instant::now();
         let stats = serve_on(&b, listener, Some(1), opts).unwrap();

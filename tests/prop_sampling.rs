@@ -1,0 +1,309 @@
+//! Property tests for the generation API v2 samplers: seeded
+//! determinism, top-k / top-p support restriction, temperature → 0
+//! convergence to greedy, repetition penalty respecting the mask, and
+//! the batched-equals-sequential invariant under sampling. Pure rust,
+//! no artifacts — runs everywhere.
+
+use nvfp4_faar::serve::batch::{decode_step, generate, DecodeSlot};
+use nvfp4_faar::serve::{argmax, GenParams, Sampler, SyntheticBackend};
+use nvfp4_faar::util::prop::{check, check_msg};
+use nvfp4_faar::util::rng::Rng;
+
+const VOCAB: usize = 40;
+
+fn logits_row(rng: &mut Rng) -> Vec<f32> {
+    // continuous values: exact ties have measure ~0, so argmax-based
+    // reference checks are well-defined
+    (0..VOCAB).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+}
+
+fn random_params(rng: &mut Rng) -> GenParams {
+    GenParams {
+        temperature: rng.range_f64(0.05, 2.5) as f32,
+        top_k: if rng.bernoulli(0.5) { 1 + rng.below(VOCAB) } else { 0 },
+        top_p: if rng.bernoulli(0.5) { rng.range_f64(0.1, 1.0) as f32 } else { 1.0 },
+        repetition_penalty: if rng.bernoulli(0.5) { rng.range_f64(0.5, 2.0) as f32 } else { 1.0 },
+        seed: rng.next_u64(),
+        ..GenParams::default()
+    }
+}
+
+/// The CTRL repetition-penalty rule, reimplemented from the spec as the
+/// test oracle (DESIGN.md §10).
+fn penalized(logits: &[f32], history: &[i32], penalty: f32) -> Vec<f32> {
+    logits
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            if history.contains(&(i as i32)) {
+                if v > 0.0 {
+                    v / penalty
+                } else {
+                    v * penalty
+                }
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_seeded_sampling_is_deterministic() {
+    check_msg(
+        "sampler_seeded_determinism",
+        60,
+        |rng| {
+            let params = random_params(rng);
+            let rows: Vec<Vec<f32>> = (0..8).map(|_| logits_row(rng)).collect();
+            (params, rows)
+        },
+        |(params, rows)| {
+            let mut a = Sampler::new(params.clone());
+            let mut b = Sampler::new(params.clone());
+            for row in rows {
+                let (x, y) = (a.select(row, &[3, 5]), b.select(row, &[3, 5]));
+                if x != y {
+                    return Err(format!("same seed diverged: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_top_k_restricts_support() {
+    check_msg(
+        "sampler_top_k_support",
+        80,
+        |rng| {
+            let k = 1 + rng.below(8);
+            let params = GenParams {
+                temperature: rng.range_f64(0.2, 3.0) as f32,
+                top_k: k,
+                seed: rng.next_u64(),
+                ..GenParams::default()
+            };
+            (params, logits_row(rng))
+        },
+        |(params, row)| {
+            let mut s = Sampler::new(params.clone());
+            for _ in 0..16 {
+                let pick = s.select(row, &[]);
+                // strictly-greater count < k  ⇔  pick is among the k highest
+                let above = row.iter().filter(|&&v| v > row[pick]).count();
+                if above >= params.top_k {
+                    return Err(format!(
+                        "picked {pick} (logit {}, {above} above) outside top-{}",
+                        row[pick], params.top_k
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_top_p_restricts_support_to_the_nucleus() {
+    check_msg(
+        "sampler_top_p_support",
+        80,
+        |rng| {
+            let params = GenParams {
+                temperature: rng.range_f64(0.3, 2.0) as f32,
+                top_p: rng.range_f64(0.1, 0.95) as f32,
+                seed: rng.next_u64(),
+                ..GenParams::default()
+            };
+            (params, logits_row(rng))
+        },
+        |(params, row)| {
+            // nucleus membership: the cumulative probability of tokens
+            // strictly more likely than the pick must be < top_p (else
+            // the nucleus was already full before reaching the pick)
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f64> = row
+                .iter()
+                .map(|&v| (((v - m) as f64) / params.temperature as f64).exp())
+                .collect();
+            let total: f64 = weights.iter().sum();
+            let mut s = Sampler::new(params.clone());
+            for _ in 0..16 {
+                let pick = s.select(row, &[]);
+                let mass_above: f64 = row
+                    .iter()
+                    .zip(&weights)
+                    .filter(|&(&v, _)| v > row[pick])
+                    .map(|(_, &w)| w / total)
+                    .sum();
+                if mass_above >= params.top_p as f64 {
+                    return Err(format!(
+                        "picked {pick} with {mass_above:.3} probability mass above it \
+                         (top_p {})",
+                        params.top_p
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tiny_temperature_converges_to_greedy() {
+    check_msg(
+        "sampler_temperature_to_zero_is_greedy",
+        80,
+        |rng| {
+            // tiny enough that even a near-tie (gap ~1e-4) gives the
+            // runner-up a vanishing win probability — the property is
+            // about the limit, not about moderate temperatures
+            let t = [1e-5f32, 1e-6, 1e-7][rng.below(3)];
+            (t, rng.next_u64(), logits_row(rng))
+        },
+        |(t, seed, row)| {
+            let mut s = Sampler::new(GenParams {
+                temperature: *t,
+                seed: *seed,
+                ..GenParams::default()
+            });
+            let pick = s.select(row, &[]);
+            let best = argmax(row);
+            // compare logits, not indices, so an exact tie can't flake
+            if row[pick] != row[best] {
+                return Err(format!(
+                    "temperature {t}: picked logit {} but greedy logit is {}",
+                    row[pick], row[best]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_repetition_penalty_never_escapes_the_mask() {
+    check_msg(
+        "sampler_penalty_respects_top_k_mask",
+        80,
+        |rng| {
+            let k = 1 + rng.below(6);
+            let params = GenParams {
+                temperature: rng.range_f64(0.3, 2.0) as f32,
+                top_k: k,
+                repetition_penalty: rng.range_f64(1.1, 3.0) as f32,
+                seed: rng.next_u64(),
+                ..GenParams::default()
+            };
+            let history: Vec<i32> = (0..6).map(|_| rng.below(VOCAB) as i32).collect();
+            (params, history, logits_row(rng))
+        },
+        |(params, history, row)| {
+            // the penalty reshapes logits BEFORE the top-k mask, so the
+            // selection support is the top-k of the *penalized* row —
+            // ids the penalty pushed out of the top-k are unreachable
+            let shaped = penalized(row, history, params.repetition_penalty);
+            let mut s = Sampler::new(params.clone());
+            for _ in 0..16 {
+                let pick = s.select(row, history);
+                let above = shaped.iter().filter(|&&v| v > shaped[pick]).count();
+                if above >= params.top_k {
+                    return Err(format!(
+                        "picked {pick}, masked out of the penalized top-{}",
+                        params.top_k
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_penalty_discourages_repeats() {
+    // not a support property but the economic one: with a strong penalty
+    // and temperature sampling, repeated ids are picked less often than
+    // without the penalty (statistical, fixed seeds — deterministic)
+    let row: Vec<f32> = (0..VOCAB).map(|i| if i == 7 { 2.0 } else { 0.0 }).collect();
+    let history = vec![7i32];
+    let count_hits = |penalty: f32| -> usize {
+        let mut s = Sampler::new(GenParams {
+            temperature: 1.0,
+            repetition_penalty: penalty,
+            seed: 99,
+            ..GenParams::default()
+        });
+        (0..400).filter(|_| s.select(&row, &history) == 7).count()
+    };
+    let unpenalized = count_hits(1.0);
+    let with_penalty = count_hits(3.0);
+    assert!(
+        with_penalty < unpenalized,
+        "penalty 3.0 picked the repeated id {with_penalty} times vs {unpenalized} without"
+    );
+}
+
+#[test]
+fn prop_sampled_batched_decode_matches_sequential() {
+    check_msg(
+        "sampled_batched_equals_sequential",
+        12,
+        |rng| {
+            let backend_seed = rng.next_u64();
+            let reqs: Vec<(Vec<i32>, usize, GenParams)> = (0..4)
+                .map(|_| {
+                    let plen = 1 + rng.below(4);
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| rng.below(VOCAB) as i32).collect();
+                    (prompt, 4 + rng.below(8), random_params(rng))
+                })
+                .collect();
+            (backend_seed, reqs)
+        },
+        |(backend_seed, reqs)| {
+            let b = SyntheticBackend::new(VOCAB, 8, *backend_seed);
+            let sequential: Vec<Vec<i32>> = reqs
+                .iter()
+                .map(|(p, n, params)| generate(&b, p, *n, params.clone()).unwrap())
+                .collect();
+            let mut slots: Vec<DecodeSlot> = reqs
+                .iter()
+                .map(|(p, n, params)| {
+                    DecodeSlot::with_params(p, *n, 8, params.clone()).unwrap()
+                })
+                .collect();
+            while slots.iter().any(|s| !s.done()) {
+                decode_step(&b, &mut slots).unwrap();
+            }
+            for (i, (slot, expect)) in slots.iter().zip(&sequential).enumerate() {
+                if &slot.out != expect {
+                    return Err(format!(
+                        "request {i} diverged: batched {:?} vs sequential {expect:?}",
+                        slot.out
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generate_respects_stop_tokens() {
+    check(
+        "generate_stop_tokens_never_emitted",
+        20,
+        |rng| {
+            let stop: Vec<i32> = (0..3).map(|_| rng.below(VOCAB) as i32).collect();
+            (rng.next_u64(), stop, random_params(rng))
+        },
+        |(seed, stop, base)| {
+            let b = SyntheticBackend::new(VOCAB, 8, *seed);
+            let params = GenParams { stop_tokens: stop.clone(), ..base.clone() };
+            let out = generate(&b, &[1, 2], 24, params).unwrap();
+            out.iter().all(|t| !stop.contains(t))
+        },
+    );
+}

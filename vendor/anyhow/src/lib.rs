@@ -10,13 +10,19 @@
 //!   cause chain joined by `": "` (what `main` prints).
 //! * `{:?}` renders the message plus an indented "Caused by" chain.
 //! * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+//! * [`Error::new`] keeps the typed value alive so [`Error::downcast_ref`]
+//!   can recover it anywhere in the cause chain (the native backend's
+//!   KV-exhaustion fallback relies on this).
 
+use std::any::Any;
 use std::fmt;
 
 /// A message-chain error value (outermost context first).
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// the typed error value, when constructed via [`Error::new`]
+    obj: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `Result<T, anyhow::Error>` with the error type defaulted.
@@ -25,12 +31,24 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Create an error from a displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, obj: None }
+    }
+
+    /// Create an error from a typed error value, preserving it for
+    /// [`Error::downcast_ref`] (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: None, obj: Some(Box::new(error)) }
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), obj: None }
+    }
+
+    /// The typed error value anywhere in the cause chain, if one of the
+    /// links was built via [`Error::new`] from an `E`.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.chain().find_map(|e| e.obj.as_ref()?.downcast_ref::<E>())
     }
 
     /// The cause chain, outermost first.
@@ -193,6 +211,16 @@ mod tests {
         assert_eq!(format!("{e:#}"), "outer: gone");
         let o: Option<u32> = None;
         assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn typed_errors_downcast_through_context() {
+        let e = Error::new(io_err()).context("outer");
+        assert_eq!(format!("{e:#}"), "outer: gone");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // message-only errors have no typed payload
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
