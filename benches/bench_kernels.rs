@@ -1,0 +1,185 @@
+//! Multi-row fused GEMM benches → `BENCH_kernels.json`.
+//!
+//! Measures the two call sites of `Linear::matmul` (DESIGN.md §11)
+//! against the token-by-token path they replace, on a pure-rust model —
+//! no artifacts, no PJRT:
+//!
+//! * **prefill** — `NativeModel::prefill` (all prompt positions through
+//!   the seven packed linears in `[T, ·]` form, one payload decode per
+//!   row tile) vs `logits_window` (T full passes over the payload), at
+//!   T ∈ {16, 64, 256}. Records tokens/s and the effective packed-GB/s
+//!   the naive path would have had to stream, and **asserts** the ≥ 3x
+//!   speedup floor at T = 256.
+//! * **decode** — cross-slot batched decode through `NativeBackend` at
+//!   B ∈ {1, 4, 16} (one `[B, ·]` pass per packed layer per step).
+//!
+//! Knobs: `FAAR_BENCH_FAST` shrinks the sweep (and skips the
+//! assertion); `FAAR_BENCH_TOLERANT` keeps the full sweep but downgrades
+//! the assertion to a printed note — for loaded CI runners where
+//! wall-clock ratios are noisy.
+
+use std::time::Instant;
+
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::preset::{manifest_from_config, native_config};
+use nvfp4_faar::infer::{quantize_store, NativeBackend, NativeModel, NativeOptions};
+use nvfp4_faar::serve::batch::{decode_step, DecodeSlot, StepBackend};
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::bench::black_box;
+use nvfp4_faar::util::json::Json;
+
+/// Best-of-`iters` wall seconds for `f`.
+fn time_best<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn build_model() -> (NativeModel, usize) {
+    // d_model 128 so the seven linears dominate the forward (the regime
+    // the multi-row kernel targets); seq_len 256 for the T = 256 point
+    let cfg = native_config("kernels", 256, 128, 2, 2, 256).expect("bench config");
+    let manifest = manifest_from_config(cfg);
+    let fp = ParamStore::init(&manifest, 42);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    let payload = model.packed_payload_bytes();
+    (model, payload)
+}
+
+fn bench_prefill(model: &NativeModel, payload: usize, fast: bool, tolerant: bool) -> Vec<Json> {
+    let sizes: &[usize] = if fast { &[16, 64] } else { &[16, 64, 256] };
+    let mut runs = vec![];
+    for &t in sizes {
+        let prompt: Vec<i32> = (0..t).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+        // parity first — a bench over diverging paths measures nothing
+        let reference = model.logits_window(&prompt).expect("reference");
+        assert_eq!(model.prefill(&prompt).expect("prefill"), reference, "prefill diverged");
+
+        let iters = if t >= 256 { 3 } else { 5 };
+        let wall_seq = time_best(iters, || {
+            black_box(model.logits_window(&prompt).expect("seq"));
+        });
+        let wall_pre = time_best(iters, || {
+            black_box(model.prefill(&prompt).expect("prefill"));
+        });
+        // single-thread kernel view: same comparison with the column
+        // parallelism pinned to 1 worker on both sides
+        let wall_pre_1t = time_best(iters, || {
+            black_box(model.prefill_paged(&prompt, 16, 1).expect("prefill 1t"));
+        });
+        let speedup = wall_seq / wall_pre.max(1e-12);
+        let speedup_1t = wall_seq / wall_pre_1t.max(1e-12);
+        // effective bandwidth: the packed bytes the token-by-token path
+        // streams for this window (payload × T), over each wall clock
+        let naive_bytes = (payload * t) as f64;
+        println!(
+            "  prefill T={t:>3}: seq {:>8.1} tok/s  prefill {:>8.1} tok/s  \
+             ({speedup:.2}x, 1t {speedup_1t:.2}x, {:.2} -> {:.2} eff GB/s)",
+            t as f64 / wall_seq,
+            t as f64 / wall_pre,
+            naive_bytes / wall_seq / 1e9,
+            naive_bytes / wall_pre / 1e9,
+        );
+        if t == 256 {
+            let msg = format!("prefill speedup {speedup:.2}x below the 3x floor at T=256");
+            if tolerant && speedup < 3.0 {
+                println!("  [note] {msg} — tolerated (FAAR_BENCH_TOLERANT)");
+            } else {
+                assert!(speedup >= 3.0, "{msg}");
+            }
+        }
+        runs.push(Json::obj(vec![
+            ("t", Json::num(t as f64)),
+            ("seq_tokens_per_s", Json::Num(t as f64 / wall_seq)),
+            ("prefill_tokens_per_s", Json::Num(t as f64 / wall_pre)),
+            ("prefill_1t_tokens_per_s", Json::Num(t as f64 / wall_pre_1t)),
+            ("seq_eff_gbps", Json::Num(naive_bytes / wall_seq / 1e9)),
+            ("prefill_eff_gbps", Json::Num(naive_bytes / wall_pre / 1e9)),
+            ("speedup", Json::Num(speedup)),
+            ("speedup_1t", Json::Num(speedup_1t)),
+        ]));
+    }
+    runs
+}
+
+fn decode_run(backend: &NativeBackend, batch: usize, prompt_len: usize, new_tokens: usize) -> f64 {
+    let seq_len = backend.seq_len();
+    let mut slots: Vec<DecodeSlot> = (0..batch)
+        .map(|b| {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|i| ((b * 131 + i * 7) % 256) as i32).collect();
+            DecodeSlot::new(&prompt, new_tokens, seq_len).expect("slot")
+        })
+        .collect();
+    let t0 = Instant::now();
+    while slots.iter().any(|s| !s.done()) {
+        decode_step(backend, &mut slots).expect("decode step");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    for slot in &slots {
+        backend.release(slot);
+    }
+    assert_eq!(backend.kv_outstanding(), 0, "bench leaked KV pages");
+    (batch * new_tokens) as f64 / wall
+}
+
+fn bench_decode(model: &NativeModel, fast: bool) -> Vec<Json> {
+    let (prompt_len, new_tokens) = if fast { (16, 8) } else { (32, 32) };
+    let mut runs = vec![];
+    for &batch in &[1usize, 4, 16] {
+        let backend = NativeBackend::new(
+            model.clone(),
+            NativeOptions { max_pages: 4096, ..NativeOptions::default() },
+        );
+        // warm the caches/scratch once, then measure
+        decode_run(&backend, batch, prompt_len, 2);
+        let tok_s = decode_run(&backend, batch, prompt_len, new_tokens);
+        println!("  decode B={batch:>2}: {tok_s:>9.1} tok/s (cross-slot batched, kv on)");
+        runs.push(Json::obj(vec![
+            ("batch", Json::num(batch as f64)),
+            ("tokens_per_s", Json::Num(tok_s)),
+        ]));
+    }
+    runs
+}
+
+fn main() {
+    let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+    let tolerant = std::env::var("FAAR_BENCH_TOLERANT").is_ok() || fast;
+    let (model, payload) = build_model();
+    println!(
+        "multi-row fused GEMM: {} packed layers, {:.2} MiB payload{}",
+        model.n_packed(),
+        payload as f64 / (1 << 20) as f64,
+        if fast { " (fast mode)" } else { "" }
+    );
+    let prefill_runs = bench_prefill(&model, payload, fast, tolerant);
+    let decode_runs = bench_decode(&model, fast);
+    let doc = Json::obj(vec![
+        ("group", Json::str("kernels")),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::str("kernels")),
+                ("vocab", Json::num(256.0)),
+                ("d_model", Json::num(128.0)),
+                ("n_layers", Json::num(2.0)),
+                ("seq_len", Json::num(256.0)),
+                ("format", Json::str("nvfp4")),
+                ("payload_bytes", Json::num(payload as f64)),
+                ("fast", Json::Bool(fast)),
+            ]),
+        ),
+        ("prefill", Json::Arr(prefill_runs)),
+        ("decode", Json::Arr(decode_runs)),
+    ]);
+    match std::fs::write("BENCH_kernels.json", format!("{}\n", doc.to_string_pretty())) {
+        Ok(()) => println!("→ wrote BENCH_kernels.json"),
+        Err(e) => eprintln!("[warn] could not write BENCH_kernels.json: {e}"),
+    }
+}

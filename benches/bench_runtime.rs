@@ -168,6 +168,10 @@ fn native_decode_run(
 /// recompute by >= 2x. Runs everywhere — pure rust, no artifacts.
 fn bench_native() {
     let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+    // a loaded/shared runner can squash wall-clock ratios without the
+    // code being wrong — FAAR_BENCH_TOLERANT downgrades the speedup
+    // floor to a printed note instead of a suite failure
+    let tolerant = std::env::var("FAAR_BENCH_TOLERANT").is_ok();
     // full mode fills the 256-token window exactly (224 prompt + 32 new)
     let (prompt_len, new_tokens) = if fast { (56, 8) } else { (224, 32) };
     let cfg = native_config("bench", 256, 64, 2, 2, 256).expect("bench config");
@@ -206,11 +210,14 @@ fn bench_native() {
         }
         let speedup = tok_s[0] / tok_s[1].max(1e-12);
         println!("  batch {batch:>2} kv-cache speedup: {speedup:.1}x");
-        if !fast {
-            assert!(
-                speedup >= 2.0,
-                "KV cache speedup {speedup:.2}x below the 2x floor at batch {batch}"
-            );
+        if !fast && speedup < 2.0 {
+            let msg =
+                format!("KV cache speedup {speedup:.2}x below the 2x floor at batch {batch}");
+            if tolerant {
+                println!("  [note] {msg} — tolerated (FAAR_BENCH_TOLERANT)");
+            } else {
+                panic!("{msg}");
+            }
         }
     }
     let doc = Json::obj(vec![

@@ -31,6 +31,13 @@ use crate::util::threads;
 /// MAC count above which a single matvec fans out across threads.
 pub const PAR_MACS: usize = 1 << 18;
 
+/// Register-block tile height for [`Linear::matmul`]: activation rows
+/// processed per pass over the packed payload. Each packed byte is read
+/// and LUT-decoded once per tile and applied to all `TILE_M` rows, so a
+/// `[M, K]` batch touches the payload `ceil(M / TILE_M)` times instead
+/// of `M` times.
+pub const TILE_M: usize = 8;
+
 /// A packed layer stack plus its precomputed decode tables, so the GEMM
 /// hot loop builds its [`BlockDecode`] view with a memcpy instead of
 /// re-deriving 272 LUT entries per call.
@@ -149,6 +156,90 @@ impl Linear {
             }
         }
     }
+
+    /// Multi-row fused GEMM: `Y[M, N] += X[M, K] @ W[l]`, both row-major.
+    ///
+    /// The packed path tiles over M in blocks of [`TILE_M`]: each packed
+    /// byte is read and nibble-decoded **once per tile** and applied to
+    /// every activation row in the tile, and each block-scale row is
+    /// decoded once per (block, tile) — where `M` calls to
+    /// [`Self::matvec`] would stream and decode the whole payload `M`
+    /// times. Accumulation stays column-in-row-order per output row with
+    /// the exact op order of `matvec` (`(x * elem) * scale`, zero inputs
+    /// skipped), so every output row is **bitwise identical** to the
+    /// matvec of its input row — `M = 1` is a drop-in replacement.
+    ///
+    /// `scratch` and `workers` behave as in [`Self::matvec`]; the
+    /// column-parallel split engages above [`PAR_MACS`] total MACs and
+    /// each column is still accumulated by one worker in row order.
+    pub fn matmul(
+        &self,
+        l: usize,
+        x: &[f32],
+        m: usize,
+        y: &mut [f32],
+        scratch: &mut Vec<f32>,
+        workers: usize,
+    ) -> Result<()> {
+        let (k, n) = (self.k(), self.n());
+        if x.len() != m * k || y.len() != m * n {
+            bail!(
+                "matmul: x[{}] @ W[{k}, {n}] -> y[{}] for m={m} rows",
+                x.len(),
+                y.len()
+            );
+        }
+        if m == 0 {
+            return Ok(());
+        }
+        match self {
+            Linear::Dense(t) => {
+                matmul_dense_rows(&t.data[l * k * n..(l + 1) * k * n], x, m, k, n, y);
+                Ok(())
+            }
+            Linear::Packed(p) => {
+                let dec = p.q.block_decode_cached(&p.tables)?;
+                if workers > 1 && m * k * n >= PAR_MACS {
+                    return matmul_packed_par(&dec, l, x, m, y, workers);
+                }
+                scratch.resize(n, 0.0);
+                matmul_packed_cols(&dec, l, x, m, y, 0, n, scratch);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Dense multi-row GEMM, tiled over M so each weight row is loaded once
+/// per tile. Per output row the accumulation order and op order are
+/// exactly the dense `matvec` path's (`y[j] += x * w`, rows in order,
+/// zero inputs skipped), so rows match matvec bitwise.
+fn matmul_dense_rows(w: &[f32], x: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    let mut tile = 0;
+    while tile < m {
+        let tm = (m - tile).min(TILE_M);
+        for row in 0..k {
+            let mut xs = [0.0f32; TILE_M];
+            let mut any = false;
+            for (mi, xv) in xs.iter_mut().enumerate().take(tm) {
+                *xv = x[(tile + mi) * k + row];
+                any |= *xv != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let wrow = &w[row * n..(row + 1) * n];
+            for (j, &wv) in wrow.iter().enumerate() {
+                for (mi, &xv) in xs.iter().enumerate().take(tm) {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    y[(tile + mi) * n + j] += xv * wv;
+                }
+            }
+        }
+        tile += TILE_M;
+    }
 }
 
 /// The fused inner loop over an output-column range `[c0, c1)`:
@@ -185,6 +276,14 @@ fn matvec_packed_cols(
     }
 }
 
+/// Nibble-aligned output-column ranges for a `workers`-way split —
+/// shared by the column-parallel matvec and matmul so the alignment
+/// rule lives in exactly one place.
+fn col_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let chunk = ((n.div_ceil(workers) + 1) & !1).max(2);
+    (0..n).step_by(chunk).map(|c0| (c0, (c0 + chunk).min(n))).collect()
+}
+
 /// Column-parallel fused matvec: output columns are split into
 /// nibble-aligned ranges, one worker per range; each column is still
 /// accumulated sequentially in row order, so the result is bitwise
@@ -196,12 +295,7 @@ fn matvec_packed_par(
     y: &mut [f32],
     workers: usize,
 ) -> Result<()> {
-    let n = dec.n();
-    let chunk = (n.div_ceil(workers) + 1) & !1;
-    let ranges: Vec<(usize, usize)> = (0..n)
-        .step_by(chunk.max(2))
-        .map(|c0| (c0, (c0 + chunk.max(2)).min(n)))
-        .collect();
+    let ranges = col_ranges(dec.n(), workers);
     let parts = threads::par_map(ranges.clone(), workers, |(c0, c1)| {
         let mut part = vec![0.0f32; c1 - c0];
         let mut scale_row = vec![0.0f32; c1 - c0];
@@ -211,6 +305,103 @@ fn matvec_packed_par(
     for ((c0, c1), part) in ranges.into_iter().zip(parts) {
         for (j, v) in (c0..c1).zip(part) {
             y[j] += v;
+        }
+    }
+    Ok(())
+}
+
+/// The multi-row fused inner loop over an output-column range `[c0, c1)`:
+/// `y[mi, 0..c1-c0] += x[mi, :] @ W[l, :, c0..c1]` for all `m` rows,
+/// with `y` laid out `[m, c1 - c0]` row-major. M is tiled in blocks of
+/// [`TILE_M`]; within a tile each packed byte is loaded and
+/// nibble-decoded once, each scale row once per (block, tile), and the
+/// decoded values applied to every tile row. Per output row the element
+/// op order matches [`matvec_packed_cols`] exactly. `c0`/`c1` must be
+/// even (nibble pairs share a byte).
+fn matmul_packed_cols(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    m: usize,
+    y: &mut [f32],
+    c0: usize,
+    c1: usize,
+    scale_row: &mut [f32],
+) {
+    debug_assert!(c0 % 2 == 0 && c1 % 2 == 0, "column range must be nibble-aligned");
+    let (block, k, w) = (dec.block(), dec.k(), c1 - c0);
+    let mut tile = 0;
+    while tile < m {
+        let tm = (m - tile).min(TILE_M);
+        for kb in 0..dec.block_rows() {
+            // one scale-row decode per (block, tile) — amortized over
+            // every row and every payload byte of the block
+            dec.scale_range_into(l, kb, c0, c1, scale_row);
+            for r in 0..block {
+                let row = kb * block + r;
+                // gather the tile's activation column for this K row
+                let mut xs = [0.0f32; TILE_M];
+                let mut any = false;
+                for (mi, xv) in xs.iter_mut().enumerate().take(tm) {
+                    *xv = x[(tile + mi) * k + row];
+                    any |= *xv != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let bytes = &dec.code_row(l, row)[c0 / 2..c1 / 2];
+                for (j2, &b) in bytes.iter().enumerate() {
+                    let j = 2 * j2;
+                    // one byte load + two LUT decodes, applied to all
+                    // tm rows (matvec pays these per row)
+                    let e0 = dec.elem(b & 0x0F);
+                    let e1 = dec.elem(b >> 4);
+                    let s0 = scale_row[j];
+                    let s1 = scale_row[j + 1];
+                    for (mi, &xv) in xs.iter().enumerate().take(tm) {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let yo = (tile + mi) * w + j;
+                        y[yo] += xv * e0 * s0;
+                        y[yo + 1] += xv * e1 * s1;
+                    }
+                }
+            }
+        }
+        tile += TILE_M;
+    }
+}
+
+/// Column-parallel multi-row fused GEMM: output columns split into
+/// nibble-aligned ranges, one worker per range computing a `[m, range]`
+/// partial from zero; each output column is accumulated by exactly one
+/// worker in row order, so the result is bitwise identical to the
+/// scalar [`matmul_packed_cols`] path (given `y` starts zeroed, the
+/// same contract every matvec/matmul call site already keeps).
+fn matmul_packed_par(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    m: usize,
+    y: &mut [f32],
+    workers: usize,
+) -> Result<()> {
+    let n = dec.n();
+    let ranges = col_ranges(n, workers);
+    let parts = threads::par_map(ranges.clone(), workers, |(c0, c1)| {
+        let w = c1 - c0;
+        let mut part = vec![0.0f32; m * w];
+        let mut scale_row = vec![0.0f32; w];
+        matmul_packed_cols(dec, l, x, m, &mut part, c0, c1, &mut scale_row);
+        part
+    });
+    for ((c0, c1), part) in ranges.into_iter().zip(parts) {
+        let w = c1 - c0;
+        for mi in 0..m {
+            for (j, &v) in (c0..c1).zip(&part[mi * w..(mi + 1) * w]) {
+                y[mi * n + j] += v;
+            }
         }
     }
     Ok(())
@@ -324,6 +515,87 @@ mod tests {
         let mut b = vec![0.0f32; 512];
         lin.matvec(0, &x, &mut b, &mut scratch, 4).unwrap();
         assert_eq!(a, b, "auto-parallel matvec diverged from scalar");
+    }
+
+    #[test]
+    fn matmul_rows_bitwise_match_matvec_all_formats() {
+        // the load-bearing tentpole invariant: every output row of the
+        // multi-row fused GEMM is bitwise identical to the matvec of its
+        // input row, for every format, M around and past the tile size
+        for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+            let w = rand_w(&[2, 64, 32], 21, 0.1);
+            let c = codec_for(kind);
+            let p = c.prepare(&w);
+            let lin = Linear::from(c.encode(&w, &p, &rtn_decisions(&p)));
+            for m in [1usize, 2, 7, 8, 9, 17] {
+                let x = rand_x(m * 64, 100 + m as u64);
+                let mut scratch = Vec::new();
+                for l in 0..2 {
+                    let mut ym = vec![0.0f32; m * 32];
+                    lin.matmul(l, &x, m, &mut ym, &mut scratch, 1).unwrap();
+                    for mi in 0..m {
+                        let mut yv = vec![0.0f32; 32];
+                        lin.matvec(l, &x[mi * 64..(mi + 1) * 64], &mut yv, &mut scratch, 1)
+                            .unwrap();
+                        assert_eq!(
+                            &ym[mi * 32..(mi + 1) * 32],
+                            &yv[..],
+                            "{}: m={m} l={l} row {mi} diverged from matvec",
+                            c.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_dense_rows_bitwise_match_matvec() {
+        let w = rand_w(&[2, 16, 8], 23, 0.2);
+        let lin = Linear::Dense(w);
+        let m = 11;
+        let x = rand_x(m * 16, 29);
+        let mut scratch = Vec::new();
+        let mut ym = vec![0.0f32; m * 8];
+        lin.matmul(1, &x, m, &mut ym, &mut scratch, 1).unwrap();
+        for mi in 0..m {
+            let mut yv = vec![0.0f32; 8];
+            lin.matvec(1, &x[mi * 16..(mi + 1) * 16], &mut yv, &mut scratch, 1).unwrap();
+            assert_eq!(&ym[mi * 8..(mi + 1) * 8], &yv[..], "dense row {mi}");
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_bitwise_matches_scalar() {
+        // above PAR_MACS with workers > 1 the column-parallel branch
+        // engages and must match the scalar branch bit-for-bit
+        let w = rand_w(&[1, 256, 256], 31, 0.1);
+        let c = codec_for(FormatKind::Nvfp4);
+        let p = c.prepare(&w);
+        let lin = Linear::from(c.encode(&w, &p, &rtn_decisions(&p)));
+        let m = 12; // 12 * 256 * 256 MACs > PAR_MACS
+        let x = rand_x(m * 256, 37);
+        let mut scratch = Vec::new();
+        let mut a = vec![0.0f32; m * 256];
+        lin.matmul(0, &x, m, &mut a, &mut scratch, 1).unwrap();
+        let mut b = vec![0.0f32; m * 256];
+        lin.matmul(0, &x, m, &mut b, &mut scratch, 4).unwrap();
+        assert_eq!(a, b, "column-parallel matmul diverged from scalar");
+    }
+
+    #[test]
+    fn matmul_zero_rows_and_bad_shapes() {
+        let w = rand_w(&[16, 8], 41, 0.1);
+        let lin = Linear::Dense(w);
+        let mut scratch = Vec::new();
+        // m = 0 is a no-op
+        let mut y0: Vec<f32> = vec![];
+        lin.matmul(0, &[], 0, &mut y0, &mut scratch, 1).unwrap();
+        // mismatched x / y lengths error
+        let mut y = vec![0.0f32; 2 * 8];
+        assert!(lin.matmul(0, &[0.0; 16], 2, &mut y, &mut scratch, 1).is_err());
+        let mut short = vec![0.0f32; 8];
+        assert!(lin.matmul(0, &[0.0; 32], 2, &mut short, &mut scratch, 1).is_err());
     }
 
     #[test]

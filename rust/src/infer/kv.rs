@@ -179,6 +179,32 @@ impl KvSeq {
         Ok(())
     }
 
+    /// Reserve `extra` token slots (zero-initialized) in one pool
+    /// transaction — the bulk form of [`Self::push`] that the prefill
+    /// path uses so a T-token prompt costs one pool lock instead of T.
+    /// All-or-nothing: on exhaustion every page taken so far is returned
+    /// and the sequence is left unchanged, so the caller's fallback sees
+    /// a consistent cache.
+    pub fn reserve(&mut self, pool: &mut KvPool, extra: usize) -> Result<()> {
+        let need =
+            (self.len + extra).div_ceil(self.layout.page_tokens.max(1)) - self.pages.len();
+        let mut taken = Vec::with_capacity(need);
+        for _ in 0..need {
+            match pool.take() {
+                Ok(page) => taken.push(page),
+                Err(e) => {
+                    for page in taken {
+                        pool.put(page);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        self.pages.extend(taken);
+        self.len += extra;
+        Ok(())
+    }
+
     /// Drop every cached token, returning all pages to `pool`.
     pub fn clear(&mut self, pool: &mut KvPool) {
         for page in self.pages.drain(..) {
@@ -273,6 +299,40 @@ mod tests {
         seq.clear(&mut pool);
         assert_eq!(pool.outstanding(), 0);
         assert_eq!(pool.free_pages(), 3);
+    }
+
+    #[test]
+    fn reserve_matches_pushes_and_is_atomic() {
+        let l = layout();
+        // reserve(n) leaves the same geometry as n pushes
+        let mut pool = KvPool::unbounded(l.page_floats());
+        let mut a = KvSeq::new(l);
+        a.reserve(&mut pool, 10).unwrap();
+        let mut b = KvSeq::new(l);
+        for _ in 0..10 {
+            b.push(&mut pool).unwrap();
+        }
+        assert_eq!((a.len(), a.n_pages()), (b.len(), b.n_pages()));
+        // reserved slots are writable/readable immediately
+        let (k, _) = a.kv_mut(9, 1);
+        k[0] = 7.0;
+        assert_eq!(a.k(9, 1)[0], 7.0);
+        // growing an existing sequence only takes the missing pages
+        a.reserve(&mut pool, 2).unwrap();
+        assert_eq!((a.len(), a.n_pages()), (12, 3));
+        a.clear(&mut pool);
+        b.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+
+        // all-or-nothing on exhaustion: nothing taken, nothing mutated
+        let mut small = KvPool::new(l.page_floats(), 2);
+        let mut c = KvSeq::new(l);
+        c.reserve(&mut small, 4).unwrap(); // exactly one page
+        let err = c.reserve(&mut small, 8).unwrap_err(); // needs 2 more, cap allows 1
+        assert!(err.downcast_ref::<KvExhausted>().is_some(), "{err}");
+        assert_eq!((c.len(), c.n_pages()), (4, 1), "failed reserve mutated the sequence");
+        assert_eq!(small.outstanding(), 1, "failed reserve leaked pages");
+        c.clear(&mut small);
     }
 
     #[test]

@@ -18,6 +18,15 @@
 //! full-window recompute would, so the parity tests assert token
 //! equality, not closeness.
 //!
+//! Payload traffic is amortized across rows (DESIGN.md §11): prompt
+//! prefill runs all positions through the seven linears in `[T, ·]`
+//! batched form ([`NativeModel::prefill`]), and a batched decode step
+//! gathers the active slots into one `[B, ·]` pass per packed layer —
+//! both through [`kernels::Linear::matmul`], which reads and
+//! LUT-decodes each packed byte once per row tile instead of once per
+//! token/slot, with every output row bitwise identical to the matvec
+//! it replaces.
+//!
 //! Module map:
 //!
 //! * [`preset`] — rust-side mirror of `configs.py` (stand up a model with
@@ -51,6 +60,12 @@ use crate::serve::batch::{DecodeSlot, StepBackend};
 use crate::tensor::Tensor;
 use crate::train::QuantParamStore;
 use crate::util::threads;
+
+/// Default cached tokens per KV page — the [`NativeOptions`] default
+/// and the scratch pools behind [`NativeModel::logits_window`] /
+/// [`NativeModel::prefill`] when no explicit `--kv-page-tokens` /
+/// [`NativeOptions::page_tokens`] reaches them.
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
 
 /// Reusable per-decode buffers: one per in-flight forward, so the hot
 /// loop allocates nothing per token.
@@ -92,6 +107,72 @@ impl Scratch {
             scores: vec![0.0; cfg.seq_len],
             scale_row: Vec::new(),
         }
+    }
+}
+
+/// Reusable buffers for the batched (multi-row) forward passes — the
+/// prefill path and the cross-slot batched decode. Sized on first use
+/// and grown monotonically in capacity, so steady-state batched decode
+/// allocates nothing per step (the [`NativeBackend`] keeps one behind a
+/// mutex; prefill catch-up reuses the slot's own copy).
+struct RowScratch {
+    /// residual stream `[rows, d]`
+    x: Vec<f32>,
+    /// normed linear inputs `[rows, d]`
+    a: Vec<f32>,
+    /// projections `[rows, d]`
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    /// SwiGLU gate / up `[rows, mlp_hidden]`
+    g: Vec<f32>,
+    u: Vec<f32>,
+    /// attention scores `[rows, seq_len]` — one disjoint row per
+    /// attention job, so rows can attend in parallel
+    scores: Vec<f32>,
+    /// decoded block-scale row for the fused kernels
+    scale_row: Vec<f32>,
+    /// logits staging `[logit_rows, vocab]`
+    logits: Vec<f32>,
+}
+
+impl RowScratch {
+    fn new() -> RowScratch {
+        RowScratch {
+            x: Vec::new(),
+            a: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            attn: Vec::new(),
+            proj: Vec::new(),
+            g: Vec::new(),
+            u: Vec::new(),
+            scores: Vec::new(),
+            scale_row: Vec::new(),
+            logits: Vec::new(),
+        }
+    }
+
+    /// Resize every buffer for a `rows`-row pass (capacity only grows).
+    fn ensure(&mut self, cfg: &ModelConfig, rows: usize) {
+        fn fit(buf: &mut Vec<f32>, len: usize) {
+            buf.clear();
+            buf.resize(len, 0.0);
+        }
+        let (d, h) = (cfg.d_model, cfg.mlp_hidden);
+        fit(&mut self.x, rows * d);
+        fit(&mut self.a, rows * d);
+        fit(&mut self.q, rows * d);
+        fit(&mut self.k, rows * d);
+        fit(&mut self.v, rows * d);
+        fit(&mut self.attn, rows * d);
+        fit(&mut self.proj, rows * d);
+        fit(&mut self.g, rows * h);
+        fit(&mut self.u, rows * h);
+        fit(&mut self.scores, rows * cfg.seq_len);
     }
 }
 
@@ -215,15 +296,26 @@ impl NativeModel {
 
     /// [`Self::logits_window`] with an explicit column-parallelism
     /// budget for the fused kernels (1 when the caller is already inside
-    /// a batch fan-out — thread pools must not nest).
+    /// a batch fan-out — thread pools must not nest). The scratch KV
+    /// pool uses [`DEFAULT_PAGE_TOKENS`]-token pages; callers with a
+    /// configured page size use [`Self::logits_window_paged`].
     pub fn logits_window_par(&self, tokens: &[i32], col_workers: usize) -> Result<Vec<f32>> {
-        if tokens.is_empty() {
-            bail!("empty decode window");
-        }
-        if tokens.len() > self.cfg.seq_len {
-            bail!("window of {} tokens exceeds seq_len {}", tokens.len(), self.cfg.seq_len);
-        }
-        let layout = self.kv_layout(32);
+        self.logits_window_paged(tokens, DEFAULT_PAGE_TOKENS, col_workers)
+    }
+
+    /// [`Self::logits_window_par`] with an explicit KV page size for the
+    /// scratch pool — the backend threads its `--kv-page-tokens` /
+    /// [`NativeOptions::page_tokens`] setting through here instead of a
+    /// hardcoded page geometry. Page size never changes the logits, only
+    /// the allocation granularity.
+    pub fn logits_window_paged(
+        &self,
+        tokens: &[i32],
+        page_tokens: usize,
+        col_workers: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_window(tokens)?;
+        let layout = self.kv_layout(page_tokens);
         let pool = Mutex::new(KvPool::unbounded(layout.page_floats()));
         let mut seq = KvSeq::new(layout);
         let mut s = Scratch::new(&self.cfg);
@@ -233,6 +325,84 @@ impl NativeModel {
             out = self.feed(&mut seq, &pool, tok, i, last, &mut s, col_workers)?;
         }
         out.ok_or_else(|| anyhow!("empty decode window"))
+    }
+
+    /// Batched full-window forward — the **prefill path**: all window
+    /// positions run the seven linear stacks in `[T, ·]` form through
+    /// [`Linear::matmul`], so the packed payload is streamed and
+    /// nibble-decoded once per [`kernels::TILE_M`]-row tile instead of
+    /// once per token; attention / RoPE / norms stay per-position.
+    /// Returns the last position's logits, **bit-identical** to
+    /// [`Self::logits_window`] on the same tokens (pinned by tests).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.prefill_paged(tokens, DEFAULT_PAGE_TOKENS, threads::default_workers())
+    }
+
+    /// [`Self::prefill`] with explicit scratch-pool page size and
+    /// column-parallelism budget (1 inside a batch fan-out).
+    pub fn prefill_paged(
+        &self,
+        tokens: &[i32],
+        page_tokens: usize,
+        col_workers: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_window(tokens)?;
+        let layout = self.kv_layout(page_tokens);
+        let pool = Mutex::new(KvPool::unbounded(layout.page_floats()));
+        let mut seq = KvSeq::new(layout);
+        let mut s = RowScratch::new();
+        self.prefill_into(&mut seq, &pool, tokens, 0, true, &mut s, col_workers)?
+            .ok_or_else(|| anyhow!("empty decode window"))
+    }
+
+    fn check_window(&self, tokens: &[i32]) -> Result<()> {
+        if tokens.is_empty() {
+            bail!("empty decode window");
+        }
+        if tokens.len() > self.cfg.seq_len {
+            bail!("window of {} tokens exceeds seq_len {}", tokens.len(), self.cfg.seq_len);
+        }
+        Ok(())
+    }
+
+    /// Run `tokens` through the decoder in batched `[T, ·]` form at
+    /// window indices `start..start + T`, appending each position's
+    /// keys/values to `seq` (pages reserved in one pool transaction via
+    /// [`KvSeq::reserve`]). Returns the last position's logits when
+    /// `want_logits`. `seq` must hold exactly `start` cached tokens.
+    fn prefill_into(
+        &self,
+        seq: &mut KvSeq,
+        pool: &Mutex<KvPool>,
+        tokens: &[i32],
+        start: usize,
+        want_logits: bool,
+        s: &mut RowScratch,
+        col_workers: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(None);
+        }
+        if start + tokens.len() > self.cfg.seq_len {
+            bail!(
+                "prefill of {} tokens at {start} exceeds seq_len {}",
+                tokens.len(),
+                self.cfg.seq_len
+            );
+        }
+        if seq.len() != start {
+            bail!("cache holds {} tokens, prefill expected {start}", seq.len());
+        }
+        {
+            let mut pool = pool.lock().expect("kv pool poisoned");
+            seq.reserve(&mut pool, tokens.len())?;
+        }
+        let rows: Vec<(usize, i32, usize)> =
+            tokens.iter().enumerate().map(|(i, &t)| (0, t, start + i)).collect();
+        let first_logits = if want_logits { rows.len() - 1 } else { rows.len() };
+        let mut seqs = [seq];
+        let mut out = self.forward_rows(&mut seqs, &rows, first_logits, s, col_workers)?;
+        Ok(out.pop())
     }
 
     /// Run one token through the decoder at window index `idx`, appending
@@ -343,6 +513,199 @@ impl NativeModel {
         self.lm_head.matvec(0, &s.a, &mut logits, &mut s.scale_row, col_workers)?;
         Ok(Some(logits))
     }
+
+    /// The multi-row forward core shared by the prefill path (rows =
+    /// consecutive positions of ONE sequence) and the cross-slot batched
+    /// decode (rows = one position from EACH active slot). Every linear
+    /// runs once per layer over all rows through [`Linear::matmul`];
+    /// RoPE, norms, activation fake-quant, and attention stay
+    /// per-position, reading only the row's own sequence. Row `i`'s
+    /// result is therefore bitwise identical to feeding row `i` through
+    /// [`Self::feed`] — the invariant every batched==sequential and
+    /// prefill==token-by-token parity test leans on.
+    ///
+    /// `rows` entries are `(seq index, token, window index)`; each row's
+    /// KV slot must already be reserved in its sequence. Rows sharing a
+    /// sequence must be in ascending window order (the prefill case) so
+    /// attention at row `i` only reads positions `<= i`, all written
+    /// before any attention runs. Logits come back for rows
+    /// `first_logits_row..`, in row order.
+    fn forward_rows(
+        &self,
+        seqs: &mut [&mut KvSeq],
+        rows: &[(usize, i32, usize)],
+        first_logits_row: usize,
+        s: &mut RowScratch,
+        col_workers: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, hd, heads, h) = (cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.mlp_hidden);
+        let b = rows.len();
+        if b == 0 {
+            return Ok(vec![]);
+        }
+        for &(si, token, idx) in rows {
+            if si >= seqs.len() {
+                bail!("row references sequence {si} of {}", seqs.len());
+            }
+            if token < 0 || (token as usize) >= cfg.vocab {
+                bail!("token id {token} outside [0, {})", cfg.vocab);
+            }
+            if idx >= cfg.seq_len {
+                bail!("window index {idx} beyond seq_len {}", cfg.seq_len);
+            }
+            if seqs[si].len() <= idx {
+                bail!("kv slot {idx} not reserved (cache holds {})", seqs[si].len());
+            }
+        }
+        s.ensure(cfg, b);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        for (ri, &(_, token, _)) in rows.iter().enumerate() {
+            let tok = token as usize;
+            s.x[ri * d..(ri + 1) * d].copy_from_slice(&self.tok_emb.data[tok * d..(tok + 1) * d]);
+        }
+
+        for l in 0..cfg.n_layers {
+            // ---- attention ------------------------------------------------
+            for ri in 0..b {
+                ops::rmsnorm_into(
+                    &s.x[ri * d..(ri + 1) * d],
+                    &self.attn_norm.data[l * d..(l + 1) * d],
+                    &mut s.a[ri * d..(ri + 1) * d],
+                );
+                if self.act_quant {
+                    ops::act_fake_quant(&mut s.a[ri * d..(ri + 1) * d]);
+                }
+            }
+            s.q.fill(0.0);
+            self.wq.matmul(l, &s.a, b, &mut s.q, &mut s.scale_row, col_workers)?;
+            s.k.fill(0.0);
+            self.wk.matmul(l, &s.a, b, &mut s.k, &mut s.scale_row, col_workers)?;
+            s.v.fill(0.0);
+            self.wv.matmul(l, &s.a, b, &mut s.v, &mut s.scale_row, col_workers)?;
+            // RoPE + cache writes for every row, THEN attention: rows
+            // sharing a sequence (prefill) see all their predecessors
+            for (ri, &(si, _, idx)) in rows.iter().enumerate() {
+                ops::rope_inplace(
+                    &mut s.q[ri * d..(ri + 1) * d],
+                    heads,
+                    hd,
+                    &self.cos,
+                    &self.sin,
+                    idx,
+                );
+                ops::rope_inplace(
+                    &mut s.k[ri * d..(ri + 1) * d],
+                    heads,
+                    hd,
+                    &self.cos,
+                    &self.sin,
+                    idx,
+                );
+                let (ck, cv) = seqs[si].kv_mut(idx, l);
+                ck.copy_from_slice(&s.k[ri * d..(ri + 1) * d]);
+                cv.copy_from_slice(&s.v[ri * d..(ri + 1) * d]);
+            }
+            s.attn.fill(0.0);
+            // per-row attention is embarrassingly parallel once every
+            // KV write above has landed: row `ri` reads only its own
+            // sequence prefix and writes only its own attn/scores
+            // chunk, each computed wholly by one worker — so the result
+            // is identical for any worker count
+            {
+                let seqs_ro: &[&mut KvSeq] = seqs;
+                let q_ro: &[f32] = &s.q;
+                let act_quant = self.act_quant;
+                let jobs: Vec<(usize, &mut [f32], &mut [f32])> = s
+                    .attn
+                    .chunks_mut(d)
+                    .zip(s.scores.chunks_mut(cfg.seq_len))
+                    .enumerate()
+                    .map(|(ri, (attn_row, scores_row))| (ri, attn_row, scores_row))
+                    .collect();
+                threads::par_map(jobs, col_workers, |(ri, attn_row, scores_row)| {
+                    let (si, _, idx) = rows[ri];
+                    let len = idx + 1;
+                    for h_ in 0..heads {
+                        let q_h = &q_ro[ri * d + h_ * hd..ri * d + (h_ + 1) * hd];
+                        let scores = &mut scores_row[..len];
+                        for (t, sc) in scores.iter_mut().enumerate() {
+                            *sc = ops::dot(q_h, &seqs_ro[si].k(t, l)[h_ * hd..(h_ + 1) * hd])
+                                * inv_sqrt;
+                        }
+                        ops::softmax_inplace(scores);
+                        let attn_h = &mut attn_row[h_ * hd..(h_ + 1) * hd];
+                        for (t, &p) in scores.iter().enumerate() {
+                            let v_h = &seqs_ro[si].v(t, l)[h_ * hd..(h_ + 1) * hd];
+                            for (o, &vv) in attn_h.iter_mut().zip(v_h) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                    if act_quant {
+                        ops::act_fake_quant(attn_row);
+                    }
+                });
+            }
+            s.proj.fill(0.0);
+            self.wo.matmul(l, &s.attn, b, &mut s.proj, &mut s.scale_row, col_workers)?;
+            for (x, &p) in s.x.iter_mut().zip(&s.proj) {
+                *x += p;
+            }
+
+            // ---- SwiGLU mlp -----------------------------------------------
+            for ri in 0..b {
+                ops::rmsnorm_into(
+                    &s.x[ri * d..(ri + 1) * d],
+                    &self.mlp_norm.data[l * d..(l + 1) * d],
+                    &mut s.a[ri * d..(ri + 1) * d],
+                );
+                if self.act_quant {
+                    ops::act_fake_quant(&mut s.a[ri * d..(ri + 1) * d]);
+                }
+            }
+            s.g.fill(0.0);
+            self.w_gate.matmul(l, &s.a, b, &mut s.g, &mut s.scale_row, col_workers)?;
+            s.u.fill(0.0);
+            self.w_up.matmul(l, &s.a, b, &mut s.u, &mut s.scale_row, col_workers)?;
+            for (g, &u) in s.g.iter_mut().zip(&s.u) {
+                *g = ops::silu(*g) * u;
+            }
+            if self.act_quant {
+                for ri in 0..b {
+                    ops::act_fake_quant(&mut s.g[ri * h..(ri + 1) * h]);
+                }
+            }
+            s.proj.fill(0.0);
+            self.w_down.matmul(l, &s.g, b, &mut s.proj, &mut s.scale_row, col_workers)?;
+            for (x, &p) in s.x.iter_mut().zip(&s.proj) {
+                *x += p;
+            }
+        }
+
+        if first_logits_row >= b {
+            return Ok(vec![]);
+        }
+        let nl = b - first_logits_row;
+        for ri in first_logits_row..b {
+            ops::rmsnorm_into(
+                &s.x[ri * d..(ri + 1) * d],
+                &self.out_norm.data,
+                &mut s.a[ri * d..(ri + 1) * d],
+            );
+        }
+        s.logits.clear();
+        s.logits.resize(nl * cfg.vocab, 0.0);
+        self.lm_head.matmul(
+            0,
+            &s.a[first_logits_row * d..],
+            nl,
+            &mut s.logits,
+            &mut s.scale_row,
+            col_workers,
+        )?;
+        Ok(s.logits.chunks(cfg.vocab).map(|c| c.to_vec()).collect())
+    }
 }
 
 /// Serving knobs for the native backend.
@@ -355,24 +718,47 @@ pub struct NativeOptions {
     pub page_tokens: usize,
     /// KV pool cap, in pages, across all in-flight slots
     pub max_pages: usize,
-    /// worker threads for the per-slot batch fan-out (0 = auto)
+    /// worker threads for the phase-1 per-slot fan-out and the fused
+    /// kernels' column-parallel budget (0 = auto)
     pub workers: usize,
 }
 
 impl Default for NativeOptions {
     fn default() -> NativeOptions {
-        NativeOptions { use_cache: true, page_tokens: 16, max_pages: 4096, workers: 0 }
+        NativeOptions {
+            use_cache: true,
+            page_tokens: DEFAULT_PAGE_TOKENS,
+            max_pages: 4096,
+            workers: 0,
+        }
     }
 }
 
 /// Per-slot cache entry: the KV pages, the window tokens they represent
 /// (the resync key the `StepBackend` impl on [`NativeBackend`]
-/// re-derives every step), and the slot's reusable forward buffers — so
-/// steady-state decode allocates nothing per token.
+/// re-derives every step), and the slot's reusable prefill buffers — so
+/// catch-up (admission, window slide) reuses one allocation.
 struct SlotCache {
     kv: KvSeq,
     history: Vec<i32>,
-    scratch: Scratch,
+    scratch: RowScratch,
+}
+
+/// What phase 1 of a batched step left one slot owing.
+enum Phase1 {
+    /// slot already finished; its row is discarded by `decode_step`
+    Done,
+    /// full logits row (or error) computed slot-locally — uncached mode
+    /// and the pool-exhaustion fallback
+    Row(Result<Vec<f32>>),
+    /// caught up: exactly the decode token remains, validated, with its
+    /// KV slot reserved — joins the cross-slot batch in phase 2
+    Pending {
+        /// the decode token (last window token)
+        token: i32,
+        /// its window index
+        idx: usize,
+    },
 }
 
 /// [`StepBackend`] over a [`NativeModel`]: batched logits-out decode in
@@ -380,24 +766,35 @@ struct SlotCache {
 /// pool (token selection — greedy or sampled — happens in the decode
 /// core, never here).
 ///
-/// Row `i` of a batched step depends only on slot `i` (each slot's
-/// forward runs independently, fanned out over `par_map`), so batched
-/// output is token-identical to sequential output by construction — the
-/// same invariant the synthetic and XLA backends keep.
+/// A batched step runs in two phases. **Phase 1** (fanned out per slot)
+/// brings every slot's cache up to "all but the decode token fed" — a
+/// fresh slot's prompt goes through the batched prefill path in one
+/// `[T, ·]` pass instead of T matvec sweeps. **Phase 2** gathers the
+/// active slots' decode tokens into one `[B, ·]` cross-slot pass
+/// through [`Linear::matmul`], so each packed layer is streamed and
+/// nibble-decoded once per step instead of once per slot. Row `i` still
+/// depends only on slot `i` (the per-slot KV/attention state never
+/// crosses rows, and every matmul row is bitwise identical to the
+/// matvec of that row), so batched output stays token-identical to
+/// sequential output — the same invariant the synthetic and XLA
+/// backends keep, now preserved *through* the shared kernels.
 ///
 /// Cache coherence is re-derived every step from the slot's visible
 /// window: if the cached token history is a strict prefix of the window,
 /// only the missing suffix is fed (O(1) per decode step); anything else
 /// — a fresh slot, or a window that slid past `seq_len` — rebuilds the
-/// slot's cache from scratch. On pool exhaustion a slot falls back to
-/// uncached full-window compute instead of failing the request. Both
-/// paths produce bit-identical logits.
+/// slot's cache from scratch (also via prefill). On pool exhaustion a
+/// slot falls back to uncached full-window compute instead of failing
+/// the request. Every path produces bit-identical logits.
 pub struct NativeBackend {
     model: NativeModel,
     opts: NativeOptions,
     layout: KvLayout,
     pool: Mutex<KvPool>,
     seqs: Mutex<HashMap<u64, SlotCache>>,
+    /// reusable buffers for the phase-2 cross-slot pass, so steady-state
+    /// batched decode allocates nothing per step
+    batch_scratch: Mutex<RowScratch>,
 }
 
 impl NativeBackend {
@@ -405,7 +802,14 @@ impl NativeBackend {
     pub fn new(model: NativeModel, opts: NativeOptions) -> NativeBackend {
         let layout = model.kv_layout(opts.page_tokens);
         let pool = Mutex::new(KvPool::new(layout.page_floats(), opts.max_pages));
-        NativeBackend { model, opts, layout, pool, seqs: Mutex::new(HashMap::new()) }
+        NativeBackend {
+            model,
+            opts,
+            layout,
+            pool,
+            seqs: Mutex::new(HashMap::new()),
+            batch_scratch: Mutex::new(RowScratch::new()),
+        }
     }
 
     /// The wrapped model.
@@ -429,51 +833,74 @@ impl NativeBackend {
         w.min(batch).max(1)
     }
 
-    /// One slot's step: feed whatever suffix of the window the cache is
-    /// missing. Returns the logits row and the (possibly rebuilt) cache
-    /// entry; the entry always comes back so its pages are never lost,
-    /// even on error. `col_workers` is 1 whenever this runs under the
-    /// batch fan-out (thread pools must not nest).
-    fn step_slot(
+    /// Column-parallelism budget when nothing else is fanned out (single
+    /// slot, or the phase-2 cross-slot pass on the coordinating thread).
+    fn col_workers_full(&self) -> usize {
+        if self.opts.workers > 0 {
+            self.opts.workers
+        } else {
+            threads::default_workers()
+        }
+    }
+
+    /// Full-window logits on a scratch pool through the batched prefill
+    /// path — bit-identical to `logits_window`, used for uncached mode
+    /// and the pool-exhaustion fallback. Respects the configured KV page
+    /// size instead of a hardcoded geometry.
+    fn full_window(&self, want: &[i32], col_workers: usize) -> Result<Vec<f32>> {
+        self.model.prefill_paged(want, self.opts.page_tokens, col_workers)
+    }
+
+    /// Phase 1 for one slot: catch the cache up to "all but the decode
+    /// token fed" (batched prefill), reserve the decode token's KV slot,
+    /// and hand back what the slot still owes. The entry always comes
+    /// back so its pages are never lost, even on error. `col_workers` is
+    /// 1 whenever this runs under the per-slot fan-out.
+    fn phase1_slot(
         &self,
         slot: &DecodeSlot,
         entry: Option<SlotCache>,
         col_workers: usize,
-    ) -> (Result<Vec<f32>>, Option<SlotCache>) {
-        let want = &slot.buf[..=slot.pos];
+    ) -> (Phase1, Option<SlotCache>) {
+        let want = slot.window();
         if !self.opts.use_cache {
-            return (self.model.logits_window_par(want, col_workers), None);
+            return (Phase1::Row(self.full_window(want, col_workers)), None);
         }
         let mut entry = entry.unwrap_or_else(|| SlotCache {
             kv: KvSeq::new(self.layout),
             history: Vec::new(),
-            scratch: Scratch::new(&self.model.cfg),
+            scratch: RowScratch::new(),
         });
-        match self.step_cached(want, &mut entry, col_workers) {
-            Ok(row) => (Ok(row), Some(entry)),
+        match self.catch_up(want, &mut entry, col_workers) {
+            Ok((token, idx)) => (Phase1::Pending { token, idx }, Some(entry)),
             Err(e) if e.downcast_ref::<kv::KvExhausted>().is_some() => {
                 // free this slot's pages for its neighbours and fall back
-                // to uncached compute — same logits, O(window²) cost
+                // to uncached compute — same logits, O(window) extra cost
                 self.clear_entry(&mut entry);
                 crate::debug!(
                     "kv pool exhausted; slot {} falling back to uncached decode",
                     slot.id
                 );
-                (self.model.logits_window_par(want, col_workers), Some(entry))
+                (Phase1::Row(self.full_window(want, col_workers)), Some(entry))
             }
             Err(e) => {
                 self.clear_entry(&mut entry);
-                (Err(e), Some(entry))
+                (Phase1::Row(Err(e)), Some(entry))
             }
         }
     }
 
-    fn step_cached(
+    /// Re-derive cache coherence from the slot's visible window, feed
+    /// everything but the last window token in one batched prefill pass,
+    /// and reserve the decode token's KV slot so phase 2 cannot fail on
+    /// pool exhaustion mid-batch. Returns the validated decode token and
+    /// its window index.
+    fn catch_up(
         &self,
         want: &[i32],
         entry: &mut SlotCache,
         col_workers: usize,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<(i32, usize)> {
         let cached = entry.history.len();
         let prefix_ok = cached < want.len()
             && cached == entry.kv.len()
@@ -482,21 +909,30 @@ impl NativeBackend {
             self.clear_entry(entry);
         }
         let start = entry.history.len();
-        let mut out = None;
-        for i in start..want.len() {
-            let last = i + 1 == want.len();
-            out = self.model.feed(
+        let last = want.len() - 1;
+        // validate the decode token slot-locally, before it joins the
+        // shared phase-2 batch
+        let token = want[last];
+        if token < 0 || (token as usize) >= self.model.cfg.vocab {
+            bail!("token id {token} outside [0, {})", self.model.cfg.vocab);
+        }
+        if start < last {
+            self.model.prefill_into(
                 &mut entry.kv,
                 &self.pool,
-                want[i],
-                i,
-                last,
+                &want[start..last],
+                start,
+                false,
                 &mut entry.scratch,
                 col_workers,
             )?;
-            entry.history.push(want[i]);
+            entry.history.extend_from_slice(&want[start..last]);
         }
-        out.ok_or_else(|| anyhow!("empty decode window"))
+        {
+            let mut pool = self.pool.lock().expect("kv pool poisoned");
+            entry.kv.reserve(&mut pool, 1)?;
+        }
+        Ok((token, last))
     }
 
     fn clear_entry(&self, entry: &mut SlotCache) {
@@ -519,7 +955,7 @@ impl StepBackend for NativeBackend {
             return Ok(vec![]);
         }
         // take each slot's cache entry out of the shared map so the batch
-        // fans out without holding any lock on the hot path (entries own
+        // runs without holding any lock on the hot path (entries own
         // their pages outright)
         let entries: Vec<Option<SlotCache>> = if self.opts.use_cache {
             let mut seqs = self.seqs.lock().expect("kv registry poisoned");
@@ -527,28 +963,96 @@ impl StepBackend for NativeBackend {
         } else {
             slots.iter().map(|_| None).collect()
         };
-        // parallelism lives on exactly one level: across slots when the
-        // batch has several, inside the kernels (column-parallel) when it
-        // is a single slot — never both, so worker pools don't nest
-        let col_workers = if slots.len() == 1 { threads::default_workers() } else { 1 };
+        // Phase 1 — per-slot catch-up, fanned out across slots. Worker
+        // pools never nest: with several slots in flight each slot's
+        // prefill runs scalar; a lone slot gets the full column budget.
+        let col_workers = if slots.len() == 1 { self.col_workers_full() } else { 1 };
         let jobs: Vec<(usize, Option<SlotCache>)> = entries.into_iter().enumerate().collect();
-        let results = threads::par_map(jobs, self.workers_for(slots.len()), |(i, entry)| {
+        let phase1 = threads::par_map(jobs, self.workers_for(slots.len()), |(i, entry)| {
             let slot = &slots[i];
             if slot.done() {
                 // decode_step discards finished slots' rows without
                 // reading them — skip the forward (and the cache churn a
                 // non-growing window would cause) instead of recomputing
-                return (Ok(Vec::new()), entry);
+                return (Phase1::Done, entry);
             }
-            self.step_slot(slot, entry, col_workers)
+            self.phase1_slot(slot, entry, col_workers)
         });
+        let mut outcomes = Vec::with_capacity(slots.len());
+        let mut entries: Vec<Option<SlotCache>> = Vec::with_capacity(slots.len());
+        for (o, e) in phase1 {
+            outcomes.push(o);
+            entries.push(e);
+        }
+        // Phase 2 — ONE pass over each packed layer for every pending
+        // slot: their decode tokens run the linear stacks as a [B, ·]
+        // matmul on the coordinating thread (full column budget; the
+        // per-slot fan-out has already joined).
+        let mut pend_idx: Vec<usize> = Vec::new();
+        let batch_res = {
+            let mut seq_refs: Vec<&mut KvSeq> = Vec::new();
+            let mut brows: Vec<(usize, i32, usize)> = Vec::new();
+            for (i, (outcome, entry)) in outcomes.iter().zip(entries.iter_mut()).enumerate() {
+                if let Phase1::Pending { token, idx } = *outcome {
+                    brows.push((seq_refs.len(), token, idx));
+                    seq_refs
+                        .push(&mut entry.as_mut().expect("pending slot without cache entry").kv);
+                    pend_idx.push(i);
+                }
+            }
+            if brows.is_empty() {
+                Ok(vec![])
+            } else {
+                let mut s = self.batch_scratch.lock().expect("batch scratch poisoned");
+                self.model.forward_rows(&mut seq_refs, &brows, 0, &mut s, self.col_workers_full())
+            }
+        };
+        // merge phase-2 rows back into per-slot results
+        let mut results: Vec<Result<Vec<f32>>> = Vec::with_capacity(slots.len());
+        match batch_res {
+            Ok(batch_rows) => {
+                let mut br = batch_rows.into_iter();
+                for (i, outcome) in outcomes.into_iter().enumerate() {
+                    results.push(match outcome {
+                        Phase1::Done => Ok(Vec::new()),
+                        Phase1::Row(r) => r,
+                        Phase1::Pending { token, .. } => {
+                            let row = br.next().expect("phase-2 row count mismatch");
+                            entries[i].as_mut().expect("pending entry").history.push(token);
+                            Ok(row)
+                        }
+                    });
+                }
+            }
+            Err(e) => {
+                // a batch-level failure cannot be attributed to one slot:
+                // clear every pending entry (their reserved KV slots are
+                // in an unknown state) and surface the error once
+                let mut first = Some(e);
+                for (i, outcome) in outcomes.into_iter().enumerate() {
+                    results.push(match outcome {
+                        Phase1::Done => Ok(Vec::new()),
+                        Phase1::Row(r) => r,
+                        Phase1::Pending { .. } => {
+                            if let Some(entry) = entries[i].as_mut() {
+                                self.clear_entry(entry);
+                            }
+                            match first.take() {
+                                Some(e) => Err(e),
+                                None => Err(anyhow!("cross-slot batched step failed")),
+                            }
+                        }
+                    });
+                }
+            }
+        }
         // reinsert every returned entry before surfacing any error, so a
         // failed step never strands pages outside the registry
         let mut rows = Vec::with_capacity(slots.len());
         let mut first_err = None;
         {
             let mut seqs = self.seqs.lock().expect("kv registry poisoned");
-            for ((res, entry), slot) in results.into_iter().zip(slots) {
+            for ((res, entry), slot) in results.into_iter().zip(entries).zip(slots) {
                 if let Some(e) = entry {
                     seqs.insert(slot.id, e);
                 }
@@ -688,6 +1192,66 @@ mod tests {
         assert!(model.logits_window(&[]).is_err());
         assert!(model.logits_window(&[999]).is_err());
         assert!(model.logits_window(&[1; 65]).is_err());
+    }
+
+    #[test]
+    fn prefill_bit_identical_to_token_by_token_window() {
+        // the tentpole parity: the batched [T, ·] prefill path must
+        // reproduce the token-by-token reference EXACTLY, for every
+        // format and with activation quant both on and off
+        for format in [
+            crate::formats::codec::FormatKind::Nvfp4,
+            crate::formats::codec::FormatKind::Mxfp4,
+            crate::formats::codec::FormatKind::E2m1,
+        ] {
+            let m = preset::native_manifest("nano").unwrap();
+            let fp = ParamStore::init(&m, 42);
+            let store = preset::quantize_store(&m, &fp, format).unwrap();
+            for act_quant in [true, false] {
+                let model = NativeModel::new(&m.config, &store, act_quant).unwrap();
+                for prompt in [
+                    vec![3, 5, 7],
+                    vec![1],
+                    (0..64).map(|i| (i * 3 % 256) as i32).collect::<Vec<i32>>(),
+                ] {
+                    let reference = model.logits_window(&prompt).unwrap();
+                    let fast = model.prefill(&prompt).unwrap();
+                    assert_eq!(
+                        fast,
+                        reference,
+                        "{} act_quant={act_quant}: prefill diverged for {} tokens",
+                        format.name(),
+                        prompt.len()
+                    );
+                    // scalar column budget must agree too
+                    let scalar = model.prefill_paged(&prompt, 8, 1).unwrap();
+                    assert_eq!(scalar, reference, "scalar prefill diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_validates_like_logits_window() {
+        let backend = nano_backend(true);
+        let model = backend.model();
+        assert!(model.prefill(&[]).is_err());
+        assert!(model.prefill(&[999]).is_err());
+        assert!(model.prefill(&[-1]).is_err());
+        assert!(model.prefill(&[1; 65]).is_err());
+    }
+
+    #[test]
+    fn logits_window_page_size_never_changes_logits() {
+        let backend = nano_backend(true);
+        let model = backend.model();
+        let reference = model.logits_window(&[9, 8, 7, 6]).unwrap();
+        for page_tokens in [1usize, 3, 16, 64] {
+            let got = model
+                .logits_window_paged(&[9, 8, 7, 6], page_tokens, threads::default_workers())
+                .unwrap();
+            assert_eq!(got, reference, "page_tokens={page_tokens} changed the logits");
+        }
     }
 
     #[test]

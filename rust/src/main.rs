@@ -45,7 +45,7 @@ USAGE: faar <subcommand> [options]
             [--workers N] [--max-batch N] [--queue-depth N]
             [--max-tokens-cap N] [--max-line-bytes N]
             [--read-timeout-ms MS] [--max-conns N] [--kv-pages N]
-            [--no-kv] [--no-act-quant]
+            [--kv-page-tokens N] [--no-kv] [--no-act-quant]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
   info      --model tiny
@@ -374,20 +374,24 @@ fn serve_native(
     );
     let model = NativeModel::new(&manifest.config, &store, !args.flag("no-act-quant"))?;
     let nd = NativeOptions::default();
+    // page geometry first (it sets the per-window page count), then the
     // KV budget: two full windows per micro-batch lane by default, so
-    // retiring slots never starve admissions
-    let pages_per_window = manifest.config.seq_len.div_ceil(nd.page_tokens);
+    // retiring slots never starve admissions. The page size threads all
+    // the way into the backend's uncached-fallback scratch pools — no
+    // hardcoded geometry anywhere on the native path.
+    let page_tokens = args.usize_or("kv-page-tokens", nd.page_tokens)?.max(1);
+    let pages_per_window = manifest.config.seq_len.div_ceil(page_tokens);
     let max_pages =
         args.usize_or("kv-pages", 2 * opts.max_batch.max(1) * pages_per_window)?;
     let backend = NativeBackend::new(
         model,
-        NativeOptions { use_cache: !args.flag("no-kv"), max_pages, ..nd },
+        NativeOptions { use_cache: !args.flag("no-kv"), max_pages, page_tokens, ..nd },
     );
     info!(
         "native backend ready (model {}, kv {} pages x {} tokens, cache {})",
         manifest.config.name,
         max_pages,
-        nd.page_tokens,
+        page_tokens,
         if args.flag("no-kv") { "off" } else { "on" }
     );
     serve_backend(&backend, addr, max_conns, opts).map(|_| ())

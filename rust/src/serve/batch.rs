@@ -120,6 +120,15 @@ impl DecodeSlot {
         self.sampler.params()
     }
 
+    /// The visible token window: every real token up to and including
+    /// the current position. This is the slice a backend must condition
+    /// row `i`'s logits on — the native backend derives its KV-cache
+    /// coherence (and its prefill/catch-up split) from exactly this
+    /// view every step.
+    pub fn window(&self) -> &[i32] {
+        &self.buf[..=self.pos]
+    }
+
     /// Select the next token from a logits row (greedy or sampled, per
     /// the slot's [`GenParams`]), apply the stop conditions, and advance
     /// the window. `vmax` clamps the selection to the backend vocab.
@@ -167,7 +176,10 @@ impl DecodeSlot {
 /// [`decode_step`]'s job, through each slot's [`Sampler`]). The
 /// invariant that makes batched output token-identical to sequential
 /// output: **row `i` depends only on slot `i`** — never on the batch
-/// composition.
+/// composition. A backend is free to *compute* the rows jointly (the
+/// native backend runs one fused `[B, ·]` pass over each packed layer
+/// per step) as long as each row's value stays a function of its slot
+/// alone.
 pub trait StepBackend {
     /// Vocabulary size (logits row length).
     fn vocab(&self) -> usize;

@@ -148,6 +148,66 @@ fn prop_kv_capacity_rejection() {
     );
 }
 
+#[test]
+fn prop_kv_reserve_equals_pushes_and_is_atomic() {
+    check_msg(
+        "kv_reserve",
+        30,
+        |rng| {
+            let page_tokens = 1 + rng.below(5);
+            let pre = rng.below(7);
+            let extra = 1 + rng.below(12);
+            let max_pages = 1 + rng.below(6);
+            (page_tokens, pre, extra, max_pages)
+        },
+        |&(page_tokens, pre, extra, max_pages)| {
+            let layout = KvLayout { n_layers: 2, d_model: 8, page_tokens };
+            // reserve(extra) after `pre` pushes leaves the same geometry
+            // as pre + extra pushes
+            let mut pool = KvPool::unbounded(layout.page_floats());
+            let mut a = KvSeq::new(layout);
+            let mut b = KvSeq::new(layout);
+            for _ in 0..pre {
+                a.push(&mut pool).map_err(|e| e.to_string())?;
+                b.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            a.reserve(&mut pool, extra).map_err(|e| e.to_string())?;
+            for _ in 0..extra {
+                b.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            if (a.len(), a.n_pages()) != (b.len(), b.n_pages()) {
+                return Err(format!(
+                    "reserve geometry ({}, {}) != push geometry ({}, {})",
+                    a.len(),
+                    a.n_pages(),
+                    b.len(),
+                    b.n_pages()
+                ));
+            }
+            a.clear(&mut pool);
+            b.clear(&mut pool);
+
+            // atomicity: a reserve that cannot fully fit takes nothing
+            let mut small = KvPool::new(layout.page_floats(), max_pages);
+            let mut c = KvSeq::new(layout);
+            let fits = max_pages * page_tokens;
+            c.reserve(&mut small, fits).map_err(|e| e.to_string())?;
+            let before = (c.len(), c.n_pages(), small.outstanding());
+            if c.reserve(&mut small, page_tokens).is_ok() {
+                return Err("reserve past the pool cap succeeded".into());
+            }
+            if before != (c.len(), c.n_pages(), small.outstanding()) {
+                return Err("failed reserve mutated the sequence or pool".into());
+            }
+            c.clear(&mut small);
+            if small.outstanding() != 0 {
+                return Err("pages leaked after clear".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Fused kernel vs dense reference
 
@@ -190,6 +250,86 @@ fn prop_fused_matvec_matches_dense_reference() {
             },
         );
     }
+}
+
+#[test]
+fn prop_matmul_rows_bitwise_equal_matvec() {
+    // the multi-row fused GEMM tentpole invariant, as a property: for
+    // every format, random M (around and past the register tile), and
+    // both the scalar and the column-parallel path, each output row of
+    // matmul is BITWISE the matvec of its input row. "big" cases use a
+    // [1, 128, 128] stack with m >= 16 so m*k*n crosses PAR_MACS and
+    // workers > 1 genuinely takes the parallel branch.
+    for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+        let codec = codec_for(kind);
+        check_msg(
+            &format!("matmul_rows_{}", codec.name()),
+            12,
+            |rng| {
+                let big = rng.below(2) == 1;
+                let (lead, k, n, m) = if big {
+                    (1usize, 128usize, 128usize, 16 + rng.below(8))
+                } else {
+                    (2, 64, 32, 1 + rng.below(20))
+                };
+                let w = gen::f32_heavy(rng, lead * k * n);
+                let x = gen::f32_normal(rng, m * k, 1.0);
+                let workers = 1 + rng.below(4);
+                (w, x, lead, k, n, m, workers)
+            },
+            |(wv, x, lead, k, n, m, workers)| {
+                let (lead, k, n, m, workers) = (*lead, *k, *n, *m, *workers);
+                let w = Tensor::new(wv.clone(), vec![lead, k, n]);
+                let p = codec.prepare(&w);
+                let lin = Linear::from(codec.encode(&w, &p, &rtn_decisions(&p)));
+                let mut scratch = Vec::new();
+                for l in 0..lead {
+                    let mut ym = vec![0.0f32; m * n];
+                    lin.matmul(l, x, m, &mut ym, &mut scratch, workers)
+                        .map_err(|e| e.to_string())?;
+                    for mi in 0..m {
+                        let mut yv = vec![0.0f32; n];
+                        lin.matvec(l, &x[mi * k..(mi + 1) * k], &mut yv, &mut scratch, 1)
+                            .map_err(|e| e.to_string())?;
+                        if ym[mi * n..(mi + 1) * n] != yv[..] {
+                            return Err(format!(
+                                "{}: l={l} m={m} workers={workers} row {mi} != matvec",
+                                codec.name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_prefill_bitwise_equals_token_by_token() {
+    // random prompts through the batched prefill path vs the
+    // token-by-token reference: logits must be bit-identical
+    let manifest = native_manifest("nano").expect("preset");
+    let fp = ParamStore::init(&manifest, 17);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    check_msg(
+        "prefill_parity",
+        10,
+        |rng| {
+            let t = 1 + rng.below(64);
+            let prompt: Vec<i32> = (0..t).map(|_| rng.below(256) as i32).collect();
+            prompt
+        },
+        |prompt| {
+            let reference = model.logits_window(prompt).map_err(|e| e.to_string())?;
+            let fast = model.prefill(prompt).map_err(|e| e.to_string())?;
+            if fast != reference {
+                return Err(format!("prefill diverged at T={}", prompt.len()));
+            }
+            Ok(())
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
