@@ -11,22 +11,37 @@
 //!   the naive path would have had to stream, and **asserts** the ≥ 3x
 //!   speedup floor at T = 256.
 //! * **decode** — cross-slot batched decode through `NativeBackend` at
-//!   B ∈ {1, 4, 16} (one `[B, ·]` pass per packed layer per step).
+//!   B ∈ {1, 4, 16} (one `[B, ·]` pass per packed layer per step), on
+//!   both KV formats (`f32` and `e4m3`), with effective packed-GB/s
+//!   alongside tokens/s.
+//!
+//! The `config` block records the dispatched kernel path (avx2 / neon /
+//! scalar) and the detected CPU features, so every number in the perf
+//! trajectory is attributable to a code path. With a SIMD path live,
+//! the T = 256 prefill additionally **asserts** ≥ 2x the committed
+//! 1.87 eff GB/s scalar baseline (DESIGN.md §12).
 //!
 //! Knobs: `FAAR_BENCH_FAST` shrinks the sweep (and skips the
-//! assertion); `FAAR_BENCH_TOLERANT` keeps the full sweep but downgrades
-//! the assertion to a printed note — for loaded CI runners where
-//! wall-clock ratios are noisy.
+//! assertions); `FAAR_BENCH_TOLERANT` keeps the full sweep but
+//! downgrades the assertions to printed notes — for loaded CI runners
+//! where wall-clock ratios are noisy. `FAAR_FORCE_SCALAR=1` pins the
+//! scalar kernels (and skips the SIMD floor).
 
 use std::time::Instant;
 
 use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::kernels::{cpu_features, kernel_path, KernelPath};
 use nvfp4_faar::infer::preset::{manifest_from_config, native_config};
-use nvfp4_faar::infer::{quantize_store, NativeBackend, NativeModel, NativeOptions};
+use nvfp4_faar::infer::{quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions};
 use nvfp4_faar::serve::batch::{decode_step, DecodeSlot, StepBackend};
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::bench::black_box;
 use nvfp4_faar::util::json::Json;
+
+/// The committed scalar-kernel prefill bandwidth at T = 256 (eff GB/s,
+/// BENCH_kernels.json as of PR 5) — the reference the SIMD floor below
+/// is measured against.
+const SCALAR_BASELINE_GBPS: f64 = 1.87;
 
 /// Best-of-`iters` wall seconds for `f`.
 fn time_best<F: FnMut()>(iters: usize, mut f: F) -> f64 {
@@ -70,7 +85,7 @@ fn bench_prefill(model: &NativeModel, payload: usize, fast: bool, tolerant: bool
         // single-thread kernel view: same comparison with the column
         // parallelism pinned to 1 worker on both sides
         let wall_pre_1t = time_best(iters, || {
-            black_box(model.prefill_paged(&prompt, 16, 1).expect("prefill 1t"));
+            black_box(model.prefill_paged(&prompt, 16, KvFormat::F32, 1).expect("prefill 1t"));
         });
         let speedup = wall_seq / wall_pre.max(1e-12);
         let speedup_1t = wall_seq / wall_pre_1t.max(1e-12);
@@ -91,6 +106,21 @@ fn bench_prefill(model: &NativeModel, payload: usize, fast: bool, tolerant: bool
                 println!("  [note] {msg} — tolerated (FAAR_BENCH_TOLERANT)");
             } else {
                 assert!(speedup >= 3.0, "{msg}");
+            }
+            // with a vector path dispatched, bandwidth must clear 2x the
+            // committed scalar baseline (the PR-6 acceptance floor)
+            if kernel_path() != KernelPath::Scalar {
+                let eff = naive_bytes / wall_pre / 1e9;
+                let floor = 2.0 * SCALAR_BASELINE_GBPS;
+                let msg = format!(
+                    "prefill {eff:.2} eff GB/s below the {floor:.2} GB/s SIMD floor \
+                     (2x the {SCALAR_BASELINE_GBPS} GB/s scalar baseline) at T=256"
+                );
+                if tolerant && eff < floor {
+                    println!("  [note] {msg} — tolerated (FAAR_BENCH_TOLERANT)");
+                } else {
+                    assert!(eff >= floor, "{msg}");
+                }
             }
         }
         runs.push(Json::obj(vec![
@@ -128,22 +158,33 @@ fn decode_run(backend: &NativeBackend, batch: usize, prompt_len: usize, new_toke
     (batch * new_tokens) as f64 / wall
 }
 
-fn bench_decode(model: &NativeModel, fast: bool) -> Vec<Json> {
+fn bench_decode(model: &NativeModel, payload: usize, fast: bool) -> Vec<Json> {
     let (prompt_len, new_tokens) = if fast { (16, 8) } else { (32, 32) };
     let mut runs = vec![];
     for &batch in &[1usize, 4, 16] {
-        let backend = NativeBackend::new(
-            model.clone(),
-            NativeOptions { max_pages: 4096, ..NativeOptions::default() },
-        );
-        // warm the caches/scratch once, then measure
-        decode_run(&backend, batch, prompt_len, 2);
-        let tok_s = decode_run(&backend, batch, prompt_len, new_tokens);
-        println!("  decode B={batch:>2}: {tok_s:>9.1} tok/s (cross-slot batched, kv on)");
-        runs.push(Json::obj(vec![
-            ("batch", Json::num(batch as f64)),
-            ("tokens_per_s", Json::Num(tok_s)),
-        ]));
+        for kv_format in [KvFormat::F32, KvFormat::E4m3] {
+            let backend = NativeBackend::new(
+                model.clone(),
+                NativeOptions { max_pages: 4096, kv_format, ..NativeOptions::default() },
+            );
+            // warm the caches/scratch once, then measure
+            decode_run(&backend, batch, prompt_len, 2);
+            let tok_s = decode_run(&backend, batch, prompt_len, new_tokens);
+            // same naive-stream convention as prefill: the packed bytes a
+            // per-token payload sweep would read for these tokens
+            let eff_gbps = payload as f64 * tok_s / 1e9;
+            println!(
+                "  decode B={batch:>2} kv={:<4}: {tok_s:>9.1} tok/s  \
+                 ({eff_gbps:.2} eff GB/s, cross-slot batched, kv on)",
+                kv_format.name()
+            );
+            runs.push(Json::obj(vec![
+                ("batch", Json::num(batch as f64)),
+                ("kv_format", Json::str(kv_format.name())),
+                ("tokens_per_s", Json::Num(tok_s)),
+                ("eff_gbps", Json::Num(eff_gbps)),
+            ]));
+        }
     }
     runs
 }
@@ -153,13 +194,15 @@ fn main() {
     let tolerant = std::env::var("FAAR_BENCH_TOLERANT").is_ok() || fast;
     let (model, payload) = build_model();
     println!(
-        "multi-row fused GEMM: {} packed layers, {:.2} MiB payload{}",
+        "multi-row fused GEMM: {} packed layers, {:.2} MiB payload, {} kernels [{}]{}",
         model.n_packed(),
         payload as f64 / (1 << 20) as f64,
+        kernel_path().name(),
+        cpu_features(),
         if fast { " (fast mode)" } else { "" }
     );
     let prefill_runs = bench_prefill(&model, payload, fast, tolerant);
-    let decode_runs = bench_decode(&model, fast);
+    let decode_runs = bench_decode(&model, payload, fast);
     let doc = Json::obj(vec![
         ("group", Json::str("kernels")),
         (
@@ -171,6 +214,8 @@ fn main() {
                 ("n_layers", Json::num(2.0)),
                 ("seq_len", Json::num(256.0)),
                 ("format", Json::str("nvfp4")),
+                ("kernel_path", Json::str(kernel_path().name())),
+                ("cpu_features", Json::str(cpu_features())),
                 ("payload_bytes", Json::num(payload as f64)),
                 ("fast", Json::Bool(fast)),
             ]),

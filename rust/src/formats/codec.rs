@@ -830,6 +830,15 @@ impl BlockDecode<'_> {
         self.elem[(code & 0x0F) as usize]
     }
 
+    /// The full 16-entry element LUT (code → signed E2M1 value), for
+    /// vector kernels that gather several codes per instruction instead
+    /// of calling [`Self::elem`] one nibble at a time. Entry 8 is `-0.0`
+    /// — SIMD lookups must preserve the bit pattern, not just the value.
+    #[inline]
+    pub fn elem_table(&self) -> &[f32; 16] {
+        &self.elem
+    }
+
     /// Fill `out` (length `n`) with the effective per-column scales of
     /// block-row `kb` in slice `l`.
     pub fn scale_row_into(&self, l: usize, kb: usize, out: &mut [f32]) {

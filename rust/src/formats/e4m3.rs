@@ -82,6 +82,48 @@ pub fn roundtrip(x: f32) -> f32 {
     decode(encode(x))
 }
 
+/// The 256-entry decode LUT (code → f32), built once per process — the
+/// bulk decode path below and the e4m3 KV cache read through this
+/// instead of re-deriving the bit fields per element.
+pub fn decode_lut() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut lut = [0.0f32; 256];
+        for (code, v) in lut.iter_mut().enumerate() {
+            *v = decode(code as u8);
+        }
+        lut
+    })
+}
+
+/// Bulk encode with **saturation**: every element of `x` becomes its
+/// nearest E4M3 code in `out`, except that magnitudes past the finite
+/// range clamp to ±448 instead of the scalar [`encode`]'s NaN — the
+/// right overflow semantics for a KV cache, where one outlier
+/// activation must not poison a whole attention row. NaN inputs still
+/// encode to NaN (the value is already meaningless).
+pub fn encode_slice(x: &[f32], out: &mut [u8]) {
+    assert_eq!(x.len(), out.len(), "encode_slice length mismatch");
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = if v > E4M3_MAX {
+            0x7E // +448
+        } else if v < -E4M3_MAX {
+            0xFE // -448
+        } else {
+            encode(v)
+        };
+    }
+}
+
+/// Bulk decode through [`decode_lut`]: `out[i] = decode(bytes[i])`.
+pub fn decode_slice(bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len(), "decode_slice length mismatch");
+    let lut = decode_lut();
+    for (o, &b) in out.iter_mut().zip(bytes) {
+        *o = lut[b as usize];
+    }
+}
+
 /// Round-half-even to u64 for non-negative x.
 fn rne(x: f64) -> u64 {
     let f = x.floor();

@@ -21,6 +21,18 @@
 //! across [`threads::par_map`] workers; every column is accumulated by
 //! exactly one worker in row order, so parallel results are bitwise
 //! identical to scalar results regardless of worker count.
+//!
+//! On top of the scalar LUT reference sit explicit SIMD paths
+//! (DESIGN.md §12): [`decode_nibbles`] expands a run of packed bytes
+//! into f32 elements with vector table lookups (AVX2
+//! `vpermps`-as-pshufb on x86_64, `tbl` byte-plane lookups on aarch64),
+//! and [`axpy_scaled`] vectorizes the `y += (x·e)·s` update with
+//! separate mul/mul/add (never a fused multiply-add), so every SIMD
+//! lane performs bit-for-bit the scalar op sequence. The path is picked
+//! once per process by [`kernel_path`] — runtime feature detection with
+//! a `FAAR_FORCE_SCALAR` env override that pins the bitwise reference.
+
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
@@ -35,8 +47,295 @@ pub const PAR_MACS: usize = 1 << 18;
 /// processed per pass over the packed payload. Each packed byte is read
 /// and LUT-decoded once per tile and applied to all `TILE_M` rows, so a
 /// `[M, K]` batch touches the payload `ceil(M / TILE_M)` times instead
-/// of `M` times.
-pub const TILE_M: usize = 8;
+/// of `M` times. 16 (up from 8) so one block decode through
+/// [`decode_nibbles`] feeds twice as many vector-accumulated rows.
+pub const TILE_M: usize = 16;
+
+/// Which nibble-decode implementation the process dispatched to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// AVX2 shuffle decode (x86_64, detected at runtime)
+    Avx2,
+    /// NEON `tbl` decode (aarch64, detected at runtime)
+    Neon,
+    /// portable scalar LUT loops — the bitwise reference
+    Scalar,
+}
+
+impl KernelPath {
+    /// Short lowercase name for logs and bench config blocks.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Neon => "neon",
+            KernelPath::Scalar => "scalar",
+        }
+    }
+}
+
+/// The decode path this process uses, decided once and cached: the
+/// `FAAR_FORCE_SCALAR` env override wins, then runtime CPU feature
+/// detection, then the scalar fallback. Every SIMD path is bitwise
+/// identical to scalar (property-tested), so the choice is performance
+/// only — but the override keeps a pinnable reference arm for CI.
+pub fn kernel_path() -> KernelPath {
+    static PATH: OnceLock<KernelPath> = OnceLock::new();
+    *PATH.get_or_init(detect_kernel_path)
+}
+
+fn detect_kernel_path() -> KernelPath {
+    if std::env::var_os("FAAR_FORCE_SCALAR").is_some() {
+        return KernelPath::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelPath::Neon;
+        }
+    }
+    KernelPath::Scalar
+}
+
+/// Comma-joined list of the decode-relevant CPU features this machine
+/// reports, for the serve startup log and bench config blocks — so a
+/// recorded perf number is attributable to a hardware capability set.
+pub fn cpu_features() -> String {
+    #[allow(unused_mut)]
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("sse4.1") {
+            feats.push("sse4.1");
+        }
+        if std::arch::is_x86_feature_detected!("ssse3") {
+            feats.push("ssse3");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    if feats.is_empty() {
+        "none".to_string()
+    } else {
+        feats.join(",")
+    }
+}
+
+/// Decode `2 * bytes.len()` packed nibbles (low nibble first) into f32
+/// elements through the 16-entry `elem` LUT, using `path`'s vector
+/// units. `out.len()` must equal `2 * bytes.len()`.
+///
+/// Every path produces **bitwise identical** output — the lookup is
+/// exact, including the sign of the `-0.0` at code 8 — so callers pick
+/// a path for speed, never for semantics. A SIMD path requested on
+/// hardware that lacks it silently runs scalar (the feature re-check is
+/// one cached-bitset test per call).
+pub fn decode_nibbles(path: KernelPath, elem: &[f32; 16], bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(out.len(), 2 * bytes.len(), "decode_nibbles output length");
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 => {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                // SAFETY: avx2 support just verified on this CPU
+                unsafe { decode_nibbles_avx2(elem, bytes, out) }
+            } else {
+                decode_nibbles_scalar(elem, bytes, out);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                // SAFETY: neon support just verified on this CPU
+                unsafe { decode_nibbles_neon(elem, bytes, out) }
+            } else {
+                decode_nibbles_scalar(elem, bytes, out);
+            }
+        }
+        _ => decode_nibbles_scalar(elem, bytes, out),
+    }
+}
+
+/// The scalar reference decode: two LUT reads per byte.
+fn decode_nibbles_scalar(elem: &[f32; 16], bytes: &[u8], out: &mut [f32]) {
+    for (j2, &b) in bytes.iter().enumerate() {
+        out[2 * j2] = elem[(b & 0x0F) as usize];
+        out[2 * j2 + 1] = elem[(b >> 4) as usize];
+    }
+}
+
+/// AVX2 shuffle decode: 16 packed bytes → 32 f32 elements per
+/// iteration. Nibbles are split and interleaved back to column order
+/// with byte unpacks, widened to i32 lanes, and looked up with two
+/// `vpermps` gathers over the LUT halves blended on `code > 7` — the
+/// 8-lane-f32 equivalent of a `pshufb` table lookup, reproducing the
+/// LUT entries bit-for-bit (including the `-0.0` at code 8).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_nibbles_avx2(elem: &[f32; 16], bytes: &[u8], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let tab_lo = _mm256_loadu_ps(elem.as_ptr()); // codes 0..8
+    let tab_hi = _mm256_loadu_ps(elem.as_ptr().add(8)); // codes 8..16
+    let seven = _mm256_set1_epi32(7);
+    let nib_mask = _mm_set1_epi8(0x0F);
+    let mut i = 0usize;
+    while i + 16 <= bytes.len() {
+        let b = _mm_loadu_si128(bytes.as_ptr().add(i) as *const __m128i);
+        let lo = _mm_and_si128(b, nib_mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(b, 4), nib_mask);
+        // interleave to element order: byte k holds elements 2k, 2k+1
+        let codes = [_mm_unpacklo_epi8(lo, hi), _mm_unpackhi_epi8(lo, hi)];
+        for (half, &idx16) in codes.iter().enumerate() {
+            let quads = [
+                _mm256_cvtepu8_epi32(idx16),
+                _mm256_cvtepu8_epi32(_mm_srli_si128(idx16, 8)),
+            ];
+            for (quad, &idx) in quads.iter().enumerate() {
+                let vlo = _mm256_permutevar8x32_ps(tab_lo, idx);
+                let vhi = _mm256_permutevar8x32_ps(tab_hi, idx);
+                let pick_hi = _mm256_castsi256_ps(_mm256_cmpgt_epi32(idx, seven));
+                let v = _mm256_blendv_ps(vlo, vhi, pick_hi);
+                _mm256_storeu_ps(out.as_mut_ptr().add(2 * i + 16 * half + 8 * quad), v);
+            }
+        }
+        i += 16;
+    }
+    decode_nibbles_scalar(elem, &bytes[i..], &mut out[2 * i..]);
+}
+
+/// NEON decode: 16 packed bytes → 32 f32 elements per iteration via
+/// four `tbl` lookups over the byte planes of the LUT (table p holds
+/// byte p of each f32 entry), then zip the planes back into
+/// little-endian f32s. Exact — the stored words are the LUT entries'
+/// own bit patterns.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn decode_nibbles_neon(elem: &[f32; 16], bytes: &[u8], out: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let mut planes = [[0u8; 16]; 4];
+    for (c, e) in elem.iter().enumerate() {
+        for (p, byte) in e.to_le_bytes().into_iter().enumerate() {
+            planes[p][c] = byte;
+        }
+    }
+    let t0 = vld1q_u8(planes[0].as_ptr());
+    let t1 = vld1q_u8(planes[1].as_ptr());
+    let t2 = vld1q_u8(planes[2].as_ptr());
+    let t3 = vld1q_u8(planes[3].as_ptr());
+    let nib_mask = vdupq_n_u8(0x0F);
+    let mut i = 0usize;
+    while i + 16 <= bytes.len() {
+        let b = vld1q_u8(bytes.as_ptr().add(i));
+        let lo = vandq_u8(b, nib_mask);
+        let hi = vshrq_n_u8::<4>(b);
+        let codes = [vzip1q_u8(lo, hi), vzip2q_u8(lo, hi)];
+        for (half, &idx) in codes.iter().enumerate() {
+            let b0 = vqtbl1q_u8(t0, idx);
+            let b1 = vqtbl1q_u8(t1, idx);
+            let b2 = vqtbl1q_u8(t2, idx);
+            let b3 = vqtbl1q_u8(t3, idx);
+            // zip byte planes into 16 little-endian f32 words
+            let w01l = vreinterpretq_u16_u8(vzip1q_u8(b0, b1));
+            let w01h = vreinterpretq_u16_u8(vzip2q_u8(b0, b1));
+            let w23l = vreinterpretq_u16_u8(vzip1q_u8(b2, b3));
+            let w23h = vreinterpretq_u16_u8(vzip2q_u8(b2, b3));
+            let base = out.as_mut_ptr().add(2 * i + 16 * half);
+            vst1q_f32(base, vreinterpretq_f32_u16(vzip1q_u16(w01l, w23l)));
+            vst1q_f32(base.add(4), vreinterpretq_f32_u16(vzip2q_u16(w01l, w23l)));
+            vst1q_f32(base.add(8), vreinterpretq_f32_u16(vzip1q_u16(w01h, w23h)));
+            vst1q_f32(base.add(12), vreinterpretq_f32_u16(vzip2q_u16(w01h, w23h)));
+        }
+        i += 16;
+    }
+    decode_nibbles_scalar(elem, &bytes[i..], &mut out[2 * i..]);
+}
+
+/// `y[j] += (xv * e[j]) * s[j]` over equal-length slices, vectorized on
+/// `path` with separate multiply/multiply/add — **never** a hardware
+/// FMA, so each lane's rounding matches the scalar reference exactly
+/// and every path stays bitwise identical.
+pub fn axpy_scaled(path: KernelPath, xv: f32, e: &[f32], s: &[f32], y: &mut [f32]) {
+    debug_assert!(e.len() == y.len() && s.len() == y.len(), "axpy_scaled lengths");
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 => {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                // SAFETY: avx2 support just verified on this CPU
+                unsafe { axpy_scaled_avx2(xv, e, s, y) }
+            } else {
+                axpy_scaled_scalar(xv, e, s, y);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                // SAFETY: neon support just verified on this CPU
+                unsafe { axpy_scaled_neon(xv, e, s, y) }
+            } else {
+                axpy_scaled_scalar(xv, e, s, y);
+            }
+        }
+        _ => axpy_scaled_scalar(xv, e, s, y),
+    }
+}
+
+fn axpy_scaled_scalar(xv: f32, e: &[f32], s: &[f32], y: &mut [f32]) {
+    for (j, yj) in y.iter_mut().enumerate() {
+        *yj += xv * e[j] * s[j];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_scaled_avx2(xv: f32, e: &[f32], s: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    let xvv = _mm256_set1_ps(xv);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let ev = _mm256_loadu_ps(e.as_ptr().add(j));
+        let sv = _mm256_loadu_ps(s.as_ptr().add(j));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+        // (xv * e) * s, two roundings — bitwise the scalar op order
+        let t = _mm256_mul_ps(_mm256_mul_ps(xvv, ev), sv);
+        _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(yv, t));
+        j += 8;
+    }
+    axpy_scaled_scalar(xv, &e[j..], &s[j..], &mut y[j..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_scaled_neon(xv: f32, e: &[f32], s: &[f32], y: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = y.len();
+    let xvv = vdupq_n_f32(xv);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let ev = vld1q_f32(e.as_ptr().add(j));
+        let sv = vld1q_f32(s.as_ptr().add(j));
+        let yv = vld1q_f32(y.as_ptr().add(j));
+        // vmul + vadd, not vfma: keep the scalar rounding sequence
+        let t = vmulq_f32(vmulq_f32(xvv, ev), sv);
+        vst1q_f32(y.as_mut_ptr().add(j), vaddq_f32(yv, t));
+        j += 4;
+    }
+    axpy_scaled_scalar(xv, &e[j..], &s[j..], &mut y[j..]);
+}
 
 /// A packed layer stack plus its precomputed decode tables, so the GEMM
 /// hot loop builds its [`BlockDecode`] view with a memcpy instead of
@@ -147,11 +446,20 @@ impl Linear {
             }
             Linear::Packed(p) => {
                 let dec = p.q.block_decode_cached(&p.tables)?;
+                let path = kernel_path();
                 if workers > 1 && k * n >= PAR_MACS {
-                    return matvec_packed_par(&dec, l, x, y, workers);
+                    return matvec_packed_par(&dec, l, x, y, workers, path);
                 }
-                scratch.resize(n, 0.0);
-                matvec_packed_cols(&dec, l, x, y, 0, n, scratch);
+                if path == KernelPath::Scalar {
+                    scratch.resize(n, 0.0);
+                    matvec_packed_cols(&dec, l, x, y, 0, n, scratch);
+                } else {
+                    // split one scratch allocation into the scale row and
+                    // the decoded-element buffer the SIMD loop fills
+                    scratch.resize(2 * n, 0.0);
+                    let (scale_row, ebuf) = scratch.split_at_mut(n);
+                    matvec_packed_cols_simd(&dec, l, x, y, 0, n, scale_row, ebuf, path);
+                }
                 Ok(())
             }
         }
@@ -199,11 +507,18 @@ impl Linear {
             }
             Linear::Packed(p) => {
                 let dec = p.q.block_decode_cached(&p.tables)?;
+                let path = kernel_path();
                 if workers > 1 && m * k * n >= PAR_MACS {
-                    return matmul_packed_par(&dec, l, x, m, y, workers);
+                    return matmul_packed_par(&dec, l, x, m, y, workers, path);
                 }
-                scratch.resize(n, 0.0);
-                matmul_packed_cols(&dec, l, x, m, y, 0, n, scratch);
+                if path == KernelPath::Scalar {
+                    scratch.resize(n, 0.0);
+                    matmul_packed_cols(&dec, l, x, m, y, 0, n, scratch);
+                } else {
+                    scratch.resize(2 * n, 0.0);
+                    let (scale_row, ebuf) = scratch.split_at_mut(n);
+                    matmul_packed_cols_simd(&dec, l, x, m, y, 0, n, scale_row, ebuf, path);
+                }
                 Ok(())
             }
         }
@@ -276,6 +591,41 @@ fn matvec_packed_cols(
     }
 }
 
+/// The vector variant of [`matvec_packed_cols`]: each non-zero input
+/// row's packed bytes are expanded once into `ebuf` through
+/// [`decode_nibbles`] and applied with one [`axpy_scaled`] sweep —
+/// byte-at-a-time LUT calls become two wide vector passes per row.
+/// Bitwise identical to the scalar loop: the decode is exact and the
+/// axpy keeps the `(x·e)·s` then add rounding sequence per element.
+fn matvec_packed_cols_simd(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    y: &mut [f32],
+    c0: usize,
+    c1: usize,
+    scale_row: &mut [f32],
+    ebuf: &mut [f32],
+    path: KernelPath,
+) {
+    debug_assert!(c0 % 2 == 0 && c1 % 2 == 0, "column range must be nibble-aligned");
+    let (block, w) = (dec.block(), c1 - c0);
+    let elem = dec.elem_table();
+    for kb in 0..dec.block_rows() {
+        dec.scale_range_into(l, kb, c0, c1, &mut scale_row[..w]);
+        for r in 0..block {
+            let row = kb * block + r;
+            let xv = x[row];
+            if xv == 0.0 {
+                continue;
+            }
+            let bytes = &dec.code_row(l, row)[c0 / 2..c1 / 2];
+            decode_nibbles(path, elem, bytes, &mut ebuf[..w]);
+            axpy_scaled(path, xv, &ebuf[..w], &scale_row[..w], &mut y[..w]);
+        }
+    }
+}
+
 /// Nibble-aligned output-column ranges for a `workers`-way split —
 /// shared by the column-parallel matvec and matmul so the alignment
 /// rule lives in exactly one place.
@@ -294,12 +644,19 @@ fn matvec_packed_par(
     x: &[f32],
     y: &mut [f32],
     workers: usize,
+    path: KernelPath,
 ) -> Result<()> {
     let ranges = col_ranges(dec.n(), workers);
     let parts = threads::par_map(ranges.clone(), workers, |(c0, c1)| {
-        let mut part = vec![0.0f32; c1 - c0];
-        let mut scale_row = vec![0.0f32; c1 - c0];
-        matvec_packed_cols(dec, l, x, &mut part, c0, c1, &mut scale_row);
+        let w = c1 - c0;
+        let mut part = vec![0.0f32; w];
+        let mut scale_row = vec![0.0f32; w];
+        if path == KernelPath::Scalar {
+            matvec_packed_cols(dec, l, x, &mut part, c0, c1, &mut scale_row);
+        } else {
+            let mut ebuf = vec![0.0f32; w];
+            matvec_packed_cols_simd(dec, l, x, &mut part, c0, c1, &mut scale_row, &mut ebuf, path);
+        }
         part
     });
     for ((c0, c1), part) in ranges.into_iter().zip(parts) {
@@ -373,6 +730,61 @@ fn matmul_packed_cols(
     }
 }
 
+/// The vector variant of [`matmul_packed_cols`]: within a tile each
+/// packed byte run is expanded **once** into `ebuf` through
+/// [`decode_nibbles`] and swept across every non-zero tile row with
+/// [`axpy_scaled`] — the decode cost is amortized over [`TILE_M`] rows
+/// and the per-row update runs at vector width. Per output row the
+/// element op order still matches [`matvec_packed_cols`] exactly (each
+/// `y[mi, j]` receives one `(x·e)·s` add per K row, in row order), so
+/// rows stay bitwise identical to matvec and to the scalar tile loop.
+fn matmul_packed_cols_simd(
+    dec: &BlockDecode<'_>,
+    l: usize,
+    x: &[f32],
+    m: usize,
+    y: &mut [f32],
+    c0: usize,
+    c1: usize,
+    scale_row: &mut [f32],
+    ebuf: &mut [f32],
+    path: KernelPath,
+) {
+    debug_assert!(c0 % 2 == 0 && c1 % 2 == 0, "column range must be nibble-aligned");
+    let (block, k, w) = (dec.block(), dec.k(), c1 - c0);
+    let elem = dec.elem_table();
+    let mut tile = 0;
+    while tile < m {
+        let tm = (m - tile).min(TILE_M);
+        for kb in 0..dec.block_rows() {
+            dec.scale_range_into(l, kb, c0, c1, &mut scale_row[..w]);
+            for r in 0..block {
+                let row = kb * block + r;
+                let mut xs = [0.0f32; TILE_M];
+                let mut any = false;
+                for (mi, xv) in xs.iter_mut().enumerate().take(tm) {
+                    *xv = x[(tile + mi) * k + row];
+                    any |= *xv != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let bytes = &dec.code_row(l, row)[c0 / 2..c1 / 2];
+                // one decode per (row, tile), amortized over tm rows
+                decode_nibbles(path, elem, bytes, &mut ebuf[..w]);
+                for (mi, &xv) in xs.iter().enumerate().take(tm) {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let yo = (tile + mi) * w;
+                    axpy_scaled(path, xv, &ebuf[..w], &scale_row[..w], &mut y[yo..yo + w]);
+                }
+            }
+        }
+        tile += TILE_M;
+    }
+}
+
 /// Column-parallel multi-row fused GEMM: output columns split into
 /// nibble-aligned ranges, one worker per range computing a `[m, range]`
 /// partial from zero; each output column is accumulated by exactly one
@@ -386,6 +798,7 @@ fn matmul_packed_par(
     m: usize,
     y: &mut [f32],
     workers: usize,
+    path: KernelPath,
 ) -> Result<()> {
     let n = dec.n();
     let ranges = col_ranges(n, workers);
@@ -393,7 +806,14 @@ fn matmul_packed_par(
         let w = c1 - c0;
         let mut part = vec![0.0f32; m * w];
         let mut scale_row = vec![0.0f32; w];
-        matmul_packed_cols(dec, l, x, m, &mut part, c0, c1, &mut scale_row);
+        if path == KernelPath::Scalar {
+            matmul_packed_cols(dec, l, x, m, &mut part, c0, c1, &mut scale_row);
+        } else {
+            let mut ebuf = vec![0.0f32; w];
+            matmul_packed_cols_simd(
+                dec, l, x, m, &mut part, c0, c1, &mut scale_row, &mut ebuf, path,
+            );
+        }
         part
     });
     for ((c0, c1), part) in ranges.into_iter().zip(parts) {
@@ -499,9 +919,15 @@ mod tests {
         let mut scalar = vec![0.0f32; 64];
         let mut scale_row = vec![0.0f32; 64];
         matvec_packed_cols(&dec, 0, &x, &mut scalar, 0, 64, &mut scale_row);
-        let mut par = vec![0.0f32; 64];
-        matvec_packed_par(&dec, 0, &x, &mut par, 4).unwrap();
-        assert_eq!(scalar, par, "column-parallel result must be bitwise identical");
+        for path in [KernelPath::Scalar, kernel_path()] {
+            let mut par = vec![0.0f32; 64];
+            matvec_packed_par(&dec, 0, &x, &mut par, 4, path).unwrap();
+            assert_eq!(
+                scalar, par,
+                "column-parallel ({}) result must be bitwise identical",
+                path.name()
+            );
+        }
 
         // the public matvec path: above PAR_MACS, workers>1 takes the
         // parallel branch and must still match workers=1 bit-for-bit
@@ -596,6 +1022,91 @@ mod tests {
         assert!(lin.matmul(0, &[0.0; 16], 2, &mut y, &mut scratch, 1).is_err());
         let mut short = vec![0.0f32; 8];
         assert!(lin.matmul(0, &[0.0; 32], 2, &mut short, &mut scratch, 1).is_err());
+    }
+
+    #[test]
+    fn kernel_path_reports_and_features_stringify() {
+        // the cached dispatch decision is stable across calls and maps
+        // to a known name; the feature list is non-empty prose either way
+        let p = kernel_path();
+        assert_eq!(p, kernel_path());
+        assert!(["avx2", "neon", "scalar"].contains(&p.name()));
+        assert!(!cpu_features().is_empty());
+    }
+
+    #[test]
+    fn decode_nibbles_simd_bitwise_matches_scalar() {
+        // every format's elem LUT, every byte value, and ragged lengths
+        // that exercise both the vector body and the scalar tail
+        for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+            let tables = kind.decode_tables();
+            let w = rand_w(&[16, 16], 51, 0.1);
+            let c = codec_for(kind);
+            let p = c.prepare(&w);
+            let q = c.encode(&w, &p, &rtn_decisions(&p));
+            let dec = q.block_decode_cached(&tables).unwrap();
+            let elem = dec.elem_table();
+            for len in [0usize, 1, 7, 8, 15, 16, 17, 31, 32, 33, 64] {
+                let bytes: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+                let mut a = vec![9.0f32; 2 * len];
+                let mut b = vec![-9.0f32; 2 * len];
+                decode_nibbles(KernelPath::Scalar, elem, &bytes, &mut a);
+                decode_nibbles(kernel_path(), elem, &bytes, &mut b);
+                // compare bit patterns: code 8 decodes to -0.0, which
+                // == 0.0 would not catch
+                let abits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bbits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(abits, bbits, "{}: len={len} decode diverged", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_scaled_simd_bitwise_matches_scalar() {
+        for n in [0usize, 1, 3, 8, 9, 16, 31, 33] {
+            let e = rand_x(n, 61);
+            let s = rand_x(n, 62);
+            let mut a = rand_x(n, 63);
+            let mut b = a.clone();
+            axpy_scaled(KernelPath::Scalar, 0.7, &e, &s, &mut a);
+            axpy_scaled(kernel_path(), 0.7, &e, &s, &mut b);
+            assert_eq!(a, b, "axpy diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_cols_bitwise_match_scalar_cols() {
+        // the full fused loops, scalar vs SIMD, on odd column counts
+        // (34 columns: vector body + ragged tail) and partial ranges
+        for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+            let w = rand_w(&[2, 64, 34], 71, 0.1);
+            let c = codec_for(kind);
+            let p = c.prepare(&w);
+            let q = c.encode(&w, &p, &rtn_decisions(&p));
+            let dec = q.block_decode().unwrap();
+            let path = kernel_path();
+            for (c0, c1) in [(0usize, 34usize), (2, 18), (16, 34)] {
+                let w_ = c1 - c0;
+                let x = rand_x(64, 73);
+                let mut ys = vec![0.0f32; w_];
+                let mut scale = vec![0.0f32; w_];
+                matvec_packed_cols(&dec, 1, &x, &mut ys, c0, c1, &mut scale);
+                let mut yv = vec![0.0f32; w_];
+                let mut ebuf = vec![0.0f32; w_];
+                matvec_packed_cols_simd(&dec, 1, &x, &mut yv, c0, c1, &mut scale, &mut ebuf, path);
+                assert_eq!(ys, yv, "{}: matvec cols [{c0},{c1}) diverged", kind.name());
+
+                let m = TILE_M + 3;
+                let xm = rand_x(m * 64, 79);
+                let mut ms = vec![0.0f32; m * w_];
+                matmul_packed_cols(&dec, 1, &xm, m, &mut ms, c0, c1, &mut scale);
+                let mut mv = vec![0.0f32; m * w_];
+                matmul_packed_cols_simd(
+                    &dec, 1, &xm, m, &mut mv, c0, c1, &mut scale, &mut ebuf, path,
+                );
+                assert_eq!(ms, mv, "{}: matmul cols [{c0},{c1}) diverged", kind.name());
+            }
+        }
     }
 
     #[test]

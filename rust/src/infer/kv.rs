@@ -8,17 +8,28 @@
 //! Two pieces:
 //!
 //! * [`KvPool`] — the shared page budget. Pages are fixed-size boxed
-//!   float buffers; freed pages go to a free list and are handed back out
-//!   before anything new is allocated, so steady-state serving does no
-//!   allocation. `take` fails once `max_pages` buffers are outstanding —
-//!   callers (the native backend) fall back to uncached compute rather
-//!   than grow without bound.
+//!   buffers in the pool's element format ([`KvFormat`]); freed pages go
+//!   to a free list and are handed back out before anything new is
+//!   allocated, so steady-state serving does no allocation. `take` fails
+//!   once `max_pages` buffers are outstanding — callers (the native
+//!   backend) fall back to uncached compute rather than grow without
+//!   bound.
 //! * [`KvSeq`] — one slot's cache: a queue of pages it exclusively owns,
-//!   holding `[n_layers, 2, d_model]` floats per cached token (keys are
+//!   holding `[n_layers, 2, d_model]` elements per cached token (keys are
 //!   stored *post-RoPE*, values raw). Because each sequence owns its
 //!   pages outright, a batch of slots can be processed fully in parallel
 //!   with no locking on the hot path; the pool mutex is touched only at
 //!   page-boundary alloc/free.
+//!
+//! The element format is pluggable: `f32` stores rows verbatim (reads are
+//! zero-copy borrows, the cached path stays bit-exact against uncached
+//! compute), while `e4m3` packs each element to one FP8 byte through
+//! [`crate::formats::e4m3`] — 4x more cached tokens per pool budget and
+//! ~4x less attention read bandwidth, at the cost of quantization error
+//! (the one deliberately non-bit-exact path; see the tolerance tests).
+//! Writes go through [`KvSeq::store_kv`], reads through
+//! [`KvSeq::k_row`]/[`KvSeq::v_row`], which borrow for `f32` and decode
+//! into a caller scratch row for `e4m3`.
 //!
 //! Slot lifecycle (allocate on admit, free on completion/disconnect) is
 //! driven by the scheduler through `StepBackend::release` — see
@@ -27,6 +38,8 @@
 use std::collections::VecDeque;
 
 use anyhow::Result;
+
+use crate::formats::e4m3;
 
 /// Typed error returned by [`KvPool::take`] when the page budget is
 /// spent. The native backend downcasts to this (`downcast_ref`, which
@@ -46,8 +59,45 @@ impl std::fmt::Display for KvExhausted {
 
 impl std::error::Error for KvExhausted {}
 
-/// Geometry of one cached token slot: how many floats a token occupies
-/// and how tokens tile into pages.
+/// Element storage format for cached K/V rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvFormat {
+    /// Raw `f32` — zero-copy reads, cached decode stays bit-exact.
+    F32,
+    /// FP8 E4M3, one byte per element — 4x the cached tokens per byte
+    /// budget, small quantization error on attention scores.
+    E4m3,
+}
+
+impl KvFormat {
+    /// CLI/bench name of the format.
+    pub fn name(self) -> &'static str {
+        match self {
+            KvFormat::F32 => "f32",
+            KvFormat::E4m3 => "e4m3",
+        }
+    }
+
+    /// Parse a CLI name (`f32` / `e4m3`), case-insensitive.
+    pub fn parse(s: &str) -> Option<KvFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Some(KvFormat::F32),
+            "e4m3" | "fp8" => Some(KvFormat::E4m3),
+            _ => None,
+        }
+    }
+
+    /// Bytes one stored element occupies.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvFormat::F32 => 4,
+            KvFormat::E4m3 => 1,
+        }
+    }
+}
+
+/// Geometry of one cached token slot: how many elements a token occupies,
+/// how tokens tile into pages, and how elements are stored.
 #[derive(Clone, Copy, Debug)]
 pub struct KvLayout {
     /// decoder layers
@@ -56,17 +106,51 @@ pub struct KvLayout {
     pub d_model: usize,
     /// cached tokens per page
     pub page_tokens: usize,
+    /// element storage format
+    pub format: KvFormat,
 }
 
 impl KvLayout {
-    /// Floats one cached token occupies (`n_layers * 2 * d_model`).
+    /// Elements one cached token occupies (`n_layers * 2 * d_model`).
     pub fn token_floats(&self) -> usize {
         self.n_layers * 2 * self.d_model
     }
 
-    /// Floats per page.
+    /// Elements per page.
     pub fn page_floats(&self) -> usize {
         self.page_tokens * self.token_floats()
+    }
+
+    /// Bytes per page in the storage format — the number that decides how
+    /// many slots a fixed memory budget holds.
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats() * self.format.elem_bytes()
+    }
+}
+
+/// One pool page: storage for `page_tokens` cached token slots, in the
+/// pool's element format. Variants never mix within a pool.
+#[derive(Debug)]
+pub enum KvPage {
+    /// `f32` storage, `page_floats` elements.
+    F32(Box<[f32]>),
+    /// E4M3-packed storage, one byte per element.
+    Bytes(Box<[u8]>),
+}
+
+impl KvPage {
+    fn zero(&mut self) {
+        match self {
+            KvPage::F32(p) => p.fill(0.0),
+            KvPage::Bytes(p) => p.fill(0),
+        }
+    }
+
+    fn elems(&self) -> usize {
+        match self {
+            KvPage::F32(p) => p.len(),
+            KvPage::Bytes(p) => p.len(),
+        }
     }
 }
 
@@ -76,29 +160,41 @@ impl KvLayout {
 /// total outstanding count never exceeds `max_pages`.
 #[derive(Debug)]
 pub struct KvPool {
+    format: KvFormat,
     page_floats: usize,
     max_pages: usize,
     outstanding: usize,
-    free: Vec<Box<[f32]>>,
+    free: Vec<KvPage>,
 }
 
 impl KvPool {
-    /// A pool handing out pages of `page_floats` floats, at most
-    /// `max_pages` outstanding at once.
-    pub fn new(page_floats: usize, max_pages: usize) -> KvPool {
-        KvPool { page_floats, max_pages, outstanding: 0, free: Vec::new() }
+    /// A pool handing out pages shaped for `layout`, at most `max_pages`
+    /// outstanding at once.
+    pub fn new(layout: KvLayout, max_pages: usize) -> KvPool {
+        KvPool {
+            format: layout.format,
+            page_floats: layout.page_floats(),
+            max_pages,
+            outstanding: 0,
+            free: Vec::new(),
+        }
     }
 
     /// An effectively unbounded pool (scratch compute, tests).
-    pub fn unbounded(page_floats: usize) -> KvPool {
-        KvPool::new(page_floats, usize::MAX)
+    pub fn unbounded(layout: KvLayout) -> KvPool {
+        KvPool::new(layout, usize::MAX)
+    }
+
+    /// Element format of every page this pool hands out.
+    pub fn format(&self) -> KvFormat {
+        self.format
     }
 
     /// Take one page, reusing a freed buffer when available. Errors once
     /// the outstanding count reaches the pool cap.
-    pub fn take(&mut self) -> Result<Box<[f32]>> {
+    pub fn take(&mut self) -> Result<KvPage> {
         if let Some(mut page) = self.free.pop() {
-            page.fill(0.0);
+            page.zero();
             self.outstanding += 1;
             return Ok(page);
         }
@@ -106,12 +202,22 @@ impl KvPool {
             return Err(anyhow::Error::new(KvExhausted { outstanding: self.outstanding }));
         }
         self.outstanding += 1;
-        Ok(vec![0.0f32; self.page_floats].into_boxed_slice())
+        Ok(match self.format {
+            KvFormat::F32 => KvPage::F32(vec![0.0f32; self.page_floats].into_boxed_slice()),
+            KvFormat::E4m3 => KvPage::Bytes(vec![0u8; self.page_floats].into_boxed_slice()),
+        })
     }
 
     /// Return a page to the free list.
-    pub fn put(&mut self, page: Box<[f32]>) {
-        debug_assert_eq!(page.len(), self.page_floats, "foreign page returned");
+    pub fn put(&mut self, page: KvPage) {
+        debug_assert_eq!(page.elems(), self.page_floats, "foreign page returned");
+        debug_assert!(
+            matches!(
+                (&page, self.format),
+                (KvPage::F32(_), KvFormat::F32) | (KvPage::Bytes(_), KvFormat::E4m3)
+            ),
+            "page format does not match pool format"
+        );
         debug_assert!(self.outstanding > 0, "put without matching take");
         self.outstanding = self.outstanding.saturating_sub(1);
         self.free.push(page);
@@ -143,7 +249,7 @@ impl KvPool {
 #[derive(Debug)]
 pub struct KvSeq {
     layout: KvLayout,
-    pages: VecDeque<Box<[f32]>>,
+    pages: VecDeque<KvPage>,
     len: usize,
 }
 
@@ -166,6 +272,11 @@ impl KvSeq {
     /// Pages currently held.
     pub fn n_pages(&self) -> usize {
         self.pages.len()
+    }
+
+    /// Element format rows are stored in.
+    pub fn format(&self) -> KvFormat {
+        self.layout.format
     }
 
     /// Append one token slot (zero-initialized), taking a new page from
@@ -223,30 +334,101 @@ impl KvSeq {
         (page, within)
     }
 
+    /// Write token `t`'s layer-`layer` key and value rows, encoding
+    /// through the layout's element format. This is the one write path
+    /// that works for every format — projections land in scratch and are
+    /// stored from there.
+    pub fn store_kv(&mut self, t: usize, layer: usize, k: &[f32], v: &[f32]) {
+        let d = self.layout.d_model;
+        assert_eq!(k.len(), d, "key row width mismatch");
+        assert_eq!(v.len(), d, "value row width mismatch");
+        let (page, off) = self.offsets(t, layer);
+        match &mut self.pages[page] {
+            KvPage::F32(p) => {
+                p[off..off + d].copy_from_slice(k);
+                p[off + d..off + 2 * d].copy_from_slice(v);
+            }
+            KvPage::Bytes(p) => {
+                e4m3::encode_slice(k, &mut p[off..off + d]);
+                e4m3::encode_slice(v, &mut p[off + d..off + 2 * d]);
+            }
+        }
+    }
+
+    /// Key row of token `t` at `layer` as f32: a zero-copy borrow for
+    /// `f32` storage, or an E4M3 decode into `buf[..d_model]` (which must
+    /// be at least `d_model` long). The attention loops pass a per-row
+    /// scratch buffer so each cached row is decoded at most once per use.
+    #[inline]
+    pub fn k_row<'a>(&'a self, t: usize, layer: usize, buf: &'a mut [f32]) -> &'a [f32] {
+        let d = self.layout.d_model;
+        let (page, off) = self.offsets(t, layer);
+        match &self.pages[page] {
+            KvPage::F32(p) => &p[off..off + d],
+            KvPage::Bytes(p) => {
+                e4m3::decode_slice(&p[off..off + d], &mut buf[..d]);
+                &buf[..d]
+            }
+        }
+    }
+
+    /// Value row of token `t` at `layer` as f32 — same contract as
+    /// [`Self::k_row`].
+    #[inline]
+    pub fn v_row<'a>(&'a self, t: usize, layer: usize, buf: &'a mut [f32]) -> &'a [f32] {
+        let d = self.layout.d_model;
+        let (page, off) = self.offsets(t, layer);
+        match &self.pages[page] {
+            KvPage::F32(p) => &p[off + d..off + 2 * d],
+            KvPage::Bytes(p) => {
+                e4m3::decode_slice(&p[off + d..off + 2 * d], &mut buf[..d]);
+                &buf[..d]
+            }
+        }
+    }
+
     /// Cached (post-RoPE) key of token `t` at `layer`.
+    ///
+    /// # Panics
+    /// On non-`f32` storage — quantized rows have no borrowable f32 view;
+    /// use [`Self::k_row`] with a scratch buffer instead.
     #[inline]
     pub fn k(&self, t: usize, layer: usize) -> &[f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        &self.pages[page][off..off + d]
+        match &self.pages[page] {
+            KvPage::F32(p) => &p[off..off + d],
+            KvPage::Bytes(_) => panic!("KvSeq::k needs f32 kv storage; use k_row"),
+        }
     }
 
     /// Cached value of token `t` at `layer`.
+    ///
+    /// # Panics
+    /// On non-`f32` storage — use [`Self::v_row`] instead.
     #[inline]
     pub fn v(&self, t: usize, layer: usize) -> &[f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        &self.pages[page][off + d..off + 2 * d]
+        match &self.pages[page] {
+            KvPage::F32(p) => &p[off + d..off + 2 * d],
+            KvPage::Bytes(_) => panic!("KvSeq::v needs f32 kv storage; use v_row"),
+        }
     }
 
-    /// Mutable key/value buffers of token `t` at `layer` (for the write
-    /// right after the projection matvecs).
+    /// Mutable key/value buffers of token `t` at `layer`.
+    ///
+    /// # Panics
+    /// On non-`f32` storage — quantized writes must re-encode whole rows;
+    /// use [`Self::store_kv`] instead.
     #[inline]
     pub fn kv_mut(&mut self, t: usize, layer: usize) -> (&mut [f32], &mut [f32]) {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        let slot = &mut self.pages[page][off..off + 2 * d];
-        slot.split_at_mut(d)
+        match &mut self.pages[page] {
+            KvPage::F32(p) => p[off..off + 2 * d].split_at_mut(d),
+            KvPage::Bytes(_) => panic!("KvSeq::kv_mut needs f32 kv storage; use store_kv"),
+        }
     }
 }
 
@@ -255,7 +437,7 @@ mod tests {
     use super::*;
 
     fn layout() -> KvLayout {
-        KvLayout { n_layers: 2, d_model: 8, page_tokens: 4 }
+        KvLayout { n_layers: 2, d_model: 8, page_tokens: 4, format: KvFormat::F32 }
     }
 
     #[test]
@@ -263,12 +445,26 @@ mod tests {
         let l = layout();
         assert_eq!(l.token_floats(), 32);
         assert_eq!(l.page_floats(), 128);
+        assert_eq!(l.page_bytes(), 512);
+        let q = KvLayout { format: KvFormat::E4m3, ..l };
+        assert_eq!(q.page_floats(), 128);
+        assert_eq!(q.page_bytes(), 128, "e4m3 pages are 4x smaller");
+    }
+
+    #[test]
+    fn format_names_parse() {
+        for f in [KvFormat::F32, KvFormat::E4m3] {
+            assert_eq!(KvFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(KvFormat::parse("E4M3"), Some(KvFormat::E4m3));
+        assert_eq!(KvFormat::parse("fp8"), Some(KvFormat::E4m3));
+        assert_eq!(KvFormat::parse("f16"), None);
     }
 
     #[test]
     fn push_write_read_roundtrip_across_pages() {
         let l = layout();
-        let mut pool = KvPool::unbounded(l.page_floats());
+        let mut pool = KvPool::unbounded(l);
         let mut seq = KvSeq::new(l);
         // 10 tokens spans 3 pages (4 tokens each)
         for t in 0..10 {
@@ -286,6 +482,7 @@ mod tests {
         assert_eq!(seq.len(), 10);
         assert_eq!(seq.n_pages(), 3);
         assert_eq!(pool.outstanding(), 3);
+        let mut buf = vec![0.0f32; l.d_model];
         for t in 0..10 {
             for layer in 0..l.n_layers {
                 let k = seq.k(t, layer);
@@ -294,6 +491,11 @@ mod tests {
                     assert_eq!(k[i], (t * 100 + layer * 10 + i) as f32);
                     assert_eq!(v[i], -((t * 100 + layer * 10 + i) as f32));
                 }
+                // the row views agree bitwise with the borrows on f32
+                let kr: Vec<f32> = seq.k_row(t, layer, &mut buf).to_vec();
+                assert_eq!(kr, seq.k(t, layer));
+                let vr: Vec<f32> = seq.v_row(t, layer, &mut buf).to_vec();
+                assert_eq!(vr, seq.v(t, layer));
             }
         }
         seq.clear(&mut pool);
@@ -302,10 +504,57 @@ mod tests {
     }
 
     #[test]
+    fn e4m3_store_read_roundtrips_through_codec() {
+        let l = KvLayout { format: KvFormat::E4m3, ..layout() };
+        let mut pool = KvPool::unbounded(l);
+        let mut seq = KvSeq::new(l);
+        let d = l.d_model;
+        // values spanning subnormal, normal, negative, and saturating range
+        let mk = |t: usize, layer: usize, i: usize, sign: f32| {
+            sign * (0.001 + (t * 37 + layer * 11 + i * 3) as f32 * 1.7)
+        };
+        for t in 0..9 {
+            seq.push(&mut pool).unwrap();
+            for layer in 0..l.n_layers {
+                let k: Vec<f32> = (0..d).map(|i| mk(t, layer, i, 1.0)).collect();
+                let v: Vec<f32> = (0..d).map(|i| mk(t, layer, i, -1.0)).collect();
+                seq.store_kv(t, layer, &k, &v);
+            }
+        }
+        assert_eq!(seq.n_pages(), 3);
+        let mut buf = vec![0.0f32; d];
+        for t in 0..9 {
+            for layer in 0..l.n_layers {
+                for i in 0..d {
+                    let want_k = e4m3::roundtrip(mk(t, layer, i, 1.0).min(e4m3::E4M3_MAX));
+                    let got_k = seq.k_row(t, layer, &mut buf)[i];
+                    assert_eq!(got_k.to_bits(), want_k.to_bits(), "k t={t} l={layer} i={i}");
+                    let want_v =
+                        e4m3::roundtrip(mk(t, layer, i, -1.0).max(-e4m3::E4M3_MAX));
+                    let got_v = seq.v_row(t, layer, &mut buf)[i];
+                    assert_eq!(got_v.to_bits(), want_v.to_bits(), "v t={t} l={layer} i={i}");
+                }
+            }
+        }
+        seq.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "f32 kv storage")]
+    fn borrow_views_reject_quantized_storage() {
+        let l = KvLayout { format: KvFormat::E4m3, ..layout() };
+        let mut pool = KvPool::unbounded(l);
+        let mut seq = KvSeq::new(l);
+        seq.push(&mut pool).unwrap();
+        let _ = seq.k(0, 0);
+    }
+
+    #[test]
     fn reserve_matches_pushes_and_is_atomic() {
         let l = layout();
         // reserve(n) leaves the same geometry as n pushes
-        let mut pool = KvPool::unbounded(l.page_floats());
+        let mut pool = KvPool::unbounded(l);
         let mut a = KvSeq::new(l);
         a.reserve(&mut pool, 10).unwrap();
         let mut b = KvSeq::new(l);
@@ -325,7 +574,7 @@ mod tests {
         assert_eq!(pool.outstanding(), 0);
 
         // all-or-nothing on exhaustion: nothing taken, nothing mutated
-        let mut small = KvPool::new(l.page_floats(), 2);
+        let mut small = KvPool::new(l, 2);
         let mut c = KvSeq::new(l);
         c.reserve(&mut small, 4).unwrap(); // exactly one page
         let err = c.reserve(&mut small, 8).unwrap_err(); // needs 2 more, cap allows 1
@@ -338,22 +587,30 @@ mod tests {
     #[test]
     fn pool_reuses_freed_pages() {
         let l = layout();
-        let mut pool = KvPool::new(l.page_floats(), 4);
+        let mut pool = KvPool::new(l, 4);
         let page = pool.take().unwrap();
-        let ptr = page.as_ptr();
+        let ptr = match &page {
+            KvPage::F32(p) => p.as_ptr(),
+            KvPage::Bytes(_) => unreachable!("f32 pool handed out a byte page"),
+        };
         pool.put(page);
         assert_eq!(pool.outstanding(), 0);
         // the very same buffer comes back (LIFO reuse), zeroed
         let page = pool.take().unwrap();
-        assert_eq!(page.as_ptr(), ptr);
-        assert!(page.iter().all(|&x| x == 0.0));
+        match &page {
+            KvPage::F32(p) => {
+                assert_eq!(p.as_ptr(), ptr);
+                assert!(p.iter().all(|&x| x == 0.0));
+            }
+            KvPage::Bytes(_) => unreachable!(),
+        }
         pool.put(page);
     }
 
     #[test]
     fn pool_capacity_rejection_and_recovery() {
         let l = layout();
-        let mut pool = KvPool::new(l.page_floats(), 2);
+        let mut pool = KvPool::new(l, 2);
         let mut a = KvSeq::new(l);
         // 2 pages worth of tokens fit; the 9th token needs a 3rd page
         for _ in 0..8 {

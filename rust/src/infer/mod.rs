@@ -16,7 +16,12 @@
 //! appended once and reused. Cached and uncached decode are **bit
 //! identical**: the cached step replays exactly the float ops the
 //! full-window recompute would, so the parity tests assert token
-//! equality, not closeness.
+//! equality, not closeness. That invariant holds *per KV format*
+//! ([`KvFormat`], `--kv-format`): with `f32` storage rows are cached
+//! verbatim, with `e4m3` every row is FP8-quantized on store and decoded
+//! on read — cached and uncached still agree bitwise (both quantize the
+//! same rows the same way), but `e4m3` logits differ from `f32` logits
+//! by a small, tolerance-tested amount (DESIGN.md §12).
 //!
 //! Payload traffic is amortized across rows (DESIGN.md §11): prompt
 //! prefill runs all positions through the seven linears in `[T, ·]`
@@ -52,7 +57,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Result};
 
 pub use kernels::Linear;
-pub use kv::{KvLayout, KvPool, KvSeq};
+pub use kv::{KvFormat, KvLayout, KvPool, KvSeq};
 pub use preset::{native_manifest, quantize_store};
 
 use crate::runtime::ModelConfig;
@@ -85,8 +90,14 @@ struct Scratch {
     /// SwiGLU gate / up `[mlp_hidden]`
     g: Vec<f32>,
     u: Vec<f32>,
-    /// attention scores `[seq_len]`
+    /// attention scores `[n_heads, seq_len]` — all heads' score rows for
+    /// the two-pass attention sweep (scores for every head, then one
+    /// softmax + weighted-sum pass), so each cached K/V row is read (and,
+    /// for quantized storage, decoded) once per layer instead of once per
+    /// head
     scores: Vec<f32>,
+    /// f32 staging row `[d]` for quantized K/V reads ([`KvSeq::k_row`])
+    kvbuf: Vec<f32>,
     /// decoded block-scale row for the fused kernels
     scale_row: Vec<f32>,
 }
@@ -104,7 +115,8 @@ impl Scratch {
             proj: vec![0.0; d],
             g: vec![0.0; h],
             u: vec![0.0; h],
-            scores: vec![0.0; cfg.seq_len],
+            scores: vec![0.0; cfg.n_heads * cfg.seq_len],
+            kvbuf: vec![0.0; d],
             scale_row: Vec::new(),
         }
     }
@@ -129,9 +141,13 @@ struct RowScratch {
     /// SwiGLU gate / up `[rows, mlp_hidden]`
     g: Vec<f32>,
     u: Vec<f32>,
-    /// attention scores `[rows, seq_len]` — one disjoint row per
-    /// attention job, so rows can attend in parallel
+    /// attention scores `[rows, n_heads, seq_len]` — one disjoint chunk
+    /// per attention job, so rows can attend in parallel while each
+    /// job's two-pass sweep reads every cached K/V row only once
     scores: Vec<f32>,
+    /// f32 staging rows `[rows, d]` for quantized K/V reads, one
+    /// disjoint row per attention job
+    kvbuf: Vec<f32>,
     /// decoded block-scale row for the fused kernels
     scale_row: Vec<f32>,
     /// logits staging `[logit_rows, vocab]`
@@ -151,6 +167,7 @@ impl RowScratch {
             g: Vec::new(),
             u: Vec::new(),
             scores: Vec::new(),
+            kvbuf: Vec::new(),
             scale_row: Vec::new(),
             logits: Vec::new(),
         }
@@ -172,7 +189,8 @@ impl RowScratch {
         fit(&mut self.proj, rows * d);
         fit(&mut self.g, rows * h);
         fit(&mut self.u, rows * h);
-        fit(&mut self.scores, rows * cfg.seq_len);
+        fit(&mut self.scores, rows * cfg.n_heads * cfg.seq_len);
+        fit(&mut self.kvbuf, rows * d);
     }
 }
 
@@ -277,12 +295,14 @@ impl NativeModel {
         [&self.wq, &self.wk, &self.wv, &self.wo, &self.w_gate, &self.w_up, &self.w_down]
     }
 
-    /// The KV layout one cached token occupies for this model.
-    pub fn kv_layout(&self, page_tokens: usize) -> KvLayout {
+    /// The KV layout one cached token occupies for this model, in the
+    /// given element storage format.
+    pub fn kv_layout(&self, page_tokens: usize, format: KvFormat) -> KvLayout {
         KvLayout {
             n_layers: self.cfg.n_layers,
             d_model: self.cfg.d_model,
             page_tokens: page_tokens.max(1),
+            format,
         }
     }
 
@@ -297,26 +317,29 @@ impl NativeModel {
     /// [`Self::logits_window`] with an explicit column-parallelism
     /// budget for the fused kernels (1 when the caller is already inside
     /// a batch fan-out — thread pools must not nest). The scratch KV
-    /// pool uses [`DEFAULT_PAGE_TOKENS`]-token pages; callers with a
-    /// configured page size use [`Self::logits_window_paged`].
+    /// pool uses [`DEFAULT_PAGE_TOKENS`]-token `f32` pages; callers with
+    /// a configured geometry use [`Self::logits_window_paged`].
     pub fn logits_window_par(&self, tokens: &[i32], col_workers: usize) -> Result<Vec<f32>> {
-        self.logits_window_paged(tokens, DEFAULT_PAGE_TOKENS, col_workers)
+        self.logits_window_paged(tokens, DEFAULT_PAGE_TOKENS, KvFormat::F32, col_workers)
     }
 
-    /// [`Self::logits_window_par`] with an explicit KV page size for the
-    /// scratch pool — the backend threads its `--kv-page-tokens` /
-    /// [`NativeOptions::page_tokens`] setting through here instead of a
-    /// hardcoded page geometry. Page size never changes the logits, only
-    /// the allocation granularity.
+    /// [`Self::logits_window_par`] with an explicit KV page size and
+    /// element format for the scratch pool — the backend threads its
+    /// `--kv-page-tokens` / `--kv-format` settings through here instead
+    /// of a hardcoded geometry. Page size never changes the logits, only
+    /// the allocation granularity; the format does (`e4m3` quantizes
+    /// every cached row), which is why it is part of the signature and
+    /// not a global.
     pub fn logits_window_paged(
         &self,
         tokens: &[i32],
         page_tokens: usize,
+        kv_format: KvFormat,
         col_workers: usize,
     ) -> Result<Vec<f32>> {
         self.check_window(tokens)?;
-        let layout = self.kv_layout(page_tokens);
-        let pool = Mutex::new(KvPool::unbounded(layout.page_floats()));
+        let layout = self.kv_layout(page_tokens, kv_format);
+        let pool = Mutex::new(KvPool::unbounded(layout));
         let mut seq = KvSeq::new(layout);
         let mut s = Scratch::new(&self.cfg);
         let mut out = None;
@@ -335,20 +358,21 @@ impl NativeModel {
     /// Returns the last position's logits, **bit-identical** to
     /// [`Self::logits_window`] on the same tokens (pinned by tests).
     pub fn prefill(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.prefill_paged(tokens, DEFAULT_PAGE_TOKENS, threads::default_workers())
+        self.prefill_paged(tokens, DEFAULT_PAGE_TOKENS, KvFormat::F32, threads::default_workers())
     }
 
-    /// [`Self::prefill`] with explicit scratch-pool page size and
-    /// column-parallelism budget (1 inside a batch fan-out).
+    /// [`Self::prefill`] with explicit scratch-pool page size, KV element
+    /// format, and column-parallelism budget (1 inside a batch fan-out).
     pub fn prefill_paged(
         &self,
         tokens: &[i32],
         page_tokens: usize,
+        kv_format: KvFormat,
         col_workers: usize,
     ) -> Result<Vec<f32>> {
         self.check_window(tokens)?;
-        let layout = self.kv_layout(page_tokens);
-        let pool = Mutex::new(KvPool::unbounded(layout.page_floats()));
+        let layout = self.kv_layout(page_tokens, kv_format);
+        let pool = Mutex::new(KvPool::unbounded(layout));
         let mut seq = KvSeq::new(layout);
         let mut s = RowScratch::new();
         self.prefill_into(&mut seq, &pool, tokens, 0, true, &mut s, col_workers)?
@@ -452,23 +476,34 @@ impl NativeModel {
             self.wv.matvec(l, &s.a, &mut s.v, &mut s.scale_row, col_workers)?;
             ops::rope_inplace(&mut s.q, heads, hd, &self.cos, &self.sin, idx);
             ops::rope_inplace(&mut s.k, heads, hd, &self.cos, &self.sin, idx);
-            {
-                let (ck, cv) = seq.kv_mut(t_new, l);
-                ck.copy_from_slice(&s.k);
-                cv.copy_from_slice(&s.v);
-            }
+            seq.store_kv(t_new, l, &s.k, &s.v);
             let len = t_new + 1;
             s.attn.fill(0.0);
-            for h_ in 0..heads {
-                let q_h = &s.q[h_ * hd..(h_ + 1) * hd];
-                let scores = &mut s.scores[..len];
-                for (t, sc) in scores.iter_mut().enumerate() {
-                    *sc = ops::dot(q_h, &seq.k(t, l)[h_ * hd..(h_ + 1) * hd]) * inv_sqrt;
+            // Two-pass attention, token-outer: each cached K/V row is
+            // read through its decode view ONCE per layer (not once per
+            // head) — for quantized storage that is one e4m3 decode per
+            // row. Per (head, position) the float ops and, in pass 2,
+            // the ascending-t accumulation order are exactly those of
+            // the head-outer loop this replaced, so f32-cached logits
+            // are unchanged bitwise.
+            let sl = cfg.seq_len;
+            for t in 0..len {
+                let krow = seq.k_row(t, l, &mut s.kvbuf);
+                for h_ in 0..heads {
+                    let q_h = &s.q[h_ * hd..(h_ + 1) * hd];
+                    s.scores[h_ * sl + t] =
+                        ops::dot(q_h, &krow[h_ * hd..(h_ + 1) * hd]) * inv_sqrt;
                 }
-                ops::softmax_inplace(scores);
-                let attn_h = &mut s.attn[h_ * hd..(h_ + 1) * hd];
-                for (t, &p) in scores.iter().enumerate() {
-                    let v_h = &seq.v(t, l)[h_ * hd..(h_ + 1) * hd];
+            }
+            for h_ in 0..heads {
+                ops::softmax_inplace(&mut s.scores[h_ * sl..h_ * sl + len]);
+            }
+            for t in 0..len {
+                let vrow = seq.v_row(t, l, &mut s.kvbuf);
+                for h_ in 0..heads {
+                    let p = s.scores[h_ * sl + t];
+                    let attn_h = &mut s.attn[h_ * hd..(h_ + 1) * hd];
+                    let v_h = &vrow[h_ * hd..(h_ + 1) * hd];
                     for (o, &vv) in attn_h.iter_mut().zip(v_h) {
                         *o += p * vv;
                     }
@@ -602,41 +637,53 @@ impl NativeModel {
                     &self.sin,
                     idx,
                 );
-                let (ck, cv) = seqs[si].kv_mut(idx, l);
-                ck.copy_from_slice(&s.k[ri * d..(ri + 1) * d]);
-                cv.copy_from_slice(&s.v[ri * d..(ri + 1) * d]);
+                seqs[si].store_kv(idx, l, &s.k[ri * d..(ri + 1) * d], &s.v[ri * d..(ri + 1) * d]);
             }
             s.attn.fill(0.0);
             // per-row attention is embarrassingly parallel once every
             // KV write above has landed: row `ri` reads only its own
-            // sequence prefix and writes only its own attn/scores
+            // sequence prefix and writes only its own attn/scores/kvbuf
             // chunk, each computed wholly by one worker — so the result
-            // is identical for any worker count
+            // is identical for any worker count. Within a job the sweep
+            // is token-outer two-pass (same op order per head as the
+            // head-outer loop it replaced, see `feed`), so each cached
+            // row is decoded once per layer.
             {
                 let seqs_ro: &[&mut KvSeq] = seqs;
                 let q_ro: &[f32] = &s.q;
                 let act_quant = self.act_quant;
-                let jobs: Vec<(usize, &mut [f32], &mut [f32])> = s
+                let sl = cfg.seq_len;
+                let jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> = s
                     .attn
                     .chunks_mut(d)
-                    .zip(s.scores.chunks_mut(cfg.seq_len))
+                    .zip(s.scores.chunks_mut(heads * sl))
+                    .zip(s.kvbuf.chunks_mut(d))
                     .enumerate()
-                    .map(|(ri, (attn_row, scores_row))| (ri, attn_row, scores_row))
+                    .map(|(ri, ((attn_row, scores_row), kv_row))| {
+                        (ri, attn_row, scores_row, kv_row)
+                    })
                     .collect();
-                threads::par_map(jobs, col_workers, |(ri, attn_row, scores_row)| {
+                threads::par_map(jobs, col_workers, |(ri, attn_row, scores_row, kv_row)| {
                     let (si, _, idx) = rows[ri];
                     let len = idx + 1;
-                    for h_ in 0..heads {
-                        let q_h = &q_ro[ri * d + h_ * hd..ri * d + (h_ + 1) * hd];
-                        let scores = &mut scores_row[..len];
-                        for (t, sc) in scores.iter_mut().enumerate() {
-                            *sc = ops::dot(q_h, &seqs_ro[si].k(t, l)[h_ * hd..(h_ + 1) * hd])
-                                * inv_sqrt;
+                    let seq = &seqs_ro[si];
+                    for t in 0..len {
+                        let krow = seq.k_row(t, l, &mut kv_row[..]);
+                        for h_ in 0..heads {
+                            let q_h = &q_ro[ri * d + h_ * hd..ri * d + (h_ + 1) * hd];
+                            scores_row[h_ * sl + t] =
+                                ops::dot(q_h, &krow[h_ * hd..(h_ + 1) * hd]) * inv_sqrt;
                         }
-                        ops::softmax_inplace(scores);
-                        let attn_h = &mut attn_row[h_ * hd..(h_ + 1) * hd];
-                        for (t, &p) in scores.iter().enumerate() {
-                            let v_h = &seqs_ro[si].v(t, l)[h_ * hd..(h_ + 1) * hd];
+                    }
+                    for h_ in 0..heads {
+                        ops::softmax_inplace(&mut scores_row[h_ * sl..h_ * sl + len]);
+                    }
+                    for t in 0..len {
+                        let vrow = seq.v_row(t, l, &mut kv_row[..]);
+                        for h_ in 0..heads {
+                            let p = scores_row[h_ * sl + t];
+                            let attn_h = &mut attn_row[h_ * hd..(h_ + 1) * hd];
+                            let v_h = &vrow[h_ * hd..(h_ + 1) * hd];
                             for (o, &vv) in attn_h.iter_mut().zip(v_h) {
                                 *o += p * vv;
                             }
@@ -718,6 +765,11 @@ pub struct NativeOptions {
     pub page_tokens: usize,
     /// KV pool cap, in pages, across all in-flight slots
     pub max_pages: usize,
+    /// element storage format for cached K/V rows (`--kv-format`):
+    /// [`KvFormat::F32`] keeps serving bit-exact against the uncached
+    /// reference; [`KvFormat::E4m3`] packs rows to FP8 for 4x the cached
+    /// tokens per byte budget, within a tested logits tolerance
+    pub kv_format: KvFormat,
     /// worker threads for the phase-1 per-slot fan-out and the fused
     /// kernels' column-parallel budget (0 = auto)
     pub workers: usize,
@@ -729,6 +781,7 @@ impl Default for NativeOptions {
             use_cache: true,
             page_tokens: DEFAULT_PAGE_TOKENS,
             max_pages: 4096,
+            kv_format: KvFormat::F32,
             workers: 0,
         }
     }
@@ -800,8 +853,8 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Wrap a model with a KV pool sized by `opts`.
     pub fn new(model: NativeModel, opts: NativeOptions) -> NativeBackend {
-        let layout = model.kv_layout(opts.page_tokens);
-        let pool = Mutex::new(KvPool::new(layout.page_floats(), opts.max_pages));
+        let layout = model.kv_layout(opts.page_tokens, opts.kv_format);
+        let pool = Mutex::new(KvPool::new(layout, opts.max_pages));
         NativeBackend {
             model,
             opts,
@@ -844,11 +897,13 @@ impl NativeBackend {
     }
 
     /// Full-window logits on a scratch pool through the batched prefill
-    /// path — bit-identical to `logits_window`, used for uncached mode
-    /// and the pool-exhaustion fallback. Respects the configured KV page
-    /// size instead of a hardcoded geometry.
+    /// path — bit-identical to the cached path in the *same* KV format,
+    /// used for uncached mode and the pool-exhaustion fallback. Respects
+    /// the configured KV page size and element format (an `e4m3` backend
+    /// must fall back to an `e4m3` recompute, or the fallback would
+    /// change the logits).
     fn full_window(&self, want: &[i32], col_workers: usize) -> Result<Vec<f32>> {
-        self.model.prefill_paged(want, self.opts.page_tokens, col_workers)
+        self.model.prefill_paged(want, self.opts.page_tokens, self.opts.kv_format, col_workers)
     }
 
     /// Phase 1 for one slot: catch the cache up to "all but the decode
@@ -1224,7 +1279,7 @@ mod tests {
                         prompt.len()
                     );
                     // scalar column budget must agree too
-                    let scalar = model.prefill_paged(&prompt, 8, 1).unwrap();
+                    let scalar = model.prefill_paged(&prompt, 8, KvFormat::F32, 1).unwrap();
                     assert_eq!(scalar, reference, "scalar prefill diverged");
                 }
             }
@@ -1248,10 +1303,96 @@ mod tests {
         let reference = model.logits_window(&[9, 8, 7, 6]).unwrap();
         for page_tokens in [1usize, 3, 16, 64] {
             let got = model
-                .logits_window_paged(&[9, 8, 7, 6], page_tokens, threads::default_workers())
+                .logits_window_paged(
+                    &[9, 8, 7, 6],
+                    page_tokens,
+                    KvFormat::F32,
+                    threads::default_workers(),
+                )
                 .unwrap();
             assert_eq!(got, reference, "page_tokens={page_tokens} changed the logits");
         }
+    }
+
+    fn cosine(a: &[f32], b: &[f32]) -> f64 {
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (&x, &y) in a.iter().zip(b) {
+            dot += x as f64 * y as f64;
+            na += x as f64 * x as f64;
+            nb += y as f64 * y as f64;
+        }
+        dot / (na.sqrt() * nb.sqrt()).max(1e-30)
+    }
+
+    fn argmax(v: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn e4m3_kv_close_to_f32_kv_over_multi_page_sequence() {
+        // the documented tolerance for the one deliberately non-bit-exact
+        // path: e4m3-cached logits stay cosine >= 0.999 to f32-cached
+        // logits and pick the same greedy token, over a window that spans
+        // several pages (page_tokens=4, 13 tokens -> 4 pages)
+        let backend = nano_backend(true);
+        let model = backend.model();
+        let prompt: Vec<i32> = (0..13).map(|i| (i * 19 + 3) % 256).collect();
+        for t in 2..=prompt.len() {
+            let f32_logits =
+                model.logits_window_paged(&prompt[..t], 4, KvFormat::F32, 1).unwrap();
+            let e4m3_logits =
+                model.logits_window_paged(&prompt[..t], 4, KvFormat::E4m3, 1).unwrap();
+            let cos = cosine(&f32_logits, &e4m3_logits);
+            assert!(cos >= 0.999, "t={t}: e4m3 kv cosine {cos} below tolerance");
+            // the full multi-page window must also pick the same greedy
+            // token, and the quantization must actually be live
+            if t == prompt.len() {
+                assert_eq!(
+                    argmax(&f32_logits),
+                    argmax(&e4m3_logits),
+                    "e4m3 kv flipped the greedy token on the full window"
+                );
+                assert_ne!(f32_logits, e4m3_logits, "e4m3 kv path identical to f32?");
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_kv_cached_decode_matches_uncached_exactly() {
+        // cached==uncached stays BIT-exact within the e4m3 format: both
+        // paths quantize the same rows through the same codec, so the
+        // pool-exhaustion fallback can never change tokens mid-stream
+        let mk = |use_cache: bool| {
+            let m = preset::native_manifest("nano").unwrap();
+            let fp = ParamStore::init(&m, 42);
+            let store =
+                preset::quantize_store(&m, &fp, crate::formats::codec::FormatKind::Nvfp4)
+                    .unwrap();
+            let model = NativeModel::new(&m.config, &store, true).unwrap();
+            NativeBackend::new(
+                model,
+                NativeOptions {
+                    use_cache,
+                    kv_format: KvFormat::E4m3,
+                    page_tokens: 4,
+                    ..NativeOptions::default()
+                },
+            )
+        };
+        let cached = mk(true);
+        let plain = mk(false);
+        for (prompt, n) in [(vec![1, 2, 3], 12usize), (vec![200, 7], 8)] {
+            let a = generate_greedy(&cached, &prompt, n).unwrap();
+            let b = generate_greedy(&plain, &prompt, n).unwrap();
+            assert_eq!(a, b, "e4m3 cached vs uncached diverged for {prompt:?}");
+        }
+        assert_eq!(cached.kv_outstanding(), 0);
     }
 
     #[test]

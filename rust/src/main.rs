@@ -14,13 +14,14 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use nvfp4_faar::config::PipelineConfig;
 use nvfp4_faar::data::tasks::TaskKind;
 use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::kernels::{cpu_features, kernel_path};
 use nvfp4_faar::infer::{
-    native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
+    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
 };
 use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
@@ -45,7 +46,8 @@ USAGE: faar <subcommand> [options]
             [--workers N] [--max-batch N] [--queue-depth N]
             [--max-tokens-cap N] [--max-line-bytes N]
             [--read-timeout-ms MS] [--max-conns N] [--kv-pages N]
-            [--kv-page-tokens N] [--no-kv] [--no-act-quant]
+            [--kv-page-tokens N] [--kv-format f32|e4m3 (native only)]
+            [--no-kv] [--no-act-quant]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
   info      --model tiny
@@ -383,16 +385,29 @@ fn serve_native(
     let pages_per_window = manifest.config.seq_len.div_ceil(page_tokens);
     let max_pages =
         args.usize_or("kv-pages", 2 * opts.max_batch.max(1) * pages_per_window)?;
+    let kv_name = args.str_or("kv-format", nd.kv_format.name());
+    let kv_format = KvFormat::parse(&kv_name)
+        .ok_or_else(|| anyhow!("unknown --kv-format '{kv_name}' (expected f32 or e4m3)"))?;
     let backend = NativeBackend::new(
         model,
-        NativeOptions { use_cache: !args.flag("no-kv"), max_pages, page_tokens, ..nd },
+        NativeOptions {
+            use_cache: !args.flag("no-kv"),
+            max_pages,
+            page_tokens,
+            kv_format,
+            ..nd
+        },
     );
     info!(
-        "native backend ready (model {}, kv {} pages x {} tokens, cache {})",
+        "native backend ready (model {}, kv {} pages x {} tokens [{}], cache {}, \
+         kernels {} [{}])",
         manifest.config.name,
         max_pages,
         page_tokens,
-        if args.flag("no-kv") { "off" } else { "on" }
+        kv_format.name(),
+        if args.flag("no-kv") { "off" } else { "on" },
+        kernel_path().name(),
+        cpu_features()
     );
     serve_backend(&backend, addr, max_conns, opts).map(|_| ())
 }

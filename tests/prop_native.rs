@@ -4,8 +4,9 @@
 //! cached, uncached, batched, and sequential native paths.
 
 use nvfp4_faar::formats::codec::{codec_for, rtn_decisions, FormatKind};
-use nvfp4_faar::infer::kernels::Linear;
-use nvfp4_faar::infer::kv::{KvLayout, KvPool, KvSeq};
+use nvfp4_faar::formats::e4m3;
+use nvfp4_faar::infer::kernels::{decode_nibbles, kernel_path, KernelPath, Linear};
+use nvfp4_faar::infer::kv::{KvFormat, KvLayout, KvPool, KvSeq};
 use nvfp4_faar::infer::{
     native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
 };
@@ -31,8 +32,9 @@ fn prop_kv_append_read_roundtrip() {
             (layers, d, page_tokens, tokens, rng.next_u64())
         },
         |&(layers, d, page_tokens, tokens, seed)| {
-            let layout = KvLayout { n_layers: layers, d_model: d, page_tokens };
-            let mut pool = KvPool::unbounded(layout.page_floats());
+            let layout =
+                KvLayout { n_layers: layers, d_model: d, page_tokens, format: KvFormat::F32 };
+            let mut pool = KvPool::unbounded(layout);
             let mut seq = KvSeq::new(layout);
             // write a distinct recognizable pattern per (token, layer)
             for t in 0..tokens {
@@ -90,8 +92,9 @@ fn prop_kv_page_reuse_after_free() {
         30,
         |rng| (1 + rng.below(4), 1 + rng.below(6)),
         |&(page_tokens, rounds)| {
-            let layout = KvLayout { n_layers: 2, d_model: 8, page_tokens };
-            let mut pool = KvPool::new(layout.page_floats(), 8);
+            let layout =
+                KvLayout { n_layers: 2, d_model: 8, page_tokens, format: KvFormat::F32 };
+            let mut pool = KvPool::new(layout, 8);
             let mut high_water = 0;
             for _ in 0..rounds {
                 let mut seq = KvSeq::new(layout);
@@ -124,8 +127,9 @@ fn prop_kv_capacity_rejection() {
         30,
         |rng| (1 + rng.below(3), 1 + rng.below(4)),
         |&(page_tokens, max_pages)| {
-            let layout = KvLayout { n_layers: 1, d_model: 4, page_tokens };
-            let mut pool = KvPool::new(layout.page_floats(), max_pages);
+            let layout =
+                KvLayout { n_layers: 1, d_model: 4, page_tokens, format: KvFormat::F32 };
+            let mut pool = KvPool::new(layout, max_pages);
             let mut seq = KvSeq::new(layout);
             // exactly max_pages * page_tokens pushes fit
             for _ in 0..max_pages * page_tokens {
@@ -161,10 +165,11 @@ fn prop_kv_reserve_equals_pushes_and_is_atomic() {
             (page_tokens, pre, extra, max_pages)
         },
         |&(page_tokens, pre, extra, max_pages)| {
-            let layout = KvLayout { n_layers: 2, d_model: 8, page_tokens };
+            let layout =
+                KvLayout { n_layers: 2, d_model: 8, page_tokens, format: KvFormat::F32 };
             // reserve(extra) after `pre` pushes leaves the same geometry
             // as pre + extra pushes
-            let mut pool = KvPool::unbounded(layout.page_floats());
+            let mut pool = KvPool::unbounded(layout);
             let mut a = KvSeq::new(layout);
             let mut b = KvSeq::new(layout);
             for _ in 0..pre {
@@ -188,7 +193,7 @@ fn prop_kv_reserve_equals_pushes_and_is_atomic() {
             b.clear(&mut pool);
 
             // atomicity: a reserve that cannot fully fit takes nothing
-            let mut small = KvPool::new(layout.page_floats(), max_pages);
+            let mut small = KvPool::new(layout, max_pages);
             let mut c = KvSeq::new(layout);
             let fits = max_pages * page_tokens;
             c.reserve(&mut small, fits).map_err(|e| e.to_string())?;
@@ -303,6 +308,117 @@ fn prop_matmul_rows_bitwise_equal_matvec() {
             },
         );
     }
+}
+
+#[test]
+fn prop_simd_decode_bitwise_equals_scalar() {
+    // the SIMD tentpole invariant as a property: for every format and
+    // ragged (non-multiple-of-32) code-row lengths, the dispatched
+    // vector nibble decode produces bit-identical f32s to the scalar LUT
+    // reference — including code 8, whose element value is -0.0 (the
+    // sign bit must survive the vector lookup)
+    let path = kernel_path();
+    for kind in [FormatKind::Nvfp4, FormatKind::Mxfp4, FormatKind::E2m1] {
+        let codec = codec_for(kind);
+        let tables = kind.decode_tables();
+        check_msg(
+            &format!("simd_decode_{}", codec.name()),
+            20,
+            |rng| {
+                let w = gen::f32_heavy(rng, 64 * 34);
+                let row = rng.below(64);
+                // trailing bytes to drop: exercises every tail length the
+                // scalar cleanup loop can see, odd counts included
+                let cut = rng.below(17);
+                (w, row, cut)
+            },
+            |(wv, row, cut)| {
+                let w = Tensor::new(wv.clone(), vec![64, 34]);
+                let p = codec.prepare(&w);
+                let q = codec.encode(&w, &p, &rtn_decisions(&p));
+                let dec = q.block_decode_cached(&tables).map_err(|e| e.to_string())?;
+                let bytes = dec.code_row(0, *row);
+                let bytes = &bytes[..bytes.len() - cut];
+                let n = 2 * bytes.len();
+                let mut scalar = vec![0.0f32; n];
+                let mut simd = vec![0.0f32; n];
+                decode_nibbles(KernelPath::Scalar, dec.elem_table(), bytes, &mut scalar);
+                decode_nibbles(path, dec.elem_table(), bytes, &mut simd);
+                for i in 0..n {
+                    if scalar[i].to_bits() != simd[i].to_bits() {
+                        return Err(format!(
+                            "{}: {path:?} elem {i}/{n}: {} != scalar {}",
+                            codec.name(),
+                            simd[i],
+                            scalar[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_e4m3_kv_store_read_is_codec_roundtrip() {
+    // the quantized KV cache adds no error beyond the e4m3 codec itself:
+    // every row read back is exactly roundtrip(clamp(x)) elementwise
+    check_msg(
+        "e4m3_kv_roundtrip",
+        30,
+        |rng| {
+            let layers = 1 + rng.below(3);
+            let d = 4 * (1 + rng.below(4));
+            let page_tokens = 1 + rng.below(5);
+            let tokens = 1 + rng.below(16);
+            let rows = gen::f32_normal(rng, tokens * layers * 2 * d, 3.0);
+            (layers, d, page_tokens, tokens, rows)
+        },
+        |(layers, d, page_tokens, tokens, rows)| {
+            let (layers, d, page_tokens, tokens) = (*layers, *d, *page_tokens, *tokens);
+            let layout =
+                KvLayout { n_layers: layers, d_model: d, page_tokens, format: KvFormat::E4m3 };
+            let mut pool = KvPool::unbounded(layout);
+            let mut seq = KvSeq::new(layout);
+            for t in 0..tokens {
+                seq.push(&mut pool).map_err(|e| e.to_string())?;
+                for l in 0..layers {
+                    let base = (t * layers + l) * 2 * d;
+                    seq.store_kv(t, l, &rows[base..base + d], &rows[base + d..base + 2 * d]);
+                }
+            }
+            let mut buf = vec![0.0f32; d];
+            for t in 0..tokens {
+                for l in 0..layers {
+                    let base = (t * layers + l) * 2 * d;
+                    for (which, off) in [("k", 0usize), ("v", d)] {
+                        let got: Vec<f32> = if off == 0 {
+                            seq.k_row(t, l, &mut buf).to_vec()
+                        } else {
+                            seq.v_row(t, l, &mut buf).to_vec()
+                        };
+                        for i in 0..d {
+                            let x = rows[base + off + i];
+                            let want =
+                                e4m3::roundtrip(x.clamp(-e4m3::E4M3_MAX, e4m3::E4M3_MAX));
+                            if got[i].to_bits() != want.to_bits() {
+                                return Err(format!(
+                                    "{which}[{t}][{l}][{i}]: {} != roundtrip({x}) = {want}",
+                                    got[i]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            seq.clear(&mut pool);
+            if pool.outstanding() != 0 {
+                return Err("pages leaked".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
