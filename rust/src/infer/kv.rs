@@ -14,12 +14,22 @@
 //!   once `max_pages` buffers are outstanding — callers (the native
 //!   backend) fall back to uncached compute rather than grow without
 //!   bound.
-//! * [`KvSeq`] — one slot's cache: a queue of pages it exclusively owns,
-//!   holding `[n_layers, 2, d_model]` elements per cached token (keys are
-//!   stored *post-RoPE*, values raw). Because each sequence owns its
-//!   pages outright, a batch of slots can be processed fully in parallel
-//!   with no locking on the hot path; the pool mutex is touched only at
-//!   page-boundary alloc/free.
+//! * [`KvSeq`] — one slot's cache: a list of **refcounted** pages
+//!   (`Arc<KvPage>`) holding `[n_layers, 2, d_model]` elements per
+//!   cached token (keys are stored *post-RoPE*, values raw).
+//!
+//! Pages are refcounted so several sequences can share a common prompt
+//! prefix (the prefix cache in [`super::prefix`]) without copying: a
+//! **full** page's handle can be attached to another sequence with
+//! [`KvSeq::attach`], and every holder returns its handle through
+//! [`KvPool::release`] — the buffer goes back to the free list exactly
+//! once, when the *last* handle is released. Writes stay lock-free and
+//! copy-free on the hot path because only full (immutable) pages are
+//! ever shared: every write targets a refcount-1 page via
+//! [`std::sync::Arc::get_mut`], and a shared *partial* tail page (which
+//! the backend never produces, but the API cannot forbid) is
+//! copied-on-write at the next `push`/`reserve` instead of being
+//! mutated in place.
 //!
 //! The element format is pluggable: `f32` stores rows verbatim (reads are
 //! zero-copy borrows, the cached path stays bit-exact against uncached
@@ -33,9 +43,13 @@
 //!
 //! Slot lifecycle (allocate on admit, free on completion/disconnect) is
 //! driven by the scheduler through `StepBackend::release` — see
-//! `serve::scheduler` and [`super::NativeBackend`].
+//! `serve::scheduler` and [`super::NativeBackend`]. Every `Arc` handle
+//! a sequence or the prefix trie holds must be returned through
+//! [`KvPool::release`] (never just dropped), or the pool's outstanding
+//! count — the leak-detection signal the drain tests assert on — would
+//! overcount.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -152,18 +166,30 @@ impl KvPage {
             KvPage::Bytes(p) => p.len(),
         }
     }
+
+    fn copy_from(&mut self, src: &KvPage) {
+        match (self, src) {
+            (KvPage::F32(dst), KvPage::F32(src)) => dst.copy_from_slice(src),
+            (KvPage::Bytes(dst), KvPage::Bytes(src)) => dst.copy_from_slice(src),
+            _ => panic!("kv page format mismatch on copy"),
+        }
+    }
 }
 
 /// Bounded page allocator shared by every slot of a native backend.
 ///
 /// Freed pages are recycled (LIFO) before new ones are allocated, and the
-/// total outstanding count never exceeds `max_pages`.
+/// total outstanding count never exceeds `max_pages`. With refcounted
+/// sharing, `outstanding` counts *physical* pages: a page attached to
+/// three sequences counts once, and returns to the free list only when
+/// the last holder calls [`Self::release`].
 #[derive(Debug)]
 pub struct KvPool {
     format: KvFormat,
     page_floats: usize,
     max_pages: usize,
     outstanding: usize,
+    hwm: usize,
     free: Vec<KvPage>,
 }
 
@@ -176,6 +202,7 @@ impl KvPool {
             page_floats: layout.page_floats(),
             max_pages,
             outstanding: 0,
+            hwm: 0,
             free: Vec::new(),
         }
     }
@@ -196,12 +223,14 @@ impl KvPool {
         if let Some(mut page) = self.free.pop() {
             page.zero();
             self.outstanding += 1;
+            self.hwm = self.hwm.max(self.outstanding);
             return Ok(page);
         }
         if self.outstanding >= self.max_pages {
             return Err(anyhow::Error::new(KvExhausted { outstanding: self.outstanding }));
         }
         self.outstanding += 1;
+        self.hwm = self.hwm.max(self.outstanding);
         Ok(match self.format {
             KvFormat::F32 => KvPage::F32(vec![0.0f32; self.page_floats].into_boxed_slice()),
             KvFormat::E4m3 => KvPage::Bytes(vec![0u8; self.page_floats].into_boxed_slice()),
@@ -223,9 +252,27 @@ impl KvPool {
         self.free.push(page);
     }
 
-    /// Pages currently held by sequences (not in the free list).
+    /// Drop one refcounted handle on a page, returning the buffer to the
+    /// free list when (and only when) this was the *last* handle — the
+    /// exactly-once free that makes prefix sharing leak-proof. Handles
+    /// must always come back through here (not a plain `drop`), or the
+    /// outstanding count would never reach zero.
+    pub fn release(&mut self, page: Arc<KvPage>) {
+        if let Ok(page) = Arc::try_unwrap(page) {
+            self.put(page);
+        }
+    }
+
+    /// Pages currently held by sequences or the prefix trie (not in the
+    /// free list). Counts physical pages, not handles.
     pub fn outstanding(&self) -> usize {
         self.outstanding
+    }
+
+    /// Peak value [`Self::outstanding`] ever reached — the pages-in-use
+    /// high-water mark surfaced in the serve stats.
+    pub fn high_water(&self) -> usize {
+        self.hwm
     }
 
     /// Recycled pages waiting to be reused.
@@ -239,24 +286,33 @@ impl KvPool {
     }
 }
 
-/// One slot's cached keys/values: an append-only queue of owned pages.
+/// One slot's cached keys/values: an append-only list of refcounted
+/// pages.
 ///
 /// Token `t`'s layer-`l` entries live at a fixed offset for the slot's
 /// lifetime, so references handed out by [`Self::k`]/[`Self::v`] stay
 /// valid across appends (pages are never moved, only pushed). The
 /// sequence must be drained back into its pool with [`Self::clear`]
 /// before it is dropped — the backend does this in `release`.
+///
+/// A sequence may hold two kinds of pages: pages it took from the pool
+/// itself (refcount 1 — writable), and **full** pages attached from
+/// another sequence's prompt via [`Self::attach`] (shared — read-only).
+/// Writes ([`Self::store_kv`] / [`Self::kv_mut`]) panic on a shared
+/// page; the backend's only-full-pages-are-shared discipline guarantees
+/// every write lands on an exclusive page, and a shared partial tail is
+/// defensively copied-on-write by [`Self::push`]/[`Self::reserve`].
 #[derive(Debug)]
 pub struct KvSeq {
     layout: KvLayout,
-    pages: VecDeque<KvPage>,
+    pages: Vec<Arc<KvPage>>,
     len: usize,
 }
 
 impl KvSeq {
     /// An empty sequence for `layout`.
     pub fn new(layout: KvLayout) -> KvSeq {
-        KvSeq { layout, pages: VecDeque::new(), len: 0 }
+        KvSeq { layout, pages: Vec::new(), len: 0 }
     }
 
     /// Cached tokens.
@@ -279,12 +335,47 @@ impl KvSeq {
         self.layout.format
     }
 
+    /// A refcounted handle to page `i` — how the prefix trie publishes a
+    /// prompt's full pages for other sequences to [`Self::attach`]. The
+    /// holder must eventually return the handle through
+    /// [`KvPool::release`].
+    pub fn page_handle(&self, i: usize) -> Arc<KvPage> {
+        Arc::clone(&self.pages[i])
+    }
+
+    /// Refcount on page `i` (1 = exclusively owned). Test/diagnostic
+    /// visibility into the sharing state.
+    pub fn page_refs(&self, i: usize) -> usize {
+        Arc::strong_count(&self.pages[i])
+    }
+
+    /// Append a shared **full** page: the sequence gains `page_tokens`
+    /// cached tokens without touching the pool. The cache-hit admission
+    /// path uses this to reuse another request's prompt pages.
+    ///
+    /// # Panics
+    /// When the sequence is not at a full-page boundary — only whole
+    /// pages can be shared, or token offsets would shift.
+    pub fn attach(&mut self, page: Arc<KvPage>) {
+        assert_eq!(
+            self.len % self.layout.page_tokens,
+            0,
+            "attach requires a full-page boundary (len {})",
+            self.len
+        );
+        debug_assert_eq!(page.elems(), self.layout.page_floats(), "foreign page attached");
+        self.pages.push(page);
+        self.len += self.layout.page_tokens;
+    }
+
     /// Append one token slot (zero-initialized), taking a new page from
     /// `pool` when the tail page is full. On pool exhaustion the sequence
     /// is left unchanged and the caller decides the fallback.
     pub fn push(&mut self, pool: &mut KvPool) -> Result<()> {
         if self.len % self.layout.page_tokens == 0 {
-            self.pages.push_back(pool.take()?);
+            self.pages.push(Arc::new(pool.take()?));
+        } else {
+            self.cow_tail(pool)?;
         }
         self.len += 1;
         Ok(())
@@ -295,17 +386,25 @@ impl KvSeq {
     /// path uses so a T-token prompt costs one pool lock instead of T.
     /// All-or-nothing: on exhaustion every page taken so far is returned
     /// and the sequence is left unchanged, so the caller's fallback sees
-    /// a consistent cache.
+    /// a consistent cache. (A defensive copy-on-write of a shared
+    /// partial tail page may still have happened — it changes no
+    /// contents and no geometry.)
     pub fn reserve(&mut self, pool: &mut KvPool, extra: usize) -> Result<()> {
+        if extra == 0 {
+            return Ok(());
+        }
+        if self.len % self.layout.page_tokens != 0 {
+            self.cow_tail(pool)?;
+        }
         let need =
             (self.len + extra).div_ceil(self.layout.page_tokens.max(1)) - self.pages.len();
         let mut taken = Vec::with_capacity(need);
         for _ in 0..need {
             match pool.take() {
-                Ok(page) => taken.push(page),
+                Ok(page) => taken.push(Arc::new(page)),
                 Err(e) => {
                     for page in taken {
-                        pool.put(page);
+                        pool.release(page);
                     }
                     return Err(e);
                 }
@@ -316,12 +415,32 @@ impl KvSeq {
         Ok(())
     }
 
-    /// Drop every cached token, returning all pages to `pool`.
+    /// Drop every cached token, releasing all page handles back to
+    /// `pool` (a shared page is freed only when its last holder lets go).
     pub fn clear(&mut self, pool: &mut KvPool) {
         for page in self.pages.drain(..) {
-            pool.put(page);
+            pool.release(page);
         }
         self.len = 0;
+    }
+
+    /// Ensure the tail page is exclusively owned before it is written:
+    /// when shared, its contents are copied into a fresh pool page and
+    /// the shared handle is released. The backend shares only full
+    /// pages, so this is a defensive guard, not a hot path.
+    fn cow_tail(&mut self, pool: &mut KvPool) -> Result<()> {
+        let last = match self.pages.len().checked_sub(1) {
+            Some(i) => i,
+            None => return Ok(()),
+        };
+        if Arc::get_mut(&mut self.pages[last]).is_some() {
+            return Ok(());
+        }
+        let mut fresh = pool.take()?;
+        fresh.copy_from(&self.pages[last]);
+        let shared = std::mem::replace(&mut self.pages[last], Arc::new(fresh));
+        pool.release(shared);
+        Ok(())
     }
 
     #[inline]
@@ -334,16 +453,25 @@ impl KvSeq {
         (page, within)
     }
 
+    #[inline]
+    fn page_mut(&mut self, page: usize) -> &mut KvPage {
+        Arc::get_mut(&mut self.pages[page]).expect("write to shared kv page")
+    }
+
     /// Write token `t`'s layer-`layer` key and value rows, encoding
     /// through the layout's element format. This is the one write path
     /// that works for every format — projections land in scratch and are
     /// stored from there.
+    ///
+    /// # Panics
+    /// When the page holding token `t` is shared (refcount > 1) — shared
+    /// prefix pages are immutable by contract.
     pub fn store_kv(&mut self, t: usize, layer: usize, k: &[f32], v: &[f32]) {
         let d = self.layout.d_model;
         assert_eq!(k.len(), d, "key row width mismatch");
         assert_eq!(v.len(), d, "value row width mismatch");
         let (page, off) = self.offsets(t, layer);
-        match &mut self.pages[page] {
+        match self.page_mut(page) {
             KvPage::F32(p) => {
                 p[off..off + d].copy_from_slice(k);
                 p[off + d..off + 2 * d].copy_from_slice(v);
@@ -363,7 +491,7 @@ impl KvSeq {
     pub fn k_row<'a>(&'a self, t: usize, layer: usize, buf: &'a mut [f32]) -> &'a [f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        match &self.pages[page] {
+        match self.pages[page].as_ref() {
             KvPage::F32(p) => &p[off..off + d],
             KvPage::Bytes(p) => {
                 e4m3::decode_slice(&p[off..off + d], &mut buf[..d]);
@@ -378,7 +506,7 @@ impl KvSeq {
     pub fn v_row<'a>(&'a self, t: usize, layer: usize, buf: &'a mut [f32]) -> &'a [f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        match &self.pages[page] {
+        match self.pages[page].as_ref() {
             KvPage::F32(p) => &p[off + d..off + 2 * d],
             KvPage::Bytes(p) => {
                 e4m3::decode_slice(&p[off + d..off + 2 * d], &mut buf[..d]);
@@ -396,7 +524,7 @@ impl KvSeq {
     pub fn k(&self, t: usize, layer: usize) -> &[f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        match &self.pages[page] {
+        match self.pages[page].as_ref() {
             KvPage::F32(p) => &p[off..off + d],
             KvPage::Bytes(_) => panic!("KvSeq::k needs f32 kv storage; use k_row"),
         }
@@ -410,7 +538,7 @@ impl KvSeq {
     pub fn v(&self, t: usize, layer: usize) -> &[f32] {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        match &self.pages[page] {
+        match self.pages[page].as_ref() {
             KvPage::F32(p) => &p[off + d..off + 2 * d],
             KvPage::Bytes(_) => panic!("KvSeq::v needs f32 kv storage; use v_row"),
         }
@@ -420,12 +548,13 @@ impl KvSeq {
     ///
     /// # Panics
     /// On non-`f32` storage — quantized writes must re-encode whole rows;
-    /// use [`Self::store_kv`] instead.
+    /// use [`Self::store_kv`] instead. Also panics when the page holding
+    /// token `t` is shared (refcount > 1).
     #[inline]
     pub fn kv_mut(&mut self, t: usize, layer: usize) -> (&mut [f32], &mut [f32]) {
         let d = self.layout.d_model;
         let (page, off) = self.offsets(t, layer);
-        match &mut self.pages[page] {
+        match self.page_mut(page) {
             KvPage::F32(p) => p[off..off + 2 * d].split_at_mut(d),
             KvPage::Bytes(_) => panic!("KvSeq::kv_mut needs f32 kv storage; use store_kv"),
         }
@@ -632,5 +761,105 @@ mod tests {
         }
         b.clear(&mut pool);
         assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn shared_pages_release_exactly_once() {
+        let l = layout();
+        let mut pool = KvPool::new(l, 8);
+        let mut a = KvSeq::new(l);
+        a.reserve(&mut pool, 8).unwrap(); // two full pages
+        for t in 0..8 {
+            for layer in 0..l.n_layers {
+                let (k, _) = a.kv_mut(t, layer);
+                k[0] = (t * 10 + layer) as f32;
+            }
+        }
+        // b reuses a's prompt pages without touching the pool
+        let mut b = KvSeq::new(l);
+        b.attach(a.page_handle(0));
+        b.attach(a.page_handle(1));
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.n_pages(), 2);
+        assert_eq!(pool.outstanding(), 2, "attach must not take new pages");
+        assert_eq!(a.page_refs(0), 2);
+        // shared reads see the same bytes through either sequence
+        for t in 0..8 {
+            assert_eq!(a.k(t, 1)[0], b.k(t, 1)[0]);
+        }
+        // release in either order: the buffer is freed exactly once, on
+        // the LAST release
+        a.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 2, "pages freed while b still holds them");
+        assert_eq!(pool.free_pages(), 0);
+        b.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn shared_tail_page_is_copied_on_write() {
+        let l = layout();
+        let mut pool = KvPool::new(l, 8);
+        let mut a = KvSeq::new(l);
+        // 6 tokens: page 0 full, page 1 partial (2 of 4 slots)
+        for t in 0..6 {
+            a.push(&mut pool).unwrap();
+            let (k, _) = a.kv_mut(t, 0);
+            k[0] = t as f32;
+        }
+        // a stray shared handle on the PARTIAL tail page (the backend
+        // never does this; the API guards it anyway)
+        let held = a.page_handle(1);
+        assert_eq!(a.page_refs(1), 2);
+        // the next push copies the tail before writing into it
+        a.push(&mut pool).unwrap();
+        let (k, _) = a.kv_mut(6, 0);
+        k[0] = 6.0;
+        assert_eq!(a.page_refs(1), 1, "tail still shared after CoW push");
+        // the copy kept the old contents; the shared original is untouched
+        assert_eq!(a.k(4, 0)[0], 4.0);
+        assert_eq!(a.k(5, 0)[0], 5.0);
+        match held.as_ref() {
+            KvPage::F32(p) => {
+                // token 6 is slot 2 of the page; the held page never saw it
+                assert_eq!(p[2 * l.token_floats()], 0.0);
+            }
+            KvPage::Bytes(_) => unreachable!(),
+        }
+        // 3 physical pages: a's page 0, a's CoW tail, the held original
+        assert_eq!(pool.outstanding(), 3);
+        pool.release(held);
+        a.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared kv page")]
+    fn write_to_shared_page_panics() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l);
+        let mut a = KvSeq::new(l);
+        a.reserve(&mut pool, 4).unwrap();
+        let _held = a.page_handle(0);
+        let row = vec![0.0f32; l.d_model];
+        a.store_kv(3, 0, &row, &row);
+    }
+
+    #[test]
+    fn pool_high_water_tracks_peak() {
+        let l = layout();
+        let mut pool = KvPool::new(l, 8);
+        assert_eq!(pool.high_water(), 0);
+        let p1 = pool.take().unwrap();
+        let p2 = pool.take().unwrap();
+        assert_eq!(pool.high_water(), 2);
+        pool.put(p1);
+        pool.put(p2);
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.high_water(), 2, "high water must not fall with frees");
+        let p3 = pool.take().unwrap();
+        assert_eq!(pool.high_water(), 2, "re-take below the peak keeps the peak");
+        pool.put(p3);
     }
 }

@@ -38,7 +38,12 @@
 //!   no `artifacts/` directory) plus pure-rust RTN quantization
 //! * [`kernels`] — fused dequant-GEMM over [`formats::codec::BlockDecode`]
 //! * [`ops`] — RMSNorm / RoPE / softmax / SiLU / activation fake-quant
-//! * [`kv`] — the paged KV pool and per-slot sequences
+//! * [`kv`] — the paged KV pool and per-slot sequences (refcounted
+//!   pages, so prompt prefixes can be shared)
+//! * [`prefix`] — the shared-prefix page trie behind `--prefix-cache`:
+//!   requests that share a prompt prefix attach to already-filled pages
+//!   and prefill only their suffix, with cache-hit logits bit-identical
+//!   to a cold run (DESIGN.md §13)
 //!
 //! See DESIGN.md §9 for the architecture, the slot lifecycle, and the
 //! native-vs-XLA parity/tolerance story.
@@ -49,6 +54,7 @@
 pub mod kernels;
 pub mod kv;
 pub mod ops;
+pub mod prefix;
 pub mod preset;
 
 use std::collections::HashMap;
@@ -58,10 +64,11 @@ use anyhow::{anyhow, bail, Result};
 
 pub use kernels::Linear;
 pub use kv::{KvFormat, KvLayout, KvPool, KvSeq};
+pub use prefix::{PrefixCache, PrefixStats};
 pub use preset::{native_manifest, quantize_store};
 
 use crate::runtime::ModelConfig;
-use crate::serve::batch::{DecodeSlot, StepBackend};
+use crate::serve::batch::{CacheStats, DecodeSlot, StepBackend};
 use crate::tensor::Tensor;
 use crate::train::QuantParamStore;
 use crate::util::threads;
@@ -773,6 +780,13 @@ pub struct NativeOptions {
     /// worker threads for the phase-1 per-slot fan-out and the fused
     /// kernels' column-parallel budget (0 = auto)
     pub workers: usize,
+    /// share full prompt pages across requests through the
+    /// [`prefix::PrefixCache`] trie (`--prefix-cache`): a request whose
+    /// prompt shares a full-page prefix with an earlier one attaches to
+    /// the cached pages and prefills only its suffix, with bit-identical
+    /// logits. Off by default — the trie retains pages between requests,
+    /// so `kv_outstanding` stays above zero until the trie is cleared
+    pub prefix_cache: bool,
 }
 
 impl Default for NativeOptions {
@@ -783,6 +797,7 @@ impl Default for NativeOptions {
             max_pages: 4096,
             kv_format: KvFormat::F32,
             workers: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -845,6 +860,10 @@ pub struct NativeBackend {
     layout: KvLayout,
     pool: Mutex<KvPool>,
     seqs: Mutex<HashMap<u64, SlotCache>>,
+    /// the shared-prefix page trie, present when
+    /// [`NativeOptions::prefix_cache`] is on. Lock order: trie first,
+    /// then pool — eviction holds both
+    prefix: Option<Mutex<PrefixCache>>,
     /// reusable buffers for the phase-2 cross-slot pass, so steady-state
     /// batched decode allocates nothing per step
     batch_scratch: Mutex<RowScratch>,
@@ -855,12 +874,15 @@ impl NativeBackend {
     pub fn new(model: NativeModel, opts: NativeOptions) -> NativeBackend {
         let layout = model.kv_layout(opts.page_tokens, opts.kv_format);
         let pool = Mutex::new(KvPool::new(layout, opts.max_pages));
+        let prefix = (opts.prefix_cache && opts.use_cache)
+            .then(|| Mutex::new(PrefixCache::new(layout.page_tokens)));
         NativeBackend {
             model,
             opts,
             layout,
             pool,
             seqs: Mutex::new(HashMap::new()),
+            prefix,
             batch_scratch: Mutex::new(RowScratch::new()),
         }
     }
@@ -879,6 +901,31 @@ impl NativeBackend {
     /// Slots with a live cache entry.
     pub fn cached_slots(&self) -> usize {
         self.seqs.lock().expect("kv registry poisoned").len()
+    }
+
+    /// Peak KV pages outstanding over the backend's lifetime — the
+    /// pages-in-use high-water mark surfaced in the serve stats.
+    pub fn kv_high_water(&self) -> usize {
+        self.pool.lock().expect("kv pool poisoned").high_water()
+    }
+
+    /// Prefix-cache counters, `None` unless
+    /// [`NativeOptions::prefix_cache`] is on.
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|t| t.lock().expect("prefix cache poisoned").stats())
+    }
+
+    /// Release every page the prefix trie holds back into the pool.
+    /// With no slots in flight this brings [`Self::kv_outstanding`] back
+    /// to zero — what the leak/drain tests assert after exercising
+    /// sharing.
+    pub fn clear_prefix_cache(&self) {
+        if let Some(trie) = &self.prefix {
+            // lock order: trie, then pool
+            let mut trie = trie.lock().expect("prefix cache poisoned");
+            let mut pool = self.pool.lock().expect("kv pool poisoned");
+            trie.clear(&mut pool);
+        }
     }
 
     fn workers_for(&self, batch: usize) -> usize {
@@ -926,7 +973,21 @@ impl NativeBackend {
             history: Vec::new(),
             scratch: RowScratch::new(),
         });
-        match self.catch_up(want, &mut entry, col_workers) {
+        // on exhaustion, reclaim cold prefix-cache pages (LRU) and retry
+        // the cached path before giving up on it; evict_prefix_lru
+        // returning false (trie empty) bounds the loop
+        let res = loop {
+            match self.catch_up(want, &mut entry, col_workers) {
+                Err(e)
+                    if e.downcast_ref::<kv::KvExhausted>().is_some()
+                        && self.evict_prefix_lru() =>
+                {
+                    continue;
+                }
+                other => break other,
+            }
+        };
+        match res {
             Ok((token, idx)) => (Phase1::Pending { token, idx }, Some(entry)),
             Err(e) if e.downcast_ref::<kv::KvExhausted>().is_some() => {
                 // free this slot's pages for its neighbours and fall back
@@ -963,6 +1024,11 @@ impl NativeBackend {
         if !prefix_ok {
             self.clear_entry(entry);
         }
+        // a cold slot first attaches the longest cached full-page prefix
+        // from the trie, so only the suffix prefills below
+        if entry.history.is_empty() {
+            self.attach_prefix(want, entry);
+        }
         let start = entry.history.len();
         let last = want.len() - 1;
         // validate the decode token slot-locally, before it joins the
@@ -982,6 +1048,7 @@ impl NativeBackend {
                 col_workers,
             )?;
             entry.history.extend_from_slice(&want[start..last]);
+            self.publish_prefix(want, last, entry);
         }
         {
             let mut pool = self.pool.lock().expect("kv pool poisoned");
@@ -990,9 +1057,120 @@ impl NativeBackend {
         Ok((token, last))
     }
 
+    /// Attach the longest trie-cached full-page prefix of the window's
+    /// to-cache tokens (`want[..last]`) to a **cold** slot. A trie page
+    /// holds exactly the bytes a cold prefill of the same tokens at the
+    /// same (position-0-based) indices would store — in this backend's
+    /// KV format — so attaching cannot change any later logits.
+    fn attach_prefix(&self, want: &[i32], entry: &mut SlotCache) {
+        let Some(trie) = &self.prefix else { return };
+        debug_assert!(entry.kv.is_empty() && entry.history.is_empty());
+        let last = want.len() - 1;
+        if last == 0 {
+            return;
+        }
+        let pages = trie.lock().expect("prefix cache poisoned").lookup(&want[..last]);
+        let pt = self.layout.page_tokens;
+        for (i, page) in pages.into_iter().enumerate() {
+            entry.kv.attach(page);
+            entry.history.extend_from_slice(&want[i * pt..(i + 1) * pt]);
+        }
+    }
+
+    /// After a successful prefill, publish the window's **full** prompt
+    /// pages (`want[..last]`, which the slot has just cached) into the
+    /// trie so later requests sharing the prefix attach instead of
+    /// recomputing. The partial tail page stays exclusive to the slot —
+    /// only-full-pages-shared is what keeps every KV write refcount-1.
+    /// First writer wins inside the trie, so re-publishing a cached
+    /// prefix is a cheap no-op.
+    fn publish_prefix(&self, want: &[i32], last: usize, entry: &SlotCache) {
+        let Some(trie) = &self.prefix else { return };
+        let pt = self.layout.page_tokens;
+        let full = last / pt;
+        if full == 0 {
+            return;
+        }
+        let pages: Vec<_> = (0..full).map(|i| entry.kv.page_handle(i)).collect();
+        trie.lock().expect("prefix cache poisoned").publish(&want[..full * pt], &pages);
+    }
+
+    /// Reclaim the least-recently-used prefix-cache page for the pool.
+    /// Returns false when there is no trie or nothing left to evict —
+    /// the termination condition of the exhaustion-retry loops.
+    fn evict_prefix_lru(&self) -> bool {
+        let Some(trie) = &self.prefix else { return false };
+        // lock order: trie, then pool
+        let mut trie = trie.lock().expect("prefix cache poisoned");
+        let mut pool = self.pool.lock().expect("kv pool poisoned");
+        trie.evict_lru(&mut pool)
+    }
+
     fn clear_entry(&self, entry: &mut SlotCache) {
         entry.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
         entry.history.clear();
+    }
+
+    /// The incremental-prefill core behind `StepBackend::prefill_chunk`:
+    /// bring the slot's cache up to at most `start + max_tokens` of the
+    /// window's to-cache tokens, attaching a trie prefix first on a cold
+    /// slot. Returns the count still missing (0 = ready for decode).
+    fn prefill_chunk_entry(
+        &self,
+        want: &[i32],
+        max_tokens: usize,
+        entry: &mut SlotCache,
+    ) -> Result<usize> {
+        let cached = entry.history.len();
+        let prefix_ok = cached < want.len()
+            && cached == entry.kv.len()
+            && want[..cached] == entry.history[..];
+        if !prefix_ok {
+            self.clear_entry(entry);
+        }
+        if entry.history.is_empty() {
+            self.attach_prefix(want, entry);
+        }
+        let last = want.len() - 1;
+        let start = entry.history.len();
+        if start >= last {
+            return Ok(0);
+        }
+        let stop = last.min(start + max_tokens);
+        let res = loop {
+            match self.model.prefill_into(
+                &mut entry.kv,
+                &self.pool,
+                &want[start..stop],
+                start,
+                false,
+                &mut entry.scratch,
+                self.col_workers_full(),
+            ) {
+                Err(e)
+                    if e.downcast_ref::<kv::KvExhausted>().is_some()
+                        && self.evict_prefix_lru() =>
+                {
+                    continue;
+                }
+                other => break other,
+            }
+        };
+        match res {
+            Ok(_) => {
+                entry.history.extend_from_slice(&want[start..stop]);
+                if stop == last {
+                    self.publish_prefix(want, last, entry);
+                }
+                Ok(last - stop)
+            }
+            Err(e) if e.downcast_ref::<kv::KvExhausted>().is_some() => {
+                // no page budget for incremental prefill: report "done"
+                // and let the step-time path use its uncached fallback
+                Ok(0)
+            }
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -1128,11 +1306,51 @@ impl StepBackend for NativeBackend {
         }
     }
 
+    fn prefill_chunk(&self, slot: &DecodeSlot, max_tokens: usize) -> Result<usize> {
+        if !self.opts.use_cache || max_tokens == 0 {
+            return Ok(0);
+        }
+        let want = slot.window();
+        if want.len() <= 1 {
+            return Ok(0);
+        }
+        // prefill_chunk runs on the scheduler thread between steps, so
+        // the map access is uncontended; the entry still comes out of
+        // (and always goes back into) the registry, same as step()
+        let mut entry = self
+            .seqs
+            .lock()
+            .expect("kv registry poisoned")
+            .remove(&slot.id)
+            .unwrap_or_else(|| SlotCache {
+                kv: KvSeq::new(self.layout),
+                history: Vec::new(),
+                scratch: RowScratch::new(),
+            });
+        let result = self.prefill_chunk_entry(want, max_tokens, &mut entry);
+        self.seqs.lock().expect("kv registry poisoned").insert(slot.id, entry);
+        result
+    }
+
     fn release(&self, slot: &DecodeSlot) {
         let entry = self.seqs.lock().expect("kv registry poisoned").remove(&slot.id);
         if let Some(mut e) = entry {
             e.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
         }
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        let mut stats = CacheStats {
+            kv_pages_hwm: self.kv_high_water() as u64,
+            ..CacheStats::default()
+        };
+        if let Some(p) = self.prefix_stats() {
+            stats.prefix_lookups = p.lookups;
+            stats.prefix_hits = p.hits;
+            stats.prefix_hit_tokens = p.hit_tokens;
+            stats.prefix_pages = p.stored_pages as u64;
+        }
+        Some(stats)
     }
 }
 
@@ -1414,6 +1632,114 @@ mod tests {
         let b = generate_greedy(&reference, &[9, 8, 7, 6, 5], 10).unwrap();
         assert_eq!(a, b);
         assert_eq!(tiny_pool.kv_outstanding(), 0);
+    }
+
+    fn nano_backend_with(opts: NativeOptions) -> NativeBackend {
+        let m = preset::native_manifest("nano").unwrap();
+        let fp = ParamStore::init(&m, 42);
+        let store =
+            preset::quantize_store(&m, &fp, crate::formats::codec::FormatKind::Nvfp4).unwrap();
+        let model = NativeModel::new(&m.config, &store, true).unwrap();
+        NativeBackend::new(model, opts)
+    }
+
+    #[test]
+    fn prefix_cache_hits_bit_identical_and_leak_free() {
+        for kv_format in [KvFormat::F32, KvFormat::E4m3] {
+            let shared = nano_backend_with(NativeOptions {
+                prefix_cache: true,
+                page_tokens: 4,
+                kv_format,
+                ..NativeOptions::default()
+            });
+            let plain = nano_backend_with(NativeOptions {
+                page_tokens: 4,
+                kv_format,
+                ..NativeOptions::default()
+            });
+            // two prompts sharing an 8-token (2 full pages) prefix, plus
+            // an exact repeat of the first
+            let prefix = [7, 3, 9, 1, 2, 4, 6, 8];
+            let mut a = prefix.to_vec();
+            a.extend_from_slice(&[11, 12]);
+            let mut b = prefix.to_vec();
+            b.extend_from_slice(&[33]);
+            for prompt in [&a, &b, &a] {
+                let hit = generate_greedy(&shared, prompt, 8).unwrap();
+                let cold = generate_greedy(&plain, prompt, 8).unwrap();
+                assert_eq!(hit, cold, "{}: cache-hit tokens diverged", kv_format.name());
+            }
+            let stats = shared.prefix_stats().expect("prefix cache enabled");
+            assert!(stats.lookups >= 3, "one lookup per admission, got {}", stats.lookups);
+            assert!(stats.hits >= 2, "later prompts must hit, got {}", stats.hits);
+            assert!(stats.hit_tokens >= 16, "2 pages x 2 hits, got {}", stats.hit_tokens);
+            assert!(stats.stored_pages > 0);
+            // slots drained; only the trie still holds pages — and a
+            // clear returns every one of them
+            assert_eq!(shared.cached_slots(), 0);
+            assert_eq!(shared.kv_outstanding(), stats.stored_pages);
+            shared.clear_prefix_cache();
+            assert_eq!(shared.kv_outstanding(), 0, "{}: trie leaked pages", kv_format.name());
+            assert!(shared.kv_high_water() > 0);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        // feeding a long prompt in 4-token chunks (through the trie as
+        // well) must leave the slot producing exactly the tokens a
+        // one-shot prefill would
+        let backend = nano_backend_with(NativeOptions {
+            prefix_cache: true,
+            page_tokens: 4,
+            ..NativeOptions::default()
+        });
+        let reference = nano_backend(true);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 13 + 5) % 256).collect();
+        let expect = generate_greedy(&reference, &prompt, 10).unwrap();
+        let mut slots = vec![DecodeSlot::new(&prompt, 10, backend.seq_len()).unwrap()];
+        let mut chunks = 0;
+        loop {
+            let missing = backend.prefill_chunk(&slots[0], 4).unwrap();
+            chunks += 1;
+            assert!(chunks < 100, "chunked prefill failed to converge");
+            if missing == 0 {
+                break;
+            }
+        }
+        assert!(chunks > 1, "a 30-token prompt must take several 4-token chunks");
+        while !slots[0].done() {
+            decode_step(&backend, &mut slots).unwrap();
+        }
+        assert_eq!(slots[0].out, expect, "chunked prefill changed the tokens");
+        backend.release(&slots[0]);
+        assert_eq!(backend.cached_slots(), 0);
+        backend.clear_prefix_cache();
+        assert_eq!(backend.kv_outstanding(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_evicts_under_pool_pressure() {
+        // a pool too small to keep every published prefix: admission
+        // evicts LRU trie pages (or falls back to uncached compute) and
+        // tokens never change
+        let tight = nano_backend_with(NativeOptions {
+            prefix_cache: true,
+            page_tokens: 4,
+            max_pages: 5,
+            ..NativeOptions::default()
+        });
+        let plain = nano_backend(true);
+        for seed in 0..4 {
+            let prompt: Vec<i32> = (0..10).map(|i| (i * 7 + seed * 41 + 1) % 256).collect();
+            let a = generate_greedy(&tight, &prompt, 6).unwrap();
+            let b = generate_greedy(&plain, &prompt, 6).unwrap();
+            assert_eq!(a, b, "seed {seed}: eviction path changed tokens");
+        }
+        let stats = tight.prefix_stats().unwrap();
+        assert!(stats.stored_pages <= 5, "trie grew past the pool cap");
+        tight.clear_prefix_cache();
+        assert_eq!(tight.kv_outstanding(), 0);
     }
 
     #[test]

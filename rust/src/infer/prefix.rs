@@ -1,0 +1,360 @@
+//! Token-prefix trie over full KV pages — the shared-prefix cache.
+//!
+//! Serving traffic is dominated by requests that share a prompt prefix
+//! (system prompts, few-shot templates). Prefilling recomputes the same
+//! K/V rows for every one of them; this module lets a request *attach*
+//! to pages another request already filled and prefill only its suffix.
+//!
+//! The trie is keyed by page-sized token chunks: a node at depth `d`
+//! holds the page caching tokens `[d*page_tokens, (d+1)*page_tokens)` of
+//! every prompt whose first `(d+1)*page_tokens` tokens match the path to
+//! that node. Only **full** pages are stored — a partial tail page's
+//! contents depend on how many tokens follow, so it stays exclusive to
+//! its slot (which is also what keeps every KV write refcount-1; see
+//! [`super::kv`]).
+//!
+//! One trie exists per [`super::NativeBackend`], so the (model preset,
+//! activation-quant mode, KV format, page geometry) part of the cache
+//! key is implicit — pages from one backend are never visible to
+//! another. Within a backend the token path alone determines the stored
+//! bytes: the backend computes K/V rows from `(token prefix, absolute
+//! positions from 0)` deterministically, and a trie path of length `n`
+//! chunks always means positions `0..n*page_tokens`. That is why a
+//! cache-hit request's logits are **bit-identical** to a cold run: both
+//! paths read attention inputs back from stored pages, and the stored
+//! bytes are the same either way.
+//!
+//! Concurrency/locking: the trie lives behind a `Mutex` next to the
+//! backend's page pool. Code that holds both locks must take the trie
+//! lock **first**, then the pool lock (eviction does this); the reverse
+//! order would deadlock against it.
+//!
+//! Eviction is LRU over *leaf* pages only — an interior page can never
+//! be evicted before its children, because a child page's tokens are
+//! meaningless without every page of its prefix. `last_used` is a
+//! monotonic tick bumped on every lookup touch, and a parent is at least
+//! as recent as its most-recent descendant (lookups touch whole paths),
+//! so evicting the stalest leaf is exactly LRU over reusable prefixes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::kv::{KvPage, KvPool};
+
+/// Counters the serve layer surfaces as the prefix-cache hit rate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Lookups performed (one per cold slot admission).
+    pub lookups: u64,
+    /// Lookups that attached at least one cached page.
+    pub hits: u64,
+    /// Prompt tokens served from cached pages instead of prefill.
+    pub hit_tokens: u64,
+    /// Full pages currently held by the trie.
+    pub stored_pages: usize,
+}
+
+struct Node {
+    page: Arc<KvPage>,
+    last_used: u64,
+    children: HashMap<Box<[i32]>, Node>,
+}
+
+/// The shared-prefix page trie. See the module docs for the layout and
+/// the bit-exactness argument.
+pub struct PrefixCache {
+    page_tokens: usize,
+    root: HashMap<Box<[i32]>, Node>,
+    tick: u64,
+    lookups: u64,
+    hits: u64,
+    hit_tokens: u64,
+    stored_pages: usize,
+}
+
+impl PrefixCache {
+    /// An empty trie for pages holding `page_tokens` tokens each.
+    pub fn new(page_tokens: usize) -> PrefixCache {
+        PrefixCache {
+            page_tokens: page_tokens.max(1),
+            root: HashMap::new(),
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            hit_tokens: 0,
+            stored_pages: 0,
+        }
+    }
+
+    /// Tokens per stored page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Full pages currently stored.
+    pub fn len(&self) -> usize {
+        self.stored_pages
+    }
+
+    /// True when no pages are stored.
+    pub fn is_empty(&self) -> bool {
+        self.stored_pages == 0
+    }
+
+    /// Walk the trie along `tokens` and return handles to the pages of
+    /// the longest cached full-page prefix (possibly empty). Touches
+    /// every node on the path for LRU. The caller attaches the pages to
+    /// a [`super::kv::KvSeq`] and must eventually return each handle
+    /// through [`KvPool::release`].
+    pub fn lookup(&mut self, tokens: &[i32]) -> Vec<Arc<KvPage>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.lookups += 1;
+        let mut out = Vec::new();
+        let mut map = &mut self.root;
+        for chunk in tokens.chunks_exact(self.page_tokens) {
+            match map.get_mut(chunk) {
+                Some(node) => {
+                    node.last_used = tick;
+                    out.push(Arc::clone(&node.page));
+                    map = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        if !out.is_empty() {
+            self.hits += 1;
+            self.hit_tokens += (out.len() * self.page_tokens) as u64;
+        }
+        out
+    }
+
+    /// Store the pages caching `tokens` (whose length must be a multiple
+    /// of `page_tokens`; `pages[i]` caches chunk `i`). First writer wins:
+    /// chunks already present keep their existing page — the bytes are
+    /// identical by the determinism argument in the module docs, and
+    /// keeping the old page preserves refcounts already handed out.
+    pub fn publish(&mut self, tokens: &[i32], pages: &[Arc<KvPage>]) {
+        debug_assert_eq!(tokens.len(), pages.len() * self.page_tokens, "ragged publish");
+        self.tick += 1;
+        let tick = self.tick;
+        let mut stored = 0usize;
+        let mut map = &mut self.root;
+        for (chunk, page) in tokens.chunks_exact(self.page_tokens).zip(pages) {
+            let node = map.entry(chunk.into()).or_insert_with(|| {
+                stored += 1;
+                Node { page: Arc::clone(page), last_used: tick, children: HashMap::new() }
+            });
+            node.last_used = tick;
+            map = &mut node.children;
+        }
+        self.stored_pages += stored;
+    }
+
+    /// Evict the least-recently-used **leaf** page, releasing its handle
+    /// into `pool` (the buffer is recycled immediately if no sequence
+    /// still references it). Returns `false` when the trie is empty.
+    /// Callers holding the pool lock must have taken the trie lock
+    /// first.
+    pub fn evict_lru(&mut self, pool: &mut KvPool) -> bool {
+        match evict_from(&mut self.root) {
+            Some(page) => {
+                self.stored_pages -= 1;
+                pool.release(page);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release every stored page into `pool` and empty the trie. Hit/miss
+    /// counters are kept (they describe traffic, not contents).
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        let mut stack: Vec<Node> = self.root.drain().map(|(_, n)| n).collect();
+        while let Some(mut n) = stack.pop() {
+            stack.extend(n.children.drain().map(|(_, c)| c));
+            pool.release(n.page);
+        }
+        self.stored_pages = 0;
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            lookups: self.lookups,
+            hits: self.hits,
+            hit_tokens: self.hit_tokens,
+            stored_pages: self.stored_pages,
+        }
+    }
+}
+
+/// Oldest `last_used` among the leaves under `n` (a leaf is its own
+/// bound). Interior ticks are ignored: only leaves are evictable.
+fn oldest_leaf(n: &Node) -> u64 {
+    if n.children.is_empty() {
+        n.last_used
+    } else {
+        n.children.values().map(oldest_leaf).min().expect("non-empty children")
+    }
+}
+
+/// Descend toward and remove the leaf with the oldest `last_used`,
+/// returning its page handle.
+fn evict_from(map: &mut HashMap<Box<[i32]>, Node>) -> Option<Arc<KvPage>> {
+    let key = map
+        .iter()
+        .map(|(k, n)| (oldest_leaf(n), k))
+        .min_by_key(|(t, _)| *t)
+        .map(|(_, k)| k.clone())?;
+    let node = map.get_mut(&key).expect("key just selected");
+    if node.children.is_empty() {
+        Some(map.remove(&key).expect("key just selected").page)
+    } else {
+        evict_from(&mut node.children)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kv::{KvFormat, KvLayout, KvSeq};
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { n_layers: 1, d_model: 4, page_tokens: 4, format: KvFormat::F32 }
+    }
+
+    /// Build `n_pages` full pages in a throwaway sequence, marking each
+    /// page's first element with `tag` so tests can tell pages apart.
+    fn make_pages(pool: &mut KvPool, tag: f32, n_pages: usize) -> Vec<Arc<KvPage>> {
+        let l = layout();
+        let mut seq = KvSeq::new(l);
+        seq.reserve(pool, n_pages * l.page_tokens).unwrap();
+        for p in 0..n_pages {
+            let (k, _) = seq.kv_mut(p * l.page_tokens, 0);
+            k[0] = tag + p as f32;
+        }
+        let handles: Vec<_> = (0..n_pages).map(|i| seq.page_handle(i)).collect();
+        seq.clear(pool);
+        handles
+    }
+
+    fn first_elem(page: &KvPage) -> f32 {
+        match page {
+            KvPage::F32(p) => p[0],
+            KvPage::Bytes(_) => unreachable!("f32 tests"),
+        }
+    }
+
+    #[test]
+    fn publish_then_lookup_returns_longest_prefix() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l);
+        let mut trie = PrefixCache::new(l.page_tokens);
+        let toks: Vec<i32> = (0..12).collect(); // 3 full pages
+        let pages = make_pages(&mut pool, 100.0, 3);
+        trie.publish(&toks, &pages);
+        assert_eq!(trie.len(), 3);
+
+        // exact prompt: all 3 pages, in order
+        let hit = trie.lookup(&toks);
+        assert_eq!(hit.len(), 3);
+        for (i, p) in hit.iter().enumerate() {
+            assert_eq!(first_elem(p), 100.0 + i as f32);
+            pool.release(Arc::clone(p));
+        }
+        drop(hit);
+
+        // longer prompt sharing 2 full chunks + a diverging 3rd
+        let mut longer: Vec<i32> = (0..8).collect();
+        longer.extend_from_slice(&[99, 98, 97, 96, 95]);
+        let hit = trie.lookup(&longer);
+        assert_eq!(hit.len(), 2, "divergent chunk must stop the walk");
+        for p in hit {
+            pool.release(p);
+        }
+
+        // shorter-than-a-page prompt: lookup counts a miss
+        let hit = trie.lookup(&toks[..3]);
+        assert!(hit.is_empty());
+        let s = trie.stats();
+        assert_eq!(s.lookups, 3);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.hit_tokens, (3 + 2) * 4);
+
+        trie.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn publish_is_first_writer_wins() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l);
+        let mut trie = PrefixCache::new(l.page_tokens);
+        let toks: Vec<i32> = (0..4).collect();
+        let first = make_pages(&mut pool, 1.0, 1);
+        let second = make_pages(&mut pool, 2.0, 1);
+        trie.publish(&toks, &first);
+        trie.publish(&toks, &second);
+        assert_eq!(trie.len(), 1, "re-publish must not duplicate nodes");
+        let hit = trie.lookup(&toks);
+        assert_eq!(first_elem(&hit[0]), 1.0, "first writer's page must survive");
+        pool.release(hit.into_iter().next().unwrap());
+        // the losing publisher's handles still release cleanly
+        for p in second {
+            pool.release(p);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn evict_lru_takes_stalest_leaf_first() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l);
+        let mut trie = PrefixCache::new(l.page_tokens);
+        // two branches under a shared first page:
+        //   [0..4) -> [4..8)   (branch A)
+        //   [0..4) -> [20..24) (branch B)
+        let shared: Vec<i32> = (0..4).collect();
+        let mut a = shared.clone();
+        a.extend(4..8);
+        let mut b = shared.clone();
+        b.extend(20..24);
+        trie.publish(&a, &make_pages(&mut pool, 10.0, 2));
+        trie.publish(&b, &make_pages(&mut pool, 20.0, 2));
+        assert_eq!(trie.len(), 3, "shared first chunk stored once");
+
+        // touch branch B so branch A's leaf is stalest
+        for p in trie.lookup(&b) {
+            pool.release(p);
+        }
+        assert!(trie.evict_lru(&mut pool));
+        assert_eq!(trie.len(), 2);
+        let hit = trie.lookup(&a);
+        assert_eq!(hit.len(), 1, "branch A's leaf gone, shared root kept");
+        for p in hit {
+            pool.release(p);
+        }
+        // next eviction takes B's leaf (root has a child until then)
+        assert!(trie.evict_lru(&mut pool));
+        assert!(trie.evict_lru(&mut pool));
+        assert!(!trie.evict_lru(&mut pool), "empty trie has nothing to evict");
+        assert_eq!(trie.len(), 0);
+        assert_eq!(pool.outstanding(), 0, "evicted pages must return to the pool");
+    }
+
+    #[test]
+    fn clear_releases_every_page() {
+        let l = layout();
+        let mut pool = KvPool::unbounded(l);
+        let mut trie = PrefixCache::new(l.page_tokens);
+        let toks: Vec<i32> = (0..16).collect();
+        trie.publish(&toks, &make_pages(&mut pool, 0.0, 4));
+        assert_eq!(pool.outstanding(), 4);
+        trie.clear(&mut pool);
+        assert!(trie.is_empty());
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.free_pages(), 4);
+    }
+}

@@ -47,6 +47,7 @@ USAGE: faar <subcommand> [options]
             [--max-tokens-cap N] [--max-line-bytes N]
             [--read-timeout-ms MS] [--max-conns N] [--kv-pages N]
             [--kv-page-tokens N] [--kv-format f32|e4m3 (native only)]
+            [--prefix-cache (native only)] [--prefill-chunk-tokens N]
             [--no-kv] [--no-act-quant]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
@@ -58,7 +59,10 @@ artifacts/ directory; xla is the AOT/PJRT path; synthetic is the
 deterministic load-testing stand-in. The sampling flags set the server's
 DEFAULT generation parameters (greedy unless --temperature is given);
 any request can override them with a protocol-v2 "params" object, and
-"stream": true turns on incremental token frames.
+"stream": true turns on incremental token frames. --prefix-cache shares
+KV pages between requests with a common prompt prefix (bit-identical
+outputs); --prefill-chunk-tokens N bounds per-step prompt prefill so a
+long prompt cannot stall decoding neighbours (0 = off).
 
 Common options: --artifacts DIR (default artifacts), --out DIR (default
 results), --seed N, plus every pipeline hyperparameter (see README).";
@@ -73,7 +77,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["tasks", "pack", "help", "no-kv", "no-act-quant"])?;
+    let args = Args::from_env(&["tasks", "pack", "help", "no-kv", "no-act-quant", "prefix-cache"])?;
     if args.positional.is_empty() || args.flag("help") {
         println!("{USAGE}");
         return Ok(());
@@ -269,7 +273,10 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
         read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
         workers: args.usize_or("workers", d.workers)?,
         defaults: default_gen_params(args, cfg.seed)?,
+        prefill_chunk_tokens: args.usize_or("prefill-chunk-tokens", d.prefill_chunk_tokens)?,
     };
+    // reject bad knob combinations at parse time, not deep in the engine
+    opts.validate()?;
     let backend = args.str_or("backend", "xla");
     if backend != "xla" && args.get("method").is_some() {
         bail!(
@@ -381,13 +388,23 @@ fn serve_native(
     // retiring slots never starve admissions. The page size threads all
     // the way into the backend's uncached-fallback scratch pools — no
     // hardcoded geometry anywhere on the native path.
-    let page_tokens = args.usize_or("kv-page-tokens", nd.page_tokens)?.max(1);
+    let page_tokens = args.usize_or("kv-page-tokens", nd.page_tokens)?;
+    if page_tokens == 0 {
+        bail!("--kv-page-tokens must be >= 1");
+    }
     let pages_per_window = manifest.config.seq_len.div_ceil(page_tokens);
     let max_pages =
         args.usize_or("kv-pages", 2 * opts.max_batch.max(1) * pages_per_window)?;
+    if max_pages == 0 {
+        bail!("--kv-pages must be >= 1");
+    }
     let kv_name = args.str_or("kv-format", nd.kv_format.name());
     let kv_format = KvFormat::parse(&kv_name)
         .ok_or_else(|| anyhow!("unknown --kv-format '{kv_name}' (expected f32 or e4m3)"))?;
+    let prefix_cache = args.flag("prefix-cache");
+    if prefix_cache && args.flag("no-kv") {
+        bail!("--prefix-cache needs the KV cache; drop --no-kv");
+    }
     let backend = NativeBackend::new(
         model,
         NativeOptions {
@@ -395,17 +412,19 @@ fn serve_native(
             max_pages,
             page_tokens,
             kv_format,
+            prefix_cache,
             ..nd
         },
     );
     info!(
         "native backend ready (model {}, kv {} pages x {} tokens [{}], cache {}, \
-         kernels {} [{}])",
+         prefix cache {}, kernels {} [{}])",
         manifest.config.name,
         max_pages,
         page_tokens,
         kv_format.name(),
         if args.flag("no-kv") { "off" } else { "on" },
+        if prefix_cache { "on" } else { "off" },
         kernel_path().name(),
         cpu_features()
     );

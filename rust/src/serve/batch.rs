@@ -29,6 +29,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -197,6 +198,43 @@ pub trait StepBackend {
     /// stateless backends ignore it. Must be idempotent and safe for
     /// slots the backend never saw.
     fn release(&self, _slot: &DecodeSlot) {}
+
+    /// Incrementally prefill at most `max_tokens` of `slot`'s prompt
+    /// into the backend's per-slot cache, returning how many prompt
+    /// tokens are **still missing** (0 = the slot is ready to decode at
+    /// full cached speed). The scheduler's chunked-prefill loop calls
+    /// this between decode steps so one long prompt cannot stall every
+    /// streaming client's inter-token latency; chunking must never
+    /// change tokens — the next [`Self::step`] simply finds more (or
+    /// less) of the window already cached. The default (stateless or
+    /// non-chunking backends) reports nothing missing, which makes
+    /// chunked scheduling a no-op: `step` absorbs the whole prompt as
+    /// before.
+    fn prefill_chunk(&self, _slot: &DecodeSlot, _max_tokens: usize) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Cache/pool counters for the serve stats (`None` when the backend
+    /// has nothing to report — the default).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+}
+
+/// Backend cache/pool counters surfaced into `SchedStats`, the serve
+/// shutdown log, and `BENCH_serve.json` via [`StepBackend::cache_stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// prefix-cache lookups (one per cold slot admission)
+    pub prefix_lookups: u64,
+    /// lookups that attached at least one cached page
+    pub prefix_hits: u64,
+    /// prompt tokens served from cached pages instead of prefill
+    pub prefix_hit_tokens: u64,
+    /// full pages currently held by the prefix trie
+    pub prefix_pages: u64,
+    /// peak KV pages outstanding over the backend's lifetime
+    pub kv_pages_hwm: u64,
 }
 
 /// One decode step over a micro-batch: backend logits → per-slot
@@ -395,6 +433,14 @@ pub struct SyntheticBackend {
     pub fixed_cost: Duration,
     /// simulated per-slot compute
     pub per_slot_cost: Duration,
+    /// simulated cost of prefilling ONE prompt token — paid either all
+    /// at once inside the slot's first `step` (unchunked) or
+    /// incrementally through `prefill_chunk` (chunked), so the serve
+    /// bench can measure what chunked prefill buys without real kernels
+    per_prefill_token: Duration,
+    /// prompt tokens already prefilled, per slot id (only maintained
+    /// when a prefill cost is configured)
+    prefilled: Mutex<HashMap<u64, usize>>,
 }
 
 impl SyntheticBackend {
@@ -406,6 +452,8 @@ impl SyntheticBackend {
             seed,
             fixed_cost: Duration::ZERO,
             per_slot_cost: Duration::ZERO,
+            per_prefill_token: Duration::ZERO,
+            prefilled: Mutex::new(HashMap::new()),
         }
     }
 
@@ -414,6 +462,19 @@ impl SyntheticBackend {
         self.fixed_cost = fixed;
         self.per_slot_cost = per_slot;
         self
+    }
+
+    /// Attach a simulated per-prompt-token prefill cost (see
+    /// [`Self::per_prefill_token`]).
+    pub fn with_prefill_cost(mut self, per_token: Duration) -> SyntheticBackend {
+        self.per_prefill_token = per_token;
+        self
+    }
+
+    /// Prompt tokens of `slot` not yet paid for, given the current
+    /// window (`window_len - 1` positions precede the decode token).
+    fn missing_prefill(&self, slot: &DecodeSlot, done: usize) -> usize {
+        slot.pos.saturating_sub(done)
     }
 
     fn row(&self, last: i32, pos: usize) -> Vec<f32> {
@@ -453,6 +514,19 @@ impl StepBackend for SyntheticBackend {
 
     fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
         spin(self.fixed_cost);
+        if !self.per_prefill_token.is_zero() {
+            // pay for every prompt token not yet prefilled (the whole
+            // prompt on an unchunked slot's first step), then mark the
+            // decode token cached too — steady-state decode steps cost
+            // only per_slot_cost, like the real cached path
+            let mut prefilled = self.prefilled.lock().expect("prefill ledger poisoned");
+            for s in slots {
+                let done = prefilled.get(&s.id).copied().unwrap_or(0);
+                let missing = self.missing_prefill(s, done);
+                spin(self.per_prefill_token * missing as u32);
+                prefilled.insert(s.id, s.pos + 1);
+            }
+        }
         Ok(slots
             .iter()
             .map(|s| {
@@ -460,6 +534,29 @@ impl StepBackend for SyntheticBackend {
                 self.row(s.buf[s.pos], s.pos)
             })
             .collect())
+    }
+
+    fn prefill_chunk(&self, slot: &DecodeSlot, max_tokens: usize) -> Result<usize> {
+        if self.per_prefill_token.is_zero() || max_tokens == 0 {
+            return Ok(0);
+        }
+        let done = {
+            let prefilled = self.prefilled.lock().expect("prefill ledger poisoned");
+            prefilled.get(&slot.id).copied().unwrap_or(0)
+        };
+        let missing = self.missing_prefill(slot, done);
+        let give = missing.min(max_tokens);
+        // spin OUTSIDE the lock: concurrent callers must not serialize
+        // on the ledger while simulated prefill work burns
+        spin(self.per_prefill_token * give as u32);
+        self.prefilled.lock().expect("prefill ledger poisoned").insert(slot.id, done + give);
+        Ok(missing - give)
+    }
+
+    fn release(&self, slot: &DecodeSlot) {
+        if !self.per_prefill_token.is_zero() {
+            self.prefilled.lock().expect("prefill ledger poisoned").remove(&slot.id);
+        }
     }
 }
 
@@ -653,5 +750,26 @@ mod tests {
     fn slot_rejects_invalid_params() {
         let bad = GenParams { temperature: f32::NAN, ..GenParams::default() };
         assert!(DecodeSlot::with_params(&[1], 4, 8, bad).is_err());
+    }
+
+    #[test]
+    fn synthetic_prefill_chunks_account_and_never_change_tokens() {
+        let b = SyntheticBackend::new(32, 16, 9).with_prefill_cost(Duration::from_micros(1));
+        let prompt: Vec<i32> = (0..10).collect();
+        let reference = generate_greedy(&SyntheticBackend::new(32, 16, 9), &prompt, 5).unwrap();
+        let mut slots = vec![DecodeSlot::new(&prompt, 5, 16).unwrap()];
+        // 9 positions precede the decode token; drain them in 4s
+        assert_eq!(b.prefill_chunk(&slots[0], 4).unwrap(), 5);
+        assert_eq!(b.prefill_chunk(&slots[0], 4).unwrap(), 1);
+        assert_eq!(b.prefill_chunk(&slots[0], 4).unwrap(), 0);
+        while !slots[0].done() {
+            decode_step(&b, &mut slots).unwrap();
+        }
+        assert_eq!(slots[0].out, reference, "prefill cost model changed the tokens");
+        b.release(&slots[0]);
+        // a cost-free backend's default hook reports nothing missing
+        let plain = SyntheticBackend::new(32, 16, 9);
+        let slot = DecodeSlot::new(&prompt, 5, 16).unwrap();
+        assert_eq!(plain.prefill_chunk(&slot, 4).unwrap(), 0);
     }
 }

@@ -249,13 +249,25 @@ impl Client {
     /// order) and the terminal reply. The request is sent with
     /// `"stream": true` regardless of `req.stream`.
     pub fn request_stream(&mut self, req: &ClientRequest) -> Result<(Vec<StreamFrame>, Reply)> {
+        let mut frames = Vec::new();
+        let reply = self.request_stream_with(req, |f| frames.push(f.clone()))?;
+        Ok((frames, reply))
+    }
+
+    /// [`Client::request_stream`] with a per-frame callback invoked the
+    /// moment each token frame is read off the socket — the hook the
+    /// serve bench uses to timestamp inter-token gaps as the client
+    /// actually observes them, rather than after the whole stream landed.
+    pub fn request_stream_with<F>(&mut self, req: &ClientRequest, mut on_frame: F) -> Result<Reply>
+    where
+        F: FnMut(&StreamFrame),
+    {
         let req = ClientRequest { stream: true, ..req.clone() };
         self.send(&req)?;
-        let mut frames = Vec::new();
         loop {
             match self.read_line()? {
-                Line::Frame(f) => frames.push(f),
-                Line::Reply(r) => return Ok((frames, r)),
+                Line::Frame(f) => on_frame(&f),
+                Line::Reply(r) => return Ok(r),
             }
         }
     }

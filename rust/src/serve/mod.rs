@@ -437,6 +437,7 @@ pub fn serve_on<B: StepBackend + ?Sized>(
     max_conns: Option<usize>,
     opts: ServeOptions,
 ) -> Result<SchedStats> {
+    opts.validate()?;
     // one tokenizer shared by every connection thread (vocab-sized build)
     let tok = Arc::new(Tokenizer::new(backend.vocab()));
     let registry = Arc::new(Registry::default());
@@ -463,6 +464,18 @@ pub fn serve_on<B: StepBackend + ?Sized>(
         stats.steps,
         stats.batched_steps,
         stats.peak_batch
+    );
+    crate::info!(
+        "serve cache: prefix hit rate {:.1}% ({}/{} lookups, {} tokens reused, {} trie pages), \
+         kv pages high-water {}, prefill budget utilization {:.1}% ({} chunks)",
+        stats.prefix_hit_rate() * 100.0,
+        stats.cache.prefix_hits,
+        stats.cache.prefix_lookups,
+        stats.cache.prefix_hit_tokens,
+        stats.cache.prefix_pages,
+        stats.cache.kv_pages_hwm,
+        stats.budget_utilization() * 100.0,
+        stats.prefill_chunks
     );
     Ok(stats)
 }

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use nvfp4_faar::formats::codec::FormatKind;
 use nvfp4_faar::infer::{
-    native_manifest, quantize_store, NativeBackend, NativeModel, NativeOptions,
+    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
 };
 use nvfp4_faar::serve::client::{Client, ClientRequest, Completion};
 use nvfp4_faar::serve::{
@@ -339,11 +339,22 @@ fn serve_disconnect_mid_decode_does_not_wedge_the_server() {
 }
 
 fn native_backend(use_cache: bool) -> NativeBackend {
+    native_backend_with(NativeOptions { use_cache, ..NativeOptions::default() })
+}
+
+/// Build a nano-preset native backend with explicit options. CI runs the
+/// whole `serve_native` suite under both KV number formats by setting
+/// `FAAR_TEST_KV_FORMAT=f32|e4m3` (unset defaults to the option's value).
+fn native_backend_with(mut opts: NativeOptions) -> NativeBackend {
     let manifest = native_manifest("nano").expect("nano preset");
     let fp = ParamStore::init(&manifest, 42);
     let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
     let model = NativeModel::new(&manifest.config, &store, true).expect("model");
-    NativeBackend::new(model, NativeOptions { use_cache, ..NativeOptions::default() })
+    if let Ok(name) = std::env::var("FAAR_TEST_KV_FORMAT") {
+        opts.kv_format = KvFormat::parse(&name)
+            .unwrap_or_else(|| panic!("unknown FAAR_TEST_KV_FORMAT '{name}'"));
+    }
+    NativeBackend::new(model, opts)
 }
 
 /// The serving engine over the NATIVE pure-rust backend, end to end over
@@ -627,4 +638,105 @@ fn serve_idle_connection_times_out_and_server_drains() {
             "server failed to drain on an idle connection"
         );
     });
+}
+
+/// Tentpole acceptance over real TCP: interleaved clients whose prompts
+/// share a page-aligned prefix decode bit-identically to a cold run on a
+/// reference backend without the prefix trie, under whichever
+/// `FAAR_TEST_KV_FORMAT` the suite runs. After the server drains, the
+/// only outstanding pages are the trie's, and clearing it frees them all.
+#[test]
+fn serve_native_prefix_cache_hits_bit_identical() {
+    let backend = native_backend_with(NativeOptions {
+        use_cache: true,
+        prefix_cache: true,
+        page_tokens: 4,
+        ..NativeOptions::default()
+    });
+    let reference = native_backend_with(NativeOptions {
+        use_cache: true,
+        page_tokens: 4,
+        ..NativeOptions::default()
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    const N: usize = 4;
+    let opts = ServeOptions { max_batch: 4, ..ServeOptions::default() };
+    // two full 4-token pages of shared prefix, then a per-client suffix
+    let base = [17i32, 3, 9, 250, 41, 8, 77, 5];
+
+    let (stats, all) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut cl = client(addr);
+                    let mut prompt = base.to_vec();
+                    prompt.push(((c * 31 + 2) % 256) as i32);
+                    let got = ok(cl.request(&ClientRequest::tokens(prompt.clone()).max_tokens(5)));
+                    (prompt, got.tokens)
+                })
+            })
+            .collect();
+        let stats = serve_on(&backend, listener, Some(N), opts).unwrap();
+        let all: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (stats, all)
+    });
+
+    assert_eq!(stats.completed as usize, N);
+    assert_eq!(stats.errors, 0);
+    for (prompt, got) in &all {
+        let expect = generate_greedy(&reference, prompt, 5).unwrap();
+        assert_eq!(got, &expect, "cache-hit decode diverged from cold run for {prompt:?}");
+    }
+    // the trie was consulted for every admit, and the shared prefix hit
+    assert!(stats.cache.prefix_lookups >= N as u64, "missing lookups: {:?}", stats.cache);
+    assert!(stats.cache.prefix_hits >= 1, "shared prefix never hit: {:?}", stats.cache);
+    assert!(stats.cache.kv_pages_hwm > 0, "high-water mark never recorded");
+    // slots drained; exactly the published trie pages remain outstanding
+    assert_eq!(backend.cached_slots(), 0, "slot cache entries leaked");
+    assert_eq!(
+        backend.kv_outstanding() as u64,
+        stats.cache.prefix_pages,
+        "outstanding pages beyond the trie's after drain"
+    );
+    backend.clear_prefix_cache();
+    assert_eq!(backend.kv_outstanding(), 0, "shared pages leaked after trie clear");
+    assert_eq!(reference.kv_outstanding(), 0);
+}
+
+/// Chunked prefill must not change what the model says: a long prompt
+/// served under a small per-step prefill budget decodes exactly like the
+/// unchunked engine, and the scheduler reports the chunk accounting.
+#[test]
+fn serve_native_chunked_prefill_matches_unchunked() {
+    let backend = native_backend_with(NativeOptions {
+        use_cache: true,
+        page_tokens: 4,
+        ..NativeOptions::default()
+    });
+    let reference = native_backend(true);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { max_batch: 4, prefill_chunk_tokens: 8, ..ServeOptions::default() };
+    // long enough that the 39 missing prefill tokens need five 8-token chunks
+    let long: Vec<i32> = (0..40).map(|i| (i * 7 % 256) as i32).collect();
+    let prompt = long.clone();
+
+    let (stats, got) = std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            ok(cl.request(&ClientRequest::tokens(prompt).max_tokens(5))).tokens
+        });
+        let stats = serve_on(&backend, listener, Some(1), opts).unwrap();
+        (stats, cl.join().unwrap())
+    });
+
+    assert_eq!(stats.completed, 1);
+    let expect = generate_greedy(&reference, &long, 5).unwrap();
+    assert_eq!(got, expect, "chunked prefill changed the decode");
+    assert!(stats.prefill_chunks > 1, "long prompt was never chunked: {stats:?}");
+    assert_eq!(stats.prefill_tokens, 39, "chunk accounting drifted: {stats:?}");
+    assert!(stats.budget_tokens >= stats.prefill_tokens);
+    assert_eq!(backend.kv_outstanding(), 0, "KV pages leaked after chunked prefill");
+    assert_eq!(reference.kv_outstanding(), 0);
 }

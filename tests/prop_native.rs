@@ -213,6 +213,148 @@ fn prop_kv_reserve_equals_pushes_and_is_atomic() {
     );
 }
 
+#[test]
+fn prop_kv_shared_pages_freed_exactly_once() {
+    // refcounted sharing: two sequences share a full-page prefix and grow
+    // private tails; every physical page returns to the pool exactly once,
+    // whichever owner drops last
+    check_msg(
+        "kv_shared_free",
+        30,
+        |rng| {
+            let page_tokens = 1 + rng.below(4);
+            let shared_pages = 1 + rng.below(3);
+            let a_extra = rng.below(2 * page_tokens + 1);
+            let b_extra = rng.below(2 * page_tokens + 1);
+            (page_tokens, shared_pages, a_extra, b_extra)
+        },
+        |&(page_tokens, shared_pages, a_extra, b_extra)| {
+            let layout =
+                KvLayout { n_layers: 2, d_model: 8, page_tokens, format: KvFormat::F32 };
+            let mut pool = KvPool::unbounded(layout);
+            // build the shared full-page prefix in A
+            let mut a = KvSeq::new(layout);
+            for _ in 0..shared_pages * page_tokens {
+                a.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            // B attaches every one of A's pages, then both grow privately
+            let mut b = KvSeq::new(layout);
+            for i in 0..shared_pages {
+                b.attach(a.page_handle(i));
+            }
+            if b.len() != a.len() {
+                return Err(format!("attach length {} != {}", b.len(), a.len()));
+            }
+            for i in 0..shared_pages {
+                if a.page_refs(i) < 2 {
+                    return Err(format!("page {i} not shared: {} refs", a.page_refs(i)));
+                }
+            }
+            for _ in 0..a_extra {
+                a.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            for _ in 0..b_extra {
+                b.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            // outstanding counts physical pages: shared prefix once, plus
+            // each private tail
+            let physical = shared_pages
+                + a_extra.div_ceil(page_tokens)
+                + b_extra.div_ceil(page_tokens);
+            if pool.outstanding() != physical {
+                return Err(format!("outstanding {} != physical {physical}", pool.outstanding()));
+            }
+            // dropping one owner keeps the shared pages alive...
+            a.clear(&mut pool);
+            let still = shared_pages + b_extra.div_ceil(page_tokens);
+            if pool.outstanding() != still {
+                return Err(format!(
+                    "clearing one owner left {} pages, expected {still}",
+                    pool.outstanding()
+                ));
+            }
+            // ...and the last owner frees each page exactly once
+            b.clear(&mut pool);
+            if pool.outstanding() != 0 {
+                return Err(format!("{} pages leaked", pool.outstanding()));
+            }
+            if pool.free_pages() != physical {
+                return Err(format!(
+                    "free list holds {} pages, expected {physical} (double free?)",
+                    pool.free_pages()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prefix_trie_lookup_returns_longest_published_prefix() {
+    use nvfp4_faar::infer::PrefixCache;
+    use std::sync::Arc;
+    check_msg(
+        "prefix_trie",
+        30,
+        |rng| {
+            let page_tokens = 1 + rng.below(4);
+            let pages = 1 + rng.below(4);
+            let tokens: Vec<i32> =
+                (0..pages * page_tokens).map(|_| rng.below(16) as i32).collect();
+            let probe_pages = rng.below(pages + 1);
+            (page_tokens, pages, tokens, probe_pages)
+        },
+        |(page_tokens, pages, tokens, probe_pages)| {
+            let (page_tokens, pages, probe_pages) = (*page_tokens, *pages, *probe_pages);
+            let layout =
+                KvLayout { n_layers: 1, d_model: 4, page_tokens, format: KvFormat::F32 };
+            let mut pool = KvPool::unbounded(layout);
+            let mut seq = KvSeq::new(layout);
+            for _ in 0..pages * page_tokens {
+                seq.push(&mut pool).map_err(|e| e.to_string())?;
+            }
+            let handles: Vec<_> = (0..pages).map(|i| seq.page_handle(i)).collect();
+            let mut trie = PrefixCache::new(page_tokens);
+            trie.publish(tokens, &handles);
+            if trie.len() != pages {
+                return Err(format!("trie holds {} pages, expected {pages}", trie.len()));
+            }
+            // a probe sharing exactly probe_pages full pages (diverging
+            // right after — 99 is outside the generated token range)
+            let mut probe: Vec<i32> = tokens[..probe_pages * page_tokens].to_vec();
+            probe.push(99);
+            let got = trie.lookup(&probe);
+            if got.len() != probe_pages {
+                return Err(format!("lookup gave {} pages, expected {probe_pages}", got.len()));
+            }
+            for (i, h) in got.iter().enumerate() {
+                if !Arc::ptr_eq(h, &handles[i]) {
+                    return Err(format!("lookup page {i} is not the published page"));
+                }
+            }
+            // every handle funnels back through the pool exactly once
+            for h in got {
+                pool.release(h);
+            }
+            seq.clear(&mut pool);
+            for h in handles {
+                pool.release(h);
+            }
+            trie.clear(&mut pool);
+            if pool.outstanding() != 0 {
+                return Err(format!("{} pages leaked", pool.outstanding()));
+            }
+            if pool.free_pages() != pages {
+                return Err(format!(
+                    "free list holds {} pages, expected {pages} (double free?)",
+                    pool.free_pages()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Fused kernel vs dense reference
 
@@ -457,6 +599,66 @@ fn nano_backend(use_cache: bool, seed: u64) -> NativeBackend {
     let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
     let model = NativeModel::new(&manifest.config, &store, true).expect("model");
     NativeBackend::new(model, NativeOptions { use_cache, ..NativeOptions::default() })
+}
+
+#[test]
+fn prop_native_prefix_cache_bit_identical_and_drains() {
+    let plain = nano_backend(false, 42);
+    // one shared cached backend across cases: the trie persists, so later
+    // cases exercise warm lookups as well as cold publishes
+    let manifest = native_manifest("nano").expect("preset");
+    let fp = ParamStore::init(&manifest, 42);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    let cached = NativeBackend::new(
+        model,
+        NativeOptions {
+            use_cache: true,
+            prefix_cache: true,
+            page_tokens: 4,
+            ..NativeOptions::default()
+        },
+    );
+    check_msg(
+        "prefix_cache_parity",
+        6,
+        |rng| {
+            let base: Vec<i32> = (0..8).map(|_| rng.below(256) as i32).collect();
+            let suffixes: Vec<Vec<i32>> = (0..2)
+                .map(|_| (0..1 + rng.below(4)).map(|_| rng.below(256) as i32).collect())
+                .collect();
+            let max_tokens = 3 + rng.below(5);
+            (base, suffixes, max_tokens)
+        },
+        |(base, suffixes, max_tokens)| {
+            let n = *max_tokens;
+            for suffix in suffixes {
+                let mut prompt = base.clone();
+                prompt.extend_from_slice(suffix);
+                let expect = generate_greedy(&plain, &prompt, n).map_err(|e| e.to_string())?;
+                let got = generate_greedy(&cached, &prompt, n).map_err(|e| e.to_string())?;
+                if got != expect {
+                    return Err(format!("prefix-cached decode diverged for {prompt:?}"));
+                }
+            }
+            // all slots drained: only trie-held pages stay outstanding
+            let stats =
+                cached.prefix_stats().ok_or_else(|| "prefix stats missing".to_string())?;
+            if cached.kv_outstanding() != stats.stored_pages {
+                return Err(format!(
+                    "outstanding {} != trie pages {}",
+                    cached.kv_outstanding(),
+                    stats.stored_pages
+                ));
+            }
+            Ok(())
+        },
+    );
+    let stats = cached.prefix_stats().expect("prefix stats");
+    assert!(stats.lookups > 0, "prefix cache never consulted");
+    assert!(stats.hits > 0, "shared-prefix prompts never hit the trie");
+    cached.clear_prefix_cache();
+    assert_eq!(cached.kv_outstanding(), 0, "KV pages leaked after trie clear");
 }
 
 #[test]
