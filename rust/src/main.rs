@@ -6,7 +6,7 @@
 //!   eval       evaluate a method: PPL / cosine / zero-shot accuracy
 //!   tables     regenerate paper tables (t1, t3, t4, t5, t6, t7, t8, all)
 //!   figures    regenerate paper figures (f2)
-//!   serve      serve the quantized model over TCP (JSON lines)
+//!   serve      serve the quantized model over TCP (JSON lines) or HTTP/SSE
 //!   info       print manifest / artifact info for a model preset
 //!
 //! Every subcommand accepts the config overrides documented in
@@ -26,7 +26,7 @@ use nvfp4_faar::infer::{
 use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
 use nvfp4_faar::runtime::Runtime;
-use nvfp4_faar::serve::{serve_backend, ServeOptions, SyntheticBackend};
+use nvfp4_faar::serve::{serve_backend, CodecKind, ServeOptions, SyntheticBackend, Transport};
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::cli::Args;
 use nvfp4_faar::{info, util, warn};
@@ -49,6 +49,7 @@ USAGE: faar <subcommand> [options]
             [--kv-page-tokens N] [--kv-format f32|e4m3 (native only)]
             [--prefix-cache (native only)] [--prefill-chunk-tokens N]
             [--no-kv] [--no-act-quant]
+            [--transport tcp|http|auto] [--codec line|incremental]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
   info      --model tiny
@@ -63,6 +64,14 @@ any request can override them with a protocol-v2 "params" object, and
 KV pages between requests with a common prompt prefix (bit-identical
 outputs); --prefill-chunk-tokens N bounds per-step prompt prefill so a
 long prompt cannot stall decoding neighbours (0 = off).
+
+--transport selects the wire protocol: tcp is newline-delimited JSON
+(the reference protocol), http serves POST /v1/generate with the same
+JSON body ("stream": true maps to server-sent events), and auto sniffs
+each connection so both kinds of client share one listener. --codec
+picks the JSONL frame decoder: line buffers whole lines; incremental
+parses bytes as they arrive with bounded nesting/string/frame limits
+(HTTP bodies always decode incrementally).
 
 Common options: --artifacts DIR (default artifacts), --out DIR (default
 results), --seed N, plus every pipeline hyperparameter (see README).";
@@ -274,6 +283,16 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
         workers: args.usize_or("workers", d.workers)?,
         defaults: default_gen_params(args, cfg.seed)?,
         prefill_chunk_tokens: args.usize_or("prefill-chunk-tokens", d.prefill_chunk_tokens)?,
+        transport: {
+            let name = args.str_or("transport", d.transport.name());
+            Transport::parse(&name)
+                .ok_or_else(|| anyhow!("unknown --transport '{name}' (tcp|http|auto)"))?
+        },
+        codec: {
+            let name = args.str_or("codec", d.codec.name());
+            CodecKind::parse(&name)
+                .ok_or_else(|| anyhow!("unknown --codec '{name}' (line|incremental)"))?
+        },
     };
     // reject bad knob combinations at parse time, not deep in the engine
     opts.validate()?;

@@ -1,4 +1,4 @@
-//! Small typed client for the line-delimited JSON serving protocol.
+//! Small typed client for the serving protocol, over either transport.
 //!
 //! One place that knows how to connect, build v1/v2 request lines
 //! (sampling `params`, `stream`), and read response lines / token
@@ -6,6 +6,14 @@
 //! and example snippets stop hand-rolling the wire format. Protocol
 //! rejections surface as typed [`ProtocolError`]s (match on
 //! [`ProtocolError::code`]); transport failures surface as `Err`.
+//!
+//! [`Client::connect`] speaks the reference TCP-JSONL protocol;
+//! [`Client::connect_http`] sends the same JSON documents as
+//! `POST /v1/generate` bodies and reads HTTP responses back (an SSE
+//! event stream for streaming requests — note the server closes the
+//! connection after a stream's terminal event, so streaming HTTP
+//! clients are one-shot). [`Client::last_status`] exposes the most
+//! recent HTTP status for tests that assert on the mapping.
 //!
 //! ```no_run
 //! use nvfp4_faar::serve::client::{Client, ClientRequest};
@@ -18,7 +26,7 @@
 //! # }
 //! ```
 
-use std::io::{BufRead, BufReader, Write as _};
+use std::io::{BufRead, BufReader, Read as _, Write as _};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
@@ -190,10 +198,23 @@ pub struct StreamFrame {
 /// What one response line held: a completion or a protocol rejection.
 pub type Reply = std::result::Result<Completion, ProtocolError>;
 
-/// A connected protocol client (blocking, line-oriented).
+/// How the client frames requests and responses on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WireMode {
+    /// one JSON line per request/response (raw TCP)
+    Jsonl,
+    /// `POST /v1/generate` per request; JSON or SSE responses
+    Http,
+}
+
+/// A connected protocol client (blocking).
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    mode: WireMode,
+    /// status of the most recent HTTP response (`None` before the
+    /// first, and always in JSONL mode)
+    last_status: Option<u16>,
 }
 
 impl Client {
@@ -205,33 +226,84 @@ impl Client {
 
     /// Connect with an explicit read timeout.
     pub fn connect_timeout(addr: impl ToSocketAddrs, timeout: Duration) -> Result<Client> {
+        Client::connect_inner(addr, timeout, WireMode::Jsonl)
+    }
+
+    /// Connect in HTTP mode with a 60 s read timeout: every request is
+    /// a `POST /v1/generate`, every reply an HTTP response.
+    pub fn connect_http(addr: impl ToSocketAddrs) -> Result<Client> {
+        Client::connect_http_timeout(addr, Duration::from_secs(60))
+    }
+
+    /// Connect in HTTP mode with an explicit read timeout.
+    pub fn connect_http_timeout(addr: impl ToSocketAddrs, timeout: Duration) -> Result<Client> {
+        Client::connect_inner(addr, timeout, WireMode::Http)
+    }
+
+    fn connect_inner(
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+        mode: WireMode,
+    ) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connect")?;
         stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Client { stream, reader })
+        Ok(Client { stream, reader, mode, last_status: None })
     }
 
-    /// Send one request line without waiting for the reply (pipelining).
+    /// The HTTP status of the most recent response (`None` before the
+    /// first response, and always in JSONL mode).
+    pub fn last_status(&self) -> Option<u16> {
+        self.last_status
+    }
+
+    /// Send one request without waiting for the reply (pipelining).
     pub fn send(&mut self, req: &ClientRequest) -> Result<()> {
         self.send_raw(&req.to_line())
     }
 
-    /// Send a raw protocol line verbatim (malformed-input tests).
-    pub fn send_raw(&mut self, line: &str) -> Result<()> {
-        self.stream.write_all(line.as_bytes())?;
-        self.stream.write_all(b"\n")?;
+    /// Send a raw request body verbatim (malformed-input tests). In
+    /// JSONL mode it goes out as one line; in HTTP mode as one POST.
+    pub fn send_raw(&mut self, body: &str) -> Result<()> {
+        match self.mode {
+            WireMode::Jsonl => {
+                self.stream.write_all(body.as_bytes())?;
+                self.stream.write_all(b"\n")?;
+            }
+            WireMode::Http => {
+                let head = format!(
+                    "POST /v1/generate HTTP/1.1\r\nhost: faar\r\n\
+                     content-type: application/json\r\ncontent-length: {}\r\n\r\n",
+                    body.len()
+                );
+                self.stream.write_all(head.as_bytes())?;
+                self.stream.write_all(body.as_bytes())?;
+            }
+        }
         self.stream.flush()?;
         Ok(())
     }
 
-    /// Read one line and parse it as a terminal reply (completion or
-    /// structured error). Fails on EOF, transport errors, or a token
-    /// frame where a terminal reply was expected.
+    /// Read one terminal reply (completion or structured error). Fails
+    /// on EOF, transport errors, or a token frame / event stream where
+    /// a terminal reply was expected.
     pub fn read_reply(&mut self) -> Result<Reply> {
-        match self.read_line()? {
-            Line::Reply(r) => Ok(r),
-            Line::Frame(f) => bail!("expected a terminal reply, got token frame {f:?}"),
+        match self.mode {
+            WireMode::Jsonl => match self.read_line()? {
+                Line::Reply(r) => Ok(r),
+                Line::Frame(f) => bail!("expected a terminal reply, got token frame {f:?}"),
+            },
+            WireMode::Http => {
+                let head = self.read_http_head()?;
+                if head.sse {
+                    bail!("expected a JSON response, got an SSE stream");
+                }
+                match parse_line(&self.read_http_body(&head)?)? {
+                    Line::Reply(r) => Ok(r),
+                    Line::Frame(f) => bail!("expected a terminal reply, got token frame {f:?}"),
+                }
+            }
         }
     }
 
@@ -264,6 +336,23 @@ impl Client {
     {
         let req = ClientRequest { stream: true, ..req.clone() };
         self.send(&req)?;
+        if self.mode == WireMode::Http {
+            let head = self.read_http_head()?;
+            if !head.sse {
+                // a pre-stream rejection arrives as a plain JSON
+                // response (the SSE preamble was never committed)
+                return match parse_line(&self.read_http_body(&head)?)? {
+                    Line::Reply(r) => Ok(r),
+                    Line::Frame(f) => bail!("expected a reply, got token frame {f:?}"),
+                };
+            }
+            loop {
+                match self.read_sse_event()? {
+                    Line::Frame(f) => on_frame(&f),
+                    Line::Reply(r) => return Ok(r),
+                }
+            }
+        }
         loop {
             match self.read_line()? {
                 Line::Frame(f) => on_frame(&f),
@@ -285,6 +374,81 @@ impl Client {
         }
         parse_line(&line)
     }
+
+    /// Read one HTTP response head, recording its status.
+    fn read_http_head(&mut self) -> Result<HttpHead> {
+        let mut status_line = String::new();
+        if self.reader.read_line(&mut status_line)? == 0 {
+            bail!("server closed the connection");
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed HTTP status line {status_line:?}"))?;
+        self.last_status = Some(status);
+        let mut content_length = None;
+        let mut sse = false;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("connection closed inside a response head");
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                let value = value.trim();
+                match name.trim().to_ascii_lowercase().as_str() {
+                    "content-length" => {
+                        content_length = Some(
+                            value
+                                .parse()
+                                .with_context(|| format!("bad content-length {value:?}"))?,
+                        );
+                    }
+                    "content-type" => sse = value.starts_with("text/event-stream"),
+                    _ => {}
+                }
+            }
+        }
+        Ok(HttpHead { content_length, sse })
+    }
+
+    /// Read a content-length-framed response body as UTF-8 text.
+    fn read_http_body(&mut self, head: &HttpHead) -> Result<String> {
+        let n = head
+            .content_length
+            .ok_or_else(|| anyhow::anyhow!("response head carried no content-length"))?;
+        let mut body = vec![0u8; n];
+        self.reader.read_exact(&mut body).context("read response body")?;
+        String::from_utf8(body).context("response body is not UTF-8")
+    }
+
+    /// Read the next `data:` event off an SSE stream.
+    fn read_sse_event(&mut self) -> Result<Line> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("connection closed mid-stream");
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue; // event separator
+            }
+            let Some(body) = line.strip_prefix("data: ") else {
+                bail!("unexpected SSE line {line:?}");
+            };
+            return parse_line(body);
+        }
+    }
+}
+
+/// The response-head fields the client cares about.
+struct HttpHead {
+    content_length: Option<usize>,
+    sse: bool,
 }
 
 enum Line {

@@ -1,0 +1,598 @@
+//! Streaming structural JSON framer: no full-line buffering.
+//!
+//! [`IncrementalDecoder`] recognizes frame boundaries *as bytes
+//! arrive* by tracking exactly the state needed to know where a JSON
+//! document ends — string/escape state, container depth, and an
+//! incremental strict-UTF-8 validator — while deliberately deferring
+//! all grammar validation (commas, colons, escape legality, number
+//! syntax) to [`crate::util::json::Json::parse`] on the completed
+//! frame. That split is what makes the decoder provably agree with the
+//! reference [`super::LineDecoder`] on every single-line input: the
+//! scanner only rejects early on conditions the line codec also
+//! rejects —
+//!
+//! * invalid UTF-8 (`bad_json`, same as the line codec's whole-line
+//!   check),
+//! * nesting past [`crate::util::json::MAX_DEPTH`] (`bad_json`, the
+//!   parser enforces the identical bound),
+//! * input past `max_frame_bytes` (`oversized`, counted per line with
+//!   the same accounting as the bounded line reader),
+//! * a raw newline inside a string (`bad_json`; the line codec chops
+//!   the line there and the parser rejects the fragment),
+//! * trailing data after a complete document (`bad_json`, the parser
+//!   rejects the same line).
+//!
+//! Beyond single lines the incremental decoder is strictly more
+//! capable: a structural document may span multiple lines (newlines
+//! between tokens are JSON whitespace), bounded by `max_frame_bytes`
+//! over the whole document. After any rejection the decoder
+//! resynchronizes at the next newline — one malformed frame costs
+//! exactly one structured error, never a wedged connection.
+
+use super::{err_bad_utf8, err_oversized, trim_frame, CodecLimits, DecodeEvent, FrameDecoder};
+use crate::serve::scheduler::ServeError;
+
+/// Where the scanner is between bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    /// between frames, skipping whitespace
+    Idle,
+    /// inside a `{…}` / `[…]` document
+    Doc,
+    /// inside a non-structural document (scalar like `123` or `"x"`,
+    /// or garbage): buffered to the newline and handed to the parser,
+    /// which reproduces the line codec exactly for such lines
+    Blob,
+    /// a structural document is complete; only whitespace may follow
+    /// before the newline that releases the frame
+    DocDone,
+    /// an error was emitted; discarding bytes through the next newline
+    Resync,
+}
+
+/// Incremental frame scanner with per-byte limits enforcement.
+///
+/// Feeding the same bytes in different chunkings yields identical
+/// events — all state is byte-granular, so a multi-byte UTF-8 sequence
+/// or a `\"`-escape split across two `feed` calls is handled the same
+/// as one contiguous buffer (pinned by tests and the fuzz harness).
+#[derive(Debug)]
+pub struct IncrementalDecoder {
+    limits: CodecLimits,
+    state: State,
+    /// bytes of the document in progress (the eventual frame text)
+    doc: Vec<u8>,
+    /// open containers; the document completes when this returns to 0
+    depth: usize,
+    in_str: bool,
+    esc: bool,
+    /// raw encoded bytes of the string literal in progress
+    str_bytes: usize,
+    /// continuation bytes still expected for the UTF-8 char in progress
+    utf8_need: u8,
+    /// allowed range for the next continuation byte (strict UTF-8:
+    /// rejects overlong forms, surrogates, and values past U+10FFFF)
+    utf8_lo: u8,
+    utf8_hi: u8,
+    /// bytes seen on the current input line (`\n` excluded, `\r`
+    /// included) — the line codec's oversized accounting, kept so both
+    /// codecs reject the same lines
+    line_bytes: usize,
+}
+
+impl IncrementalDecoder {
+    /// A fresh decoder with the given limits.
+    pub fn new(limits: CodecLimits) -> IncrementalDecoder {
+        IncrementalDecoder {
+            limits,
+            state: State::Idle,
+            doc: Vec::new(),
+            depth: 0,
+            in_str: false,
+            esc: false,
+            str_bytes: 0,
+            utf8_need: 0,
+            utf8_lo: 0x80,
+            utf8_hi: 0xBF,
+            line_bytes: 0,
+        }
+    }
+
+    /// Drops all in-progress state and discards until the next newline.
+    fn enter_resync(&mut self) {
+        self.state = State::Resync;
+        self.doc.clear();
+        self.depth = 0;
+        self.in_str = false;
+        self.esc = false;
+        self.str_bytes = 0;
+        self.utf8_need = 0;
+    }
+
+    fn reject(&mut self, err: ServeError, out: &mut Vec<DecodeEvent>) {
+        out.push(DecodeEvent::Reject(err));
+        self.enter_resync();
+    }
+
+    /// Appends one byte to the document, rejecting `oversized` if the
+    /// document itself outgrows the frame bound (reachable only via
+    /// multi-line documents; single lines trip the line counter first).
+    fn push_doc(&mut self, c: u8, out: &mut Vec<DecodeEvent>) -> bool {
+        if self.doc.len() >= self.limits.max_frame_bytes {
+            self.reject(err_oversized(self.limits.max_frame_bytes), out);
+            return false;
+        }
+        self.doc.push(c);
+        true
+    }
+
+    /// Emits the completed structural document held in `doc`.
+    fn emit_doc(&mut self, out: &mut Vec<DecodeEvent>) {
+        match String::from_utf8(std::mem::take(&mut self.doc)) {
+            Ok(text) => out.push(DecodeEvent::Frame(text)),
+            // unreachable: the scanner validated every byte
+            Err(_) => out.push(DecodeEvent::Reject(err_bad_utf8())),
+        }
+    }
+
+    /// Completes a blob (or an EOF-truncated document) the way the
+    /// line codec completes a line: whole-buffer UTF-8 check, trim,
+    /// skip if empty.
+    fn emit_blob(&mut self, out: &mut Vec<DecodeEvent>) {
+        let bytes = std::mem::take(&mut self.doc);
+        match std::str::from_utf8(&bytes) {
+            Err(_) => out.push(DecodeEvent::Reject(err_bad_utf8())),
+            Ok(text) => {
+                let text = trim_frame(text);
+                if !text.is_empty() {
+                    out.push(DecodeEvent::Frame(text.to_string()));
+                }
+            }
+        }
+    }
+
+    /// Handles a newline, which is a frame boundary in every state
+    /// except inside a structural document (where it is whitespace).
+    fn newline(&mut self, out: &mut Vec<DecodeEvent>) {
+        match self.state {
+            State::Idle => {}
+            State::Resync => self.state = State::Idle,
+            State::DocDone => {
+                self.emit_doc(out);
+                self.state = State::Idle;
+            }
+            State::Blob => {
+                self.emit_blob(out);
+                self.state = State::Idle;
+            }
+            State::Doc => {
+                if self.utf8_need > 0 {
+                    self.reject(err_bad_utf8(), out);
+                    self.state = State::Idle;
+                } else if self.in_str {
+                    // the line codec chops the line here and the parser
+                    // rejects the fragment; same code, one event
+                    self.reject(
+                        ServeError::new("bad_json", "raw newline inside string"),
+                        out,
+                    );
+                    self.state = State::Idle;
+                } else {
+                    // incremental-only capability: documents may span
+                    // lines; the newline is inter-token whitespace
+                    if self.push_doc(b'\n', out) {
+                        return; // still mid-document: not a line boundary
+                    }
+                    self.state = State::Idle; // overflowed at the newline
+                }
+            }
+        }
+        self.line_bytes = 0;
+    }
+
+    /// Consumes one non-newline byte.
+    fn step(&mut self, c: u8, out: &mut Vec<DecodeEvent>) {
+        self.line_bytes += 1;
+        if self.state != State::Resync && self.line_bytes > self.limits.max_frame_bytes {
+            // same verdict the bounded line reader gives this line; any
+            // pending completed document on the line is discarded, as
+            // the line codec would discard it
+            self.reject(err_oversized(self.limits.max_frame_bytes), out);
+            return;
+        }
+        match self.state {
+            State::Resync => {}
+            State::Idle => match c {
+                b' ' | b'\t' | b'\r' => {}
+                b'{' | b'[' => {
+                    self.doc.clear();
+                    self.doc.push(c);
+                    self.depth = 1;
+                    self.in_str = false;
+                    self.esc = false;
+                    self.utf8_need = 0;
+                    self.state = State::Doc;
+                }
+                _ => {
+                    self.doc.clear();
+                    self.doc.push(c);
+                    self.state = State::Blob;
+                }
+            },
+            State::Blob => self.doc.push(c),
+            State::DocDone => match c {
+                b' ' | b'\t' | b'\r' => {}
+                _ => {
+                    // `{"a":1} x` — the parser rejects the whole line as
+                    // trailing data, so the completed document must not
+                    // survive either
+                    self.doc.clear();
+                    self.reject(
+                        ServeError::new("bad_json", "trailing data after JSON document"),
+                        out,
+                    );
+                }
+            },
+            State::Doc => self.step_doc(c, out),
+        }
+    }
+
+    /// One byte of a structural document.
+    fn step_doc(&mut self, c: u8, out: &mut Vec<DecodeEvent>) {
+        // continuation of a multi-byte UTF-8 char
+        if self.utf8_need > 0 {
+            if (self.utf8_lo..=self.utf8_hi).contains(&c) {
+                self.utf8_need -= 1;
+                self.utf8_lo = 0x80;
+                self.utf8_hi = 0xBF;
+                if self.push_doc(c, out) && self.in_str {
+                    self.bump_str(out);
+                }
+            } else {
+                self.reject(err_bad_utf8(), out);
+            }
+            return;
+        }
+        // lead byte of a multi-byte char (strict: overlong forms,
+        // surrogates, and > U+10FFFF rejected at the lead/first-cont)
+        if c >= 0x80 {
+            let (need, lo, hi) = match c {
+                0xC2..=0xDF => (1, 0x80, 0xBF),
+                0xE0 => (2, 0xA0, 0xBF),
+                0xE1..=0xEC | 0xEE..=0xEF => (2, 0x80, 0xBF),
+                0xED => (2, 0x80, 0x9F),
+                0xF0 => (3, 0x90, 0xBF),
+                0xF1..=0xF3 => (3, 0x80, 0xBF),
+                0xF4 => (3, 0x80, 0x8F),
+                _ => {
+                    self.reject(err_bad_utf8(), out);
+                    return;
+                }
+            };
+            self.utf8_need = need;
+            self.utf8_lo = lo;
+            self.utf8_hi = hi;
+            // a non-ASCII escape "target" consumes the escape; the
+            // parser rejects the frame's bad escape either way
+            self.esc = false;
+            if self.push_doc(c, out) && self.in_str {
+                self.bump_str(out);
+            }
+            return;
+        }
+        // ASCII
+        if self.in_str {
+            if self.esc {
+                self.esc = false;
+                if self.push_doc(c, out) {
+                    self.bump_str(out);
+                }
+                return;
+            }
+            match c {
+                b'"' => {
+                    self.in_str = false;
+                    self.push_doc(c, out);
+                }
+                b'\\' => {
+                    self.esc = true;
+                    if self.push_doc(c, out) {
+                        self.bump_str(out);
+                    }
+                }
+                // raw control chars ride along; the parser rejects the
+                // completed frame with its own message
+                _ => {
+                    if self.push_doc(c, out) {
+                        self.bump_str(out);
+                    }
+                }
+            }
+            return;
+        }
+        match c {
+            b'{' | b'[' => {
+                self.depth += 1;
+                if self.depth > self.limits.max_depth {
+                    // the parser enforces the identical bound on the
+                    // full frame; rejecting here keeps memory flat
+                    self.reject(
+                        ServeError::new(
+                            "bad_json",
+                            format!("nesting deeper than {}", self.limits.max_depth),
+                        ),
+                        out,
+                    );
+                } else {
+                    self.push_doc(c, out);
+                }
+            }
+            b'}' | b']' => {
+                // mismatched closers (`[1}`) are the parser's call; the
+                // scanner only needs the balance point
+                if self.push_doc(c, out) {
+                    self.depth -= 1;
+                    if self.depth == 0 {
+                        self.state = State::DocDone;
+                    }
+                }
+            }
+            b'"' => {
+                self.in_str = true;
+                self.esc = false;
+                self.str_bytes = 0;
+                self.push_doc(c, out);
+            }
+            _ => {
+                self.push_doc(c, out);
+            }
+        }
+    }
+
+    /// Counts one raw string byte, rejecting past the string bound.
+    fn bump_str(&mut self, out: &mut Vec<DecodeEvent>) {
+        self.str_bytes += 1;
+        if self.str_bytes > self.limits.max_string_bytes {
+            self.reject(
+                ServeError::new(
+                    "oversized",
+                    format!("string exceeds {} bytes", self.limits.max_string_bytes),
+                ),
+                out,
+            );
+        }
+    }
+}
+
+impl FrameDecoder for IncrementalDecoder {
+    fn feed(&mut self, bytes: &[u8], out: &mut Vec<DecodeEvent>) {
+        for &c in bytes {
+            if c == b'\n' {
+                self.newline(out);
+            } else {
+                self.step(c, out);
+            }
+        }
+    }
+
+    fn finish(&mut self, out: &mut Vec<DecodeEvent>) {
+        match self.state {
+            State::Idle | State::Resync => {}
+            State::DocDone => self.emit_doc(out),
+            // an EOF-truncated document gets the line codec's
+            // treatment: UTF-8 check, then the parser rejects the
+            // fragment with its own "unexpected end" message
+            State::Doc | State::Blob => self.emit_blob(out),
+        }
+        self.enter_resync();
+        self.state = State::Idle;
+        self.line_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits(max: usize) -> CodecLimits {
+        CodecLimits { max_frame_bytes: max, ..CodecLimits::default() }
+    }
+
+    fn run(input: &[u8], lim: CodecLimits, eof: bool) -> Vec<DecodeEvent> {
+        let mut d = IncrementalDecoder::new(lim);
+        let mut out = Vec::new();
+        d.feed(input, &mut out);
+        if eof {
+            d.finish(&mut out);
+        }
+        out
+    }
+
+    fn frame(s: &str) -> DecodeEvent {
+        DecodeEvent::Frame(s.to_string())
+    }
+
+    fn code(ev: &DecodeEvent) -> &str {
+        match ev {
+            DecodeEvent::Reject(e) => e.code,
+            DecodeEvent::Frame(_) => "frame",
+        }
+    }
+
+    #[test]
+    fn frames_documents() {
+        let ev = run(b"  {\"a\": 1}\r\n[1,2]\n 123 \ntrue\n", limits(64), true);
+        assert_eq!(
+            ev,
+            vec![frame("{\"a\": 1}"), frame("[1,2]"), frame("123"), frame("true")]
+        );
+    }
+
+    #[test]
+    fn chunking_invariant() {
+        let input: &[u8] =
+            b"{\"p\":\"caf\xc3\xa9 \\\"x\\\"\"}\n[1,[2,[3]]]\nnot json\n{\"cut\":\"\xff\"}\n{\"s\":";
+        let mut whole = IncrementalDecoder::new(limits(64));
+        let mut expect = Vec::new();
+        whole.feed(input, &mut expect);
+        whole.finish(&mut expect);
+        for chunk in 1..=7 {
+            let mut d = IncrementalDecoder::new(limits(64));
+            let mut out = Vec::new();
+            for piece in input.chunks(chunk) {
+                d.feed(piece, &mut out);
+            }
+            d.finish(&mut out);
+            assert_eq!(out, expect, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn split_escape_and_split_utf8_across_feeds() {
+        let mut d = IncrementalDecoder::new(limits(64));
+        let mut out = Vec::new();
+        d.feed(b"{\"p\":\"a\\", &mut out);
+        d.feed(b"\"b caf\xc3", &mut out);
+        d.feed(b"\xa9\"}\n", &mut out);
+        assert_eq!(out, vec![frame("{\"p\":\"a\\\"b caf\u{e9}\"}")]);
+    }
+
+    #[test]
+    fn multiline_document_accepted() {
+        let ev = run(b"{\n  \"a\": 1,\n  \"b\": [1,\n2]\n}\n", limits(64), false);
+        assert_eq!(ev, vec![frame("{\n  \"a\": 1,\n  \"b\": [1,\n2]\n}")]);
+    }
+
+    #[test]
+    fn raw_newline_inside_string_rejects_once() {
+        let ev = run(b"{\"a\":\"x\ny\"}\n", limits(64), true);
+        // line 1 rejects at the newline; `y"}` is a blob frame the
+        // parser will reject, exactly like the line codec's two lines
+        assert_eq!(ev.len(), 2);
+        assert_eq!(code(&ev[0]), "bad_json");
+        assert_eq!(ev[1], frame("y\"}"));
+    }
+
+    #[test]
+    fn depth_limit_is_parser_aligned() {
+        // 64 levels parse; 65 reject — the same boundary Json::parse
+        // enforces (see util::json::MAX_DEPTH)
+        let ok = format!("{}1{}\n", "[".repeat(64), "]".repeat(64));
+        let ev = run(ok.as_bytes(), CodecLimits::default(), false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "frame");
+        assert!(crate::util::json::Json::parse(match &ev[0] {
+            DecodeEvent::Frame(f) => f,
+            _ => unreachable!(),
+        })
+        .is_ok());
+
+        let over = format!("{}1{}\n", "[".repeat(65), "]".repeat(65));
+        let ev = run(over.as_bytes(), CodecLimits::default(), false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "bad_json");
+    }
+
+    #[test]
+    fn oversized_line_rejects_and_resyncs() {
+        let mut input = vec![b'{'; 1];
+        input.extend_from_slice(&[b' '; 40]);
+        input.push(b'\n');
+        input.extend_from_slice(b"{\"a\":1}\n");
+        let ev = run(&input, limits(8), false);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(code(&ev[0]), "oversized");
+        assert_eq!(ev[1], frame("{\"a\":1}"));
+    }
+
+    #[test]
+    fn exact_limit_boundary() {
+        // 8 content bytes at max 8: fits
+        let ev = run(b"{\"aa\":1}\n", limits(8), false);
+        assert_eq!(ev, vec![frame("{\"aa\":1}")]);
+        // trailing \r makes it 9 content bytes: the line codec counts
+        // the \r, so the incremental decoder must too
+        let ev = run(b"{\"aa\":1}\r\n", limits(8), false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "oversized");
+    }
+
+    #[test]
+    fn multiline_document_bounded_by_frame_size() {
+        // every line is short, but the document never ends: the frame
+        // bound must still trip (then the decoder resyncs and treats
+        // later lines as fresh input)
+        let mut d = IncrementalDecoder::new(limits(32));
+        let mut out = Vec::new();
+        d.feed(b"[\n", &mut out);
+        for _ in 0..40 {
+            d.feed(b"1,\n", &mut out);
+        }
+        assert!(!out.is_empty());
+        assert_eq!(code(&out[0]), "oversized");
+        // a document made almost entirely of newlines exercises the
+        // doc-buffer bound specifically (the per-line counter never
+        // grows)
+        let mut d = IncrementalDecoder::new(limits(32));
+        let mut out = Vec::new();
+        d.feed(b"[", &mut out);
+        for _ in 0..64 {
+            d.feed(b"\n", &mut out);
+        }
+        assert_eq!(out.len(), 1);
+        assert_eq!(code(&out[0]), "oversized");
+    }
+
+    #[test]
+    fn trailing_data_discards_document() {
+        let ev = run(b"{\"a\":1} x\n{\"b\":2}\n", limits(64), false);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(code(&ev[0]), "bad_json");
+        assert_eq!(ev[1], frame("{\"b\":2}"));
+    }
+
+    #[test]
+    fn trailing_whitespace_after_document_ok() {
+        let ev = run(b"{\"a\":1} \t\r\n", limits(64), false);
+        assert_eq!(ev, vec![frame("{\"a\":1}")]);
+    }
+
+    #[test]
+    fn invalid_utf8_rejects_and_resyncs() {
+        // bad lead byte mid-document
+        let ev = run(b"{\"p\":\"\xff tail\"}\n{\"b\":2}\n", limits(64), false);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(code(&ev[0]), "bad_json");
+        assert_eq!(ev[1], frame("{\"b\":2}"));
+        // overlong encoding (0xC0 0xAF) is rejected, strict UTF-8
+        let ev = run(b"{\"p\":\"\xc0\xaf\"}\n", limits(64), true);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "bad_json");
+        // surrogate range (0xED 0xA0 0x80) is rejected
+        let ev = run(b"{\"p\":\"\xed\xa0\x80\"}\n", limits(64), true);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "bad_json");
+    }
+
+    #[test]
+    fn eof_truncated_document_becomes_parser_food() {
+        let ev = run(b"{\"a\":", limits(64), true);
+        assert_eq!(ev, vec![frame("{\"a\":")]);
+        // ... which the parser rejects, matching the line codec
+        assert!(crate::util::json::Json::parse("{\"a\":").is_err());
+    }
+
+    #[test]
+    fn string_limit_binds_when_tight() {
+        let lim = CodecLimits { max_string_bytes: 4, ..limits(1024) };
+        let ev = run(b"{\"key\":\"abcdefgh\"}\n", lim, false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "oversized");
+        // keys are strings too
+        let ev = run(b"{\"longkey\":1}\n", lim, false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(code(&ev[0]), "oversized");
+        let ev = run(b"{\"key\":\"abcd\"}\n", lim, false);
+        assert_eq!(ev, vec![frame("{\"key\":\"abcd\"}")]);
+    }
+}

@@ -1,0 +1,186 @@
+//! The reference JSONL codec: one fully buffered line per frame.
+//!
+//! This is the original serve framing, re-expressed as a push-based
+//! [`FrameDecoder`] so it can run behind any transport and be compared
+//! byte-for-byte against the incremental decoder. Semantics are pinned
+//! to the historical bounded line reader:
+//!
+//! * a frame is the bytes before `\n` (a trailing `\r` is trimmed with
+//!   the rest of the surrounding JSON whitespace — space, tab, CR, LF
+//!   only, so the verdict on exotic Unicode whitespace matches the
+//!   parser's and the incremental scanner's);
+//! * a line whose content exceeds `max_frame_bytes` is consumed whole
+//!   and yields exactly one `oversized` rejection;
+//! * a line that is not valid UTF-8 yields one `bad_json` rejection;
+//! * blank (whitespace-only) lines are skipped without an event.
+//!
+//! The verdict depends only on the line's total content length, never
+//! on how the bytes were chunked across `feed` calls — `feed` one byte
+//! at a time and you get the same events (pinned in tests below and in
+//! the conformance corpus).
+
+use super::{err_bad_utf8, err_oversized, trim_frame, CodecLimits, DecodeEvent, FrameDecoder};
+
+/// Push-based JSONL framing with a hard line-length bound.
+#[derive(Debug)]
+pub struct LineDecoder {
+    limits: CodecLimits,
+    /// content bytes of the line in progress (no `\n`)
+    buf: Vec<u8>,
+    /// the line in progress already outgrew `max_frame_bytes`; its
+    /// remaining bytes are discarded and one rejection is emitted at
+    /// the newline (or EOF)
+    overflow: bool,
+}
+
+impl LineDecoder {
+    /// A fresh decoder with the given limits.
+    pub fn new(limits: CodecLimits) -> LineDecoder {
+        LineDecoder { limits, buf: Vec::new(), overflow: false }
+    }
+
+    /// Accumulates content bytes, tripping `overflow` once the line
+    /// cannot fit. `buf` holds every prior byte while `!overflow`, so
+    /// the check is exact regardless of chunk boundaries.
+    fn push(&mut self, bytes: &[u8]) {
+        if self.overflow || bytes.is_empty() {
+            return;
+        }
+        if self.buf.len() + bytes.len() > self.limits.max_frame_bytes {
+            self.overflow = true;
+            self.buf.clear();
+        } else {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// Emits the event for the completed line in `buf` and resets.
+    fn complete_line(&mut self, out: &mut Vec<DecodeEvent>) {
+        if self.overflow {
+            out.push(DecodeEvent::Reject(err_oversized(self.limits.max_frame_bytes)));
+        } else {
+            match std::str::from_utf8(&self.buf) {
+                Err(_) => out.push(DecodeEvent::Reject(err_bad_utf8())),
+                Ok(text) => {
+                    let text = trim_frame(text);
+                    if !text.is_empty() {
+                        out.push(DecodeEvent::Frame(text.to_string()));
+                    }
+                }
+            }
+        }
+        self.buf.clear();
+        self.overflow = false;
+    }
+}
+
+impl FrameDecoder for LineDecoder {
+    fn feed(&mut self, mut bytes: &[u8], out: &mut Vec<DecodeEvent>) {
+        while let Some(i) = bytes.iter().position(|&b| b == b'\n') {
+            self.push(&bytes[..i]);
+            self.complete_line(out);
+            bytes = &bytes[i + 1..];
+        }
+        self.push(bytes);
+    }
+
+    fn finish(&mut self, out: &mut Vec<DecodeEvent>) {
+        if !self.buf.is_empty() || self.overflow {
+            self.complete_line(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits(max: usize) -> CodecLimits {
+        CodecLimits { max_frame_bytes: max, ..CodecLimits::default() }
+    }
+
+    fn run(dec: &mut LineDecoder, bytes: &[u8], eof: bool) -> Vec<DecodeEvent> {
+        let mut out = Vec::new();
+        dec.feed(bytes, &mut out);
+        if eof {
+            dec.finish(&mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn frames_lines_and_trims() {
+        let mut d = LineDecoder::new(limits(64));
+        let ev = run(&mut d, b"  {\"a\":1}\r\n\n{\"b\":2}", true);
+        assert_eq!(
+            ev,
+            vec![
+                DecodeEvent::Frame("{\"a\":1}".to_string()),
+                DecodeEvent::Frame("{\"b\":2}".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn verdict_is_chunking_invariant() {
+        let input = b"{\"prompt\":\"abc\"}\nnot json\n{\"x\":";
+        let mut whole = LineDecoder::new(limits(64));
+        let expect = run(&mut whole, input, true);
+        for chunk in 1..=input.len() {
+            let mut d = LineDecoder::new(limits(64));
+            let mut out = Vec::new();
+            for piece in input.chunks(chunk) {
+                d.feed(piece, &mut out);
+            }
+            d.finish(&mut out);
+            assert_eq!(out, expect, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn oversized_line_one_reject() {
+        let mut d = LineDecoder::new(limits(8));
+        let mut input = vec![b'x'; 40];
+        input.push(b'\n');
+        input.extend_from_slice(b"{\"a\":1}\n");
+        let ev = run(&mut d, &input, true);
+        assert_eq!(ev.len(), 2);
+        match &ev[0] {
+            DecodeEvent::Reject(e) => assert_eq!(e.code, "oversized"),
+            other => panic!("expected oversized, got {other:?}"),
+        }
+        assert_eq!(ev[1], DecodeEvent::Frame("{\"a\":1}".to_string()));
+    }
+
+    #[test]
+    fn exact_limit_fits_one_more_rejects() {
+        let at = vec![b'y'; 8];
+        let mut d = LineDecoder::new(limits(8));
+        let mut ev = run(&mut d, &at, true);
+        assert_eq!(ev, vec![DecodeEvent::Frame("y".repeat(8))]);
+        let over = vec![b'y'; 9];
+        let mut d = LineDecoder::new(limits(8));
+        ev = run(&mut d, &over, true);
+        match &ev[..] {
+            [DecodeEvent::Reject(e)] => assert_eq!(e.code, "oversized"),
+            other => panic!("expected one oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut d = LineDecoder::new(limits(64));
+        let ev = run(&mut d, b"{\"p\":\"\xff\xfe\"}\n", false);
+        match &ev[..] {
+            [DecodeEvent::Reject(e)] => assert_eq!(e.code, "bad_json"),
+            other => panic!("expected one bad_json, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blank_lines_skipped_trailing_line_flushed() {
+        let mut d = LineDecoder::new(limits(64));
+        let ev = run(&mut d, b"\n   \r\n\t\n{\"a\":1}", true);
+        assert_eq!(ev, vec![DecodeEvent::Frame("{\"a\":1}".to_string())]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Transport-agnostic message framing for the serve protocol.
+//!
+//! The serving engine speaks newline-delimited JSON over raw TCP and
+//! HTTP/1.1 (+ SSE for streaming), but the scheduler only ever sees
+//! *frames*: complete JSON documents carved out of a byte stream. This
+//! module owns that boundary with a [`FrameDecoder`] / [`FrameEncoder`]
+//! trait pair, so transports decide how bytes move and codecs decide
+//! where messages begin and end — neither duplicates protocol v2
+//! semantics (validation, ordering, cancellation), which stay in the
+//! scheduler.
+//!
+//! Two decoders implement the trait:
+//!
+//! * [`LineDecoder`] — the reference JSONL codec: buffer until `\n`,
+//!   bound the line length, hand the whole line to the JSON parser.
+//! * [`IncrementalDecoder`] — a structural streaming framer: it tracks
+//!   string/escape state, container depth, and UTF-8 validity *as bytes
+//!   arrive*, so a frame is recognized (or rejected) without ever
+//!   buffering beyond the frame itself. Grammar validation is still
+//!   [`crate::util::json::Json::parse`] on the completed frame — the
+//!   scanner only rejects early on conditions the line codec also
+//!   rejects (invalid UTF-8, nesting past [`crate::util::json::MAX_DEPTH`],
+//!   oversized input), which is what keeps the two codecs in byte-for-byte
+//!   agreement on every single-line input (pinned by
+//!   `tests/conformance_protocol.rs` and the fuzz harness).
+//!
+//! Every failure is a [`DecodeEvent::Reject`] carrying a structured
+//! [`ServeError`] — never a panic, never a silently dropped byte.
+
+pub mod incremental;
+pub mod line;
+
+pub use incremental::IncrementalDecoder;
+pub use line::LineDecoder;
+
+use super::scheduler::{ServeError, ServeOptions};
+use crate::util::json;
+
+/// Which frame decoder a transport attaches to a connection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CodecKind {
+    /// Reference JSONL codec: one fully buffered line per frame.
+    #[default]
+    Line,
+    /// Streaming structural framer: no full-line buffering.
+    Incremental,
+}
+
+impl CodecKind {
+    /// Parses a `--codec` CLI value.
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        match s {
+            "line" => Some(CodecKind::Line),
+            "incremental" => Some(CodecKind::Incremental),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of this codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::Line => "line",
+            CodecKind::Incremental => "incremental",
+        }
+    }
+}
+
+/// Size/shape bounds a decoder enforces while framing.
+///
+/// The line codec can only enforce `max_frame_bytes` (it sees nothing
+/// until the newline); the incremental decoder enforces all three as
+/// bytes arrive. `max_depth` always equals [`json::MAX_DEPTH`] so the
+/// scanner and the parser reject nesting at exactly the same level.
+#[derive(Clone, Copy, Debug)]
+pub struct CodecLimits {
+    /// Upper bound on one frame (for JSONL: the line content, `\r`
+    /// included, `\n` excluded), in bytes. Exceeding it is an
+    /// `oversized` rejection.
+    pub max_frame_bytes: usize,
+    /// Maximum container nesting depth; deeper input is `bad_json`.
+    pub max_depth: usize,
+    /// Upper bound on a single string or key, in raw (encoded) bytes.
+    /// At the default (`== max_frame_bytes`) the frame bound always
+    /// trips first, so this only binds when configured tighter.
+    pub max_string_bytes: usize,
+}
+
+impl Default for CodecLimits {
+    fn default() -> CodecLimits {
+        CodecLimits {
+            max_frame_bytes: 64 * 1024,
+            max_depth: json::MAX_DEPTH,
+            max_string_bytes: 64 * 1024,
+        }
+    }
+}
+
+impl CodecLimits {
+    /// Limits matching a server's [`ServeOptions`].
+    pub fn from_options(opts: &ServeOptions) -> CodecLimits {
+        CodecLimits {
+            max_frame_bytes: opts.max_line_bytes,
+            max_depth: json::MAX_DEPTH,
+            max_string_bytes: opts.max_line_bytes,
+        }
+    }
+}
+
+/// What a decoder produced from the bytes fed so far.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DecodeEvent {
+    /// A complete frame: trimmed, non-empty text ready for
+    /// `Json::parse`. The decoder guarantees valid UTF-8.
+    Frame(String),
+    /// The current frame is unsalvageable; the decoder has already
+    /// resynchronized (for JSONL: discarded through the next newline).
+    Reject(ServeError),
+}
+
+/// Incremental frame extraction from a byte stream.
+///
+/// Implementations are push-based state machines: `feed` consumes an
+/// arbitrary chunk (any split, down to one byte at a time, yields the
+/// same events) and appends zero or more [`DecodeEvent`]s; `finish`
+/// flushes whatever an EOF terminates. Neither ever panics on any byte
+/// sequence — that property is fuzzed in `tests/fuzz_protocol.rs`.
+pub trait FrameDecoder: Send {
+    /// Consumes `bytes`, appending completed frames/rejections to `out`.
+    fn feed(&mut self, bytes: &[u8], out: &mut Vec<DecodeEvent>);
+    /// Signals end-of-stream, flushing any trailing unterminated frame.
+    fn finish(&mut self, out: &mut Vec<DecodeEvent>);
+}
+
+/// Boxes the decoder selected by `kind`.
+pub fn decoder_for(kind: CodecKind, limits: CodecLimits) -> Box<dyn FrameDecoder> {
+    match kind {
+        CodecKind::Line => Box::new(LineDecoder::new(limits)),
+        CodecKind::Incremental => Box::new(IncrementalDecoder::new(limits)),
+    }
+}
+
+/// Serializes one outbound protocol frame for a transport.
+pub trait FrameEncoder: Send {
+    /// Appends the wire form of one frame body (a JSON document,
+    /// newline-free) to `out`.
+    fn encode(&self, body: &str, out: &mut Vec<u8>);
+}
+
+/// JSONL framing: the body followed by `\n`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LineEncoder;
+
+impl FrameEncoder for LineEncoder {
+    fn encode(&self, body: &str, out: &mut Vec<u8>) {
+        out.extend_from_slice(body.as_bytes());
+        out.push(b'\n');
+    }
+}
+
+/// Server-sent-events framing: `data: <body>\n\n`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SseEncoder;
+
+impl FrameEncoder for SseEncoder {
+    fn encode(&self, body: &str, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"data: ");
+        out.extend_from_slice(body.as_bytes());
+        out.extend_from_slice(b"\n\n");
+    }
+}
+
+/// Trims exactly the JSON whitespace set (space, tab, CR, LF) from a
+/// completed frame. Deliberately narrower than `str::trim`'s Unicode
+/// set: bytes like vertical tab or NEL are *not* whitespace to the
+/// parser or to the incremental scanner, so stripping them here would
+/// make the two codecs disagree about frames they surround.
+pub(crate) fn trim_frame(text: &str) -> &str {
+    text.trim_matches(|c: char| matches!(c, ' ' | '\t' | '\r' | '\n'))
+}
+
+/// The rejection for a frame that outgrew `max_frame_bytes`. Shared by
+/// both codecs so the differential harness can assert identical errors.
+pub(crate) fn err_oversized(max: usize) -> ServeError {
+    ServeError::new("oversized", format!("request line exceeds {max} bytes"))
+}
+
+/// The rejection for bytes that are not valid UTF-8.
+pub(crate) fn err_bad_utf8() -> ServeError {
+    ServeError::new("bad_json", "request is not valid UTF-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoders_frame_bodies() {
+        let mut out = Vec::new();
+        LineEncoder.encode("{\"a\":1}", &mut out);
+        assert_eq!(out, b"{\"a\":1}\n");
+        out.clear();
+        SseEncoder.encode("{\"a\":1}", &mut out);
+        assert_eq!(out, b"data: {\"a\":1}\n\n");
+    }
+
+    #[test]
+    fn codec_kind_parses() {
+        assert_eq!(CodecKind::parse("line"), Some(CodecKind::Line));
+        assert_eq!(CodecKind::parse("incremental"), Some(CodecKind::Incremental));
+        assert_eq!(CodecKind::parse("jsonl"), None);
+        assert_eq!(CodecKind::Line.name(), "line");
+        assert_eq!(CodecKind::Incremental.name(), "incremental");
+    }
+
+    #[test]
+    fn limits_follow_options() {
+        let opts = ServeOptions { max_line_bytes: 512, ..ServeOptions::default() };
+        let lim = CodecLimits::from_options(&opts);
+        assert_eq!(lim.max_frame_bytes, 512);
+        assert_eq!(lim.max_depth, json::MAX_DEPTH);
+    }
+}

@@ -1,0 +1,464 @@
+//! HTTP/1.1 + SSE front end over the shared serving engine.
+//!
+//! `faar serve --transport http` (or `auto`) accepts
+//! `POST /v1/generate` with the exact same JSON request body the
+//! TCP-JSONL protocol uses as a line — the body streams through the
+//! [`IncrementalDecoder`] as it arrives and the validated request
+//! enters the same scheduler/admission loop, so protocol v2 semantics
+//! (params validation, clamping, frame ordering, reorder buffers,
+//! disconnect cancellation) are shared with raw TCP rather than
+//! reimplemented.
+//!
+//! Response mapping (DESIGN.md §14):
+//!
+//! * non-streaming → one `application/json` response, keep-alive,
+//!   status from the structured error code (`bad_*` → 400,
+//!   `oversized` → 413, `length_required` → 411, `not_found` → 404,
+//!   `method_not_allowed` → 405, `backend` → 500);
+//! * `"stream": true` → a `text/event-stream` response: one
+//!   `data: {"token":...}` event per token frame, then the terminal
+//!   response object as the last event, then connection close (the
+//!   preamble promises `Connection: close`);
+//! * every rejection body is the same `{"error":{code,message}}`
+//!   object a JSONL client would get as a line.
+//!
+//! Deliberate simplifications, matching the offline no-deps build: no
+//! chunked transfer encoding (rejected with a structured error),
+//! `Expect: 100-continue` is ignored (clients fall back to sending
+//! the body), and a request pipelined behind an SSE stream dies with
+//! the promised connection close.
+
+use std::io::ErrorKind;
+use std::io::Read as _;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::SyncSender;
+use std::time::Instant;
+
+use super::codec::{err_oversized, CodecLimits, DecodeEvent, FrameDecoder as _, IncrementalDecoder};
+use super::scheduler::{DecodeRequest, Decoded, ServeError, ServeOptions, WriterMsg};
+use super::{parse_request, ConnProgress, ParsedRequest};
+use crate::data::Tokenizer;
+
+/// Upper bound on an HTTP request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Response preamble for an SSE stream. `Connection: close` is a
+/// promise the writer keeps after the terminal event.
+pub(crate) const SSE_PREAMBLE: &[u8] = b"HTTP/1.1 200 OK\r\n\
+content-type: text/event-stream\r\n\
+cache-control: no-cache\r\n\
+connection: close\r\n\
+\r\n";
+
+/// The HTTP status for a terminal result, derived from the structured
+/// error code (the body carries the full error object either way).
+pub(crate) fn status_for(result: &Result<Decoded, ServeError>) -> u16 {
+    match result {
+        Ok(_) => 200,
+        Err(e) => match e.code {
+            "bad_json" | "bad_request" | "bad_params" | "bad_token" | "empty_prompt" => 400,
+            "length_required" => 411,
+            "oversized" => 413,
+            "not_found" => 404,
+            "method_not_allowed" => 405,
+            _ => 500,
+        },
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Status",
+    }
+}
+
+/// A complete keep-alive `application/json` response.
+pub(crate) fn json_response(status: u16, body: &str) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// The parsed request head: only what routing needs.
+struct Head {
+    method: String,
+    path: String,
+    content_length: Option<usize>,
+    chunked: bool,
+}
+
+/// Locate the end of the head: `(head_len, separator_len)` for the
+/// first `\r\n\r\n` or `\n\n`.
+fn find_head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    for i in 0..buf.len() {
+        if buf[i..].starts_with(b"\r\n\r\n") {
+            return Some((i, 4));
+        }
+        if buf[i..].starts_with(b"\n\n") {
+            return Some((i, 2));
+        }
+    }
+    None
+}
+
+fn bad(msg: impl Into<String>) -> ServeError {
+    ServeError::new("bad_request", msg)
+}
+
+fn parse_head(bytes: &[u8]) -> Result<Head, ServeError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| bad("request head is not valid UTF-8"))?;
+    let mut lines = text.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(bad("malformed HTTP request line"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(format!("unsupported protocol version '{version}'")));
+    }
+    // route on the path only; a query string is ignored
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut content_length = None;
+    let mut chunked = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad("malformed header line"));
+        };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                let n: usize =
+                    value.parse().map_err(|_| bad("invalid content-length header"))?;
+                content_length = Some(n);
+            }
+            "transfer-encoding" => {
+                if !value.eq_ignore_ascii_case("identity") {
+                    chunked = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(Head { method: method.to_string(), path, content_length, chunked })
+}
+
+/// Read more bytes into `carry`. `Ok(false)` = clean EOF. A read
+/// timeout only reaps *idle* connections — while responses are still
+/// owed the reader keeps waiting, same policy as the JSONL loop.
+fn fill(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    progress: &ConnProgress,
+    peer: &str,
+) -> std::io::Result<bool> {
+    let mut buf = [0u8; 4096];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(false),
+            Ok(n) => {
+                carry.extend_from_slice(&buf[..n]);
+                return Ok(true);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if progress.issued.load(Ordering::Acquire)
+                    > progress.written.load(Ordering::Acquire)
+                {
+                    continue;
+                }
+                crate::debug!("connection {peer}: idle past read timeout, closing");
+                return Err(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Discard an error-path request body so the connection can keep
+/// serving pipelined requests. Returns `false` (close instead) when
+/// the body is missing a sane bound or the stream dies.
+fn skip_body(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    progress: &ConnProgress,
+    peer: &str,
+    content_length: Option<usize>,
+    cap: usize,
+) -> bool {
+    let Some(mut remaining) = content_length else {
+        return true; // no body to skip
+    };
+    if remaining > cap {
+        return false;
+    }
+    while remaining > 0 {
+        if carry.is_empty() && !matches!(fill(stream, carry, progress, peer), Ok(true)) {
+            return false;
+        }
+        let take = remaining.min(carry.len());
+        carry.drain(..take);
+        remaining -= take;
+    }
+    true
+}
+
+/// Per-connection HTTP read loop: parse heads, route, stream bodies
+/// through the incremental decoder, and hand validated requests to the
+/// same scheduler queue the JSONL readers use. `carry` holds bytes the
+/// transport sniffer already consumed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reader_loop(
+    mut stream: TcpStream,
+    carry: Vec<u8>,
+    conn: u64,
+    peer: &str,
+    req_tx: &SyncSender<DecodeRequest>,
+    w_tx: &SyncSender<WriterMsg>,
+    opts: &ServeOptions,
+    tok: &Tokenizer,
+    progress: &ConnProgress,
+) {
+    let vocab = tok.vocab();
+    let mut carry = carry;
+    let mut seq = 0u64;
+    // assign the next seq and send a structured rejection; false =
+    // writer gone, close the connection
+    let respond_err = |seq: &mut u64, e: ServeError| -> bool {
+        let this = *seq;
+        *seq += 1;
+        progress.issued.store(*seq, Ordering::Release);
+        w_tx.send(WriterMsg::Resp { seq: this, result: Err(e) }).is_ok()
+    };
+    'conn: loop {
+        // ---- request head ----
+        let (head_len, sep_len) = loop {
+            if let Some(x) = find_head_end(&carry) {
+                break x;
+            }
+            if carry.len() > MAX_HEAD_BYTES {
+                respond_err(
+                    &mut seq,
+                    bad(format!("request head exceeds {MAX_HEAD_BYTES} bytes")),
+                );
+                break 'conn;
+            }
+            match fill(&mut stream, &mut carry, progress, peer) {
+                Ok(true) => {}
+                Ok(false) => {
+                    // clean EOF between requests is a normal close; a
+                    // partial head gets no response (we cannot frame one
+                    // the client would still read)
+                    break 'conn;
+                }
+                Err(_) => break 'conn,
+            }
+        };
+        let head = parse_head(&carry[..head_len]);
+        carry.drain(..head_len + sep_len);
+        let head = match head {
+            Ok(h) => h,
+            Err(e) => {
+                // body framing is unknown after a bad head: answer, close
+                respond_err(&mut seq, e);
+                break 'conn;
+            }
+        };
+        // ---- routing ----
+        if head.chunked {
+            respond_err(&mut seq, bad("chunked transfer encoding is not supported"));
+            break 'conn;
+        }
+        if head.method != "POST" {
+            if !respond_err(
+                &mut seq,
+                ServeError::new(
+                    "method_not_allowed",
+                    format!("method '{}' not allowed; use POST /v1/generate", head.method),
+                ),
+            ) {
+                break 'conn;
+            }
+            if !skip_body(
+                &mut stream,
+                &mut carry,
+                progress,
+                peer,
+                head.content_length,
+                opts.max_line_bytes,
+            ) {
+                break 'conn;
+            }
+            continue;
+        }
+        if head.path != "/v1/generate" {
+            if !respond_err(
+                &mut seq,
+                ServeError::new(
+                    "not_found",
+                    format!("no route '{}'; use POST /v1/generate", head.path),
+                ),
+            ) {
+                break 'conn;
+            }
+            if !skip_body(
+                &mut stream,
+                &mut carry,
+                progress,
+                peer,
+                head.content_length,
+                opts.max_line_bytes,
+            ) {
+                break 'conn;
+            }
+            continue;
+        }
+        let Some(content_length) = head.content_length else {
+            respond_err(
+                &mut seq,
+                ServeError::new("length_required", "a content-length header is required"),
+            );
+            break 'conn;
+        };
+        if content_length > opts.max_line_bytes {
+            // refuse before reading: same bound, same error code the
+            // JSONL path applies to an oversized line
+            respond_err(&mut seq, err_oversized(opts.max_line_bytes));
+            break 'conn;
+        }
+        // ---- body: incremental decode as the bytes arrive ----
+        let mut decoder = IncrementalDecoder::new(CodecLimits::from_options(opts));
+        let mut events: Vec<DecodeEvent> = Vec::new();
+        let mut remaining = content_length;
+        while remaining > 0 {
+            if carry.is_empty() && !matches!(fill(&mut stream, &mut carry, progress, peer), Ok(true))
+            {
+                // truncated body: the request never completed
+                break 'conn;
+            }
+            let take = remaining.min(carry.len());
+            decoder.feed(&carry[..take], &mut events);
+            carry.drain(..take);
+            remaining -= take;
+        }
+        decoder.finish(&mut events);
+        let outcome = match events.as_slice() {
+            [] => Err(ServeError::new("bad_json", "empty request body")),
+            [DecodeEvent::Reject(e), ..] => Err(e.clone()),
+            [DecodeEvent::Frame(_), _, ..] => Err(bad(
+                "request body must contain exactly one JSON document",
+            )),
+            [DecodeEvent::Frame(frame)] => parse_request(frame, tok, vocab, opts),
+        };
+        let this = seq;
+        seq += 1;
+        progress.issued.store(seq, Ordering::Release);
+        match outcome {
+            Ok(ParsedRequest { prompt, max_tokens, params, stream: sse }) => {
+                // declare the framing mode first: writer-queue order
+                // guarantees the writer knows before any frame arrives
+                if w_tx.send(WriterMsg::Mode { seq: this, sse }).is_err() {
+                    seq = this;
+                    break 'conn;
+                }
+                let req = DecodeRequest {
+                    conn,
+                    seq: this,
+                    prompt,
+                    max_tokens,
+                    params,
+                    stream: sse,
+                    enqueued: Instant::now(),
+                };
+                if req_tx.send(req).is_err() {
+                    // scheduler gone: this request will never be
+                    // answered — don't make the writer wait for it
+                    seq = this;
+                    break 'conn;
+                }
+            }
+            Err(e) => {
+                if w_tx.send(WriterMsg::Resp { seq: this, result: Err(e) }).is_err() {
+                    break 'conn;
+                }
+            }
+        }
+    }
+    let _ = w_tx.send(WriterMsg::Done { next_seq: seq });
+    crate::debug!("connection {peer}: http reader closed after {seq} requests");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"POST / HTTP/1.1\r\nhost: x\r\n\r\nbody"), Some((24, 4)));
+        assert_eq!(find_head_end(b"POST / HTTP/1.1\nhost: x\n\nbody"), Some((23, 2)));
+        assert_eq!(find_head_end(b"POST / HTTP/1.1\r\nhost: x\r\n"), None);
+    }
+
+    #[test]
+    fn head_parsing() {
+        let h = parse_head(
+            b"POST /v1/generate?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 42\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path, "/v1/generate");
+        assert_eq!(h.content_length, Some(42));
+        assert!(!h.chunked);
+        let h = parse_head(b"GET / HTTP/1.0\ntransfer-encoding: chunked\n").unwrap();
+        assert!(h.chunked);
+        assert!(parse_head(b"POST /v1/generate").is_err()); // no version
+        assert!(parse_head(b"POST /v1/generate SPDY/3").is_err());
+        assert!(parse_head(b"POST / HTTP/1.1\r\ncontent-length: nope\r\n").is_err());
+        assert!(parse_head(b"POST / HTTP/1.1\r\njunk line\r\n").is_err());
+    }
+
+    #[test]
+    fn status_mapping() {
+        let ok: Result<Decoded, ServeError> =
+            Ok(Decoded { tokens: vec![], latency_ms: 0.0, queue_ms: 0.0 });
+        assert_eq!(status_for(&ok), 200);
+        let s = |code: &'static str| status_for(&Err(ServeError::new(code, "x")));
+        assert_eq!(s("bad_json"), 400);
+        assert_eq!(s("bad_request"), 400);
+        assert_eq!(s("bad_params"), 400);
+        assert_eq!(s("bad_token"), 400);
+        assert_eq!(s("empty_prompt"), 400);
+        assert_eq!(s("length_required"), 411);
+        assert_eq!(s("oversized"), 413);
+        assert_eq!(s("not_found"), 404);
+        assert_eq!(s("method_not_allowed"), 405);
+        assert_eq!(s("backend"), 500);
+    }
+
+    #[test]
+    fn json_response_shape() {
+        let resp = json_response(400, "{\"error\":{}}");
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.starts_with("HTTP/1.1 400 Bad Request\r\n"));
+        assert!(text.contains("content-length: 12\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"error\":{}}"));
+    }
+}

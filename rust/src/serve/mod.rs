@@ -1,6 +1,11 @@
 //! Concurrent batched inference server over a quantized model.
 //!
-//! Line-delimited JSON over TCP (the offline image has no HTTP stack).
+//! Two transports share one engine (`--transport tcp|http|auto`, see
+//! DESIGN.md §14): newline-delimited JSON over raw TCP, and HTTP/1.1
+//! (`POST /v1/generate`, streaming mapped to server-sent events). Both
+//! feed the identical scheduler/admission loop through the
+//! [`codec::FrameDecoder`] framing layer — protocol v2 semantics are
+//! shared, not duplicated per transport.
 //! Protocol **v2** (see DESIGN.md §10): a request line is
 //!
 //! ```json
@@ -55,12 +60,14 @@
 
 pub mod batch;
 pub mod client;
+pub mod codec;
+pub mod http;
 pub mod sampling;
 pub mod scheduler;
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write as _};
-use std::net::{TcpListener, TcpStream};
+use std::collections::{BTreeMap, HashSet};
+use std::io::{ErrorKind, Read as _, Write as _};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -72,8 +79,10 @@ pub use batch::{
     argmax, generate, generate_greedy, DecodeSlot, RuntimeBackend, StepBackend, SyntheticBackend,
 };
 pub use client::Client;
+pub use codec::CodecKind;
 pub use sampling::{GenParams, Sampler};
-pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions};
+pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions, Transport};
+use codec::{CodecLimits, DecodeEvent, FrameEncoder as _, LineEncoder, SseEncoder};
 use scheduler::{DecodeRequest, Decoded, WriterMsg};
 
 use crate::data::Tokenizer;
@@ -522,7 +531,8 @@ fn accept_loop(
                     let progress = progress.clone();
                     let max_pending = opts.queue_depth;
                     spawn_named(format!("serve-writer-{conn}"), move || {
-                        writer_loop(write_half, conn, w_rx, &registry, &tok, &progress, max_pending);
+                        let w = ConnWriter::jsonl(write_half, tok);
+                        writer_loop(w, conn, w_rx, &registry, &progress, max_pending);
                         drop(wg);
                     });
                 }
@@ -565,10 +575,12 @@ struct ConnProgress {
     written: AtomicU64,
 }
 
-/// Per-connection reader: length-bounded line reads, validation, and
-/// blocking enqueue into the scheduler queue (the backpressure point).
+/// Per-connection reader entry point: selects the transport (forced by
+/// `--transport`, or sniffed from the first bytes under `auto`), then
+/// runs the matching read loop. Both loops end by telling the writer
+/// exactly how many responses it still owes.
 fn reader_loop(
-    stream: TcpStream,
+    mut stream: TcpStream,
     conn: u64,
     peer: &str,
     req_tx: SyncSender<DecodeRequest>,
@@ -577,33 +589,153 @@ fn reader_loop(
     tok: &Tokenizer,
     progress: &ConnProgress,
 ) {
-    let vocab = tok.vocab();
-    let mut reader = BufReader::new(stream);
-    let mut seq = 0u64;
-    let mut line: Vec<u8> = Vec::new();
-    loop {
-        match read_line_bounded(&mut reader, &mut line, opts.max_line_bytes) {
-            Ok(LineRead::Eof) => break,
-            Ok(LineRead::Line) => {}
-            Ok(LineRead::TooLong) => {
-                let this = seq;
-                seq += 1;
-                progress.issued.store(seq, Ordering::Release);
-                line.clear();
-                let err = ServeError::new(
-                    "oversized",
-                    format!("request line exceeds {} bytes", opts.max_line_bytes),
-                );
-                if w_tx.send(WriterMsg::Resp { seq: this, result: Err(err) }).is_err() {
-                    break;
-                }
-                continue;
+    let (is_http, first) = match opts.transport {
+        Transport::Tcp => (false, Vec::new()),
+        Transport::Http => (true, Vec::new()),
+        Transport::Auto => match sniff_transport(&mut stream) {
+            Ok(x) => x,
+            Err(_) => {
+                // nothing was issued: release the writer immediately
+                let _ = w_tx.send(WriterMsg::Done { next_seq: 0 });
+                crate::debug!("connection {peer}: closed before transport sniff");
+                return;
             }
+        },
+    };
+    if is_http {
+        // switch the writer to HTTP framing before any request can
+        // reach the scheduler (writer-queue order is the causal fence)
+        if w_tx.send(WriterMsg::Http).is_err() {
+            return;
+        }
+        http::reader_loop(stream, first, conn, peer, &req_tx, &w_tx, opts, tok, progress);
+    } else {
+        jsonl_reader_loop(stream, first, conn, peer, &req_tx, &w_tx, opts, tok, progress);
+    }
+}
+
+/// Decide a connection's transport from its opening bytes: an HTTP
+/// method token followed by a space selects HTTP; anything else
+/// (JSON's `{`, whitespace, or garbage destined for a structured
+/// error) is JSONL. `None` = the prefix read so far is still ambiguous.
+fn sniff_decision(b: &[u8]) -> Option<bool> {
+    const METHODS: [&[u8]; 7] = [
+        b"GET ", b"POST ", b"PUT ", b"HEAD ", b"DELETE ", b"OPTIONS ", b"PATCH ",
+    ];
+    if b.is_empty() {
+        return None;
+    }
+    let mut partial = false;
+    for m in METHODS {
+        if b.len() >= m.len() {
+            if b.starts_with(m) {
+                return Some(true);
+            }
+        } else if m.starts_with(b) {
+            partial = true;
+        }
+    }
+    if partial {
+        None
+    } else {
+        Some(false)
+    }
+}
+
+/// Read just enough of the stream to classify the transport; returns
+/// the sniffed bytes so the selected reader replays them. A timeout or
+/// error here means the connection died before sending anything useful.
+fn sniff_transport(stream: &mut TcpStream) -> std::io::Result<(bool, Vec<u8>)> {
+    let mut first: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 256];
+    loop {
+        if let Some(is_http) = sniff_decision(&first) {
+            return Ok((is_http, first));
+        }
+        match stream.read(&mut buf) {
+            // EOF while ambiguous (e.g. exactly "GE"): hand the bytes
+            // to the JSONL path, which turns them into a structured
+            // error like any other garbage
+            Ok(0) => return Ok((false, first)),
+            Ok(n) => first.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// JSONL read loop: raw chunk reads feed the connection's
+/// [`codec::FrameDecoder`] (`--codec line|incremental`); completed
+/// frames are validated and enqueued (the blocking send is the
+/// backpressure point), rejections become structured error responses.
+#[allow(clippy::too_many_arguments)]
+fn jsonl_reader_loop(
+    mut stream: TcpStream,
+    first: Vec<u8>,
+    conn: u64,
+    peer: &str,
+    req_tx: &SyncSender<DecodeRequest>,
+    w_tx: &SyncSender<WriterMsg>,
+    opts: &ServeOptions,
+    tok: &Tokenizer,
+    progress: &ConnProgress,
+) {
+    let vocab = tok.vocab();
+    let mut decoder = codec::decoder_for(opts.codec, CodecLimits::from_options(opts));
+    let mut events: Vec<DecodeEvent> = Vec::new();
+    let mut seq = 0u64;
+    let mut buf = [0u8; 4096];
+    let mut open = true;
+    decoder.feed(&first, &mut events);
+    'conn: loop {
+        for ev in events.drain(..) {
+            let outcome = match ev {
+                DecodeEvent::Frame(frame) => parse_request(&frame, tok, vocab, opts),
+                DecodeEvent::Reject(e) => Err(e),
+            };
+            let this = seq;
+            seq += 1;
+            progress.issued.store(seq, Ordering::Release);
+            match outcome {
+                Ok(ParsedRequest { prompt, max_tokens, params, stream }) => {
+                    let req = DecodeRequest {
+                        conn,
+                        seq: this,
+                        prompt,
+                        max_tokens,
+                        params,
+                        stream,
+                        enqueued: Instant::now(),
+                    };
+                    if req_tx.send(req).is_err() {
+                        // scheduler gone: this request will never be
+                        // answered — don't make the writer wait for it
+                        seq = this;
+                        break 'conn;
+                    }
+                }
+                Err(e) => {
+                    if w_tx.send(WriterMsg::Resp { seq: this, result: Err(e) }).is_err() {
+                        break 'conn;
+                    }
+                }
+            }
+        }
+        if !open {
+            break;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                decoder.finish(&mut events);
+                open = false;
+            }
+            Ok(n) => decoder.feed(&buf[..n], &mut events),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                 // the timeout reaps *idle* connections only: while
                 // responses are still owed (issued > written, and the
                 // writer is alive — written becomes MAX when it exits),
-                // keep waiting; partial line bytes stay in `line`
+                // keep waiting; partial frame bytes stay in the decoder
                 if progress.issued.load(Ordering::Acquire)
                     > progress.written.load(Ordering::Acquire)
                 {
@@ -613,44 +745,6 @@ fn reader_loop(
                 break;
             }
             Err(_) => break,
-        }
-        let parsed = {
-            let text = String::from_utf8_lossy(&line);
-            let text = text.trim();
-            if text.is_empty() {
-                None
-            } else {
-                Some(parse_request(text, tok, vocab, opts))
-            }
-        };
-        line.clear();
-        let Some(parsed) = parsed else { continue };
-        let this = seq;
-        seq += 1;
-        progress.issued.store(seq, Ordering::Release);
-        match parsed {
-            Ok(ParsedRequest { prompt, max_tokens, params, stream }) => {
-                let req = DecodeRequest {
-                    conn,
-                    seq: this,
-                    prompt,
-                    max_tokens,
-                    params,
-                    stream,
-                    enqueued: Instant::now(),
-                };
-                if req_tx.send(req).is_err() {
-                    // scheduler gone: this request will never be answered —
-                    // don't make the writer wait for it
-                    seq = this;
-                    break;
-                }
-            }
-            Err(e) => {
-                if w_tx.send(WriterMsg::Resp { seq: this, result: Err(e) }).is_err() {
-                    break;
-                }
-            }
         }
     }
     // tell the writer exactly how many responses to expect, then let it
@@ -667,6 +761,98 @@ struct PendingResp {
     result: Option<std::result::Result<Decoded, ServeError>>,
 }
 
+/// How a connection's writer frames responses on the wire.
+enum WireKind {
+    /// one JSON line per frame/response (raw TCP)
+    Jsonl,
+    /// HTTP/1.1 responses; streaming requests become SSE event streams
+    Http,
+}
+
+/// The write half of a connection: owns the socket clone and the
+/// response framing. Starts in JSONL mode; [`WriterMsg::Http`] switches
+/// it before the first byte is ever written (reader-queue order
+/// guarantees that).
+struct ConnWriter {
+    stream: TcpStream,
+    tok: Arc<Tokenizer>,
+    wire: WireKind,
+    /// seqs declared streaming by the HTTP reader ([`WriterMsg::Mode`])
+    sse: HashSet<u64>,
+    /// the SSE preamble for the current response has been written
+    sse_open: bool,
+}
+
+impl ConnWriter {
+    /// A JSONL writer (every connection starts here).
+    fn jsonl(stream: TcpStream, tok: Arc<Tokenizer>) -> ConnWriter {
+        ConnWriter { stream, tok, wire: WireKind::Jsonl, sse: HashSet::new(), sse_open: false }
+    }
+
+    /// Write one streaming token frame. Frames only reach the writer
+    /// for the *current* request, so in HTTP mode this is always part
+    /// of the current SSE stream (opening it on the first frame).
+    fn write_frame(&mut self, index: usize, token: i32) -> std::io::Result<()> {
+        let body = format_frame(index, token, &self.tok);
+        let mut out = Vec::with_capacity(body.len() + 8);
+        match self.wire {
+            WireKind::Jsonl => LineEncoder.encode(&body, &mut out),
+            WireKind::Http => {
+                if !self.sse_open {
+                    out.extend_from_slice(http::SSE_PREAMBLE);
+                    self.sse_open = true;
+                }
+                SseEncoder.encode(&body, &mut out);
+            }
+        }
+        self.stream.write_all(&out)?;
+        self.stream.flush()
+    }
+
+    /// Write request `seq`'s terminal response. Returns `false` when
+    /// the connection must close afterwards (an SSE stream ends with
+    /// `Connection: close`, mirroring the preamble's promise).
+    fn write_terminal(
+        &mut self,
+        seq: u64,
+        result: &std::result::Result<Decoded, ServeError>,
+    ) -> std::io::Result<bool> {
+        let body = format_response(result, &self.tok);
+        match self.wire {
+            WireKind::Jsonl => {
+                let mut out = Vec::with_capacity(body.len() + 1);
+                LineEncoder.encode(&body, &mut out);
+                self.stream.write_all(&out)?;
+                self.stream.flush()?;
+                Ok(true)
+            }
+            WireKind::Http => {
+                let streaming = self.sse.remove(&seq);
+                if streaming && (self.sse_open || result.is_ok()) {
+                    // terminal SSE event, then close (a pre-stream
+                    // error instead falls through to a plain status
+                    // response and keeps the connection alive)
+                    let mut out = Vec::new();
+                    if !self.sse_open {
+                        out.extend_from_slice(http::SSE_PREAMBLE);
+                        self.sse_open = true;
+                    }
+                    SseEncoder.encode(&body, &mut out);
+                    self.stream.write_all(&out)?;
+                    self.stream.flush()?;
+                    let _ = self.stream.shutdown(Shutdown::Both);
+                    Ok(false)
+                } else {
+                    let resp = http::json_response(http::status_for(result), &body);
+                    self.stream.write_all(&resp)?;
+                    self.stream.flush()?;
+                    Ok(true)
+                }
+            }
+        }
+    }
+}
+
 /// Per-connection writer: responses arrive in completion order (the
 /// scheduler retires short requests before long ones); a reorder buffer
 /// restores per-connection request order before writing. Streaming
@@ -679,22 +865,16 @@ struct PendingResp {
 /// error spam pipelined behind a long decode) is closed instead of
 /// growing it.
 fn writer_loop(
-    mut stream: TcpStream,
+    mut w: ConnWriter,
     conn: u64,
     rx: Receiver<WriterMsg>,
     registry: &Registry,
-    tok: &Tokenizer,
     progress: &ConnProgress,
     max_pending: usize,
 ) {
     let mut pending: BTreeMap<u64, PendingResp> = BTreeMap::new();
     let mut next = 0u64;
     let mut end: Option<u64> = None;
-    let write_line = |stream: &mut TcpStream, body: String| -> bool {
-        stream.write_all(body.as_bytes()).is_ok()
-            && stream.write_all(b"\n").is_ok()
-            && stream.flush().is_ok()
-    };
     'conn: loop {
         if let Some(e) = end {
             if next >= e {
@@ -707,12 +887,18 @@ fn writer_loop(
         };
         match msg {
             WriterMsg::Done { next_seq } => end = Some(next_seq),
+            WriterMsg::Http => w.wire = WireKind::Http,
+            WriterMsg::Mode { seq, sse } => {
+                if sse {
+                    w.sse.insert(seq);
+                }
+            }
             WriterMsg::Frame { seq, index, token } => {
                 if seq == next {
                     // current request: stream the frame immediately (any
                     // earlier frames for `next` were flushed when it
                     // became current, so index order is preserved)
-                    if !write_line(&mut stream, format_frame(index, token, tok)) {
+                    if w.write_frame(index, token).is_err() {
                         break 'conn;
                     }
                 } else {
@@ -725,7 +911,7 @@ fn writer_loop(
                 // entry's buffered frames before its terminal response
                 while let Some(entry) = pending.get_mut(&next) {
                     for (index, token) in std::mem::take(&mut entry.frames) {
-                        if !write_line(&mut stream, format_frame(index, token, tok)) {
+                        if w.write_frame(index, token).is_err() {
                             break 'conn;
                         }
                     }
@@ -736,11 +922,17 @@ fn writer_loop(
                         break;
                     };
                     pending.remove(&next);
-                    if !write_line(&mut stream, format_response(&result, tok)) {
-                        break 'conn;
-                    }
+                    let keep = match w.write_terminal(next, &result) {
+                        Ok(keep) => keep,
+                        Err(_) => break 'conn,
+                    };
                     next += 1;
                     progress.written.store(next, Ordering::Release);
+                    if !keep {
+                        // the SSE contract closes the connection after
+                        // the stream's terminal event
+                        break 'conn;
+                    }
                 }
                 if pending.len() > max_pending.max(1) {
                     crate::warn!(
@@ -760,69 +952,10 @@ fn writer_loop(
     crate::debug!("connection {conn}: writer closed after {next} responses");
 }
 
-enum LineRead {
-    Line,
-    Eof,
-    /// the line exceeded the byte cap; it was consumed and discarded
-    TooLong,
-}
-
-/// Read one `\n`-terminated line into `buf`, never buffering more than
-/// `max` bytes of it — an oversized line is consumed to its end and
-/// reported as [`LineRead::TooLong`] instead of ballooning memory.
-fn read_line_bounded<R: BufRead>(
-    r: &mut R,
-    buf: &mut Vec<u8>,
-    max: usize,
-) -> std::io::Result<LineRead> {
-    let mut overflow = false;
-    loop {
-        let (n_consume, done) = {
-            let available = loop {
-                match r.fill_buf() {
-                    Ok(b) => break b,
-                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                    Err(e) => return Err(e),
-                }
-            };
-            if available.is_empty() {
-                return Ok(if overflow {
-                    LineRead::TooLong
-                } else if buf.is_empty() {
-                    LineRead::Eof
-                } else {
-                    LineRead::Line
-                });
-            }
-            match available.iter().position(|&b| b == b'\n') {
-                Some(i) => {
-                    let fits = !overflow && buf.len() + i <= max;
-                    if fits {
-                        buf.extend_from_slice(&available[..i]);
-                    }
-                    (i + 1, Some(if fits { LineRead::Line } else { LineRead::TooLong }))
-                }
-                None => {
-                    let n = available.len();
-                    if !overflow && buf.len() + n <= max {
-                        buf.extend_from_slice(available);
-                    } else {
-                        overflow = true;
-                    }
-                    (n, None)
-                }
-            }
-        };
-        r.consume(n_consume);
-        if let Some(res) = done {
-            return Ok(res);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{BufRead, BufReader};
 
     fn opts() -> ServeOptions {
         ServeOptions { max_tokens_cap: 32, max_line_bytes: 256, ..ServeOptions::default() }
@@ -998,10 +1131,12 @@ mod tests {
         let registry = Registry::default();
         let (tx, rx) = sync_channel(16);
         registry.register(1, tx.clone(), None);
-        let tok = Tokenizer::new(8);
+        let tok = Arc::new(Tokenizer::new(8));
         let progress = ConnProgress::default();
         std::thread::scope(|s| {
-            let h = s.spawn(|| writer_loop(server_stream, 1, rx, &registry, &tok, &progress, 2));
+            let h = s.spawn(|| {
+                writer_loop(ConnWriter::jsonl(server_stream, tok), 1, rx, &registry, &progress, 2)
+            });
             // responses 1..=4 arrive while seq 0 is still decoding: the
             // reorder buffer hits the cap (2) and the writer must close
             // the connection instead of buffering without bound
@@ -1032,11 +1167,12 @@ mod tests {
         let registry = Registry::default();
         let (tx, rx) = sync_channel(16);
         registry.register(1, tx.clone(), None);
-        let tok = Tokenizer::new(16);
+        let tok = Arc::new(Tokenizer::new(16));
         let progress = ConnProgress::default();
         let lines = std::thread::scope(|s| {
-            let h =
-                s.spawn(|| writer_loop(server_stream, 1, rx, &registry, &tok, &progress, 8));
+            let h = s.spawn(|| {
+                writer_loop(ConnWriter::jsonl(server_stream, tok), 1, rx, &registry, &progress, 8)
+            });
             let ok = |tokens: Vec<i32>| {
                 Ok(Decoded { tokens, latency_ms: 1.0, queue_ms: 0.5 })
             };
@@ -1064,24 +1200,18 @@ mod tests {
     }
 
     #[test]
-    fn bounded_line_reader() {
-        use std::io::Cursor;
-        let mut buf = Vec::new();
-        let mut r = Cursor::new(b"short\nlooooooooong line\nnext\n".to_vec());
-        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
-        assert_eq!(buf, b"short");
-        buf.clear();
-        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::TooLong));
-        buf.clear();
-        // the oversized line was fully consumed; the stream recovers
-        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
-        assert_eq!(buf, b"next");
-        buf.clear();
-        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Eof));
-        // trailing bytes without a newline still form a line
-        let mut r = Cursor::new(b"tail".to_vec());
-        buf.clear();
-        assert!(matches!(read_line_bounded(&mut r, &mut buf, 8).unwrap(), LineRead::Line));
-        assert_eq!(buf, b"tail");
+    fn transport_sniffing() {
+        // full method token + space → HTTP
+        assert_eq!(sniff_decision(b"POST /v1/generate HTTP/1.1\r\n"), Some(true));
+        assert_eq!(sniff_decision(b"GET / HTTP/1.1\r\n"), Some(true));
+        // JSON and garbage → JSONL
+        assert_eq!(sniff_decision(b"{\"prompt\":\"hi\"}"), Some(false));
+        assert_eq!(sniff_decision(b"not json at all"), Some(false));
+        // ambiguous prefixes of a method token → keep reading
+        assert_eq!(sniff_decision(b"PO"), None);
+        assert_eq!(sniff_decision(b"G"), None);
+        assert_eq!(sniff_decision(b""), None);
+        // a prefix that can no longer become a method decides JSONL
+        assert_eq!(sniff_decision(b"POTATO"), Some(false));
     }
 }

@@ -43,7 +43,48 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::batch::{decode_step, CacheStats, DecodeSlot, StepBackend};
+use super::codec::CodecKind;
 use super::sampling::GenParams;
+
+/// Which wire transport the serve listener speaks.
+///
+/// Both transports feed the identical scheduler/admission loop — the
+/// transport only decides how bytes become frames (see
+/// [`super::codec`]) and how responses are framed back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Transport {
+    /// newline-delimited JSON over raw TCP (the reference protocol)
+    #[default]
+    Tcp,
+    /// HTTP/1.1 `POST /v1/generate`, with `"stream": true` mapped to
+    /// server-sent events
+    Http,
+    /// per-connection sniffing: a leading HTTP method token selects
+    /// HTTP, anything else falls back to TCP-JSONL — lets HTTP and
+    /// JSONL clients share one listener
+    Auto,
+}
+
+impl Transport {
+    /// Parses a `--transport` CLI value.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "tcp" => Some(Transport::Tcp),
+            "http" => Some(Transport::Http),
+            "auto" => Some(Transport::Auto),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of this transport.
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Http => "http",
+            Transport::Auto => "auto",
+        }
+    }
+}
 
 /// Serving engine knobs (`faar serve --max-batch 16 --queue-depth 128 ...`).
 #[derive(Clone, Debug)]
@@ -68,6 +109,11 @@ pub struct ServeOptions {
     /// (`--prefill-chunk-tokens`); 0 disables chunking and prompts
     /// prefill whole inside their first decode step, as before
     pub prefill_chunk_tokens: usize,
+    /// wire transport on the listener (`--transport tcp|http|auto`)
+    pub transport: Transport,
+    /// frame decoder for JSONL connections (`--codec line|incremental`);
+    /// HTTP bodies always use the incremental decoder
+    pub codec: CodecKind,
 }
 
 impl Default for ServeOptions {
@@ -81,6 +127,8 @@ impl Default for ServeOptions {
             workers: 64,
             defaults: GenParams::default(),
             prefill_chunk_tokens: 0,
+            transport: Transport::Tcp,
+            codec: CodecKind::Line,
         }
     }
 }
@@ -182,6 +230,20 @@ pub enum WriterMsg {
     Done {
         /// total requests issued on the connection
         next_seq: u64,
+    },
+    /// Switches the writer to HTTP response framing. Sent once by the
+    /// reader after transport selection (forced or sniffed), causally
+    /// before any request can reach the scheduler, so the writer never
+    /// frames a response for this connection the wrong way.
+    Http,
+    /// Declares request `seq`'s streaming mode before it enters the
+    /// scheduler (HTTP readers only: `sse` selects server-sent-events
+    /// framing for that request's frames and terminal).
+    Mode {
+        /// reader-assigned per-connection sequence number
+        seq: u64,
+        /// frame this request's output as an SSE event stream
+        sse: bool,
     },
 }
 
@@ -635,7 +697,7 @@ mod tests {
         let mut got: Vec<(u64, Vec<i32>)> = (0..6)
             .map(|_| match w_rx.recv().unwrap() {
                 WriterMsg::Resp { seq, result } => (seq, result.unwrap().tokens),
-                WriterMsg::Done { .. } => panic!("unexpected Done"),
+                other => panic!("unexpected {other:?}"),
             })
             .collect();
         got.sort_by_key(|(s, _)| *s);

@@ -9,6 +9,15 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// Maximum container nesting depth `Json::parse` accepts.
+///
+/// The parser is recursive, so unbounded nesting would turn a ~64 KiB
+/// request line of `[[[[…` into a stack overflow (an abort, not a
+/// catchable error). The serve codec layer enforces the same bound
+/// incrementally ([`crate::serve::codec::CodecLimits`]), so both the
+/// line codec and the incremental decoder reject at exactly this depth.
+pub const MAX_DEPTH: usize = 64;
+
 #[derive(Clone, Debug, PartialEq)]
 /// A parsed JSON value (object keys keep their source order).
 pub enum Json {
@@ -126,7 +135,7 @@ impl Json {
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.ws();
         if p.i != p.b.len() {
             bail!("trailing data at byte {}", p.i);
@@ -252,10 +261,10 @@ impl<'a> Parser<'a> {
         Ok(())
     }
 
-    fn value(&mut self) -> Result<Json> {
+    fn value(&mut self, depth: usize) -> Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => self.object(depth),
+            b'[' => self.array(depth),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -307,10 +316,13 @@ impl<'a> Parser<'a> {
                         b'u' => {
                             let h = self.hex4()?;
                             if (0xD800..0xDC00).contains(&h) {
-                                // surrogate pair
+                                // surrogate pair: the low half must follow
                                 self.eat(b'\\')?;
                                 self.eat(b'u')?;
                                 let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("bad surrogate pair \\u{h:04x}\\u{lo:04x}");
+                                }
                                 let cp = 0x10000 + ((h - 0xD800) << 10) + (lo - 0xDC00);
                                 out.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad surrogate"))?);
                             } else {
@@ -320,11 +332,15 @@ impl<'a> Parser<'a> {
                         _ => bail!("bad escape '\\{}'", e as char),
                     }
                 }
+                c if c < 0x20 => bail!("raw control character 0x{c:02x} in string"),
                 c if c < 0x80 => out.push(c as char),
                 c => {
                     // multi-byte UTF-8: copy remaining continuation bytes
                     let len = if c >= 0xF0 { 4 } else if c >= 0xE0 { 3 } else { 2 };
                     let start = self.i - 1;
+                    if start + len > self.b.len() {
+                        bail!("unexpected end of JSON inside UTF-8 sequence");
+                    }
                     self.i = start + len;
                     out.push_str(std::str::from_utf8(&self.b[start..self.i])?);
                 }
@@ -333,12 +349,22 @@ impl<'a> Parser<'a> {
     }
 
     fn hex4(&mut self) -> Result<u32> {
-        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        if self.i + 4 > self.b.len() {
+            bail!("unexpected end of JSON inside \\u escape");
+        }
+        let bytes = &self.b[self.i..self.i + 4];
+        if !bytes.iter().all(|b| b.is_ascii_hexdigit()) {
+            bail!("bad \\u escape at byte {}", self.i);
+        }
+        let s = std::str::from_utf8(bytes)?;
         self.i += 4;
         Ok(u32::from_str_radix(s, 16)?)
     }
 
-    fn array(&mut self) -> Result<Json> {
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        if depth >= MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH}");
+        }
         self.eat(b'[')?;
         let mut items = vec![];
         self.ws();
@@ -348,7 +374,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.ws();
             match self.peek()? {
                 b',' => self.i += 1,
@@ -361,7 +387,10 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json> {
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        if depth >= MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH}");
+        }
         self.eat(b'{')?;
         let mut pairs = vec![];
         self.ws();
@@ -375,7 +404,7 @@ impl<'a> Parser<'a> {
             self.ws();
             self.eat(b':')?;
             self.ws();
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             pairs.push((k, v));
             self.ws();
             match self.peek()? {
@@ -446,6 +475,50 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn truncated_inputs_error_not_panic() {
+        // each of these used to slice out of bounds (or underflow) instead
+        // of returning Err — the fuzz harness over the serve codec relies
+        // on parse never panicking
+        assert!(Json::parse(r#""\u12"#).is_err()); // truncated \u escape
+        assert!(Json::parse(r#""\u"#).is_err());
+        assert!(Json::parse("\"\u{e9}").is_err()); // unterminated after multibyte
+        assert!(Json::parse(r#""\uD800"#).is_err()); // high surrogate at end
+        assert!(Json::parse(r#""\uD800A""#).is_err()); // bad low surrogate
+        assert!(Json::parse(r#""\uDC00""#).is_err()); // lone low surrogate
+        assert!(Json::parse(r#""\uZZZZ""#).is_err()); // non-hex digits
+        assert!(Json::parse(r#""\u+123""#).is_err()); // sign accepted by from_str_radix
+    }
+
+    #[test]
+    fn surrogate_pair_decodes() {
+        let v = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+    }
+
+    #[test]
+    fn depth_limit() {
+        let ok = "[".repeat(MAX_DEPTH) + "0" + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = "[".repeat(MAX_DEPTH + 1) + "0" + &"]".repeat(MAX_DEPTH + 1);
+        let err = Json::parse(&too_deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "unexpected error: {err}");
+        // a pathological frame of open brackets must error, not blow the stack
+        assert!(Json::parse(&"[".repeat(60_000)).is_err());
+        assert!(Json::parse(&"{\"a\":".repeat(60_000)).is_err());
+    }
+
+    #[test]
+    fn control_chars_in_strings_rejected() {
+        assert!(Json::parse("\"a\u{1}b\"").is_err());
+        assert!(Json::parse("\"a\nb\"").is_err());
+        assert!(Json::parse("\"a\tb\"").is_err());
+        // escaped forms stay fine, and the writer always escapes them
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap().as_str().unwrap(), "a\nb");
+        let v = Json::Str("a\u{1}b\n".into());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Protocol conformance corpus, replayed through BOTH frame codecs.
+//!
+//! Every file in `tests/corpus/protocol/*.bin` is the raw byte stream
+//! of one connection. The filename carries the expected verdicts:
+//! `<verdicts>__<name>.bin`, where `<verdicts>` is a `+`-separated
+//! sequence of `ok` (an accepted request) or a structured error code
+//! (`bad_json`, `oversized`, `bad_request`, `bad_token`,
+//! `empty_prompt`, ...), and `none` means the stream produces no
+//! events at all (blank lines).
+//!
+//! For each entry, the harness decodes the bytes with the line codec
+//! and the incremental codec — whole-buffer, byte-at-a-time, and at
+//! seeded random splits — and asserts:
+//!
+//! 1. each codec's verdicts are invariant under chunking,
+//! 2. both codecs produce the *same outcome sequence* (accept/reject
+//!    decision, error code, and for accepts the identical parsed
+//!    request), and
+//! 3. that sequence matches the verdicts pinned in the filename.
+//!
+//! The corpus is decoded under fixed limits (`max_line_bytes: 256`,
+//! `max_tokens_cap: 8`, vocab 96) documented in the corpus README;
+//! boundary entries (`ok__exact-line-limit`, `oversized__line-257`)
+//! are built against exactly those numbers.
+
+use std::path::PathBuf;
+
+use nvfp4_faar::data::Tokenizer;
+use nvfp4_faar::serve::codec::{decoder_for, CodecLimits, DecodeEvent};
+use nvfp4_faar::serve::{parse_request, CodecKind, ServeOptions};
+use nvfp4_faar::util::rng::Rng;
+
+const VOCAB: usize = 96;
+
+fn corpus_opts() -> ServeOptions {
+    ServeOptions { max_line_bytes: 256, max_tokens_cap: 8, ..ServeOptions::default() }
+}
+
+/// The request-level outcome of one decoded frame/rejection — the
+/// level at which the two codecs are specified to agree.
+#[derive(Debug, PartialEq)]
+enum Outcome {
+    Accept { prompt: Vec<i32>, max_tokens: usize, stream: bool },
+    Reject(&'static str),
+}
+
+impl Outcome {
+    fn label(&self) -> &str {
+        match self {
+            Outcome::Accept { .. } => "ok",
+            Outcome::Reject(code) => code,
+        }
+    }
+}
+
+fn outcomes(events: &[DecodeEvent], tok: &Tokenizer, opts: &ServeOptions) -> Vec<Outcome> {
+    events
+        .iter()
+        .map(|ev| match ev {
+            DecodeEvent::Reject(e) => Outcome::Reject(e.code),
+            DecodeEvent::Frame(text) => match parse_request(text, tok, VOCAB, opts) {
+                Ok(r) => Outcome::Accept {
+                    prompt: r.prompt,
+                    max_tokens: r.max_tokens,
+                    stream: r.stream,
+                },
+                Err(e) => Outcome::Reject(e.code),
+            },
+        })
+        .collect()
+}
+
+/// Decodes `bytes` split at the given chunk boundaries.
+fn run_chunked(kind: CodecKind, bytes: &[u8], splits: &[usize]) -> Vec<DecodeEvent> {
+    let mut dec = decoder_for(kind, CodecLimits::from_options(&corpus_opts()));
+    let mut out = Vec::new();
+    let mut at = 0;
+    for &cut in splits {
+        dec.feed(&bytes[at..cut], &mut out);
+        at = cut;
+    }
+    dec.feed(&bytes[at..], &mut out);
+    dec.finish(&mut out);
+    out
+}
+
+/// Chunk-invariant event sequence for `bytes` under `kind`: decoded
+/// whole, byte-at-a-time, and at seeded random splits, all of which
+/// must agree before the result is used.
+fn decode(kind: CodecKind, bytes: &[u8], rng: &mut Rng, name: &str) -> Vec<DecodeEvent> {
+    let whole = run_chunked(kind, bytes, &[]);
+    let single: Vec<usize> = (1..bytes.len()).collect();
+    assert_eq!(
+        run_chunked(kind, bytes, &single),
+        whole,
+        "{name}: {kind:?} byte-at-a-time decode diverged"
+    );
+    for round in 0..4 {
+        let mut splits: Vec<usize> = (1..bytes.len()).filter(|_| rng.below(4) == 0).collect();
+        splits.dedup();
+        assert_eq!(
+            run_chunked(kind, bytes, &splits),
+            whole,
+            "{name}: {kind:?} random-split decode diverged (round {round})"
+        );
+    }
+    whole
+}
+
+#[test]
+fn conformance_corpus_codecs_agree_and_match_verdicts() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/corpus/protocol");
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+        .collect();
+    entries.sort();
+    assert!(entries.len() >= 30, "corpus unexpectedly small: {} entries", entries.len());
+
+    let tok = Tokenizer::new(VOCAB);
+    let opts = corpus_opts();
+    let mut rng = Rng::new(0xC0DE_C0DE);
+    for path in entries {
+        let name = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let bytes = std::fs::read(&path).expect("read corpus entry");
+        let (verdicts, _) = name
+            .split_once("__")
+            .unwrap_or_else(|| panic!("{name}: corpus filename needs '<verdicts>__<name>'"));
+        let expected: Vec<&str> =
+            if verdicts == "none" { vec![] } else { verdicts.split('+').collect() };
+
+        let line = decode(CodecKind::Line, &bytes, &mut rng, &name);
+        let incr = decode(CodecKind::Incremental, &bytes, &mut rng, &name);
+        let lo = outcomes(&line, &tok, &opts);
+        let io = outcomes(&incr, &tok, &opts);
+        assert_eq!(lo, io, "{name}: codecs disagree");
+        let labels: Vec<&str> = lo.iter().map(|o| o.label()).collect();
+        assert_eq!(labels, expected, "{name}: verdicts do not match filename");
+    }
+}

@@ -1,0 +1,430 @@
+//! Byte-level fuzzing of the wire-protocol frame decoders.
+//!
+//! Three layers, all deterministic (seeded xoshiro256**, no external
+//! fuzzing deps, runs offline as plain `#[test]`s):
+//!
+//! 1. **Raw bytes, pure decoders** — arbitrary byte soup through both
+//!    [`LineDecoder`] and [`IncrementalDecoder`]: no panics, every
+//!    event well-formed, and the event stream is invariant under how
+//!    the bytes are chunked (the contract `feed` documents).
+//! 2. **Structure-aware mutants, differential** — valid requests
+//!    mutated structurally (flips, splices, truncations, JSON-token
+//!    inserts), kept newline-free so both codecs see the same framing,
+//!    then decoded by both and compared as *request outcomes*: codec
+//!    events composed with [`parse_request`], which is the level at
+//!    which the two codecs promise to agree.
+//! 3. **Live scheduler** — the same byte soup fired at a real served
+//!    socket; a local decoder replay predicts the exact reply sequence
+//!    (count, error codes, and completion tokens), so the server must
+//!    answer every frame, never wedge, and never panic.
+//!
+//! The `*_deep` variants re-run the same logic at many times the
+//! iteration count; they are `#[ignore]` so CI stays bounded while a
+//! manual `cargo test -- --ignored` digs longer.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use nvfp4_faar::data::Tokenizer;
+use nvfp4_faar::serve::codec::{decoder_for, CodecLimits, DecodeEvent};
+use nvfp4_faar::serve::{
+    generate_greedy, parse_request, serve_on, CodecKind, ServeOptions, SyntheticBackend,
+};
+use nvfp4_faar::util::json::Json;
+use nvfp4_faar::util::rng::Rng;
+
+const VOCAB: usize = 96;
+const SEQ_LEN: usize = 16;
+const CODECS: [CodecKind; 2] = [CodecKind::Line, CodecKind::Incremental];
+
+/// Fixed request corpus the mutator starts from: every protocol
+/// feature (both prompt forms, params, escapes, multi-byte UTF-8),
+/// plus inputs that are already invalid in interesting ways.
+const SEEDS: &[&str] = &[
+    r#"{"tokens":[1,2,3],"max_tokens":4}"#,
+    r#"{"prompt":"héllo wörld","max_tokens":3}"#,
+    r#"{"prompt":"héllo \" wörld \\ end","max_tokens":2}"#,
+    r#"{"tokens":[5],"max_tokens":2,"params":{"temperature":0.5,"seed":7}}"#,
+    r#"{"tokens":[],"max_tokens":2}"#,
+    r#"{"tokens":[1],"max_tokens":1,"stream":false}"#,
+    r#"  {"a":1}  trailing"#,
+    r#"{"a":1}{"b":2}"#,
+    "plain text, not JSON at all",
+    r#"{"unclosed":"string"#,
+];
+
+/// Runs `bytes` through a fresh decoder of `kind`, split at
+/// rng-chosen boundaries, with a final `finish` as EOF.
+fn run_decoder(
+    kind: CodecKind,
+    limits: CodecLimits,
+    bytes: &[u8],
+    rng: &mut Rng,
+) -> Vec<DecodeEvent> {
+    let mut dec = decoder_for(kind, limits);
+    let mut out = Vec::new();
+    let mut at = 0;
+    while at < bytes.len() {
+        let n = 1 + rng.below(bytes.len() - at);
+        dec.feed(&bytes[at..at + n], &mut out);
+        at += n;
+    }
+    dec.finish(&mut out);
+    out
+}
+
+/// A request outcome: what the server would ultimately do with one
+/// frame. This — not the raw event — is the level where the two codecs
+/// are specified to agree (the incremental scanner front-loads checks
+/// the line codec leaves to the parser).
+#[derive(Debug, PartialEq)]
+enum Outcome {
+    Accept { prompt: Vec<i32>, max_tokens: usize, stream: bool },
+    Reject(&'static str),
+}
+
+fn outcomes(events: &[DecodeEvent], tok: &Tokenizer, opts: &ServeOptions) -> Vec<Outcome> {
+    events
+        .iter()
+        .map(|ev| match ev {
+            DecodeEvent::Reject(e) => Outcome::Reject(e.code),
+            DecodeEvent::Frame(text) => match parse_request(text, tok, VOCAB, opts) {
+                Ok(r) => Outcome::Accept {
+                    prompt: r.prompt,
+                    max_tokens: r.max_tokens,
+                    stream: r.stream,
+                },
+                Err(e) => Outcome::Reject(e.code),
+            },
+        })
+        .collect()
+}
+
+fn assert_events_well_formed(events: &[DecodeEvent], what: &str) {
+    for ev in events {
+        match ev {
+            DecodeEvent::Frame(text) => {
+                // frames are trimmed of JSON whitespace only (space,
+                // tab, CR, LF): anything else is the parser's call
+                let ws = |c: char| matches!(c, ' ' | '\t' | '\r' | '\n');
+                assert!(!text.is_empty(), "{what}: empty frame emitted");
+                assert_eq!(text.trim_matches(ws), text, "{what}: untrimmed frame emitted");
+            }
+            DecodeEvent::Reject(e) => {
+                assert!(
+                    matches!(e.code, "bad_json" | "oversized"),
+                    "{what}: unknown codec-level error code {:?}",
+                    e.code
+                );
+                assert!(!e.message.is_empty(), "{what}: empty error message");
+            }
+        }
+    }
+}
+
+/// Arbitrary bytes with a bias toward protocol-shaped content, so the
+/// soup actually reaches deep decoder states instead of bouncing off
+/// the first byte.
+fn garbage(rng: &mut Rng, len: usize, allow_newline: bool) -> Vec<u8> {
+    const TOKENS: &[&[u8]] = &[
+        b"{", b"}", b"[", b"]", b":", b",", b"\"", b"\\", b"\\\"", b"\\u00e", b"true",
+        b"null", b"-1e9", b"0.5", b"\"tokens\"", b"\"prompt\"", b"\"max_tokens\"",
+        b"\xc3\xa9", b"\xe2\x82\xac", b"\xf0\x9f\x98\x80", b"\xc3", b"\xed\xa0\x80",
+        b"\xff", b"\x00", b" ", b"\r",
+    ];
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        match rng.below(8) {
+            0 => out.push(rng.next_u64() as u8),
+            1 if allow_newline => out.push(b'\n'),
+            _ => out.extend_from_slice(TOKENS[rng.below(TOKENS.len())]),
+        }
+    }
+    out.truncate(len);
+    if !allow_newline {
+        for b in &mut out {
+            if *b == b'\n' {
+                *b = b'\x0b';
+            }
+        }
+    }
+    out
+}
+
+/// One structural mutation of `buf`, possibly splicing from a seed.
+fn mutate(buf: &mut Vec<u8>, rng: &mut Rng) {
+    if buf.is_empty() {
+        buf.extend_from_slice(SEEDS[rng.below(SEEDS.len())].as_bytes());
+        return;
+    }
+    match rng.below(7) {
+        0 => {
+            let i = rng.below(buf.len());
+            buf[i] ^= rng.next_u64() as u8;
+        }
+        1 => {
+            let i = rng.below(buf.len() + 1);
+            buf.insert(i, rng.next_u64() as u8);
+        }
+        2 => {
+            let i = rng.below(buf.len());
+            let n = (1 + rng.below(4)).min(buf.len() - i);
+            buf.drain(i..i + n);
+        }
+        3 => {
+            let i = rng.below(buf.len());
+            let n = (1 + rng.below(8)).min(buf.len() - i);
+            let dup: Vec<u8> = buf[i..i + n].to_vec();
+            buf.splice(i..i, dup);
+        }
+        4 => buf.truncate(rng.below(buf.len() + 1)),
+        5 => {
+            let other = SEEDS[rng.below(SEEDS.len())].as_bytes();
+            let n = (1 + rng.below(other.len())).min(other.len());
+            let i = rng.below(buf.len() + 1);
+            let piece: Vec<u8> = other[..n].to_vec();
+            buf.splice(i..i, piece);
+        }
+        _ => {
+            let i = rng.below(buf.len() + 1);
+            let n = 1 + rng.below(12);
+            let extra = garbage(rng, n, false);
+            buf.splice(i..i, extra);
+        }
+    }
+    // keep mutants far below the 64 KiB default frame bound: length
+    // limits are covered by dedicated tests, and past the bound the
+    // codecs intentionally differ in *which* error they pick first
+    buf.truncate(4096);
+}
+
+fn fuzz_raw_bytes(rounds: usize) {
+    let mut rng = Rng::new(0xF4A2_0001);
+    let limits =
+        CodecLimits { max_frame_bytes: 96, max_depth: 8, max_string_bytes: 32 };
+    for round in 0..rounds {
+        let len = 1 + rng.below(300);
+        let bytes = garbage(&mut rng, len, true);
+        for kind in CODECS {
+            let a = run_decoder(kind, limits, &bytes, &mut rng);
+            let b = run_decoder(kind, limits, &bytes, &mut rng);
+            let mut one = decoder_for(kind, limits);
+            let mut c = Vec::new();
+            for &byte in &bytes {
+                one.feed(&[byte], &mut c);
+            }
+            one.finish(&mut c);
+            assert_eq!(a, b, "{kind:?} round {round}: events depend on chunking");
+            assert_eq!(a, c, "{kind:?} round {round}: byte-at-a-time diverged");
+            assert_events_well_formed(&a, &format!("{kind:?} round {round}"));
+        }
+    }
+}
+
+/// Arbitrary byte soup: no panics, chunk-invariant, well-formed events.
+#[test]
+fn fuzz_raw_bytes_decoders_never_panic() {
+    fuzz_raw_bytes(150);
+}
+
+/// Long-haul version of the raw-bytes fuzz (`cargo test -- --ignored`).
+#[test]
+#[ignore = "deep fuzz; run explicitly"]
+fn fuzz_raw_bytes_deep() {
+    fuzz_raw_bytes(20_000);
+}
+
+fn fuzz_mutants(rounds: usize) {
+    let mut rng = Rng::new(0xF4A2_0002);
+    let tok = Tokenizer::new(VOCAB);
+    let opts = ServeOptions::default();
+    let limits = CodecLimits::from_options(&opts);
+    // one always-on regression input: nesting just past the parser
+    // bound, which the scanner rejects early and the parser late
+    let deep = format!("{}1{}", "[".repeat(70), "]".repeat(70));
+    for round in 0..rounds {
+        let mut bytes = if round == 0 {
+            deep.clone().into_bytes()
+        } else {
+            SEEDS[rng.below(SEEDS.len())].as_bytes().to_vec()
+        };
+        for _ in 0..1 + rng.below(4) {
+            if round > 0 {
+                mutate(&mut bytes, &mut rng);
+            }
+        }
+        // single-line framing for both codecs: the incremental codec's
+        // multi-line documents are deliberately out of scope here
+        for b in &mut bytes {
+            if *b == b'\n' {
+                *b = b'\x0b';
+            }
+        }
+        bytes.push(b'\n');
+        let line = run_decoder(CodecKind::Line, limits, &bytes, &mut rng);
+        let incr = run_decoder(CodecKind::Incremental, limits, &bytes, &mut rng);
+        assert_events_well_formed(&line, &format!("line round {round}"));
+        assert_events_well_formed(&incr, &format!("incremental round {round}"));
+        let lo = outcomes(&line, &tok, &opts);
+        let io = outcomes(&incr, &tok, &opts);
+        assert_eq!(
+            lo,
+            io,
+            "round {round}: codecs disagree on {:?}",
+            String::from_utf8_lossy(&bytes)
+        );
+    }
+}
+
+/// Structure-aware mutants: both codecs reach the same accept/reject
+/// decision (and the same parsed request) for every single-line input.
+#[test]
+fn fuzz_mutants_codecs_agree() {
+    fuzz_mutants(400);
+}
+
+/// Long-haul version of the differential mutant fuzz.
+#[test]
+#[ignore = "deep fuzz; run explicitly"]
+fn fuzz_mutants_deep() {
+    fuzz_mutants(25_000);
+}
+
+/// Replies the server must produce for `bytes`, predicted by replaying
+/// the same decoder locally. `None` tokens = an error reply.
+fn predict(
+    kind: CodecKind,
+    opts: &ServeOptions,
+    b: &SyntheticBackend,
+    bytes: &[u8],
+    rng: &mut Rng,
+) -> Vec<(Option<Vec<i32>>, Option<&'static str>)> {
+    let tok = Tokenizer::new(VOCAB);
+    let events = run_decoder(kind, CodecLimits::from_options(opts), bytes, rng);
+    outcomes(&events, &tok, opts)
+        .into_iter()
+        .map(|o| match o {
+            Outcome::Accept { prompt, max_tokens, stream } => {
+                // default params are greedy; nothing in this byte
+                // stream requests streaming, so one reply per frame
+                assert!(!stream, "fuzz stream must not request streaming");
+                (Some(generate_greedy(b, &prompt, max_tokens).unwrap()), None)
+            }
+            Outcome::Reject(code) => (None, Some(code)),
+        })
+        .collect()
+}
+
+fn fire_bytes(addr: SocketAddr, bytes: &[u8], rng: &mut Rng) -> Vec<Json> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    let mut w = stream.try_clone().expect("clone");
+    let mut r = BufReader::new(stream);
+    let mut at = 0;
+    while at < bytes.len() {
+        let n = 1 + rng.below(bytes.len() - at);
+        w.write_all(&bytes[at..at + n]).expect("write");
+        at += n;
+    }
+    w.flush().expect("flush");
+    w.shutdown(Shutdown::Write).expect("shutdown");
+    let mut replies = Vec::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line).expect("read") == 0 {
+            return replies;
+        }
+        replies.push(Json::parse(&line).expect("reply must be JSON"));
+    }
+}
+
+fn fuzz_live(rounds_per_codec: usize) {
+    let mut rng = Rng::new(0xF4A2_0003);
+    let b = SyntheticBackend::new(VOCAB, SEQ_LEN, 1234);
+    for kind in CODECS {
+        for round in 0..rounds_per_codec {
+            let opts = ServeOptions {
+                codec: kind,
+                max_tokens_cap: 8,
+                ..ServeOptions::default()
+            };
+            // a guaranteed-clean request first (the decoder is at its
+            // start state), then garbage, then more valid requests the
+            // garbage may or may not have glued into its own frames —
+            // the local replay decides which, so any answer the server
+            // gives that differs from the replay is a failure
+            let mut bytes = format!("{{\"tokens\":[{}],\"max_tokens\":3}}\n", round % VOCAB)
+                .into_bytes();
+            for i in 0..6 {
+                let len = rng.below(160);
+                bytes.extend_from_slice(&garbage(&mut rng, len, true));
+                if i % 2 == 0 {
+                    bytes.push(b'\n');
+                    bytes.extend_from_slice(
+                        format!("{{\"tokens\":[{},7],\"max_tokens\":2}}\n", (round + i) % VOCAB)
+                            .as_bytes(),
+                    );
+                }
+            }
+            let expected = predict(kind, &opts, &b, &bytes, &mut rng);
+
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let replies = std::thread::scope(|s| {
+                let bytes = &bytes;
+                let mut rng = rng.fork(round as u64);
+                let cl = s.spawn(move || fire_bytes(addr, bytes, &mut rng));
+                serve_on(&b, listener, Some(1), opts).unwrap();
+                cl.join().unwrap()
+            });
+
+            assert_eq!(
+                replies.len(),
+                expected.len(),
+                "{kind:?} round {round}: reply count != predicted frame count"
+            );
+            for (i, (reply, (tokens, code))) in replies.iter().zip(&expected).enumerate() {
+                match (tokens, code) {
+                    (Some(tokens), None) => {
+                        let got: Vec<i32> = reply
+                            .req("tokens")
+                            .expect("completion reply")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|t| t.as_f64().unwrap() as i32)
+                            .collect();
+                        assert_eq!(&got, tokens, "{kind:?} round {round} reply {i}");
+                    }
+                    (None, Some(code)) => {
+                        let got = reply
+                            .req("error")
+                            .expect("error reply")
+                            .req("code")
+                            .unwrap()
+                            .as_str()
+                            .unwrap()
+                            .to_string();
+                        assert_eq!(&got, code, "{kind:?} round {round} reply {i}");
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+/// Garbage against a live scheduler: every frame answered, every
+/// answer predicted by an offline replay, orderly EOF — never a wedge.
+#[test]
+fn fuzz_live_scheduler_survives_garbage() {
+    fuzz_live(6);
+}
+
+/// Long-haul version of the live-scheduler fuzz.
+#[test]
+#[ignore = "deep fuzz; run explicitly"]
+fn fuzz_live_deep() {
+    fuzz_live(120);
+}

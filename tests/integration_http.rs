@@ -1,0 +1,303 @@
+//! End-to-end tests of the HTTP/1.1 + SSE front end: the same
+//! scheduler and admission loop as TCP-JSONL, behind a different
+//! framing. The load-bearing assertions are parity ones — for the
+//! same (prompt, params, seed), an HTTP client and a TCP client on
+//! the *same listener* get token-identical answers, SSE frames arrive
+//! in the same order as JSONL stream frames, and the HTTP status
+//! mapping carries the same structured error codes the JSONL protocol
+//! reports.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::{
+    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
+};
+use nvfp4_faar::serve::client::{Client, ClientRequest, Completion};
+use nvfp4_faar::serve::{
+    generate, generate_greedy, serve_on, GenParams, ServeOptions, SyntheticBackend, Transport,
+};
+use nvfp4_faar::train::ParamStore;
+
+const VOCAB: usize = 96;
+const SEQ_LEN: usize = 16;
+
+fn backend() -> SyntheticBackend {
+    SyntheticBackend::new(VOCAB, SEQ_LEN, 1234)
+}
+
+fn http_client(addr: SocketAddr) -> Client {
+    Client::connect_http_timeout(addr, Duration::from_secs(30)).expect("connect http")
+}
+
+fn tcp_client(addr: SocketAddr) -> Client {
+    Client::connect_timeout(addr, Duration::from_secs(30)).expect("connect tcp")
+}
+
+fn ok(reply: anyhow::Result<nvfp4_faar::serve::client::Reply>) -> Completion {
+    reply.expect("transport").expect("unexpected protocol error")
+}
+
+fn err_code(reply: anyhow::Result<nvfp4_faar::serve::client::Reply>) -> String {
+    reply.expect("transport").expect_err("expected a protocol error").code
+}
+
+/// Interleaved HTTP and TCP clients on ONE auto-sniffing listener:
+/// identical requests (including seeded sampling) must produce
+/// token-identical completions on both transports.
+#[test]
+fn serve_http_and_tcp_parity_on_one_listener() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        max_batch: 4,
+        transport: Transport::Auto,
+        ..ServeOptions::default()
+    };
+
+    std::thread::scope(|s| {
+        let http = s.spawn(move || {
+            let mut cl = http_client(addr);
+            let greedy = ok(cl.request(&ClientRequest::tokens(vec![2, 7]).max_tokens(5)));
+            assert_eq!(cl.last_status(), Some(200));
+            let sampled = ok(cl.request(
+                &ClientRequest::tokens(vec![3, 1]).max_tokens(6).sampled(0.8, 42).top_k(8),
+            ));
+            (greedy.tokens, sampled.tokens)
+        });
+        let tcp = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            let greedy = ok(cl.request(&ClientRequest::tokens(vec![2, 7]).max_tokens(5)));
+            let sampled = ok(cl.request(
+                &ClientRequest::tokens(vec![3, 1]).max_tokens(6).sampled(0.8, 42).top_k(8),
+            ));
+            (greedy.tokens, sampled.tokens)
+        });
+        serve_on(&b, listener, Some(2), opts).unwrap();
+        let (h_greedy, h_sampled) = http.join().unwrap();
+        let (t_greedy, t_sampled) = tcp.join().unwrap();
+
+        assert_eq!(h_greedy, t_greedy, "greedy decode differs across transports");
+        assert_eq!(h_sampled, t_sampled, "seeded sampling differs across transports");
+        assert_eq!(h_greedy, generate_greedy(&b, &[2, 7], 5).unwrap());
+        let params = GenParams { temperature: 0.8, seed: 42, top_k: 8, ..GenParams::default() };
+        assert_eq!(h_sampled, generate(&b, &[3, 1], 6, params).unwrap());
+    });
+}
+
+/// An SSE stream and a JSONL stream for the same request deliver the
+/// same frames in the same order, and both concatenate to the
+/// non-streaming completion.
+#[test]
+fn serve_sse_stream_matches_jsonl_stream() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { transport: Transport::Auto, ..ServeOptions::default() };
+    let req = ClientRequest::tokens(vec![4, 9]).max_tokens(6);
+
+    std::thread::scope(|s| {
+        let req_h = req.clone();
+        let http = s.spawn(move || {
+            // streaming HTTP clients are one-shot: the server closes
+            // the connection after the stream's terminal event
+            let mut cl = http_client(addr);
+            let (frames, reply) = cl.request_stream(&req_h).expect("sse stream");
+            assert_eq!(cl.last_status(), Some(200));
+            (frames, reply.expect("terminal completion"))
+        });
+        let req_t = req.clone();
+        let tcp = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            let (frames, reply) = cl.request_stream(&req_t).expect("jsonl stream");
+            let plain = ok(cl.request(&req_t));
+            (frames, reply.expect("terminal completion"), plain)
+        });
+        serve_on(&b, listener, Some(2), opts).unwrap();
+        let (h_frames, h_final) = http.join().unwrap();
+        let (t_frames, t_final, plain) = tcp.join().unwrap();
+
+        assert_eq!(h_frames, t_frames, "SSE frames differ from JSONL frames");
+        // latencies legitimately differ across transports; the decode must not
+        assert_eq!(h_final.tokens, t_final.tokens, "terminal tokens differ across transports");
+        assert_eq!(h_final.text, t_final.text, "terminal text differs across transports");
+        for (i, f) in h_frames.iter().enumerate() {
+            assert_eq!(f.index, i, "SSE frames out of order");
+        }
+        let streamed: Vec<i32> = h_frames.iter().map(|f| f.token).collect();
+        assert_eq!(streamed, plain.tokens, "stream does not concatenate to the completion");
+        assert_eq!(h_final.tokens, plain.tokens);
+    });
+}
+
+/// Protocol rejections over HTTP carry both the structured error code
+/// (same as JSONL) and the documented status: 400 for request errors,
+/// 413 for oversized bodies — and the connection stays usable after a
+/// 400 (keep-alive) while 413 closes it.
+#[test]
+fn serve_http_maps_errors_to_statuses() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        transport: Transport::Http,
+        max_line_bytes: 512,
+        ..ServeOptions::default()
+    };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = http_client(addr);
+            let mut out = Vec::new();
+            for (body, expect_status) in [
+                ("{not json", 400),
+                (r#"{"tokens":"nope"}"#, 400),
+                (r#"{"tokens":[5000]}"#, 400),
+                (r#"{"tokens":[]}"#, 400),
+            ] {
+                cl.send_raw(body).expect("send");
+                let code = err_code(cl.read_reply());
+                assert_eq!(cl.last_status(), Some(expect_status), "status for {body:?}");
+                out.push(code);
+            }
+            // the connection survived four rejections: keep-alive
+            let survivor = ok(cl.request(&ClientRequest::tokens(vec![1]).max_tokens(2)));
+            assert_eq!(cl.last_status(), Some(200));
+            // an oversized declared body is refused up front (413) and
+            // the connection closes
+            cl.send_raw(&format!("{{\"prompt\":\"{}\"}}", "a".repeat(600))).expect("send");
+            let over = err_code(cl.read_reply());
+            assert_eq!(cl.last_status(), Some(413));
+            (out, survivor.tokens, over)
+        });
+        serve_on(&b, listener, Some(1), opts).unwrap();
+        let (codes, survivor, over) = cl.join().unwrap();
+        assert_eq!(codes, ["bad_json", "bad_request", "bad_token", "empty_prompt"]);
+        assert_eq!(survivor, generate_greedy(&b, &[1], 2).unwrap());
+        assert_eq!(over, "oversized");
+    });
+}
+
+/// Writes raw HTTP and returns the replies' status codes, one per
+/// response head, until the server closes the connection.
+fn raw_http_statuses(addr: SocketAddr, payload: &str) -> Vec<u16> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    stream.write_all(payload.as_bytes()).expect("write");
+    stream.flush().expect("flush");
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut reader = BufReader::new(stream);
+    let mut statuses = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).expect("read") == 0 {
+            return statuses;
+        }
+        if let Some(rest) = line.strip_prefix("HTTP/1.1 ") {
+            statuses
+                .push(rest.split_whitespace().next().unwrap().parse().expect("status code"));
+        }
+    }
+}
+
+/// Routing-level rejections: wrong method (405), wrong path (404),
+/// and a POST without content-length (411) — the first two keep the
+/// connection alive, 411 closes it.
+#[test]
+fn serve_http_routing_statuses() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { transport: Transport::Http, ..ServeOptions::default() };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            raw_http_statuses(
+                addr,
+                "GET /v1/generate HTTP/1.1\r\ncontent-length: 0\r\n\r\n\
+                 POST /nope HTTP/1.1\r\ncontent-length: 2\r\n\r\n{}\
+                 POST /v1/generate HTTP/1.1\r\n\r\n",
+            )
+        });
+        serve_on(&b, listener, Some(1), opts).unwrap();
+        assert_eq!(cl.join().unwrap(), [405, 404, 411]);
+    });
+}
+
+/// Two POSTs pipelined back-to-back on one connection are answered in
+/// order with both completions correct.
+#[test]
+fn serve_http_pipelined_requests_answered_in_order() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { transport: Transport::Http, ..ServeOptions::default() };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = http_client(addr);
+            cl.send(&ClientRequest::tokens(vec![1]).max_tokens(3)).expect("send 1");
+            cl.send(&ClientRequest::tokens(vec![2]).max_tokens(4)).expect("send 2");
+            (ok(cl.read_reply()).tokens, ok(cl.read_reply()).tokens)
+        });
+        serve_on(&b, listener, Some(1), opts).unwrap();
+        let (first, second) = cl.join().unwrap();
+        assert_eq!(first, generate_greedy(&b, &[1], 3).unwrap());
+        assert_eq!(second, generate_greedy(&b, &[2], 4).unwrap());
+    });
+}
+
+fn native_backend() -> NativeBackend {
+    let manifest = native_manifest("nano").expect("nano preset");
+    let fp = ParamStore::init(&manifest, 42);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    let mut opts = NativeOptions { use_cache: true, ..NativeOptions::default() };
+    if let Ok(name) = std::env::var("FAAR_TEST_KV_FORMAT") {
+        opts.kv_format = KvFormat::parse(&name)
+            .unwrap_or_else(|| panic!("unknown FAAR_TEST_KV_FORMAT '{name}'"));
+    }
+    NativeBackend::new(model, opts)
+}
+
+/// An HTTP client that starts an SSE stream and vanishes mid-stream
+/// must not leak its KV pages: the writer's broken pipe cancels the
+/// request and the scheduler releases the slot.
+#[test]
+fn serve_http_mid_stream_disconnect_frees_kv_pages() {
+    let backend = native_backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        max_batch: 4,
+        transport: Transport::Auto,
+        ..ServeOptions::default()
+    };
+
+    let stats = std::thread::scope(|s| {
+        let backend = &backend;
+        s.spawn(move || {
+            // start a long SSE stream and vanish without draining it
+            let mut cl = http_client(addr);
+            cl.send(&ClientRequest::tokens(vec![3]).max_tokens(48).streaming())
+                .expect("send");
+            std::thread::sleep(Duration::from_millis(50));
+            cl.shutdown();
+        });
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let mut cl = tcp_client(addr);
+            ok(cl.request(&ClientRequest::tokens(vec![4, 5]).max_tokens(4)));
+        });
+        serve_on(backend, listener, Some(2), opts).unwrap()
+    });
+    assert!(stats.completed >= 1);
+    assert_eq!(
+        backend.kv_outstanding(),
+        0,
+        "mid-stream HTTP disconnect left KV pages outstanding"
+    );
+}

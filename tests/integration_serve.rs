@@ -12,18 +12,21 @@
 //! sampling reproduces across runs, and streaming frames concatenate to
 //! the non-streaming response.
 
-use std::net::{SocketAddr, TcpListener};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
+use nvfp4_faar::data::Tokenizer;
 use nvfp4_faar::formats::codec::FormatKind;
 use nvfp4_faar::infer::{
     native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
 };
 use nvfp4_faar::serve::client::{Client, ClientRequest, Completion};
 use nvfp4_faar::serve::{
-    generate, generate_greedy, serve_on, GenParams, ServeOptions, SyntheticBackend,
+    generate, generate_greedy, serve_on, CodecKind, GenParams, ServeOptions, SyntheticBackend,
 };
 use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::json::Json;
 
 const VOCAB: usize = 96;
 const SEQ_LEN: usize = 16;
@@ -336,6 +339,172 @@ fn serve_disconnect_mid_decode_does_not_wedge_the_server() {
         assert!(stats.completed >= 1);
         assert_eq!(stats.errors, 0);
     });
+}
+
+// ---------------------------------------------------------------------------
+// Split-read regressions: request bytes arriving in adversarially chunked
+// reads must decode exactly like a single write, under BOTH frame codecs.
+
+/// A raw socket for byte-level wire tests the typed client cannot express.
+fn raw_socket(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    let _ = s.set_nodelay(true);
+    s
+}
+
+/// Write `bytes` split at the given cut points, flushing and pausing at
+/// each cut so the server's reader observes genuinely separate reads.
+fn write_split(s: &mut TcpStream, bytes: &[u8], cuts: &[usize]) {
+    let mut at = 0;
+    for &cut in cuts {
+        s.write_all(&bytes[at..cut]).expect("write");
+        s.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(30));
+        at = cut;
+    }
+    s.write_all(&bytes[at..]).expect("write");
+    s.flush().expect("flush");
+}
+
+fn read_json_line(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("read line");
+    Json::parse(&line).expect("reply is JSON")
+}
+
+fn reply_tokens(v: &Json) -> Vec<i32> {
+    v.req("tokens")
+        .expect("tokens field")
+        .as_arr()
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_f64().expect("token id") as i32)
+        .collect()
+}
+
+/// A multi-byte UTF-8 character, a `\"` escape, and the final `\r\n` all
+/// straddling read boundaries: the request must decode exactly like a
+/// single-write request, under both codecs.
+#[test]
+fn serve_split_reads_cross_utf8_escape_and_crlf_boundaries() {
+    for codec in [CodecKind::Line, CodecKind::Incremental] {
+        let b = backend();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = ServeOptions { codec, ..ServeOptions::default() };
+        let text = "{\"prompt\":\"héllo \\\" wörld\",\"max_tokens\":4}\r\n";
+        let bytes = text.as_bytes().to_vec();
+        // cut inside the 2-byte é, right after the escape backslash, and
+        // between \r and \n
+        let e_lead = bytes.iter().position(|&x| x == 0xC3).unwrap();
+        let bslash = bytes.iter().position(|&x| x == b'\\').unwrap();
+        let cr = bytes.iter().position(|&x| x == b'\r').unwrap();
+        let cuts = [e_lead + 1, bslash + 1, cr + 1];
+
+        std::thread::scope(|s| {
+            let bytes = &bytes;
+            let cl = s.spawn(move || {
+                let mut sock = raw_socket(addr);
+                let mut reader = BufReader::new(sock.try_clone().unwrap());
+                write_split(&mut sock, bytes, &cuts);
+                reply_tokens(&read_json_line(&mut reader))
+            });
+            serve_on(&b, listener, Some(1), opts).unwrap();
+            let got = cl.join().unwrap();
+            // the prompt decodes through the server tokenizer: three
+            // unknown words (map to token 0)
+            let prompt = Tokenizer::new(VOCAB).encode("héllo \" wörld");
+            assert_eq!(prompt, vec![0, 0, 0], "tokenizer contract drifted");
+            let expect = generate_greedy(&b, &prompt, 4).unwrap();
+            assert_eq!(got, expect, "split reads changed the decode under {codec:?}");
+        });
+    }
+}
+
+/// A line of exactly `max_line_bytes` is accepted; one byte more is a
+/// single `oversized` rejection and the connection keeps serving — under
+/// both codecs, regardless of how the oversized line was chunked.
+#[test]
+fn serve_exact_length_bound_accepted_one_more_rejected() {
+    for codec in [CodecKind::Line, CodecKind::Incremental] {
+        let b = backend();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = ServeOptions { codec, max_line_bytes: 256, ..ServeOptions::default() };
+        let shell = r#"{"prompt":"","max_tokens":2}"#;
+        let pad = 256 - shell.len();
+        let exact = format!("{{\"prompt\":\"{}\",\"max_tokens\":2}}", "a".repeat(pad));
+        assert_eq!(exact.len(), 256);
+        let over = format!("{{\"prompt\":\"{}\",\"max_tokens\":2}}", "a".repeat(pad + 1));
+
+        std::thread::scope(|s| {
+            let (exact, over) = (&exact, &over);
+            let cl = s.spawn(move || {
+                let mut cl = client(addr);
+                let at_limit = ok({
+                    cl.send_raw(exact).expect("send");
+                    cl.read_reply()
+                });
+                cl.send_raw(over).expect("send");
+                let code = err_code(cl.read_reply());
+                // the connection survives the rejection
+                let after = ok(cl.request(&ClientRequest::tokens(vec![1]).max_tokens(2)));
+                (at_limit.tokens, code, after.tokens)
+            });
+            serve_on(&b, listener, Some(1), opts).unwrap();
+            let (at_limit, code, after) = cl.join().unwrap();
+            assert_eq!(at_limit, generate_greedy(&b, &[0], 2).unwrap(), "{codec:?}");
+            assert_eq!(code, "oversized", "{codec:?}");
+            assert_eq!(after, generate_greedy(&b, &[1], 2).unwrap(), "{codec:?}");
+        });
+    }
+}
+
+/// The incremental codec accepts a pretty-printed document spanning
+/// several lines (newlines are whitespace inside a JSON document); the
+/// line codec — by its framing contract — rejects each fragment line.
+#[test]
+fn serve_incremental_codec_accepts_multiline_documents() {
+    let doc = "{\n  \"tokens\": [1, 2],\n  \"max_tokens\": 3\n}";
+    // incremental: one request, decoded normally
+    {
+        let b = backend();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = ServeOptions { codec: CodecKind::Incremental, ..ServeOptions::default() };
+        std::thread::scope(|s| {
+            let cl = s.spawn(move || {
+                let mut cl = client(addr);
+                cl.send_raw(doc).expect("send");
+                let multi = ok(cl.read_reply());
+                // the same connection still frames single-line requests
+                let single = ok(cl.request(&ClientRequest::tokens(vec![1, 2]).max_tokens(3)));
+                (multi.tokens, single.tokens)
+            });
+            serve_on(&b, listener, Some(1), opts).unwrap();
+            let (multi, single) = cl.join().unwrap();
+            let expect = generate_greedy(&b, &[1, 2], 3).unwrap();
+            assert_eq!(multi, expect, "multi-line document mis-decoded");
+            assert_eq!(single, expect);
+        });
+    }
+    // line codec: the first fragment line is already a bad_json reject
+    {
+        let b = backend();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = ServeOptions { codec: CodecKind::Line, ..ServeOptions::default() };
+        std::thread::scope(|s| {
+            let cl = s.spawn(move || {
+                let mut cl = client(addr);
+                cl.send_raw(doc).expect("send");
+                err_code(cl.read_reply())
+            });
+            serve_on(&b, listener, Some(1), opts).unwrap();
+            assert_eq!(cl.join().unwrap(), "bad_json");
+        });
+    }
 }
 
 fn native_backend(use_cache: bool) -> NativeBackend {
