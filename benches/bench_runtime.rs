@@ -24,7 +24,9 @@ use nvfp4_faar::infer::{quantize_store, NativeBackend, NativeModel, NativeOption
 use nvfp4_faar::runtime::{Runtime, Value};
 use nvfp4_faar::serve::batch::{decode_step, DecodeSlot, StepBackend};
 use nvfp4_faar::serve::client::{Client, ClientRequest};
-use nvfp4_faar::serve::{serve_on, ServeOptions, SyntheticBackend};
+use nvfp4_faar::serve::{
+    serve_on, ModelEntry, ModelRegistry, ServeOptions, SpecDecoder, SyntheticBackend,
+};
 use nvfp4_faar::tensor::Tensor;
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::bench::{black_box, Bench};
@@ -130,6 +132,127 @@ fn bench_serve_load() -> Json {
             ]),
         ),
         ("runs", Json::Arr(runs)),
+    ])
+}
+
+/// One registry-load client: spreads its requests across the default
+/// route and both hosted models by round index, so the per-model queue
+/// counters in `BENCH_serve.json` all see traffic.
+fn registry_client(
+    addr: SocketAddr,
+    id: usize,
+    reqs: usize,
+    max_tokens: usize,
+    vocab: usize,
+) -> Vec<f64> {
+    let mut client =
+        Client::connect_timeout(addr, Duration::from_secs(60)).expect("connect");
+    let mut latencies = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let prompt: Vec<i32> =
+            (0..4).map(|j| ((id * 31 + i * 7 + j) % vocab) as i32).collect();
+        let mut req = ClientRequest::tokens(prompt).max_tokens(max_tokens);
+        req = match (id + i) % 3 {
+            0 => req, // default route: entry 0
+            1 => req.model("base"),
+            _ => req.model("spec"),
+        };
+        let resp = client.request(&req).expect("transport").expect("server error");
+        latencies.push(resp.latency_ms);
+    }
+    latencies
+}
+
+/// Registry load: a plain model and a draft-paired model behind ONE
+/// scheduler. Captures the speculative-decode counters and per-model
+/// queue depths the shutdown log reports. Returns the `spec` section of
+/// `BENCH_serve.json`.
+fn bench_serve_spec() -> Json {
+    let fast = std::env::var("FAAR_BENCH_FAST").is_ok();
+    let (n_clients, reqs, max_tokens) =
+        if fast { (4usize, 3usize, 8usize) } else { (8, 6, 16) };
+    let (vocab, seq_len) = (512, 64);
+    let fixed = Duration::from_micros(250);
+    let per_slot = Duration::from_micros(15);
+    let draft_fixed = Duration::from_micros(25);
+
+    let registry = ModelRegistry::new(vec![
+        ModelEntry {
+            name: "base".to_string(),
+            backend: SyntheticBackend::new(vocab, seq_len, 42).with_costs(fixed, per_slot),
+            spec: None,
+        },
+        ModelEntry {
+            name: "spec".to_string(),
+            backend: SyntheticBackend::new(vocab, seq_len, 43).with_costs(fixed, per_slot),
+            spec: Some(SpecDecoder::new(
+                SyntheticBackend::new(vocab, seq_len, 43)
+                    .with_divergence(0.15, 9)
+                    .with_costs(draft_fixed, Duration::from_micros(2)),
+                4,
+            )),
+        },
+    ])
+    .expect("registry");
+
+    println!("serve spec registry: {n_clients} clients x {reqs} reqs x {max_tokens} tokens");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let opts = ServeOptions {
+        max_batch: 4,
+        queue_depth: 256,
+        max_tokens_cap: 64,
+        models: registry.names(),
+        ..ServeOptions::default()
+    };
+    let t0 = Instant::now();
+    let sched = std::thread::scope(|s| {
+        for id in 0..n_clients {
+            s.spawn(move || registry_client(addr, id, reqs, max_tokens, vocab));
+        }
+        serve_on(&registry, listener, Some(n_clients), opts).expect("serve")
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let tok_s = (n_clients * reqs * max_tokens) as f64 / wall;
+    let spec = sched.spec;
+    println!(
+        "  {tok_s:>8.0} tok/s  accept {:.0}%  ({} drafted, {} verify passes)",
+        spec.accept_rate() * 100.0,
+        spec.drafted,
+        spec.verify_passes
+    );
+    let queues: Vec<Json> = sched
+        .model_queues
+        .iter()
+        .map(|q| {
+            Json::obj(vec![
+                ("model", Json::str(q.name.as_str())),
+                ("admitted", Json::num(q.admitted as f64)),
+                ("completed", Json::num(q.completed as f64)),
+                ("peak_depth", Json::num(q.peak_depth as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("n_clients", Json::num(n_clients as f64)),
+                ("reqs_per_client", Json::num(reqs as f64)),
+                ("max_tokens", Json::num(max_tokens as f64)),
+                ("models", Json::num(2.0)),
+                ("spec_k", Json::num(4.0)),
+                ("draft_fixed_cost_us", Json::num(draft_fixed.as_micros() as f64)),
+            ]),
+        ),
+        ("tokens_per_s", Json::Num(tok_s)),
+        ("completed", Json::num(sched.completed as f64)),
+        ("drafted", Json::num(spec.drafted as f64)),
+        ("accepted", Json::num(spec.accepted as f64)),
+        ("accept_rate", Json::Num(spec.accept_rate())),
+        ("verify_passes", Json::num(spec.verify_passes as f64)),
+        ("rounds", Json::num(spec.rounds as f64)),
+        ("model_queues", Json::Arr(queues)),
     ])
 }
 
@@ -385,10 +508,12 @@ fn main() {
     // (no artifacts or PJRT needed)
     let load = bench_serve_load();
     let mixed = bench_serve_mixed();
+    let spec = bench_serve_spec();
     let doc = Json::obj(vec![
         ("group", Json::str("serve")),
         ("load", load),
         ("mixed", mixed),
+        ("spec", spec),
     ]);
     match std::fs::write("BENCH_serve.json", format!("{}\n", doc.to_string_pretty())) {
         Ok(()) => println!("→ wrote BENCH_serve.json"),

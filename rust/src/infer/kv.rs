@@ -424,6 +424,41 @@ impl KvSeq {
         self.len = 0;
     }
 
+    /// Drop every cached token beyond `keep`, releasing pages that
+    /// become wholly unused — the rollback primitive speculative decode
+    /// uses to discard rejected draft tokens without rebuilding the
+    /// whole sequence.
+    ///
+    /// Returns the **actual** new length, which can be less than `keep`:
+    /// when the boundary lands inside a *shared* page (refcount > 1 —
+    /// an attached prefix page), the shared handle is released too and
+    /// the sequence shrinks to the previous page boundary, because a
+    /// shared page is immutable by contract and its tail slots could
+    /// never be rewritten. Callers re-prefill the gap (the backend's
+    /// `catch_up` does exactly that). A `keep >= len` is a no-op.
+    pub fn truncate(&mut self, pool: &mut KvPool, keep: usize) -> usize {
+        if keep >= self.len {
+            return self.len;
+        }
+        let pt = self.layout.page_tokens.max(1);
+        let mut need_pages = keep.div_ceil(pt);
+        for page in self.pages.drain(need_pages..) {
+            pool.release(page);
+        }
+        self.len = keep;
+        if keep % pt != 0 {
+            if let Some(last) = self.pages.last() {
+                if Arc::strong_count(last) > 1 {
+                    need_pages -= 1;
+                    let shared = self.pages.pop().expect("tail page just observed");
+                    pool.release(shared);
+                    self.len = need_pages * pt;
+                }
+            }
+        }
+        self.len
+    }
+
     /// Ensure the tail page is exclusively owned before it is written:
     /// when shared, its contents are copied into a fresh pool page and
     /// the shared handle is released. The backend shares only full
@@ -844,6 +879,67 @@ mod tests {
         let _held = a.page_handle(0);
         let row = vec![0.0f32; l.d_model];
         a.store_kv(3, 0, &row, &row);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_and_keeps_contents() {
+        let l = layout();
+        let mut pool = KvPool::new(l, 8);
+        let mut a = KvSeq::new(l);
+        // 10 tokens over 3 pages; tag each token so survivors are checkable
+        for t in 0..10 {
+            a.push(&mut pool).unwrap();
+            let (k, _) = a.kv_mut(t, 0);
+            k[0] = t as f32;
+        }
+        assert_eq!((a.len(), a.n_pages(), pool.outstanding()), (10, 3, 3));
+        // keep >= len is a no-op
+        assert_eq!(a.truncate(&mut pool, 10), 10);
+        assert_eq!(a.truncate(&mut pool, 99), 10);
+        assert_eq!((a.len(), a.n_pages()), (10, 3));
+        // mid-page boundary on an exclusively-owned tail: length shrinks
+        // exactly, the partial page stays
+        assert_eq!(a.truncate(&mut pool, 6), 6);
+        assert_eq!((a.len(), a.n_pages(), pool.outstanding()), (6, 2, 2));
+        for t in 0..6 {
+            assert_eq!(a.k(t, 0)[0], t as f32, "surviving token {t} lost its row");
+        }
+        // regrowing reuses the freed capacity and writes fresh slots
+        a.push(&mut pool).unwrap();
+        let (k, _) = a.kv_mut(6, 0);
+        k[0] = 60.0;
+        assert_eq!(a.k(6, 0)[0], 60.0);
+        assert_eq!(a.len(), 7);
+        // page-aligned truncate, then to zero
+        assert_eq!(a.truncate(&mut pool, 4), 4);
+        assert_eq!((a.len(), a.n_pages(), pool.outstanding()), (4, 1, 1));
+        assert_eq!(a.truncate(&mut pool, 0), 0);
+        assert_eq!((a.len(), a.n_pages(), pool.outstanding()), (0, 0, 0));
+    }
+
+    #[test]
+    fn truncate_into_shared_page_drops_to_page_boundary() {
+        let l = layout();
+        let mut pool = KvPool::new(l, 8);
+        let mut a = KvSeq::new(l);
+        a.reserve(&mut pool, 8).unwrap(); // two full pages
+        let mut b = KvSeq::new(l);
+        b.attach(a.page_handle(0));
+        b.attach(a.page_handle(1));
+        assert_eq!(pool.outstanding(), 2);
+        // keep=6 lands inside b's SHARED page 1: the shared handle cannot
+        // be rewritten, so b falls back to the 4-token page boundary
+        assert_eq!(b.truncate(&mut pool, 6), 4);
+        assert_eq!((b.len(), b.n_pages()), (4, 1));
+        assert_eq!(a.page_refs(1), 1, "b still holds the truncated shared page");
+        assert_eq!(pool.outstanding(), 2, "a's handles keep both pages alive");
+        // a page-aligned keep on a shared page needs no drop at all
+        assert_eq!(b.truncate(&mut pool, 4), 4);
+        assert_eq!(b.n_pages(), 1);
+        a.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 1, "b's attached page must survive a's clear");
+        b.clear(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
     }
 
     #[test]

@@ -65,7 +65,7 @@ use anyhow::{anyhow, bail, Result};
 pub use kernels::Linear;
 pub use kv::{KvFormat, KvLayout, KvPool, KvSeq};
 pub use prefix::{PrefixCache, PrefixStats};
-pub use preset::{native_manifest, quantize_store};
+pub use preset::{check_draft_compat, native_manifest, quantize_store};
 
 use crate::runtime::ModelConfig;
 use crate::serve::batch::{CacheStats, DecodeSlot, StepBackend};
@@ -1170,6 +1170,220 @@ impl NativeBackend {
                 Ok(0)
             }
             Err(e) => Err(e),
+        }
+    }
+
+    /// Take a slot's cache entry out of the registry — creating a cold
+    /// one if absent — so a spec-decode operation runs without holding
+    /// the map lock. Every taker must reinsert via [`Self::put_entry`]
+    /// on ALL exit paths or the slot's pages leak.
+    fn take_entry(&self, slot_id: u64) -> SlotCache {
+        let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+        seqs.remove(&slot_id).unwrap_or_else(|| SlotCache {
+            kv: KvSeq::new(self.layout),
+            history: Vec::new(),
+            scratch: RowScratch::new(),
+        })
+    }
+
+    fn put_entry(&self, slot_id: u64, entry: SlotCache) {
+        self.seqs.lock().expect("kv registry poisoned").insert(slot_id, entry);
+    }
+
+    /// One cached logits row for an arbitrary decode `window`, keyed on
+    /// `slot_id` — the single-sequence sibling of the batched
+    /// `StepBackend::step`, with the same coherence rules (cached prefix
+    /// reused, suffix prefilled, anything else rebuilt) and the same
+    /// uncached full-window fallback on pool exhaustion, so it never
+    /// fails a request for page pressure. The speculative decoder steps
+    /// the *draft* model through this, and uses it as the plain-step
+    /// fallback when drafting is not worthwhile. Bitwise identical to
+    /// what `step` would return for a slot with this window.
+    pub fn decode_row(&self, slot_id: u64, window: &[i32]) -> Result<Vec<f32>> {
+        if window.is_empty() {
+            bail!("decode_row on an empty window");
+        }
+        let cw = self.col_workers_full();
+        if !self.opts.use_cache {
+            return self.full_window(window, cw);
+        }
+        let mut entry = self.take_entry(slot_id);
+        let res = loop {
+            match self.catch_up(window, &mut entry, cw) {
+                Err(e)
+                    if e.downcast_ref::<kv::KvExhausted>().is_some()
+                        && self.evict_prefix_lru() =>
+                {
+                    continue;
+                }
+                other => break other,
+            }
+        };
+        let out = match res {
+            Ok((token, idx)) => {
+                let SlotCache { kv, history, scratch } = &mut entry;
+                match self.model.forward_rows(&mut [kv], &[(0, token, idx)], 0, scratch, cw) {
+                    Ok(mut rows) => {
+                        history.push(token);
+                        Ok(rows.pop().expect("single-row forward returned no row"))
+                    }
+                    Err(e) => {
+                        self.clear_entry(&mut entry);
+                        Err(e)
+                    }
+                }
+            }
+            Err(e) if e.downcast_ref::<kv::KvExhausted>().is_some() => {
+                self.clear_entry(&mut entry);
+                self.full_window(window, cw)
+            }
+            Err(e) => {
+                self.clear_entry(&mut entry);
+                Err(e)
+            }
+        };
+        self.put_entry(slot_id, entry);
+        out
+    }
+
+    /// The draft-verify pass: logits rows for `window`'s decode token
+    /// *and* each of `drafts` appended after it, computed in ONE batched
+    /// [`NativeModel::forward_rows`] call over `drafts.len() + 1`
+    /// consecutive positions of the slot's cached sequence. Row `i` is
+    /// bitwise identical to what sequential [`Self::decode_row`] calls
+    /// feeding `drafts[..i]` would return — the property that lets the
+    /// speculative decoder accept a matching prefix without changing the
+    /// output stream. On success the slot's cache holds
+    /// `window + drafts`; the caller rolls back rejected suffixes with
+    /// [`Self::truncate_slot`]. Pool exhaustion surfaces as a typed
+    /// `KvExhausted` error with the cache intact (rolled back to the
+    /// window prefix), so callers can fall back to a plain step.
+    pub fn verify_rows(
+        &self,
+        slot_id: u64,
+        window: &[i32],
+        drafts: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        if drafts.is_empty() {
+            return self.decode_row(slot_id, window).map(|r| vec![r]);
+        }
+        if window.is_empty() {
+            bail!("verify_rows on an empty window");
+        }
+        if window.len() + drafts.len() > self.model.cfg.seq_len {
+            bail!(
+                "verify window of {} + {} drafts overflows seq_len {}",
+                window.len(),
+                drafts.len(),
+                self.model.cfg.seq_len
+            );
+        }
+        for &t in drafts {
+            if t < 0 || (t as usize) >= self.model.cfg.vocab {
+                bail!("draft token id {t} outside [0, {})", self.model.cfg.vocab);
+            }
+        }
+        let cw = self.col_workers_full();
+        if !self.opts.use_cache {
+            // uncached reference path: one full-window recompute per row.
+            // Slow, but keeps the API total — the CLI gates spec decode
+            // on the cached backend.
+            let mut rows = Vec::with_capacity(drafts.len() + 1);
+            let mut w = window.to_vec();
+            rows.push(self.full_window(&w, cw)?);
+            for &d in drafts {
+                w.push(d);
+                rows.push(self.full_window(&w, cw)?);
+            }
+            return Ok(rows);
+        }
+        let mut entry = self.take_entry(slot_id);
+        let res = loop {
+            match self.catch_up(window, &mut entry, cw) {
+                Err(e)
+                    if e.downcast_ref::<kv::KvExhausted>().is_some()
+                        && self.evict_prefix_lru() =>
+                {
+                    continue;
+                }
+                other => break other,
+            }
+        };
+        let out = match res {
+            Ok((token, idx)) => {
+                let reserved = loop {
+                    let r = {
+                        let mut pool = self.pool.lock().expect("kv pool poisoned");
+                        entry.kv.reserve(&mut pool, drafts.len())
+                    };
+                    match r {
+                        Err(e)
+                            if e.downcast_ref::<kv::KvExhausted>().is_some()
+                                && self.evict_prefix_lru() =>
+                        {
+                            continue;
+                        }
+                        other => break other,
+                    }
+                };
+                match reserved {
+                    Ok(()) => {
+                        let mut rows_spec = Vec::with_capacity(drafts.len() + 1);
+                        rows_spec.push((0usize, token, idx));
+                        for (i, &d) in drafts.iter().enumerate() {
+                            rows_spec.push((0, d, idx + 1 + i));
+                        }
+                        let SlotCache { kv, history, scratch } = &mut entry;
+                        match self.model.forward_rows(&mut [kv], &rows_spec, 0, scratch, cw) {
+                            Ok(rows) => {
+                                history.push(token);
+                                history.extend_from_slice(drafts);
+                                Ok(rows)
+                            }
+                            Err(e) => {
+                                self.clear_entry(&mut entry);
+                                Err(e)
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // roll the dangling decode-token reservation back so
+                        // the cached window prefix survives for the fallback
+                        let keep = entry.history.len();
+                        let mut pool = self.pool.lock().expect("kv pool poisoned");
+                        let new_len = entry.kv.truncate(&mut pool, keep);
+                        drop(pool);
+                        entry.history.truncate(new_len);
+                        Err(e)
+                    }
+                }
+            }
+            Err(e) => {
+                // exhaustion included: verify has no uncached fallback of
+                // its own — the caller degrades to decode_row, which does
+                self.clear_entry(&mut entry);
+                Err(e)
+            }
+        };
+        self.put_entry(slot_id, entry);
+        out
+    }
+
+    /// Roll a slot's cache back to its first `keep` tokens — the
+    /// rejected-draft cleanup after a [`Self::verify_rows`] pass whose
+    /// proposals were not all accepted. Unknown slots are a no-op. The
+    /// cache may end up *shorter* than `keep` (a shared prefix page
+    /// cannot be truncated mid-page); the next catch-up re-prefills the
+    /// difference, so logits are unaffected either way.
+    pub fn truncate_slot(&self, slot_id: u64, keep: usize) {
+        let entry = self.seqs.lock().expect("kv registry poisoned").remove(&slot_id);
+        if let Some(mut e) = entry {
+            let new_len = {
+                let mut pool = self.pool.lock().expect("kv pool poisoned");
+                e.kv.truncate(&mut pool, keep)
+            };
+            e.history.truncate(new_len);
+            self.put_entry(slot_id, e);
         }
     }
 }

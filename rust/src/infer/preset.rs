@@ -62,14 +62,25 @@ pub fn native_config(
     })
 }
 
-/// The named presets from `configs.CONFIGS` (nano / tiny / small / med).
+/// The named presets from `configs.CONFIGS` (nano / tiny / small / med),
+/// plus the serving-only `*-draft` companions: each shares its target's
+/// vocabulary (a speculative draft must propose valid target token ids)
+/// at a fraction of the depth/width, sized for `--draft-model`. The
+/// draft presets have no python mirror — they exist for the native
+/// serving path only.
 pub fn preset_config(preset: &str) -> Result<ModelConfig> {
     let mut cfg = match preset {
         "nano" => native_config("nano", 256, 64, 2, 2, 64)?,
         "tiny" => native_config("tiny", 512, 128, 4, 4, 128)?,
         "small" => native_config("small", 1024, 192, 6, 6, 128)?,
         "med" => native_config("med", 4096, 384, 8, 8, 256)?,
-        other => bail!("unknown model preset '{other}' (nano|tiny|small|med)"),
+        "tiny-draft" => native_config("tiny-draft", 512, 64, 2, 2, 128)?,
+        "small-draft" => native_config("small-draft", 1024, 64, 2, 2, 128)?,
+        "med-draft" => native_config("med-draft", 4096, 96, 2, 2, 256)?,
+        other => bail!(
+            "unknown model preset '{other}' \
+             (nano|tiny|small|med|tiny-draft|small-draft|med-draft)"
+        ),
     };
     if preset == "nano" {
         cfg.train_batch = 4;
@@ -137,6 +148,37 @@ pub fn manifest_from_config(cfg: ModelConfig) -> Manifest {
 /// `artifacts/tiny/manifest.json`.
 pub fn native_manifest(preset: &str) -> Result<Manifest> {
     Ok(manifest_from_config(preset_config(preset)?))
+}
+
+/// Check that `draft` can propose tokens for `target` — speculative
+/// decoding requires one shared vocabulary (every draft proposal must be
+/// a valid target token id) and a draft window that can hold the
+/// target's sequences. Called at CLI parse time so `--draft-model nano
+/// --model tiny` (vocab 256 vs 512) fails before any weights are built;
+/// `ModelRegistry::new` re-checks vocab on the built backends as the
+/// backstop.
+pub fn check_draft_compat(target: &ModelConfig, draft: &ModelConfig) -> Result<()> {
+    if draft.vocab != target.vocab {
+        bail!(
+            "draft preset '{}' (vocab {}) cannot speculate for '{}' (vocab {}); \
+             draft and target must share one vocabulary",
+            draft.name,
+            draft.vocab,
+            target.name,
+            target.vocab
+        );
+    }
+    if draft.seq_len < target.seq_len {
+        bail!(
+            "draft preset '{}' window {} is shorter than target '{}' window {}; \
+             speculation would silently stop at the draft's horizon",
+            draft.name,
+            draft.seq_len,
+            target.name,
+            target.seq_len
+        );
+    }
+    Ok(())
 }
 
 /// RTN-quantize every `quantized` weight of `fp` through `format`'s
@@ -225,6 +267,26 @@ mod tests {
             assert_eq!(store.get("out_norm").unwrap().shape, vec![64]);
             assert_eq!(store.get("layers.w_down").unwrap().shape, vec![2, 192, 64]);
         }
+    }
+
+    #[test]
+    fn draft_presets_pair_with_their_targets() {
+        for (t, d) in [("tiny", "tiny-draft"), ("small", "small-draft"), ("med", "med-draft")] {
+            let target = preset_config(t).unwrap();
+            let draft = preset_config(d).unwrap();
+            check_draft_compat(&target, &draft).unwrap();
+            assert!(
+                draft.d_model < target.d_model && draft.n_layers < target.n_layers,
+                "draft '{d}' must be cheaper than its target '{t}'"
+            );
+        }
+        // mismatched vocab and short draft windows are rejected
+        let tiny = preset_config("tiny").unwrap();
+        let nano = preset_config("nano").unwrap();
+        assert!(check_draft_compat(&tiny, &nano).unwrap_err().to_string().contains("vocab"));
+        let mut short = preset_config("tiny-draft").unwrap();
+        short.seq_len = 64;
+        assert!(check_draft_compat(&tiny, &short).unwrap_err().to_string().contains("window"));
     }
 
     #[test]

@@ -21,12 +21,16 @@ use nvfp4_faar::data::tasks::TaskKind;
 use nvfp4_faar::formats::codec::FormatKind;
 use nvfp4_faar::infer::kernels::{cpu_features, kernel_path};
 use nvfp4_faar::infer::{
-    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
+    check_draft_compat, native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel,
+    NativeOptions,
 };
 use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
 use nvfp4_faar::runtime::Runtime;
-use nvfp4_faar::serve::{serve_backend, CodecKind, ServeOptions, SyntheticBackend, Transport};
+use nvfp4_faar::serve::{
+    serve_backend, CodecKind, ModelEntry, ModelRegistry, ServeOptions, SpecDecoder,
+    SyntheticBackend, Transport,
+};
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::cli::Args;
 use nvfp4_faar::{info, util, warn};
@@ -49,6 +53,8 @@ USAGE: faar <subcommand> [options]
             [--kv-page-tokens N] [--kv-format f32|e4m3 (native only)]
             [--prefix-cache (native only)] [--prefill-chunk-tokens N]
             [--no-kv] [--no-act-quant]
+            [--models NAME[=PRESET],... (native only)]
+            [--draft-model PRESET] [--spec-k N (default 4)]
             [--transport tcp|http|auto] [--codec line|incremental]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
@@ -64,6 +70,16 @@ any request can override them with a protocol-v2 "params" object, and
 KV pages between requests with a common prompt prefix (bit-identical
 outputs); --prefill-chunk-tokens N bounds per-step prompt prefill so a
 long prompt cannot stall decoding neighbours (0 = off).
+
+--models hosts several native models behind one server (each with its
+own KV pool and queue counters); requests pick one with a "model"
+field, names default to their preset, and entry 0 is the default for
+requests that name none (all presets must share one vocabulary).
+--draft-model pairs a small draft preset with the default model and
+decodes it speculatively: the draft proposes --spec-k tokens, the
+target verifies them in one multi-row pass, and the emitted stream is
+bit-identical to plain decoding. Needs the KV cache (conflicts with
+--no-kv).
 
 --transport selects the wire protocol: tcp is newline-delimited JSON
 (the reference protocol), http serves POST /v1/generate with the same
@@ -293,6 +309,9 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
             CodecKind::parse(&name)
                 .ok_or_else(|| anyhow!("unknown --codec '{name}' (line|incremental)"))?
         },
+        // the registry path fills this in with the hosted names so the
+        // protocol layer can validate request "model" fields
+        models: Vec::new(),
     };
     // reject bad knob combinations at parse time, not deep in the engine
     opts.validate()?;
@@ -302,6 +321,13 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
             "--method applies to the xla backend only; the native backend serves \
              RTN-packed weights (pick the element format with --format)"
         );
+    }
+    if backend != "native" {
+        for flag in ["models", "draft-model", "spec-k"] {
+            if args.get(flag).is_some() {
+                bail!("--{flag} applies to the native serve backend only");
+            }
+        }
     }
     match backend.as_str() {
         "xla" => {
@@ -355,14 +381,90 @@ fn default_gen_params(args: &Args, seed: u64) -> Result<nvfp4_faar::serve::GenPa
 
 /// The artifact-free serving path: deterministic (or checkpointed)
 /// weights, pure-rust RTN quantization through the chosen codec, and the
-/// native fused-kernel backend with a paged KV cache.
+/// native fused-kernel backend with a paged KV cache. With `--models`
+/// or `--draft-model` the backends go behind a [`ModelRegistry`]; the
+/// bare single-model case keeps the direct path.
 fn serve_native(
     cfg: PipelineConfig,
     args: &Args,
     addr: &str,
     max_conns: Option<usize>,
-    opts: ServeOptions,
+    mut opts: ServeOptions,
 ) -> Result<()> {
+    let draft = args.get("draft-model").map(|s| s.to_string());
+    let spec_k = args.usize_or("spec-k", 4)?;
+    if spec_k == 0 {
+        bail!("--spec-k must be >= 1");
+    }
+    if args.get("spec-k").is_some() && draft.is_none() {
+        bail!("--spec-k requires --draft-model");
+    }
+    if draft.is_some() && args.flag("no-kv") {
+        bail!("--draft-model needs the KV cache for draft-verify rollback; drop --no-kv");
+    }
+    // --models NAME[=PRESET],... — names default to their preset
+    let hosted: Vec<(String, String)> = match args.get("models") {
+        Some(list) => {
+            let mut out = Vec::new();
+            for item in list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()) {
+                let (name, preset) = match item.split_once('=') {
+                    Some((n, p)) => (n.trim().to_string(), p.trim().to_string()),
+                    None => (item.to_string(), item.to_string()),
+                };
+                if name.is_empty() || preset.is_empty() {
+                    bail!("--models entries are NAME or NAME=PRESET, got '{item}'");
+                }
+                out.push((name, preset));
+            }
+            if out.is_empty() {
+                bail!("--models needs at least one NAME[=PRESET] entry");
+            }
+            out
+        }
+        None => vec![(cfg.model.clone(), cfg.model.clone())],
+    };
+    if args.get("models").is_none() && draft.is_none() {
+        // bare single-model serving: no registry indirection on the path
+        let backend = build_native_backend(&cfg, &cfg.model, args, &opts)?;
+        return serve_backend(&backend, addr, max_conns, opts).map(|_| ());
+    }
+    if let Some(dp) = &draft {
+        // fail a bad pairing before any weights are built or quantized
+        check_draft_compat(&native_manifest(&hosted[0].1)?.config, &native_manifest(dp)?.config)?;
+    }
+    let mut entries = Vec::new();
+    for (i, (name, preset)) in hosted.iter().enumerate() {
+        let backend = build_native_backend(&cfg, preset, args, &opts)?;
+        // the draft pairs with the default model (entry 0)
+        let spec = match (&draft, i) {
+            (Some(dp), 0) => {
+                let db = build_native_backend(&cfg, dp, args, &opts)?;
+                info!("model '{name}' decodes speculatively: draft preset {dp}, k={spec_k}");
+                Some(SpecDecoder::new(db, spec_k))
+            }
+            _ => None,
+        };
+        entries.push(ModelEntry { name: name.clone(), backend, spec });
+    }
+    // rejects duplicate names and mixed vocabularies at startup
+    let registry = ModelRegistry::new(entries)?;
+    opts.models = registry.names();
+    info!("serving {} hosted model(s): {}", opts.models.len(), opts.models.join(", "));
+    serve_backend(&registry, addr, max_conns, opts).map(|_| ())
+}
+
+/// Build one native backend for `preset`: checkpoint (or deterministic
+/// init) weights, RTN packing through the chosen codec, and a paged KV
+/// pool sized off the serve knobs. Factored out so the multi-model
+/// registry path builds one per hosted preset.
+fn build_native_backend(
+    cfg: &PipelineConfig,
+    preset: &str,
+    args: &Args,
+    opts: &ServeOptions,
+) -> Result<NativeBackend> {
+    let mut cfg = cfg.clone();
+    cfg.model = preset.to_string();
     let manifest = native_manifest(&cfg.model)?;
     let ckpt = Workbench::ckpt_path(&cfg);
     let fp = if ckpt.exists() {
@@ -447,7 +549,7 @@ fn serve_native(
         kernel_path().name(),
         cpu_features()
     );
-    serve_backend(&backend, addr, max_conns, opts).map(|_| ())
+    Ok(backend)
 }
 
 fn cmd_info(cfg: PipelineConfig) -> Result<()> {

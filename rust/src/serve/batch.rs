@@ -133,13 +133,18 @@ impl DecodeSlot {
     /// Select the next token from a logits row (greedy or sampled, per
     /// the slot's [`GenParams`]), apply the stop conditions, and advance
     /// the window. `vmax` clamps the selection to the backend vocab.
-    pub fn accept(&mut self, logits: &[f32], vmax: i32) {
+    ///
+    /// Returns the emitted token, or `None` when a stop token ended the
+    /// request without emitting — the speculative decoder compares this
+    /// against the draft's proposal to decide whether the next verify
+    /// row is still valid.
+    pub fn accept(&mut self, logits: &[f32], vmax: i32) -> Option<i32> {
         debug_assert!(self.remaining > 0, "accept on a finished slot");
         let next = (self.sampler.select(logits, &self.buf[..=self.pos]) as i32).min(vmax);
         if self.sampler.params().is_stop_token(next) {
             // a stop token ends the request without being emitted
             self.remaining = 0;
-            return;
+            return None;
         }
         self.advance(next);
         if self.sampler.params().stops_output(&self.out) {
@@ -147,6 +152,7 @@ impl DecodeSlot {
             // token frames always concatenate to the final response
             self.remaining = 0;
         }
+        Some(next)
     }
 
     /// Accept the next token: append to the output and advance the
@@ -163,6 +169,14 @@ impl DecodeSlot {
             self.buf.copy_within(1..t, 0);
             self.buf[t - 1] = next;
         }
+    }
+
+    /// Tokens this request may still emit before its budget is spent —
+    /// the speculative decoder clamps its draft length to
+    /// `remaining - 1` so the verify pass never computes rows the slot
+    /// could not accept.
+    pub fn remaining(&self) -> usize {
+        self.remaining
     }
 
     /// True once the token budget is spent or a stop condition matched.
@@ -219,6 +233,42 @@ pub trait StepBackend {
     fn cache_stats(&self) -> Option<CacheStats> {
         None
     }
+
+    /// Bind `slot` to the model named in its request *before* its first
+    /// prefill or step. Multi-model backends (`serve::spec::ModelRegistry`)
+    /// record the route keyed on [`DecodeSlot::id`] and reject unknown
+    /// names; single-model backends (the default) accept anything the
+    /// protocol validation let through and route everything to
+    /// themselves. Must be paired with [`Self::release`] — the registry
+    /// drops the route there.
+    fn bind_model(&self, _slot: &DecodeSlot, _model: Option<&str>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Take over one scheduler decode tick for the whole active
+    /// micro-batch. `None` (the default) tells the scheduler to run the
+    /// ordinary [`decode_step`]; `Some(result)` means the backend
+    /// advanced the slots itself — the registry uses this to route
+    /// same-model runs to their backends and to decode draft-paired
+    /// models speculatively (several tokens per tick). Implementations
+    /// must preserve the decode-core invariant: each slot's emitted
+    /// stream is exactly what sequential [`decode_step`] ticks would
+    /// have produced.
+    fn spec_step(&self, _slots: &mut [DecodeSlot]) -> Option<Result<()>> {
+        None
+    }
+
+    /// Speculative-decode counters for the serve stats (`None` when the
+    /// backend never drafts — the default).
+    fn spec_stats(&self) -> Option<super::spec::SpecStats> {
+        None
+    }
+
+    /// Per-model admission/queue counters for the serve stats (empty
+    /// when the backend hosts a single anonymous model — the default).
+    fn model_queue_stats(&self) -> Vec<super::spec::ModelQueueStats> {
+        Vec::new()
+    }
 }
 
 /// Backend cache/pool counters surfaced into `SchedStats`, the serve
@@ -255,7 +305,7 @@ pub fn decode_step<B: StepBackend + ?Sized>(backend: &B, slots: &mut [DecodeSlot
         if slot.done() {
             continue;
         }
-        slot.accept(&row, vmax);
+        let _ = slot.accept(&row, vmax);
     }
     Ok(())
 }
@@ -441,6 +491,14 @@ pub struct SyntheticBackend {
     /// prompt tokens already prefilled, per slot id (only maintained
     /// when a prefill cost is configured)
     prefilled: Mutex<HashMap<u64, usize>>,
+    /// fraction of (token, position) pairs whose argmax is
+    /// deterministically flipped to a pseudo-random other token — turns
+    /// this backend into an imperfect *draft* of the same-seed original
+    /// with a tunable expected accept rate (see [`Self::with_divergence`])
+    divergence: f32,
+    /// salt for the divergence hash, so different drafts of one target
+    /// disagree at different positions
+    divergence_salt: u64,
 }
 
 impl SyntheticBackend {
@@ -454,6 +512,8 @@ impl SyntheticBackend {
             per_slot_cost: Duration::ZERO,
             per_prefill_token: Duration::ZERO,
             prefilled: Mutex::new(HashMap::new()),
+            divergence: 0.0,
+            divergence_salt: 0,
         }
     }
 
@@ -461,6 +521,19 @@ impl SyntheticBackend {
     pub fn with_costs(mut self, fixed: Duration, per_slot: Duration) -> SyntheticBackend {
         self.fixed_cost = fixed;
         self.per_slot_cost = per_slot;
+        self
+    }
+
+    /// Make this backend an imperfect draft of the same-seed original:
+    /// a deterministic `p` fraction of (last token, position) pairs get
+    /// their argmax flipped to a pseudo-random other token, everything
+    /// else stays bitwise identical. A speculative pairing of
+    /// `new(v, t, s)` as target with `new(v, t, s).with_divergence(p, salt)`
+    /// as draft therefore has an expected per-token accept rate of about
+    /// `1 - p`, which is what the spec-decode bench dials.
+    pub fn with_divergence(mut self, p: f32, salt: u64) -> SyntheticBackend {
+        self.divergence = p;
+        self.divergence_salt = salt;
         self
     }
 
@@ -477,23 +550,41 @@ impl SyntheticBackend {
         slot.pos.saturating_sub(done)
     }
 
-    fn row(&self, last: i32, pos: usize) -> Vec<f32> {
+    pub(crate) fn row(&self, last: i32, pos: usize) -> Vec<f32> {
         let mut x = (last as u64)
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add((pos as u64) << 32)
             ^ self.seed;
-        (0..self.vocab)
+        let mut row: Vec<f32> = (0..self.vocab)
             .map(|_| {
                 x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
                 ((x >> 33) as f32) / (u32::MAX as f32)
             })
-            .collect()
+            .collect();
+        if self.divergence > 0.0 && !row.is_empty() {
+            // splitmix-style avalanche over (last, pos, salt): the flip
+            // decision and the flip target are both deterministic, so
+            // repeated decodes of one stream disagree with the base
+            // model at exactly the same positions every run
+            let mut h = (last as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+                ^ ((pos as u64) << 1).wrapping_mul(0x9FB2_1C65_1E98_DF25)
+                ^ self.divergence_salt;
+            h ^= h >> 30;
+            h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 27;
+            if ((h >> 40) as f32) / ((1u64 << 24) as f32) < self.divergence {
+                // base entries all lie in [0, 1): 2.0 is an unambiguous argmax
+                let flip = (h as usize) % row.len();
+                row[flip] = 2.0;
+            }
+        }
+        row
     }
 }
 
 /// Busy-wait (rather than sleep) so simulated step costs in the tens of
 /// microseconds stay accurate — OS sleep granularity is far coarser.
-fn spin(d: Duration) {
+pub(crate) fn spin(d: Duration) {
     if d.is_zero() {
         return;
     }
@@ -750,6 +841,31 @@ mod tests {
     fn slot_rejects_invalid_params() {
         let bad = GenParams { temperature: f32::NAN, ..GenParams::default() };
         assert!(DecodeSlot::with_params(&[1], 4, 8, bad).is_err());
+    }
+
+    #[test]
+    fn divergence_flips_argmax_at_roughly_the_dialed_rate() {
+        let base = SyntheticBackend::new(64, 8, 7);
+        let draft = SyntheticBackend::new(64, 8, 7).with_divergence(0.25, 99);
+        let mut flipped = 0usize;
+        let total = 4000usize;
+        for i in 0..total {
+            let (last, pos) = ((i % 64) as i32, i % 8);
+            let a = argmax(&base.row(last, pos));
+            let d = argmax(&draft.row(last, pos));
+            if a != d {
+                flipped += 1;
+            }
+        }
+        let rate = flipped as f64 / total as f64;
+        // p=0.25 minus the ~1/64 chance the flip target IS the argmax;
+        // generous bounds — this pins the knob's order of magnitude
+        assert!((0.12..=0.38).contains(&rate), "divergence rate {rate} out of range");
+        // zero divergence stays bitwise identical to the base stream
+        let plain = SyntheticBackend::new(64, 8, 7).with_divergence(0.0, 99);
+        for i in 0..64 {
+            assert_eq!(base.row(i as i32, i % 8), plain.row(i as i32, i % 8));
+        }
     }
 
     #[test]

@@ -60,6 +60,8 @@ pub struct ClientRequest {
     pub stop: Vec<String>,
     /// request incremental token frames
     pub stream: bool,
+    /// hosted model to route to (`"model"`; server default when `None`)
+    pub model: Option<String>,
 }
 
 impl ClientRequest {
@@ -110,6 +112,12 @@ impl ClientRequest {
         self
     }
 
+    /// Route the request to a named hosted model (`--models` servers).
+    pub fn model(mut self, name: impl Into<String>) -> ClientRequest {
+        self.model = Some(name.into());
+        self
+    }
+
     /// Serialize to one protocol line (no trailing newline).
     pub fn to_line(&self) -> String {
         let mut fields: Vec<(&str, Json)> = Vec::new();
@@ -157,6 +165,9 @@ impl ClientRequest {
         }
         if self.stream {
             fields.push(("stream", Json::Bool(true)));
+        }
+        if let Some(m) = &self.model {
+            fields.push(("model", Json::str(m.as_str())));
         }
         Json::obj(fields).to_string()
     }
@@ -359,6 +370,19 @@ impl Client {
                 Line::Reply(r) => return Ok(r),
             }
         }
+    }
+
+    /// Ask the server to cancel request `seq` on this connection
+    /// (`{"cancel": seq}` control frame). JSONL only — the control
+    /// frame consumes no seq and gets no reply of its own; the
+    /// cancelled request's slot answers with a structured `cancelled`
+    /// error if it had not already completed. HTTP clients cancel by
+    /// disconnecting instead.
+    pub fn cancel(&mut self, seq: u64) -> Result<()> {
+        if self.mode != WireMode::Jsonl {
+            bail!("cancel frames are a JSONL-transport control message");
+        }
+        self.send_raw(&format!("{{\"cancel\":{seq}}}"))
     }
 
     /// Shut the connection down abruptly (disconnect-mid-decode tests).

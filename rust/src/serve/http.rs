@@ -60,7 +60,7 @@ pub(crate) fn status_for(result: &Result<Decoded, ServeError>) -> u16 {
             "bad_json" | "bad_request" | "bad_params" | "bad_token" | "empty_prompt" => 400,
             "length_required" => 411,
             "oversized" => 413,
-            "not_found" => 404,
+            "not_found" | "unknown_model" => 404,
             "method_not_allowed" => 405,
             _ => 500,
         },
@@ -372,7 +372,7 @@ pub(crate) fn reader_loop(
         seq += 1;
         progress.issued.store(seq, Ordering::Release);
         match outcome {
-            Ok(ParsedRequest { prompt, max_tokens, params, stream: sse }) => {
+            Ok(ParsedRequest { prompt, max_tokens, params, stream: sse, model }) => {
                 // declare the framing mode first: writer-queue order
                 // guarantees the writer knows before any frame arrives
                 if w_tx.send(WriterMsg::Mode { seq: this, sse }).is_err() {
@@ -386,6 +386,7 @@ pub(crate) fn reader_loop(
                     max_tokens,
                     params,
                     stream: sse,
+                    model,
                     enqueued: Instant::now(),
                 };
                 if req_tx.send(req).is_err() {
@@ -449,6 +450,7 @@ mod tests {
         assert_eq!(s("length_required"), 411);
         assert_eq!(s("oversized"), 413);
         assert_eq!(s("not_found"), 404);
+        assert_eq!(s("unknown_model"), 404);
         assert_eq!(s("method_not_allowed"), 405);
         assert_eq!(s("backend"), 500);
     }

@@ -64,6 +64,7 @@ pub mod codec;
 pub mod http;
 pub mod sampling;
 pub mod scheduler;
+pub mod spec;
 
 use std::collections::{BTreeMap, HashSet};
 use std::io::{ErrorKind, Read as _, Write as _};
@@ -82,6 +83,9 @@ pub use client::Client;
 pub use codec::CodecKind;
 pub use sampling::{GenParams, Sampler};
 pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions, Transport};
+pub use spec::{
+    spec_generate, ModelEntry, ModelQueueStats, ModelRegistry, SpecDecoder, SpecModel, SpecStats,
+};
 use codec::{CodecLimits, DecodeEvent, FrameEncoder as _, LineEncoder, SseEncoder};
 use scheduler::{DecodeRequest, Decoded, WriterMsg};
 
@@ -189,6 +193,9 @@ pub struct ParsedRequest {
     pub params: GenParams,
     /// emit incremental token frames while decoding
     pub stream: bool,
+    /// validated model name from the v2 `"model"` field (`None` routes
+    /// to the server's default model)
+    pub model: Option<String>,
 }
 
 /// Parse and validate one request line (v1 bare lines or v2 with
@@ -250,7 +257,47 @@ pub fn parse_request(
             .as_bool()
             .map_err(|_| ServeError::new("bad_request", "'stream' must be a boolean"))?,
     };
-    Ok(ParsedRequest { prompt, max_tokens, params, stream })
+    // the "model" field routes to a registry entry; validated HERE so an
+    // unknown name is a structured rejection (HTTP 404) before it can
+    // occupy a scheduler slot
+    let model = match req.get("model") {
+        None => None,
+        Some(v) => {
+            let name = v
+                .as_str()
+                .map_err(|_| ServeError::new("bad_request", "'model' must be a string"))?;
+            if !opts.models.iter().any(|m| m == name) {
+                return Err(ServeError::new(
+                    "unknown_model",
+                    if opts.models.is_empty() {
+                        format!("unknown model '{name}': this server hosts no named models")
+                    } else {
+                        format!("unknown model '{name}'; hosted: {}", opts.models.join(", "))
+                    },
+                ));
+            }
+            Some(name.to_string())
+        }
+    };
+    Ok(ParsedRequest { prompt, max_tokens, params, stream, model })
+}
+
+/// Parse a `{"cancel": N}` control frame (TCP transport): `N` is the
+/// connection-local request sequence number to evict. Control frames
+/// consume no sequence number and get no acknowledgement — the
+/// cancelled request itself answers with a structured `cancelled`
+/// error (or its normal response, if it won the race). Anything that
+/// is not exactly a one-key `cancel` object is NOT a control frame and
+/// flows on to request parsing.
+pub fn parse_cancel(frame: &str) -> Option<u64> {
+    let v = Json::parse(frame).ok()?;
+    let obj = v.as_obj().ok()?;
+    let [(key, val)] = obj else { return None };
+    if key.as_str() != "cancel" {
+        return None;
+    }
+    let x = val.as_f64().ok()?;
+    (x.fract() == 0.0 && (0.0..=u64::MAX as f64).contains(&x)).then_some(x as u64)
 }
 
 /// Validate a JSON array of token ids (rejects non-integers, negatives,
@@ -486,6 +533,26 @@ pub fn serve_on<B: StepBackend + ?Sized>(
         stats.budget_utilization() * 100.0,
         stats.prefill_chunks
     );
+    if stats.spec.rounds > 0 {
+        crate::info!(
+            "serve spec: {} drafted, {} accepted ({:.1}% accept rate), {} verify passes \
+             over {} rounds",
+            stats.spec.drafted,
+            stats.spec.accepted,
+            stats.spec.accept_rate() * 100.0,
+            stats.spec.verify_passes,
+            stats.spec.rounds
+        );
+    }
+    for q in &stats.model_queues {
+        crate::info!(
+            "serve model '{}': {} admitted, {} completed, peak queue depth {}",
+            q.name,
+            q.admitted,
+            q.completed,
+            q.peak_depth
+        );
+    }
     Ok(stats)
 }
 
@@ -541,8 +608,11 @@ fn accept_loop(
                     let opts = opts.clone();
                     let wg = wg.clone();
                     let tok = tok.clone();
+                    let registry = registry.clone();
                     spawn_named(format!("serve-reader-{conn}"), move || {
-                        reader_loop(stream, conn, &peer, req_tx, w_tx, &opts, &tok, &progress);
+                        reader_loop(
+                            stream, conn, &peer, req_tx, w_tx, &registry, &opts, &tok, &progress,
+                        );
                         drop(wg);
                     });
                 }
@@ -579,12 +649,14 @@ struct ConnProgress {
 /// `--transport`, or sniffed from the first bytes under `auto`), then
 /// runs the matching read loop. Both loops end by telling the writer
 /// exactly how many responses it still owes.
+#[allow(clippy::too_many_arguments)]
 fn reader_loop(
     mut stream: TcpStream,
     conn: u64,
     peer: &str,
     req_tx: SyncSender<DecodeRequest>,
     w_tx: SyncSender<WriterMsg>,
+    registry: &Registry,
     opts: &ServeOptions,
     tok: &Tokenizer,
     progress: &ConnProgress,
@@ -610,7 +682,7 @@ fn reader_loop(
         }
         http::reader_loop(stream, first, conn, peer, &req_tx, &w_tx, opts, tok, progress);
     } else {
-        jsonl_reader_loop(stream, first, conn, peer, &req_tx, &w_tx, opts, tok, progress);
+        jsonl_reader_loop(stream, first, conn, peer, &req_tx, &w_tx, registry, opts, tok, progress);
     }
 }
 
@@ -676,6 +748,7 @@ fn jsonl_reader_loop(
     peer: &str,
     req_tx: &SyncSender<DecodeRequest>,
     w_tx: &SyncSender<WriterMsg>,
+    registry: &Registry,
     opts: &ServeOptions,
     tok: &Tokenizer,
     progress: &ConnProgress,
@@ -690,14 +763,24 @@ fn jsonl_reader_loop(
     'conn: loop {
         for ev in events.drain(..) {
             let outcome = match ev {
-                DecodeEvent::Frame(frame) => parse_request(&frame, tok, vocab, opts),
+                DecodeEvent::Frame(frame) => {
+                    // control frames consume no sequence number: the
+                    // cancellation is recorded against the connection and
+                    // the scheduler evicts the slot at its next tick (or
+                    // refuses admission, if the request is still queued)
+                    if let Some(id) = parse_cancel(&frame) {
+                        registry.request_cancel(conn, id);
+                        continue;
+                    }
+                    parse_request(&frame, tok, vocab, opts)
+                }
                 DecodeEvent::Reject(e) => Err(e),
             };
             let this = seq;
             seq += 1;
             progress.issued.store(seq, Ordering::Release);
             match outcome {
-                Ok(ParsedRequest { prompt, max_tokens, params, stream }) => {
+                Ok(ParsedRequest { prompt, max_tokens, params, stream, model }) => {
                     let req = DecodeRequest {
                         conn,
                         seq: this,
@@ -705,6 +788,7 @@ fn jsonl_reader_loop(
                         max_tokens,
                         params,
                         stream,
+                        model,
                         enqueued: Instant::now(),
                     };
                     if req_tx.send(req).is_err() {
@@ -1072,6 +1156,42 @@ mod tests {
             parse_request(r#"{"tokens":[1],"stream":"yes"}"#, &tok, 64, &o).unwrap_err().code,
             "bad_request"
         );
+    }
+
+    #[test]
+    fn parse_model_field_validates_against_hosted_names() {
+        let tok = Tokenizer::new(64);
+        let hosted = ServeOptions { models: vec!["base".into(), "alt".into()], ..opts() };
+        let r = parse_request(r#"{"tokens":[1],"model":"alt"}"#, &tok, 64, &hosted).unwrap();
+        assert_eq!(r.model.as_deref(), Some("alt"));
+        // no model field → default routing
+        let r = parse_request(r#"{"tokens":[1]}"#, &tok, 64, &hosted).unwrap();
+        assert_eq!(r.model, None);
+        // unknown name → structured unknown_model naming the hosted set
+        let e = parse_request(r#"{"tokens":[1],"model":"nope"}"#, &tok, 64, &hosted).unwrap_err();
+        assert_eq!(e.code, "unknown_model");
+        assert!(e.message.contains("base"), "message should list hosted models: {e:?}");
+        // any model name on a single-model server is unknown
+        let e = parse_request(r#"{"tokens":[1],"model":"base"}"#, &tok, 64, &opts()).unwrap_err();
+        assert_eq!(e.code, "unknown_model");
+        // wrong type is a bad_request, not a routing miss
+        let e = parse_request(r#"{"tokens":[1],"model":3}"#, &tok, 64, &hosted).unwrap_err();
+        assert_eq!(e.code, "bad_request");
+    }
+
+    #[test]
+    fn parse_cancel_accepts_only_strict_control_frames() {
+        assert_eq!(parse_cancel(r#"{"cancel":3}"#), Some(3));
+        assert_eq!(parse_cancel(r#"{"cancel":0}"#), Some(0));
+        // anything that is not exactly a one-key integer cancel object
+        // must flow on to request parsing instead
+        assert_eq!(parse_cancel(r#"{"cancel":3,"x":1}"#), None);
+        assert_eq!(parse_cancel(r#"{"cancel":-1}"#), None);
+        assert_eq!(parse_cancel(r#"{"cancel":1.5}"#), None);
+        assert_eq!(parse_cancel(r#"{"cancel":"now"}"#), None);
+        assert_eq!(parse_cancel(r#"{"tokens":[1]}"#), None);
+        assert_eq!(parse_cancel("[3]"), None);
+        assert_eq!(parse_cancel("not json"), None);
     }
 
     #[test]

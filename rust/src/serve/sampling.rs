@@ -16,7 +16,13 @@
 //!   same seed over the same logits sequence reproduces the same tokens
 //!   — across runs, and identically for batched vs sequential decode
 //!   (the scheduler carries each slot's sampler across micro-batched
-//!   steps; batch composition never touches it).
+//!   steps; batch composition never touches it). The one-draw-per-token
+//!   invariant is also what makes speculative decoding
+//!   ([`super::spec`]) *exact* rather than merely distribution-
+//!   preserving: a verify pass feeds the slot the same logits rows in
+//!   the same order sequential decoding would, so the sampler's RNG
+//!   stream — and therefore every emitted token — is bit-identical
+//!   whether or not a draft proposed it.
 //!
 //! Selection pipeline (applied in this order, skipped entirely for
 //! greedy): repetition penalty over the visible token window → divide by

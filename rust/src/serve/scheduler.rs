@@ -34,7 +34,7 @@
 //!   prompt at once. Chunking never changes tokens: the backend's next
 //!   step simply finds more of the window already cached.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{Shutdown, TcpStream};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Condvar, Mutex};
@@ -45,6 +45,7 @@ use anyhow::{bail, Result};
 use super::batch::{decode_step, CacheStats, DecodeSlot, StepBackend};
 use super::codec::CodecKind;
 use super::sampling::GenParams;
+use super::spec::{ModelQueueStats, SpecStats};
 
 /// Which wire transport the serve listener speaks.
 ///
@@ -114,6 +115,11 @@ pub struct ServeOptions {
     /// frame decoder for JSONL connections (`--codec line|incremental`);
     /// HTTP bodies always use the incremental decoder
     pub codec: CodecKind,
+    /// names of the hosted models (`--models a=nano,b=tiny`); empty in
+    /// single-model mode, where requests must not carry a `"model"`
+    /// field naming anything (the protocol layer rejects unknown names
+    /// with a structured `unknown_model` error before admission)
+    pub models: Vec<String>,
 }
 
 impl Default for ServeOptions {
@@ -129,6 +135,7 @@ impl Default for ServeOptions {
             prefill_chunk_tokens: 0,
             transport: Transport::Tcp,
             codec: CodecKind::Line,
+            models: Vec::new(),
         }
     }
 }
@@ -189,6 +196,10 @@ pub struct DecodeRequest {
     pub params: GenParams,
     /// emit incremental token frames while the request decodes
     pub stream: bool,
+    /// hosted model the request targets (`None` = the default model);
+    /// validated against the hosted set by the protocol layer, re-checked
+    /// by [`StepBackend::bind_model`] at admission as the backstop
+    pub model: Option<String>,
     /// when the reader enqueued the request (latency accounting)
     pub enqueued: Instant,
 }
@@ -252,6 +263,9 @@ pub enum WriterMsg {
 struct ConnEntry {
     tx: SyncSender<WriterMsg>,
     stream: Option<TcpStream>,
+    /// request seqs the client asked to cancel (`{"cancel": seq}`),
+    /// consumed by the scheduler at the next step boundary
+    cancels: HashSet<u64>,
 }
 
 /// Routes scheduler responses back to connection writers. Connections
@@ -268,7 +282,10 @@ impl Registry {
     /// force-disconnect a client whose writer queue stopped draining;
     /// `None` is fine for in-process tests.
     pub fn register(&self, conn: u64, tx: SyncSender<WriterMsg>, stream: Option<TcpStream>) {
-        self.conns.lock().expect("registry poisoned").insert(conn, ConnEntry { tx, stream });
+        self.conns
+            .lock()
+            .expect("registry poisoned")
+            .insert(conn, ConnEntry { tx, stream, cancels: HashSet::new() });
     }
 
     /// Remove a connection (its in-flight slots cancel at the next step).
@@ -290,6 +307,30 @@ impl Registry {
     /// True when no connections are live.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Record a client-side cancellation of request `seq` on `conn`
+    /// (`{"cancel": seq}` control frame). The scheduler consumes it with
+    /// [`Registry::take_cancel`] at the next step boundary — before the
+    /// request's first step if it has not been admitted yet, mid-decode
+    /// otherwise. The per-connection set is capped so a client spamming
+    /// cancel frames for never-issued seqs cannot grow memory unboundedly.
+    pub fn request_cancel(&self, conn: u64, seq: u64) {
+        let mut conns = self.conns.lock().expect("registry poisoned");
+        if let Some(e) = conns.get_mut(&conn) {
+            if e.cancels.len() < 1024 {
+                e.cancels.insert(seq);
+            }
+        }
+    }
+
+    /// Consume a pending cancellation for (`conn`, `seq`), returning
+    /// whether one was recorded. Consuming is what makes cancellation
+    /// exactly-once: admission and the in-flight sweep both check, but
+    /// only one of them can observe the entry.
+    pub fn take_cancel(&self, conn: u64, seq: u64) -> bool {
+        let mut conns = self.conns.lock().expect("registry poisoned");
+        conns.get_mut(&conn).map(|e| e.cancels.remove(&seq)).unwrap_or(false)
     }
 
     fn sender(&self, conn: u64) -> Option<SyncSender<WriterMsg>> {
@@ -319,7 +360,7 @@ impl Registry {
 }
 
 /// Counters the engine reports when it exits (tests assert on these).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct SchedStats {
     /// decode steps executed
     pub steps: u64,
@@ -345,6 +386,14 @@ pub struct SchedStats {
     /// backend cache/pool counters ([`StepBackend::cache_stats`]),
     /// captured when the engine drains
     pub cache: CacheStats,
+    /// speculative-decoding counters ([`StepBackend::spec_stats`]),
+    /// captured when the engine drains; all-zero when the backend does
+    /// not speculate
+    pub spec: SpecStats,
+    /// per-model admission/completion/queue-depth counters
+    /// ([`StepBackend::model_queue_stats`]), captured when the engine
+    /// drains; empty for single-model backends
+    pub model_queues: Vec<ModelQueueStats>,
 }
 
 impl SchedStats {
@@ -410,6 +459,8 @@ pub fn run<B: StepBackend + ?Sized>(
                     Err(_) => {
                         // queue closed, nothing in flight
                         stats.cache = backend.cache_stats().unwrap_or_default();
+                        stats.spec = backend.spec_stats().unwrap_or_default();
+                        stats.model_queues = backend.model_queue_stats();
                         return Ok(stats);
                     }
                 }
@@ -419,19 +470,29 @@ pub fn run<B: StepBackend + ?Sized>(
                     Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
                 }
             };
-            admit(req, seq_len, chunk, registry, &mut slots, &mut meta, &mut stats);
+            admit(backend, req, seq_len, chunk, registry, &mut slots, &mut meta, &mut stats);
         }
         stats.peak_batch = stats.peak_batch.max(slots.len());
 
         // cancel slots whose connection already went away — including
         // one admitted and dropped before its first step. The backend is
         // told on every cancellation so per-slot state (KV cache pages)
-        // is freed instead of leaking for the life of the process.
+        // is freed instead of leaking for the life of the process. An
+        // explicit `{"cancel": seq}` control frame evicts its slot here
+        // too, mid-decode, but (unlike a disconnect) gets a structured
+        // `cancelled` response back.
         for i in (0..slots.len()).rev() {
             if !registry.contains(meta[i].conn) {
                 let slot = slots.swap_remove(i);
                 backend.release(&slot);
                 meta.swap_remove(i);
+                stats.cancelled += 1;
+            } else if registry.take_cancel(meta[i].conn, meta[i].seq) {
+                let slot = slots.swap_remove(i);
+                backend.release(&slot);
+                let m = meta.swap_remove(i);
+                let err = ServeError::new("cancelled", "request cancelled by client");
+                let _ = respond(registry, m.conn, m.seq, Err(err));
                 stats.cancelled += 1;
             }
         }
@@ -511,7 +572,14 @@ pub fn run<B: StepBackend + ?Sized>(
         if active > 1 {
             stats.batched_steps += 1;
         }
-        if let Err(e) = decode_step(backend, &mut slots[..active]) {
+        // backends that speculate (a registry hosting a draft-paired
+        // model) advance every slot through their own draft/verify step;
+        // everything else takes the plain decode path
+        let stepped = match backend.spec_step(&mut slots[..active]) {
+            Some(r) => r,
+            None => decode_step(backend, &mut slots[..active]),
+        };
+        if let Err(e) = stepped {
             // fail the in-flight requests, keep the server up (each
             // request lands in exactly one of errors/cancelled); every
             // failed slot is released so backend state never outlives it
@@ -563,7 +631,9 @@ pub fn run<B: StepBackend + ?Sized>(
     }
 }
 
-fn admit(
+#[allow(clippy::too_many_arguments)]
+fn admit<B: StepBackend + ?Sized>(
+    backend: &B,
     req: DecodeRequest,
     seq_len: usize,
     chunk: usize,
@@ -573,6 +643,13 @@ fn admit(
     stats: &mut SchedStats,
 ) {
     let started = Instant::now();
+    if registry.take_cancel(req.conn, req.seq) {
+        // cancelled before admission: never touches the backend
+        let err = ServeError::new("cancelled", "request cancelled by client");
+        let _ = respond(registry, req.conn, req.seq, Err(err));
+        stats.cancelled += 1;
+        return;
+    }
     if req.max_tokens == 0 {
         // nothing to decode; complete immediately (still a valid request)
         let decoded = Decoded {
@@ -589,6 +666,19 @@ fn admit(
     }
     match DecodeSlot::with_params(&req.prompt, req.max_tokens, seq_len, req.params) {
         Ok(slot) => {
+            // route the slot to its model before any backend work; the
+            // protocol layer already validated the name, so a failure
+            // here is the multi-model backstop (e.g. in-process callers
+            // bypassing the wire protocol)
+            if let Err(e) = backend.bind_model(&slot, req.model.as_deref()) {
+                let err = ServeError::new("unknown_model", e.to_string());
+                if respond(registry, req.conn, req.seq, Err(err)) {
+                    stats.errors += 1;
+                } else {
+                    stats.cancelled += 1;
+                }
+                return;
+            }
             // prompts longer than one chunk enter the budget loop; short
             // ones (and everything when chunking is off) prefill whole
             // inside their first decode step as before
@@ -673,6 +763,7 @@ mod tests {
             max_tokens,
             params: GenParams::default(),
             stream: false,
+            model: None,
             enqueued: Instant::now(),
         }
     }
@@ -875,6 +966,7 @@ mod tests {
             max_tokens: 6,
             params: GenParams::default(),
             stream: true,
+            model: None,
             enqueued: Instant::now(),
         })
         .unwrap();
@@ -914,6 +1006,7 @@ mod tests {
             max_tokens: 10,
             params: params.clone(),
             stream: false,
+            model: None,
             enqueued: Instant::now(),
         })
         .unwrap();

@@ -1,0 +1,740 @@
+//! Speculative decoding + multi-model serving.
+//!
+//! Two pieces that ship together because the second needs the first:
+//!
+//! * [`SpecDecoder`] — draft-verify decoding. A small *draft* model
+//!   greedily proposes `k` tokens; the *target* model verifies all of
+//!   them in ONE `[k+1, V]` multi-row pass ([`SpecModel::verify_rows`],
+//!   the batched-prefill kernels from PR 5 applied to consecutive
+//!   positions of a single sequence); the longest prefix of proposals
+//!   the target's own selection reproduces is accepted, and the first
+//!   divergent verify row supplies the correction token. Because every
+//!   verify row is **bitwise identical** to the row sequential decoding
+//!   would have computed at that position, and the slot's [`Sampler`]
+//!   consumes exactly one RNG draw per emitted token (zero for greedy),
+//!   the emitted stream is *deterministically* equal to non-speculative
+//!   decoding — a strictly stronger property than the distributional
+//!   guarantee of classic rejection sampling, pinned by property test.
+//! * [`ModelRegistry`] — several named backends behind one
+//!   [`StepBackend`], each with its own KV pool and optional draft
+//!   pairing. The protocol's validated `"model"` field routes a request
+//!   at admission ([`StepBackend::bind_model`]); the scheduler's decode
+//!   tick dispatches through [`StepBackend::spec_step`], which chunks
+//!   the active micro-batch into consecutive same-model runs and
+//!   decodes each run through its own backend — speculatively where a
+//!   draft is paired, via the ordinary [`decode_step`] elsewhere.
+//!
+//! KV lifecycle for rejected drafts: a verify pass stores KV rows for
+//! the decode token *and all `k` proposals*; when only `m < k` are
+//! accepted, [`SpecModel::truncate_slot`] rolls the target cache back
+//! to `window + m` (the correction token's KV was never stored — the
+//! next round's catch-up feeds it), and the draft cache is rolled back
+//! to the same prefix. Rejection therefore never leaks pages, which the
+//! property tests assert via `kv_outstanding == 0` after release.
+//!
+//! [`Sampler`]: super::sampling::Sampler
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batch::{
+    argmax, decode_step, spin, CacheStats, DecodeSlot, StepBackend, SyntheticBackend,
+};
+use super::sampling::GenParams;
+use crate::infer::{kv::KvExhausted, NativeBackend};
+
+/// A backend a [`SpecDecoder`] can drive: the three per-sequence
+/// primitives draft-verify needs on top of the batched [`StepBackend`]
+/// contract. The load-bearing invariant: `verify_rows` row `i` must be
+/// bitwise identical to what `decode_row` would return after feeding
+/// `drafts[..i]` — speculative acceptance is only exact because the
+/// rows ARE the sequential rows.
+pub trait SpecModel: StepBackend {
+    /// One logits row for `window`, with per-sequence cache state keyed
+    /// on `slot_id` (bitwise identical to the row `StepBackend::step`
+    /// would return for a slot with this window).
+    fn decode_row(&self, slot_id: u64, window: &[i32]) -> Result<Vec<f32>>;
+
+    /// `drafts.len() + 1` logits rows — for `window`'s decode token and
+    /// each draft appended after it — in one multi-row pass. On success
+    /// the per-slot cache holds `window + drafts`; rejected suffixes are
+    /// rolled back with [`Self::truncate_slot`].
+    fn verify_rows(&self, slot_id: u64, window: &[i32], drafts: &[i32])
+        -> Result<Vec<Vec<f32>>>;
+
+    /// Roll the per-slot cache back to its first `keep` tokens. No-op
+    /// for stateless backends (the default) and for unknown slots.
+    fn truncate_slot(&self, _slot_id: u64, _keep: usize) {}
+}
+
+impl SpecModel for NativeBackend {
+    fn decode_row(&self, slot_id: u64, window: &[i32]) -> Result<Vec<f32>> {
+        NativeBackend::decode_row(self, slot_id, window)
+    }
+
+    fn verify_rows(
+        &self,
+        slot_id: u64,
+        window: &[i32],
+        drafts: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        NativeBackend::verify_rows(self, slot_id, window, drafts)
+    }
+
+    fn truncate_slot(&self, slot_id: u64, keep: usize) {
+        NativeBackend::truncate_slot(self, slot_id, keep)
+    }
+}
+
+impl SpecModel for SyntheticBackend {
+    fn decode_row(&self, _slot_id: u64, window: &[i32]) -> Result<Vec<f32>> {
+        let Some(&last) = window.last() else {
+            bail!("decode_row on an empty window");
+        };
+        // a B=1 step's worth of simulated cost
+        spin(self.fixed_cost);
+        spin(self.per_slot_cost);
+        Ok(self.row(last, window.len() - 1))
+    }
+
+    fn verify_rows(
+        &self,
+        _slot_id: u64,
+        window: &[i32],
+        drafts: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let Some(&last) = window.last() else {
+            bail!("verify_rows on an empty window");
+        };
+        if window.len() + drafts.len() > self.seq_len() {
+            bail!(
+                "verify window of {} + {} drafts overflows seq_len {}",
+                window.len(),
+                drafts.len(),
+                self.seq_len()
+            );
+        }
+        // ONE pass: fixed cost once, per-slot cost once — the multi-row
+        // verify being nearly free relative to k sequential steps is
+        // exactly the economics the spec bench measures
+        spin(self.fixed_cost);
+        spin(self.per_slot_cost);
+        let mut rows = Vec::with_capacity(drafts.len() + 1);
+        let mut pos = window.len() - 1;
+        rows.push(self.row(last, pos));
+        for &d in drafts {
+            pos += 1;
+            rows.push(self.row(d, pos));
+        }
+        Ok(rows)
+    }
+}
+
+/// Speculative-decode counters, aggregated across every draft-paired
+/// model and surfaced through `SchedStats`, the serve shutdown log, and
+/// `BENCH_serve.json` / `BENCH_spec.json`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    /// draft tokens proposed across all verify passes
+    pub drafted: u64,
+    /// draft tokens the target's own selection reproduced (emitted verbatim)
+    pub accepted: u64,
+    /// multi-row `[k+1, V]` verify passes through a target model
+    pub verify_passes: u64,
+    /// speculative rounds, including degenerate rounds (no draft room /
+    /// budget of 1 / pool pressure) that fell back to a plain step
+    pub rounds: u64,
+}
+
+impl SpecStats {
+    /// `accepted / drafted` — the fraction of proposals the target kept
+    /// (0.0 before anything was drafted).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Fold another counter set into this one.
+    pub fn add(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.verify_passes += other.verify_passes;
+        self.rounds += other.rounds;
+    }
+}
+
+/// Per-model admission/queue counters from a [`ModelRegistry`],
+/// surfaced through `SchedStats`, the shutdown log, and
+/// `BENCH_serve.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ModelQueueStats {
+    /// registry entry name (the request `"model"` field that routes here)
+    pub name: String,
+    /// slots ever bound to this model
+    pub admitted: u64,
+    /// bound slots since released (completed, cancelled, or failed)
+    pub completed: u64,
+    /// peak concurrently-bound slots
+    pub peak_depth: u64,
+}
+
+/// A draft backend paired with a speculation depth `k`, driving
+/// draft-verify rounds against a target it shares a vocabulary with.
+pub struct SpecDecoder<B> {
+    /// the small draft model (same vocab as its target; usually a
+    /// cheaper preset or a distilled student)
+    pub draft: B,
+    /// tokens proposed per verify pass (clamped per round by the token
+    /// budget and both models' window room)
+    pub k: usize,
+}
+
+impl<B: SpecModel> SpecDecoder<B> {
+    /// Pair `draft` with a speculation depth.
+    pub fn new(draft: B, k: usize) -> SpecDecoder<B> {
+        SpecDecoder { draft, k }
+    }
+
+    /// One speculative round for `slot` against `target`: draft up to
+    /// `k` tokens greedily, verify them in one multi-row pass, emit the
+    /// longest prefix the target's own selection reproduces (plus the
+    /// correction or bonus token from the first non-matching row), and
+    /// roll both caches back past anything rejected. Degenerate rounds
+    /// — no draft room left in either window, a token budget of 1, or
+    /// pool pressure during verify — fall back to one plain target
+    /// step, so a round ALWAYS makes progress. Counters accumulate into
+    /// `stats`.
+    pub fn advance_slot(
+        &self,
+        target: &B,
+        slot: &mut DecodeSlot,
+        stats: &mut SpecStats,
+    ) -> Result<()> {
+        stats.rounds += 1;
+        let vmax = target.vocab() as i32 - 1;
+        let w = slot.window().len();
+        let n = self
+            .k
+            .min(slot.remaining().saturating_sub(1))
+            .min(target.seq_len().saturating_sub(w))
+            .min(self.draft.seq_len().saturating_sub(w));
+        if n == 0 {
+            let row = target.decode_row(slot.id, slot.window())?;
+            let _ = slot.accept(&row, vmax);
+            return Ok(());
+        }
+        // greedy draft: n proposals, each conditioned on the previous
+        let mut dw = slot.window().to_vec();
+        let mut drafts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row = self.draft.decode_row(slot.id, &dw)?;
+            let t = (argmax(&row) as i32).min(vmax);
+            drafts.push(t);
+            dw.push(t);
+        }
+        // one [n+1, V] pass through the target
+        let rows = match target.verify_rows(slot.id, slot.window(), &drafts) {
+            Ok(rows) => rows,
+            Err(e) if e.downcast_ref::<KvExhausted>().is_some() => {
+                // no page budget for the multi-row pass: degrade to a
+                // plain step (which has its own uncached fallback) and
+                // drop the unverified proposals from the draft cache
+                self.draft.truncate_slot(slot.id, w);
+                let row = target.decode_row(slot.id, slot.window())?;
+                let _ = slot.accept(&row, vmax);
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        stats.verify_passes += 1;
+        stats.drafted += n as u64;
+        // sequential acceptance: row i is only valid while every earlier
+        // emission matched its draft — the first divergence IS the
+        // correction token, and a full match makes row n a bonus token
+        let mut matched = 0usize;
+        for (i, row) in rows.iter().enumerate() {
+            let emitted = slot.accept(row, vmax);
+            if i == n {
+                break;
+            }
+            match emitted {
+                Some(t) if t == drafts[i] => {
+                    matched += 1;
+                    stats.accepted += 1;
+                    if slot.done() {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        if matched < n {
+            // rejected proposals' KV rows are stale: roll the target back
+            // to window + accepted (the correction token's KV was never
+            // stored — next round's catch-up feeds it)
+            target.truncate_slot(slot.id, w + matched);
+        }
+        self.draft.truncate_slot(slot.id, w + matched);
+        Ok(())
+    }
+}
+
+/// Sequential speculative generation — the B=1 reference driver the
+/// property tests pin against plain `generate` and the spec bench
+/// measures. Releases both models' per-slot state on every exit path.
+pub fn spec_generate<B: SpecModel>(
+    target: &B,
+    spec: &SpecDecoder<B>,
+    prompt: &[i32],
+    max_tokens: usize,
+    params: GenParams,
+) -> Result<(Vec<i32>, SpecStats)> {
+    let mut slot = DecodeSlot::with_params(prompt, max_tokens, target.seq_len(), params)?;
+    let mut stats = SpecStats::default();
+    while !slot.done() {
+        if let Err(e) = spec.advance_slot(target, &mut slot, &mut stats) {
+            target.release(&slot);
+            spec.draft.release(&slot);
+            return Err(e);
+        }
+    }
+    target.release(&slot);
+    spec.draft.release(&slot);
+    Ok((slot.out, stats))
+}
+
+/// One named model hosted by a [`ModelRegistry`].
+pub struct ModelEntry<B> {
+    /// the name requests route to via the protocol `"model"` field
+    pub name: String,
+    /// the serving backend (its own KV pool, preset, weights)
+    pub backend: B,
+    /// optional draft pairing: decode this model speculatively
+    pub spec: Option<SpecDecoder<B>>,
+}
+
+#[derive(Default)]
+struct QueueCounters {
+    admitted: u64,
+    completed: u64,
+    depth: u64,
+    peak: u64,
+}
+
+/// Several named backends behind ONE [`StepBackend`], so the existing
+/// admission/decode scheduler serves them all unchanged: requests bind
+/// to an entry by name at admission, the decode tick routes consecutive
+/// same-model runs of the micro-batch to their backends (speculatively
+/// where a draft is paired), and release unbinds. Entry 0 is the
+/// default model for requests that name none. Construction validates
+/// the registry shape — at least one entry, unique names, one shared
+/// vocabulary (drafts included, so proposals are always valid target
+/// tokens).
+pub struct ModelRegistry<B> {
+    entries: Vec<ModelEntry<B>>,
+    /// live slot → entry index, written at bind and dropped at release
+    routes: Mutex<HashMap<u64, usize>>,
+    stats: Mutex<SpecStats>,
+    queues: Mutex<Vec<QueueCounters>>,
+}
+
+impl<B: SpecModel> ModelRegistry<B> {
+    /// Validate and build a registry over `entries`.
+    pub fn new(entries: Vec<ModelEntry<B>>) -> Result<ModelRegistry<B>> {
+        if entries.is_empty() {
+            bail!("model registry needs at least one model");
+        }
+        let vocab = entries[0].backend.vocab();
+        let mut seen = HashSet::new();
+        for e in &entries {
+            if e.name.is_empty() {
+                bail!("model names must be non-empty");
+            }
+            if !seen.insert(e.name.as_str()) {
+                bail!("duplicate model name '{}'", e.name);
+            }
+            if e.backend.vocab() != vocab {
+                bail!(
+                    "model '{}' vocab {} differs from '{}' vocab {vocab}; \
+                     one registry serves one vocabulary",
+                    e.name,
+                    e.backend.vocab(),
+                    entries[0].name
+                );
+            }
+            if let Some(sd) = &e.spec {
+                if sd.k == 0 {
+                    bail!("model '{}': speculation depth k must be >= 1", e.name);
+                }
+                if sd.draft.vocab() != vocab {
+                    bail!(
+                        "model '{}': draft vocab {} differs from target vocab {vocab}",
+                        e.name,
+                        sd.draft.vocab()
+                    );
+                }
+            }
+        }
+        let queues = entries.iter().map(|_| QueueCounters::default()).collect();
+        Ok(ModelRegistry {
+            entries,
+            routes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(SpecStats::default()),
+            queues: Mutex::new(queues),
+        })
+    }
+
+    /// The hosted model names, in entry order (entry 0 is the default).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// The entries, for direct inspection in tests and benches.
+    pub fn entries(&self) -> &[ModelEntry<B>] {
+        &self.entries
+    }
+
+    fn resolve(&self, name: Option<&str>) -> Result<usize> {
+        match name {
+            None => Ok(0),
+            Some(n) => self
+                .entries
+                .iter()
+                .position(|e| e.name == n)
+                .ok_or_else(|| anyhow!("unknown model '{n}'")),
+        }
+    }
+
+    /// Unbound slots route to the default entry — bind_model always runs
+    /// before the first step, so this is a belt-and-braces default, not
+    /// a code path requests normally take.
+    fn route_of(&self, slot_id: u64) -> usize {
+        self.routes.lock().expect("route table poisoned").get(&slot_id).copied().unwrap_or(0)
+    }
+
+    /// The `spec_step` body: chunk the micro-batch into consecutive
+    /// same-model runs; draft-paired entries advance each slot through a
+    /// speculative round, the rest take one ordinary [`decode_step`].
+    fn advance(&self, slots: &mut [DecodeSlot]) -> Result<()> {
+        let mut i = 0;
+        while i < slots.len() {
+            let m = self.route_of(slots[i].id);
+            let mut j = i + 1;
+            while j < slots.len() && self.route_of(slots[j].id) == m {
+                j += 1;
+            }
+            let entry = &self.entries[m];
+            match &entry.spec {
+                Some(sd) => {
+                    let mut round = SpecStats::default();
+                    for slot in slots[i..j].iter_mut().filter(|s| !s.done()) {
+                        sd.advance_slot(&entry.backend, slot, &mut round)?;
+                    }
+                    self.stats.lock().expect("spec stats poisoned").add(&round);
+                }
+                None => decode_step(&entry.backend, &mut slots[i..j])?,
+            }
+            i = j;
+        }
+        Ok(())
+    }
+}
+
+impl<B: SpecModel> StepBackend for ModelRegistry<B> {
+    fn vocab(&self) -> usize {
+        self.entries[0].backend.vocab()
+    }
+
+    /// The registry's window is the MINIMUM across every hosted model
+    /// (drafts included): every slot must fit every backend it might
+    /// route to, and a draft window shorter than the target's would
+    /// silently disable drafting for long sequences anyway.
+    fn seq_len(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| {
+                let mut s = e.backend.seq_len();
+                if let Some(sd) = &e.spec {
+                    s = s.min(sd.draft.seq_len());
+                }
+                s
+            })
+            .min()
+            .expect("registry has at least one entry")
+    }
+
+    fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        let mut rows = Vec::with_capacity(slots.len());
+        let mut i = 0;
+        while i < slots.len() {
+            let m = self.route_of(slots[i].id);
+            let mut j = i + 1;
+            while j < slots.len() && self.route_of(slots[j].id) == m {
+                j += 1;
+            }
+            rows.extend(self.entries[m].backend.step(&slots[i..j])?);
+            i = j;
+        }
+        Ok(rows)
+    }
+
+    fn spec_step(&self, slots: &mut [DecodeSlot]) -> Option<Result<()>> {
+        Some(self.advance(slots))
+    }
+
+    fn prefill_chunk(&self, slot: &DecodeSlot, max_tokens: usize) -> Result<usize> {
+        self.entries[self.route_of(slot.id)].backend.prefill_chunk(slot, max_tokens)
+    }
+
+    fn bind_model(&self, slot: &DecodeSlot, model: Option<&str>) -> Result<()> {
+        let idx = self.resolve(model)?;
+        self.routes.lock().expect("route table poisoned").insert(slot.id, idx);
+        let mut queues = self.queues.lock().expect("queue counters poisoned");
+        let q = &mut queues[idx];
+        q.admitted += 1;
+        q.depth += 1;
+        q.peak = q.peak.max(q.depth);
+        Ok(())
+    }
+
+    fn release(&self, slot: &DecodeSlot) {
+        let route = self.routes.lock().expect("route table poisoned").remove(&slot.id);
+        match route {
+            Some(idx) => {
+                let entry = &self.entries[idx];
+                entry.backend.release(slot);
+                if let Some(sd) = &entry.spec {
+                    sd.draft.release(slot);
+                }
+                let mut queues = self.queues.lock().expect("queue counters poisoned");
+                let q = &mut queues[idx];
+                q.completed += 1;
+                q.depth = q.depth.saturating_sub(1);
+            }
+            None => {
+                // release must be idempotent and safe for slots never
+                // bound: forward to everyone (a stateless no-op each)
+                for entry in &self.entries {
+                    entry.backend.release(slot);
+                    if let Some(sd) = &entry.spec {
+                        sd.draft.release(slot);
+                    }
+                }
+            }
+        }
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        let mut agg = CacheStats::default();
+        let mut any = false;
+        let mut fold = |s: Option<CacheStats>| {
+            if let Some(s) = s {
+                any = true;
+                agg.prefix_lookups += s.prefix_lookups;
+                agg.prefix_hits += s.prefix_hits;
+                agg.prefix_hit_tokens += s.prefix_hit_tokens;
+                agg.prefix_pages += s.prefix_pages;
+                agg.kv_pages_hwm += s.kv_pages_hwm;
+            }
+        };
+        for entry in &self.entries {
+            fold(entry.backend.cache_stats());
+            if let Some(sd) = &entry.spec {
+                fold(sd.draft.cache_stats());
+            }
+        }
+        any.then_some(agg)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        self.entries
+            .iter()
+            .any(|e| e.spec.is_some())
+            .then(|| *self.stats.lock().expect("spec stats poisoned"))
+    }
+
+    fn model_queue_stats(&self) -> Vec<ModelQueueStats> {
+        let queues = self.queues.lock().expect("queue counters poisoned");
+        self.entries
+            .iter()
+            .zip(queues.iter())
+            .map(|(e, q)| ModelQueueStats {
+                name: e.name.clone(),
+                admitted: q.admitted,
+                completed: q.completed,
+                peak_depth: q.peak,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batch::generate;
+
+    const VOCAB: usize = 64;
+    const SEQ: usize = 24;
+
+    fn target() -> SyntheticBackend {
+        SyntheticBackend::new(VOCAB, SEQ, 7)
+    }
+
+    fn draft(p: f32) -> SyntheticBackend {
+        SyntheticBackend::new(VOCAB, SEQ, 7).with_divergence(p, 99)
+    }
+
+    #[test]
+    fn greedy_spec_is_bit_identical_to_plain_decode() {
+        let t = target();
+        for k in [1usize, 2, 3, 5, 8] {
+            for p in [0.0f32, 0.25, 1.0] {
+                let sd = SpecDecoder::new(draft(p), k);
+                for prompt in [vec![1, 2, 3], vec![9], vec![4, 4, 4, 4]] {
+                    let plain = generate(&t, &prompt, 16, GenParams::default()).unwrap();
+                    let (spec, stats) =
+                        spec_generate(&t, &sd, &prompt, 16, GenParams::default()).unwrap();
+                    assert_eq!(spec, plain, "k={k} p={p} prompt={prompt:?}");
+                    assert!(stats.accepted <= stats.drafted);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_spec_matches_plain_decode() {
+        let t = target();
+        let params = GenParams {
+            temperature: 0.9,
+            top_k: 12,
+            top_p: 0.95,
+            seed: 11,
+            ..GenParams::default()
+        };
+        for k in [1usize, 3, 6] {
+            let sd = SpecDecoder::new(draft(0.25), k);
+            let plain = generate(&t, &[1, 2, 3], 16, params.clone()).unwrap();
+            let (spec, _) = spec_generate(&t, &sd, &[1, 2, 3], 16, params.clone()).unwrap();
+            assert_eq!(spec, plain, "seeded sampling diverged at k={k}");
+        }
+    }
+
+    #[test]
+    fn accept_rate_tracks_divergence_knob() {
+        let t = target();
+        let sd = SpecDecoder::new(draft(0.25), 4);
+        let mut total = SpecStats::default();
+        for seed_tok in 0..16i32 {
+            let prompt = [seed_tok, seed_tok + 1];
+            let (_, s) = spec_generate(&t, &sd, &prompt, 18, GenParams::default()).unwrap();
+            total.add(&s);
+        }
+        assert!(total.drafted > 100, "drafted only {} tokens", total.drafted);
+        let rate = total.accept_rate();
+        assert!((0.45..=0.95).contains(&rate), "accept rate {rate} implausible for p=0.25");
+        // a perfect draft accepts everything
+        let perfect = SpecDecoder::new(draft(0.0), 4);
+        let (_, s) = spec_generate(&t, &perfect, &[1, 2], 17, GenParams::default()).unwrap();
+        assert_eq!(s.accepted, s.drafted, "zero-divergence draft must always match");
+        assert!(s.accept_rate() > 0.999);
+    }
+
+    #[test]
+    fn registry_validates_shape() {
+        let entry = |name: &str, vocab: usize| ModelEntry {
+            name: name.to_string(),
+            backend: SyntheticBackend::new(vocab, SEQ, 1),
+            spec: None,
+        };
+        assert!(ModelRegistry::<SyntheticBackend>::new(vec![]).is_err(), "empty registry");
+        let dup = ModelRegistry::new(vec![entry("a", 32), entry("a", 32)]);
+        assert!(dup.unwrap_err().to_string().contains("duplicate"));
+        let mix = ModelRegistry::new(vec![entry("a", 32), entry("b", 64)]);
+        assert!(mix.unwrap_err().to_string().contains("vocab"));
+        let bad_draft = ModelRegistry::new(vec![ModelEntry {
+            name: "a".to_string(),
+            backend: SyntheticBackend::new(32, SEQ, 1),
+            spec: Some(SpecDecoder::new(SyntheticBackend::new(64, SEQ, 1), 4)),
+        }]);
+        assert!(bad_draft.unwrap_err().to_string().contains("draft vocab"));
+        let zero_k = ModelRegistry::new(vec![ModelEntry {
+            name: "a".to_string(),
+            backend: SyntheticBackend::new(32, SEQ, 1),
+            spec: Some(SpecDecoder::new(SyntheticBackend::new(32, SEQ, 1), 0)),
+        }]);
+        assert!(zero_k.unwrap_err().to_string().contains("k must be >= 1"));
+    }
+
+    #[test]
+    fn registry_routes_runs_to_their_models_and_counts_queues() {
+        // two models with different seeds: outputs must match each
+        // model's own sequential reference, interleaved in one batch
+        let reg = ModelRegistry::new(vec![
+            ModelEntry {
+                name: "a".to_string(),
+                backend: SyntheticBackend::new(VOCAB, SEQ, 1),
+                spec: None,
+            },
+            ModelEntry {
+                name: "b".to_string(),
+                backend: SyntheticBackend::new(VOCAB, SEQ, 2),
+                spec: Some(SpecDecoder::new(
+                    SyntheticBackend::new(VOCAB, SEQ, 2).with_divergence(0.2, 5),
+                    3,
+                )),
+            },
+        ])
+        .unwrap();
+        let greedy = GenParams::default;
+        let ref_a =
+            generate(&SyntheticBackend::new(VOCAB, SEQ, 1), &[3, 1], 10, greedy()).unwrap();
+        let ref_b =
+            generate(&SyntheticBackend::new(VOCAB, SEQ, 2), &[3, 1], 10, greedy()).unwrap();
+        let mut slots = vec![
+            DecodeSlot::new(&[3, 1], 10, reg.seq_len()).unwrap(),
+            DecodeSlot::new(&[3, 1], 10, reg.seq_len()).unwrap(),
+            DecodeSlot::new(&[3, 1], 10, reg.seq_len()).unwrap(),
+        ];
+        reg.bind_model(&slots[0], Some("a")).unwrap();
+        reg.bind_model(&slots[1], Some("b")).unwrap();
+        reg.bind_model(&slots[2], None).unwrap(); // default = entry 0
+        let unknown = reg.bind_model(&slots[0], Some("nope")).unwrap_err();
+        assert!(unknown.to_string().contains("unknown"));
+        while slots.iter().any(|s| !s.done()) {
+            reg.spec_step(&mut slots).expect("registry owns the tick").unwrap();
+        }
+        assert_eq!(slots[0].out, ref_a);
+        assert_eq!(slots[1].out, ref_b, "speculative route changed the stream");
+        assert_eq!(slots[2].out, ref_a, "unnamed request must route to entry 0");
+        for s in &slots {
+            reg.release(s);
+        }
+        let queues = reg.model_queue_stats();
+        assert_eq!(queues.len(), 2);
+        assert_eq!((queues[0].admitted, queues[0].completed), (2, 2));
+        assert_eq!((queues[1].admitted, queues[1].completed), (1, 1));
+        assert!(queues[0].peak_depth >= 2);
+        let spec = reg.spec_stats().expect("a drafted entry reports spec stats");
+        assert!(spec.drafted > 0 && spec.verify_passes > 0);
+        // double release is safe
+        reg.release(&slots[0]);
+    }
+
+    #[test]
+    fn registry_without_drafts_reports_no_spec_stats() {
+        let reg = ModelRegistry::new(vec![ModelEntry {
+            name: "only".to_string(),
+            backend: target(),
+            spec: None,
+        }])
+        .unwrap();
+        assert!(reg.spec_stats().is_none());
+        assert_eq!(reg.vocab(), VOCAB);
+        assert_eq!(reg.seq_len(), SEQ);
+    }
+}

@@ -181,6 +181,39 @@ fn serve_http_maps_errors_to_statuses() {
     });
 }
 
+/// On a multi-model listener, an unknown `"model"` name maps to HTTP
+/// 404 with the structured `unknown_model` code, the connection stays
+/// usable (keep-alive), and a hosted name on the same connection still
+/// decodes normally.
+#[test]
+fn serve_http_unknown_model_maps_to_404() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        transport: Transport::Http,
+        models: vec!["alpha".into()],
+        ..ServeOptions::default()
+    };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = http_client(addr);
+            cl.send(&ClientRequest::tokens(vec![2]).max_tokens(3).model("nope")).expect("send");
+            let code = err_code(cl.read_reply());
+            assert_eq!(cl.last_status(), Some(404), "unknown_model must map to 404");
+            let req = ClientRequest::tokens(vec![2]).max_tokens(3).model("alpha");
+            let named = ok(cl.request(&req));
+            assert_eq!(cl.last_status(), Some(200));
+            (code, named.tokens)
+        });
+        serve_on(&b, listener, Some(1), opts).unwrap();
+        let (code, tokens) = cl.join().unwrap();
+        assert_eq!(code, "unknown_model");
+        assert_eq!(tokens, generate_greedy(&b, &[2], 3).unwrap());
+    });
+}
+
 /// Writes raw HTTP and returns the replies' status codes, one per
 /// response head, until the server closes the connection.
 fn raw_http_statuses(addr: SocketAddr, payload: &str) -> Vec<u16> {

@@ -23,7 +23,8 @@ use nvfp4_faar::infer::{
 };
 use nvfp4_faar::serve::client::{Client, ClientRequest, Completion};
 use nvfp4_faar::serve::{
-    generate, generate_greedy, serve_on, CodecKind, GenParams, ServeOptions, SyntheticBackend,
+    generate, generate_greedy, serve_on, CodecKind, GenParams, ModelEntry, ModelRegistry,
+    ServeOptions, SpecDecoder, SyntheticBackend,
 };
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::json::Json;
@@ -507,6 +508,117 @@ fn serve_incremental_codec_accepts_multiline_documents() {
     }
 }
 
+/// A `{"cancel": seq}` control frame recorded BEFORE its request is
+/// admitted deterministically evicts it: the scheduler refuses
+/// admission and answers with a structured `cancelled` error. The
+/// cancel is consumed exactly once — the connection's next request
+/// decodes normally.
+#[test]
+fn serve_cancel_before_admission_is_deterministic() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = client(addr);
+            cl.cancel(0).expect("send cancel");
+            cl.send(&ClientRequest::tokens(vec![3]).max_tokens(8)).expect("send");
+            let code = err_code(cl.read_reply());
+            let done = ok(cl.request(&ClientRequest::tokens(vec![4]).max_tokens(4)));
+            (code, done.tokens)
+        });
+        let stats = serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+        let (code, tokens) = cl.join().unwrap();
+        assert_eq!(code, "cancelled");
+        assert_eq!(tokens, generate_greedy(&b, &[4], 4).unwrap());
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.completed, 1);
+    });
+}
+
+/// Two hosted models behind one [`ModelRegistry`] over real TCP:
+/// interleaved requests route by the protocol `"model"` field (no field
+/// = entry 0), each response token-identical to its own model's
+/// sequential reference — the draft-paired entry included, since
+/// speculative decode is bit-exact — and unknown names get a structured
+/// `unknown_model` rejection before ever occupying a slot.
+#[test]
+fn serve_models_route_interleaved_requests_to_their_backends() {
+    let alpha = SyntheticBackend::new(VOCAB, SEQ_LEN, 1111);
+    let beta = SyntheticBackend::new(VOCAB, SEQ_LEN, 2222);
+    let registry = ModelRegistry::new(vec![
+        ModelEntry {
+            name: "alpha".into(),
+            backend: SyntheticBackend::new(VOCAB, SEQ_LEN, 1111),
+            spec: None,
+        },
+        ModelEntry {
+            name: "beta".into(),
+            backend: SyntheticBackend::new(VOCAB, SEQ_LEN, 2222),
+            spec: Some(SpecDecoder::new(
+                SyntheticBackend::new(VOCAB, SEQ_LEN, 2222).with_divergence(0.25, 9),
+                3,
+            )),
+        },
+    ])
+    .unwrap();
+    let opts = ServeOptions { max_batch: 4, models: registry.names(), ..ServeOptions::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    const N: usize = 3;
+    const REQS: usize = 3;
+    let (stats, all) = std::thread::scope(|s| {
+        let registry = &registry;
+        let handles: Vec<_> = (0..N)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut cl = client(addr);
+                    let mut outs = vec![];
+                    for r in 0..REQS {
+                        let model = match (c + r) % 3 {
+                            0 => None,
+                            1 => Some("alpha"),
+                            _ => Some("beta"),
+                        };
+                        let prompt = vec![((c * 13 + r * 7) % VOCAB) as i32, 5];
+                        let mut req = ClientRequest::tokens(prompt.clone()).max_tokens(6);
+                        if let Some(m) = model {
+                            req = req.model(m);
+                        }
+                        outs.push((model, prompt, ok(cl.request(&req)).tokens));
+                    }
+                    // rejected at the protocol boundary, not the scheduler
+                    let bad = ClientRequest::tokens(vec![1]).max_tokens(2).model("nope");
+                    cl.send(&bad).expect("send");
+                    assert_eq!(err_code(cl.read_reply()), "unknown_model");
+                    outs
+                })
+            })
+            .collect();
+        let stats = serve_on(registry, listener, Some(N), opts).unwrap();
+        let all: Vec<_> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        (stats, all)
+    });
+    assert_eq!(stats.completed as usize, N * REQS);
+    assert_eq!(stats.errors, 0, "protocol rejections never reach the scheduler");
+    for (model, prompt, got) in &all {
+        let reference = match model {
+            Some("beta") => &beta,
+            _ => &alpha, // named "alpha" or defaulted to entry 0
+        };
+        let expect = generate_greedy(reference, prompt, 6).unwrap();
+        assert_eq!(&expect, got, "model {model:?} diverged for {prompt:?}");
+    }
+    let spec = stats.spec;
+    assert!(spec.rounds > 0 && spec.drafted > 0, "beta requests never drafted: {spec:?}");
+    assert!(spec.accepted <= spec.drafted);
+    assert_eq!(stats.model_queues.len(), 2);
+    let admitted: u64 = stats.model_queues.iter().map(|q| q.admitted).sum();
+    let finished: u64 = stats.model_queues.iter().map(|q| q.completed).sum();
+    assert_eq!(admitted as usize, N * REQS);
+    assert_eq!(finished as usize, N * REQS);
+}
+
 fn native_backend(use_cache: bool) -> NativeBackend {
     native_backend_with(NativeOptions { use_cache, ..NativeOptions::default() })
 }
@@ -654,6 +766,35 @@ fn serve_native_disconnect_frees_kv_pages() {
         0,
         "disconnected request left KV pages outstanding"
     );
+    assert_eq!(backend.cached_slots(), 0);
+}
+
+/// An explicit `{"cancel": seq}` frame mid-decode evicts the slot at the
+/// next scheduler tick and frees its KV pages. The reply is either the
+/// completion (the decode won the race) or the structured cancellation —
+/// never silence, never a leak.
+#[test]
+fn serve_native_cancel_mid_decode_frees_kv_pages() {
+    let backend = native_backend(true);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let stats = std::thread::scope(|s| {
+        let backend = &backend;
+        s.spawn(move || {
+            let mut cl = client(addr);
+            cl.send(&ClientRequest::tokens(vec![3]).max_tokens(48)).expect("send");
+            std::thread::sleep(Duration::from_millis(30));
+            cl.cancel(0).expect("send cancel");
+            match cl.read_reply().expect("transport") {
+                Ok(c) => assert!(!c.tokens.is_empty(), "empty completion"),
+                Err(e) => assert_eq!(e.code, "cancelled"),
+            }
+        });
+        serve_on(backend, listener, Some(1), ServeOptions::default()).unwrap()
+    });
+    assert_eq!(stats.completed + stats.cancelled, 1, "the request must resolve exactly once");
+    assert_eq!(backend.kv_outstanding(), 0, "cancelled request left KV pages outstanding");
     assert_eq!(backend.cached_slots(), 0);
 }
 

@@ -1,0 +1,198 @@
+//! Property-based tests of speculative decoding over the NATIVE backend:
+//! a real draft model (same nano preset, different init seed, so it
+//! agrees with the target often but not always) proposes tokens, the
+//! target verifies them in one multi-row pass, and the emitted stream
+//! must be BIT-IDENTICAL to plain sequential decode — greedy and seeded
+//! sampling alike. Rejected drafts must roll both KV caches back
+//! cleanly: no pages outstanding after release, even under pool
+//! pressure that forces the mid-verify fallback path.
+
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::{
+    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
+};
+use nvfp4_faar::serve::{generate, generate_greedy, spec_generate, GenParams, SpecDecoder};
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::prop::check_msg;
+
+const VOCAB: usize = 256; // nano preset vocab
+
+/// Build a nano-preset native backend from `seed`. CI reruns this suite
+/// with `FAAR_TEST_KV_FORMAT=e4m3` so the draft-verify rollback path is
+/// exercised in the quantized KV format too (spec==plain parity holds
+/// per backend regardless of format: both paths read the same cache).
+fn nano_backend(seed: u64, mut opts: NativeOptions) -> NativeBackend {
+    let manifest = native_manifest("nano").expect("nano preset");
+    let fp = ParamStore::init(&manifest, seed);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    if let Ok(name) = std::env::var("FAAR_TEST_KV_FORMAT") {
+        opts.kv_format = KvFormat::parse(&name)
+            .unwrap_or_else(|| panic!("unknown FAAR_TEST_KV_FORMAT '{name}'"));
+    }
+    NativeBackend::new(model, opts)
+}
+
+/// Target seed 42, draft seed 43 — two real models over the same vocab,
+/// so acceptance is partial: some proposals match, some are rejected,
+/// and both branches of the accept loop run.
+fn divergent_spec(k: usize, opts: NativeOptions) -> SpecDecoder<NativeBackend> {
+    SpecDecoder::new(nano_backend(43, opts), k)
+}
+
+fn no_leaks(target: &NativeBackend, spec: &SpecDecoder<NativeBackend>) -> Result<(), String> {
+    if target.kv_outstanding() != 0 {
+        return Err(format!("target leaked {} KV pages", target.kv_outstanding()));
+    }
+    if spec.draft.kv_outstanding() != 0 {
+        return Err(format!("draft leaked {} KV pages", spec.draft.kv_outstanding()));
+    }
+    if target.cached_slots() != 0 || spec.draft.cached_slots() != 0 {
+        return Err("slot cache entries leaked".into());
+    }
+    Ok(())
+}
+
+/// The tentpole invariant on the real model: greedy speculative decode
+/// emits bit-for-bit the plain greedy stream, for every speculation
+/// depth, and every verify round leaves no KV state behind on either
+/// model once the slot releases.
+#[test]
+fn prop_spec_greedy_bit_identical_to_plain_decode() {
+    let target = nano_backend(42, NativeOptions::default());
+    check_msg(
+        "spec_greedy_parity",
+        8,
+        |rng| {
+            let prompt: Vec<i32> =
+                (0..1 + rng.below(6)).map(|_| rng.below(VOCAB) as i32).collect();
+            let max_tokens = 2 + rng.below(12);
+            let k = 1 + rng.below(8);
+            (prompt, max_tokens, k)
+        },
+        |(prompt, max_tokens, k)| {
+            let spec = divergent_spec(*k, NativeOptions::default());
+            let expect =
+                generate_greedy(&target, prompt, *max_tokens).map_err(|e| e.to_string())?;
+            let (got, stats) =
+                spec_generate(&target, &spec, prompt, *max_tokens, GenParams::default())
+                    .map_err(|e| e.to_string())?;
+            if got != expect {
+                return Err(format!("k={k}: spec {got:?} != plain {expect:?}"));
+            }
+            if stats.rounds == 0 || stats.accepted > stats.drafted {
+                return Err(format!("implausible counters: {stats:?}"));
+            }
+            no_leaks(&target, &spec)
+        },
+    );
+    // a draft that IS the target accepts everything: same seed both sides
+    let perfect = SpecDecoder::new(nano_backend(42, NativeOptions::default()), 4);
+    let (got, stats) =
+        spec_generate(&target, &perfect, &[7, 3], 12, GenParams::default()).expect("spec decode");
+    assert_eq!(got, generate_greedy(&target, &[7, 3], 12).unwrap());
+    assert_eq!(stats.accepted, stats.drafted, "identical draft should never be rejected");
+    assert!(stats.drafted > 0);
+}
+
+/// Seeded sampling through the verify path reproduces plain sampled
+/// decode exactly: the sampler consumes one RNG draw per EMITTED token,
+/// so the stream of draws — and therefore every sampled token — is
+/// independent of how many proposals each verify round carried.
+#[test]
+fn prop_spec_seeded_sampling_bit_identical_to_plain_decode() {
+    let target = nano_backend(42, NativeOptions::default());
+    check_msg(
+        "spec_sampling_parity",
+        6,
+        |rng| {
+            let prompt: Vec<i32> =
+                (0..1 + rng.below(5)).map(|_| rng.below(VOCAB) as i32).collect();
+            let max_tokens = 2 + rng.below(10);
+            let k = 1 + rng.below(6);
+            let seed = rng.next_u64();
+            (prompt, max_tokens, k, seed)
+        },
+        |(prompt, max_tokens, k, seed)| {
+            let params = GenParams {
+                temperature: 0.9,
+                top_k: 24,
+                top_p: 0.95,
+                seed: *seed,
+                ..GenParams::default()
+            };
+            let spec = divergent_spec(*k, NativeOptions::default());
+            let expect = generate(&target, prompt, *max_tokens, params.clone())
+                .map_err(|e| e.to_string())?;
+            let (got, _) = spec_generate(&target, &spec, prompt, *max_tokens, params)
+                .map_err(|e| e.to_string())?;
+            if got != expect {
+                return Err(format!("k={k} seed={seed:#x}: sampled spec diverged"));
+            }
+            no_leaks(&target, &spec)
+        },
+    );
+}
+
+/// KV hygiene under pool pressure: with page_tokens=1 and a pool cap
+/// just past the sequence length, verify passes near the cap cannot
+/// reserve their multi-row budget and must take the KvExhausted
+/// fallback (truncate the dangling reservation, decode one plain row).
+/// Decode still completes bit-identically and drains both pools.
+#[test]
+fn prop_spec_rejected_drafts_release_kv_under_pressure() {
+    check_msg(
+        "spec_kv_pressure",
+        6,
+        |rng| {
+            let prompt: Vec<i32> =
+                (0..1 + rng.below(4)).map(|_| rng.below(VOCAB) as i32).collect();
+            let max_tokens = 3 + rng.below(8);
+            let k = 2 + rng.below(6);
+            (prompt, max_tokens, k)
+        },
+        |(prompt, max_tokens, k)| {
+            // cap leaves room for the sequence plus at most ONE extra
+            // page, so a k>=2 verify reserve near the end must fail
+            let cap = prompt.len() + *max_tokens + 1;
+            let tight =
+                NativeOptions { page_tokens: 1, max_pages: cap, ..NativeOptions::default() };
+            let target = nano_backend(42, tight);
+            let spec = divergent_spec(*k, tight);
+            let expect =
+                generate_greedy(&target, prompt, *max_tokens).map_err(|e| e.to_string())?;
+            let (got, _) =
+                spec_generate(&target, &spec, prompt, *max_tokens, GenParams::default())
+                    .map_err(|e| e.to_string())?;
+            if got != expect {
+                return Err(format!("k={k}: spec diverged under pool pressure"));
+            }
+            no_leaks(&target, &spec)
+        },
+    );
+}
+
+/// Uncached parity: with `use_cache: false` on both models there is no
+/// KV state to roll back at all (verify recomputes full windows), and
+/// the emitted stream still matches the cached spec path and the plain
+/// uncached path.
+#[test]
+fn prop_spec_uncached_matches_cached_and_plain() {
+    let no_cache = NativeOptions { use_cache: false, ..NativeOptions::default() };
+    let target = nano_backend(42, no_cache);
+    let spec = divergent_spec(4, no_cache);
+    let cached_target = nano_backend(42, NativeOptions::default());
+    let cached_spec = divergent_spec(4, NativeOptions::default());
+    for (prompt, n) in [(vec![5, 9, 2], 10usize), (vec![200], 8), (vec![17, 4], 14)] {
+        let plain = generate_greedy(&target, &prompt, n).unwrap();
+        let (uncached, _) =
+            spec_generate(&target, &spec, &prompt, n, GenParams::default()).unwrap();
+        let (cached, _) =
+            spec_generate(&cached_target, &cached_spec, &prompt, n, GenParams::default())
+                .unwrap();
+        assert_eq!(uncached, plain, "uncached spec diverged for {prompt:?}");
+        assert_eq!(cached, plain, "cached spec diverged for {prompt:?}");
+    }
+    assert_eq!(cached_target.kv_outstanding(), 0);
+    assert_eq!(cached_spec.draft.kv_outstanding(), 0);
+}
