@@ -425,7 +425,7 @@ impl NativeModel {
             bail!("cache holds {} tokens, prefill expected {start}", seq.len());
         }
         {
-            let mut pool = pool.lock().expect("kv pool poisoned");
+            let mut pool = pool.lock().unwrap_or_else(|e| e.into_inner());
             seq.reserve(&mut pool, tokens.len())?;
         }
         let rows: Vec<(usize, i32, usize)> =
@@ -459,7 +459,7 @@ impl NativeModel {
             bail!("window index {idx} beyond seq_len {}", cfg.seq_len);
         }
         {
-            let mut pool = pool.lock().expect("kv pool poisoned");
+            let mut pool = pool.lock().unwrap_or_else(|e| e.into_inner());
             seq.push(&mut pool)?;
         }
         let t_new = seq.len() - 1;
@@ -858,6 +858,13 @@ pub struct NativeBackend {
     model: NativeModel,
     opts: NativeOptions,
     layout: KvLayout,
+    /// page pool + per-slot cache registry. These locks (and the trie
+    /// and scratch below) recover from poisoning (`into_inner`) instead
+    /// of cascading a panic: each critical section either performs one
+    /// structural map/pool operation or fills buffers that the next
+    /// holder overwrites from scratch, so the state a panicking thread
+    /// leaves behind is still coherent — and `release` MUST keep working
+    /// after a contained `step` panic or slot pages would leak forever
     pool: Mutex<KvPool>,
     seqs: Mutex<HashMap<u64, SlotCache>>,
     /// the shared-prefix page trie, present when
@@ -895,24 +902,24 @@ impl NativeBackend {
     /// KV pages currently held by live slots (0 once every request has
     /// been released — the leak regression tests assert on this).
     pub fn kv_outstanding(&self) -> usize {
-        self.pool.lock().expect("kv pool poisoned").outstanding()
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).outstanding()
     }
 
     /// Slots with a live cache entry.
     pub fn cached_slots(&self) -> usize {
-        self.seqs.lock().expect("kv registry poisoned").len()
+        self.seqs.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Peak KV pages outstanding over the backend's lifetime — the
     /// pages-in-use high-water mark surfaced in the serve stats.
     pub fn kv_high_water(&self) -> usize {
-        self.pool.lock().expect("kv pool poisoned").high_water()
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).high_water()
     }
 
     /// Prefix-cache counters, `None` unless
     /// [`NativeOptions::prefix_cache`] is on.
     pub fn prefix_stats(&self) -> Option<PrefixStats> {
-        self.prefix.as_ref().map(|t| t.lock().expect("prefix cache poisoned").stats())
+        self.prefix.as_ref().map(|t| t.lock().unwrap_or_else(|e| e.into_inner()).stats())
     }
 
     /// Release every page the prefix trie holds back into the pool.
@@ -922,8 +929,8 @@ impl NativeBackend {
     pub fn clear_prefix_cache(&self) {
         if let Some(trie) = &self.prefix {
             // lock order: trie, then pool
-            let mut trie = trie.lock().expect("prefix cache poisoned");
-            let mut pool = self.pool.lock().expect("kv pool poisoned");
+            let mut trie = trie.lock().unwrap_or_else(|e| e.into_inner());
+            let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
             trie.clear(&mut pool);
         }
     }
@@ -1051,7 +1058,7 @@ impl NativeBackend {
             self.publish_prefix(want, last, entry);
         }
         {
-            let mut pool = self.pool.lock().expect("kv pool poisoned");
+            let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
             entry.kv.reserve(&mut pool, 1)?;
         }
         Ok((token, last))
@@ -1069,7 +1076,7 @@ impl NativeBackend {
         if last == 0 {
             return;
         }
-        let pages = trie.lock().expect("prefix cache poisoned").lookup(&want[..last]);
+        let pages = trie.lock().unwrap_or_else(|e| e.into_inner()).lookup(&want[..last]);
         let pt = self.layout.page_tokens;
         for (i, page) in pages.into_iter().enumerate() {
             entry.kv.attach(page);
@@ -1092,7 +1099,7 @@ impl NativeBackend {
             return;
         }
         let pages: Vec<_> = (0..full).map(|i| entry.kv.page_handle(i)).collect();
-        trie.lock().expect("prefix cache poisoned").publish(&want[..full * pt], &pages);
+        trie.lock().unwrap_or_else(|e| e.into_inner()).publish(&want[..full * pt], &pages);
     }
 
     /// Reclaim the least-recently-used prefix-cache page for the pool.
@@ -1101,13 +1108,13 @@ impl NativeBackend {
     fn evict_prefix_lru(&self) -> bool {
         let Some(trie) = &self.prefix else { return false };
         // lock order: trie, then pool
-        let mut trie = trie.lock().expect("prefix cache poisoned");
-        let mut pool = self.pool.lock().expect("kv pool poisoned");
+        let mut trie = trie.lock().unwrap_or_else(|e| e.into_inner());
+        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
         trie.evict_lru(&mut pool)
     }
 
     fn clear_entry(&self, entry: &mut SlotCache) {
-        entry.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
+        entry.kv.clear(&mut self.pool.lock().unwrap_or_else(|e| e.into_inner()));
         entry.history.clear();
     }
 
@@ -1178,7 +1185,7 @@ impl NativeBackend {
     /// the map lock. Every taker must reinsert via [`Self::put_entry`]
     /// on ALL exit paths or the slot's pages leak.
     fn take_entry(&self, slot_id: u64) -> SlotCache {
-        let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+        let mut seqs = self.seqs.lock().unwrap_or_else(|e| e.into_inner());
         seqs.remove(&slot_id).unwrap_or_else(|| SlotCache {
             kv: KvSeq::new(self.layout),
             history: Vec::new(),
@@ -1187,7 +1194,7 @@ impl NativeBackend {
     }
 
     fn put_entry(&self, slot_id: u64, entry: SlotCache) {
-        self.seqs.lock().expect("kv registry poisoned").insert(slot_id, entry);
+        self.seqs.lock().unwrap_or_else(|e| e.into_inner()).insert(slot_id, entry);
     }
 
     /// One cached logits row for an arbitrary decode `window`, keyed on
@@ -1313,7 +1320,7 @@ impl NativeBackend {
             Ok((token, idx)) => {
                 let reserved = loop {
                     let r = {
-                        let mut pool = self.pool.lock().expect("kv pool poisoned");
+                        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
                         entry.kv.reserve(&mut pool, drafts.len())
                     };
                     match r {
@@ -1350,7 +1357,7 @@ impl NativeBackend {
                         // roll the dangling decode-token reservation back so
                         // the cached window prefix survives for the fallback
                         let keep = entry.history.len();
-                        let mut pool = self.pool.lock().expect("kv pool poisoned");
+                        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
                         let new_len = entry.kv.truncate(&mut pool, keep);
                         drop(pool);
                         entry.history.truncate(new_len);
@@ -1376,10 +1383,10 @@ impl NativeBackend {
     /// cannot be truncated mid-page); the next catch-up re-prefills the
     /// difference, so logits are unaffected either way.
     pub fn truncate_slot(&self, slot_id: u64, keep: usize) {
-        let entry = self.seqs.lock().expect("kv registry poisoned").remove(&slot_id);
+        let entry = self.seqs.lock().unwrap_or_else(|e| e.into_inner()).remove(&slot_id);
         if let Some(mut e) = entry {
             let new_len = {
-                let mut pool = self.pool.lock().expect("kv pool poisoned");
+                let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
                 e.kv.truncate(&mut pool, keep)
             };
             e.history.truncate(new_len);
@@ -1405,7 +1412,7 @@ impl StepBackend for NativeBackend {
         // runs without holding any lock on the hot path (entries own
         // their pages outright)
         let entries: Vec<Option<SlotCache>> = if self.opts.use_cache {
-            let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+            let mut seqs = self.seqs.lock().unwrap_or_else(|e| e.into_inner());
             slots.iter().map(|s| seqs.remove(&s.id)).collect()
         } else {
             slots.iter().map(|_| None).collect()
@@ -1450,7 +1457,7 @@ impl StepBackend for NativeBackend {
             if brows.is_empty() {
                 Ok(vec![])
             } else {
-                let mut s = self.batch_scratch.lock().expect("batch scratch poisoned");
+                let mut s = self.batch_scratch.lock().unwrap_or_else(|e| e.into_inner());
                 self.model.forward_rows(&mut seq_refs, &brows, 0, &mut s, self.col_workers_full())
             }
         };
@@ -1498,7 +1505,7 @@ impl StepBackend for NativeBackend {
         let mut rows = Vec::with_capacity(slots.len());
         let mut first_err = None;
         {
-            let mut seqs = self.seqs.lock().expect("kv registry poisoned");
+            let mut seqs = self.seqs.lock().unwrap_or_else(|e| e.into_inner());
             for ((res, entry), slot) in results.into_iter().zip(entries).zip(slots) {
                 if let Some(e) = entry {
                     seqs.insert(slot.id, e);
@@ -1534,7 +1541,7 @@ impl StepBackend for NativeBackend {
         let mut entry = self
             .seqs
             .lock()
-            .expect("kv registry poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .remove(&slot.id)
             .unwrap_or_else(|| SlotCache {
                 kv: KvSeq::new(self.layout),
@@ -1542,14 +1549,14 @@ impl StepBackend for NativeBackend {
                 scratch: RowScratch::new(),
             });
         let result = self.prefill_chunk_entry(want, max_tokens, &mut entry);
-        self.seqs.lock().expect("kv registry poisoned").insert(slot.id, entry);
+        self.seqs.lock().unwrap_or_else(|e| e.into_inner()).insert(slot.id, entry);
         result
     }
 
     fn release(&self, slot: &DecodeSlot) {
-        let entry = self.seqs.lock().expect("kv registry poisoned").remove(&slot.id);
+        let entry = self.seqs.lock().unwrap_or_else(|e| e.into_inner()).remove(&slot.id);
         if let Some(mut e) = entry {
-            e.kv.clear(&mut self.pool.lock().expect("kv pool poisoned"));
+            e.kv.clear(&mut self.pool.lock().unwrap_or_else(|e| e.into_inner()));
         }
     }
 

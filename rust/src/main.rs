@@ -28,8 +28,8 @@ use nvfp4_faar::pipeline::{pack_model, Method, Workbench};
 use nvfp4_faar::report::tables;
 use nvfp4_faar::runtime::Runtime;
 use nvfp4_faar::serve::{
-    serve_backend, CodecKind, ModelEntry, ModelRegistry, ServeOptions, SpecDecoder,
-    SyntheticBackend, Transport,
+    serve_backend, CodecKind, FaultBackend, FaultPlan, Lifecycle, ModelEntry, ModelRegistry,
+    ServeOptions, SpecDecoder, SyntheticBackend, Transport,
 };
 use nvfp4_faar::train::ParamStore;
 use nvfp4_faar::util::cli::Args;
@@ -58,6 +58,9 @@ USAGE: faar <subcommand> [options]
             [--transport tcp|http|auto] [--codec line|incremental]
             [--temperature T] [--top-k K] [--top-p P]
             [--repetition-penalty R] [--seed S]
+            [--default-deadline-ms MS] [--max-queue-wait-ms MS]
+            [--drain-timeout-ms MS (default 5000)]
+            [--fault-plan SPEC (native|synthetic; or FAAR_FAULT_PLAN)]
   info      --model tiny
 
 The native serve backend runs the quantized transformer in pure rust
@@ -80,6 +83,20 @@ decodes it speculatively: the draft proposes --spec-k tokens, the
 target verifies them in one multi-row pass, and the emitted stream is
 bit-identical to plain decoding. Needs the KV cache (conflicts with
 --no-kv).
+
+Overload protection and drain: --default-deadline-ms bounds every
+request's total server time unless its line carries its own
+\"deadline_ms\" (expired → structured deadline_exceeded / HTTP 504);
+--max-queue-wait-ms sheds requests that waited too long in the queue
+(structured overloaded with a retry_after_ms hint / HTTP 503 with
+Retry-After) so a burst past capacity degrades to fast rejections
+instead of unbounded queueing. SIGTERM or Ctrl-C starts a graceful
+drain: the listener stops accepting, GET /readyz flips to 503, new
+requests get shutting_down, and in-flight decodes run up to
+--drain-timeout-ms before eviction. --fault-plan injects
+deterministic, seeded faults (step errors, KV exhaustion, panics,
+latency) into the backend for chaos testing — see
+serve::fault::FaultPlan for the spec grammar.
 
 --transport selects the wire protocol: tcp is newline-delimited JSON
 (the reference protocol), http serves POST /v1/generate with the same
@@ -309,12 +326,30 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
             CodecKind::parse(&name)
                 .ok_or_else(|| anyhow!("unknown --codec '{name}' (line|incremental)"))?
         },
+        default_deadline_ms: args.u64_or("default-deadline-ms", d.default_deadline_ms)?,
+        max_queue_wait_ms: args.u64_or("max-queue-wait-ms", d.max_queue_wait_ms)?,
+        drain_timeout_ms: args.u64_or("drain-timeout-ms", d.drain_timeout_ms)?,
+        lifecycle: d.lifecycle.clone(),
         // the registry path fills this in with the hosted names so the
         // protocol layer can validate request "model" fields
         models: Vec::new(),
     };
     // reject bad knob combinations at parse time, not deep in the engine
     opts.validate()?;
+    // deterministic chaos: --fault-plan (or FAAR_FAULT_PLAN) wraps the
+    // backend in a seeded fault injector, validated here at parse time
+    let fault = match args
+        .get("fault-plan")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("FAAR_FAULT_PLAN").ok().filter(|s| !s.is_empty()))
+    {
+        Some(spec) => {
+            let plan = FaultPlan::parse(&spec)?;
+            info!("fault injection armed: {spec}");
+            Some(plan)
+        }
+        None => None,
+    };
     let backend = args.str_or("backend", "xla");
     if backend != "xla" && args.get("method").is_some() {
         bail!(
@@ -329,6 +364,12 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
             }
         }
     }
+    if backend == "xla" && fault.is_some() {
+        bail!("--fault-plan applies to the native and synthetic serve backends");
+    }
+    // SIGTERM / Ctrl-C flip the engine into a graceful drain instead of
+    // killing in-flight decodes
+    install_drain_handler(opts.lifecycle.clone());
     match backend.as_str() {
         "xla" => {
             let method = Method::parse(&args.str_or("method", "faar+2fa"))?;
@@ -338,7 +379,7 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
             let gen = nvfp4_faar::serve::Generator::new(&wb.rt, outcome.params.clone());
             gen.serve_with(&addr, max_conns, opts).map(|_| ())
         }
-        "native" => serve_native(cfg, args, &addr, max_conns, opts),
+        "native" => serve_native(cfg, args, &addr, max_conns, opts, fault),
         "synthetic" => {
             let manifest = native_manifest(&cfg.model)?;
             let backend = SyntheticBackend::new(
@@ -346,11 +387,56 @@ fn cmd_serve(cfg: PipelineConfig, args: &Args) -> Result<()> {
                 manifest.config.seq_len,
                 cfg.seed,
             );
-            serve_backend(&backend, &addr, max_conns, opts).map(|_| ())
+            match fault {
+                Some(plan) => {
+                    serve_backend(&FaultBackend::new(backend, plan), &addr, max_conns, opts)
+                        .map(|_| ())
+                }
+                None => serve_backend(&backend, &addr, max_conns, opts).map(|_| ()),
+            }
         }
         other => bail!("unknown backend '{other}' (native|xla|synthetic)"),
     }
 }
+
+/// The flag an async-signal handler may touch: the watcher thread below
+/// translates it into a [`Lifecycle`] drain outside signal context.
+static DRAIN_SIGNAL: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_drain_signal(_sig: i32) {
+    DRAIN_SIGNAL.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT into a graceful drain: the handler only
+/// sets an atomic flag (the one thing that is async-signal-safe); a
+/// watcher thread sees it and flips the shared [`Lifecycle`], which
+/// stops the acceptor, flips `/readyz` to 503, and starts the
+/// `--drain-timeout-ms` clock. Declared against `signal(2)` directly so
+/// the offline build stays free of a libc crate dependency.
+#[cfg(unix)]
+fn install_drain_handler(lifecycle: std::sync::Arc<Lifecycle>) {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_drain_signal);
+        signal(SIGTERM, on_drain_signal);
+    }
+    std::thread::spawn(move || {
+        while !DRAIN_SIGNAL.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        warn!("shutdown signal received: draining (in-flight requests finish)");
+        lifecycle.begin_drain();
+    });
+}
+
+/// Non-unix fallback: no signal routing; drain still works through
+/// [`ServeOptions::lifecycle`] for embedders and tests.
+#[cfg(not(unix))]
+fn install_drain_handler(_lifecycle: std::sync::Arc<Lifecycle>) {}
 
 /// Build the server-default `GenParams` from the serve CLI flags
 /// (greedy unless `--temperature` is given). Explicitly passing a
@@ -390,6 +476,7 @@ fn serve_native(
     addr: &str,
     max_conns: Option<usize>,
     mut opts: ServeOptions,
+    fault: Option<FaultPlan>,
 ) -> Result<()> {
     let draft = args.get("draft-model").map(|s| s.to_string());
     let spec_k = args.usize_or("spec-k", 4)?;
@@ -426,7 +513,11 @@ fn serve_native(
     if args.get("models").is_none() && draft.is_none() {
         // bare single-model serving: no registry indirection on the path
         let backend = build_native_backend(&cfg, &cfg.model, args, &opts)?;
-        return serve_backend(&backend, addr, max_conns, opts).map(|_| ());
+        return match fault {
+            Some(plan) => serve_backend(&FaultBackend::new(backend, plan), addr, max_conns, opts)
+                .map(|_| ()),
+            None => serve_backend(&backend, addr, max_conns, opts).map(|_| ()),
+        };
     }
     if let Some(dp) = &draft {
         // fail a bad pairing before any weights are built or quantized
@@ -450,7 +541,12 @@ fn serve_native(
     let registry = ModelRegistry::new(entries)?;
     opts.models = registry.names();
     info!("serving {} hosted model(s): {}", opts.models.len(), opts.models.join(", "));
-    serve_backend(&registry, addr, max_conns, opts).map(|_| ())
+    match fault {
+        Some(plan) => {
+            serve_backend(&FaultBackend::new(registry, plan), addr, max_conns, opts).map(|_| ())
+        }
+        None => serve_backend(&registry, addr, max_conns, opts).map(|_| ()),
+    }
 }
 
 /// Build one native backend for `preset`: checkpoint (or deterministic

@@ -489,7 +489,9 @@ pub struct SyntheticBackend {
     /// bench can measure what chunked prefill buys without real kernels
     per_prefill_token: Duration,
     /// prompt tokens already prefilled, per slot id (only maintained
-    /// when a prefill cost is configured)
+    /// when a prefill cost is configured). Locked with poison recovery:
+    /// every critical section is a single map insert/lookup/remove, so
+    /// a panicking holder cannot leave a half-updated ledger behind
     prefilled: Mutex<HashMap<u64, usize>>,
     /// fraction of (token, position) pairs whose argmax is
     /// deterministically flipped to a pseudo-random other token — turns
@@ -610,7 +612,7 @@ impl StepBackend for SyntheticBackend {
             // prompt on an unchunked slot's first step), then mark the
             // decode token cached too — steady-state decode steps cost
             // only per_slot_cost, like the real cached path
-            let mut prefilled = self.prefilled.lock().expect("prefill ledger poisoned");
+            let mut prefilled = self.prefilled.lock().unwrap_or_else(|e| e.into_inner());
             for s in slots {
                 let done = prefilled.get(&s.id).copied().unwrap_or(0);
                 let missing = self.missing_prefill(s, done);
@@ -632,7 +634,7 @@ impl StepBackend for SyntheticBackend {
             return Ok(0);
         }
         let done = {
-            let prefilled = self.prefilled.lock().expect("prefill ledger poisoned");
+            let prefilled = self.prefilled.lock().unwrap_or_else(|e| e.into_inner());
             prefilled.get(&slot.id).copied().unwrap_or(0)
         };
         let missing = self.missing_prefill(slot, done);
@@ -640,13 +642,13 @@ impl StepBackend for SyntheticBackend {
         // spin OUTSIDE the lock: concurrent callers must not serialize
         // on the ledger while simulated prefill work burns
         spin(self.per_prefill_token * give as u32);
-        self.prefilled.lock().expect("prefill ledger poisoned").insert(slot.id, done + give);
+        self.prefilled.lock().unwrap_or_else(|e| e.into_inner()).insert(slot.id, done + give);
         Ok(missing - give)
     }
 
     fn release(&self, slot: &DecodeSlot) {
         if !self.per_prefill_token.is_zero() {
-            self.prefilled.lock().expect("prefill ledger poisoned").remove(&slot.id);
+            self.prefilled.lock().unwrap_or_else(|e| e.into_inner()).remove(&slot.id);
         }
     }
 }

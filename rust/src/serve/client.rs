@@ -33,6 +33,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// A request under construction: `None` / empty fields stay off the
 /// wire, so a default request is a plain v1 greedy line.
@@ -62,6 +63,9 @@ pub struct ClientRequest {
     pub stream: bool,
     /// hosted model to route to (`"model"`; server default when `None`)
     pub model: Option<String>,
+    /// total server-side time budget (`"deadline_ms"`; server default
+    /// when `None`)
+    pub deadline_ms: Option<u64>,
 }
 
 impl ClientRequest {
@@ -118,6 +122,14 @@ impl ClientRequest {
         self
     }
 
+    /// Bound the request's total server-side time: queue wait plus
+    /// decode (`"deadline_ms"`; expired requests end with a structured
+    /// `deadline_exceeded` error).
+    pub fn deadline_ms(mut self, ms: u64) -> ClientRequest {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     /// Serialize to one protocol line (no trailing newline).
     pub fn to_line(&self) -> String {
         let mut fields: Vec<(&str, Json)> = Vec::new();
@@ -131,6 +143,9 @@ impl ClientRequest {
         }
         if let Some(n) = self.max_tokens {
             fields.push(("max_tokens", Json::num(n as f64)));
+        }
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
         }
         let mut params: Vec<(&str, Json)> = Vec::new();
         if let Some(t) = self.temperature {
@@ -193,6 +208,53 @@ pub struct ProtocolError {
     pub code: String,
     /// human-readable detail
     pub message: String,
+    /// server backoff hint in milliseconds (shed/drain rejections)
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ProtocolError {
+    /// Whether this rejection was issued *before* the request reached a
+    /// decode slot — the only class a client may safely retry without
+    /// risking double execution (`overloaded` queue sheds and
+    /// `shutting_down` drain refusals; both happen at admission).
+    pub fn is_pre_admission(&self) -> bool {
+        matches!(self.code.as_str(), "overloaded" | "shutting_down")
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter, applied only
+/// to pre-admission rejections (see [`ProtocolError::is_pre_admission`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// retries after the initial attempt (0 = never retry)
+    pub max_retries: u32,
+    /// delay before the first retry (doubles each attempt)
+    pub base_ms: u64,
+    /// upper bound on any single delay, including server hints
+    pub cap_ms: u64,
+    /// jitter seed, so test backoff schedules are reproducible
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 4, base_ms: 50, cap_ms: 2_000, seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before 0-based retry `attempt`: the server's
+    /// `Retry-After` hint when it sent one (capped), otherwise
+    /// `base * 2^attempt` capped, with ±25% deterministic jitter so a
+    /// shed burst of clients does not reconverge in lockstep.
+    pub fn delay(&self, attempt: u32, hint_ms: Option<u64>) -> Duration {
+        if let Some(ms) = hint_ms {
+            return Duration::from_millis(ms.min(self.cap_ms));
+        }
+        let exp = self.base_ms.saturating_mul(1u64 << attempt.min(16)).min(self.cap_ms);
+        let jitter = 0.75 + 0.5 * Rng::new(self.seed ^ 0x5245_5452).fork(attempt as u64).f64();
+        Duration::from_millis((exp as f64 * jitter) as u64)
+    }
 }
 
 /// One incremental token frame of a streaming request.
@@ -326,6 +388,32 @@ impl Client {
         let req = ClientRequest { stream: false, ..req.clone() };
         self.send(&req)?;
         self.read_reply()
+    }
+
+    /// [`Client::request`] with automatic retry of pre-admission
+    /// rejections: `overloaded` (queue shed) and `shutting_down` (drain
+    /// refusal) are reissued after a capped exponential backoff that
+    /// honors the server's `retry_after_ms` hint. Only those two codes
+    /// retry — both are issued before the request ever reaches a decode
+    /// slot, so a retry can never double-execute work. Transport errors
+    /// are NOT retried (the original may be mid-decode server-side);
+    /// they surface as `Err` for the caller to decide.
+    pub fn request_with_retry(
+        &mut self,
+        req: &ClientRequest,
+        policy: &RetryPolicy,
+    ) -> Result<Reply> {
+        let mut attempt = 0u32;
+        loop {
+            let reply = self.request(req)?;
+            match &reply {
+                Err(e) if e.is_pre_admission() && attempt < policy.max_retries => {
+                    std::thread::sleep(policy.delay(attempt, e.retry_after_ms));
+                    attempt += 1;
+                }
+                _ => return Ok(reply),
+            }
+        }
     }
 
     /// Round-trip one streaming request: returns the token frames (in
@@ -486,6 +574,10 @@ fn parse_line(line: &str) -> Result<Line> {
         return Ok(Line::Reply(Err(ProtocolError {
             code: err.req("code")?.as_str()?.to_string(),
             message: err.req("message")?.as_str()?.to_string(),
+            retry_after_ms: err
+                .get("retry_after_ms")
+                .and_then(|x| x.as_usize().ok())
+                .map(|n| n as u64),
         })));
     }
     if let Some(t) = v.get("token") {
@@ -540,6 +632,56 @@ mod tests {
         assert_eq!(p.req("top_k").unwrap().as_usize().unwrap(), 5);
         assert_eq!(p.req("top_p").unwrap().as_f64().unwrap(), 0.9);
         assert_eq!(p.req("seed").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn request_lines_carry_deadline() {
+        let line = ClientRequest::tokens(vec![1]).deadline_ms(250).to_line();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.req("deadline_ms").unwrap().as_usize().unwrap(), 250);
+        // and stays off the wire when unset
+        let v = Json::parse(&ClientRequest::tokens(vec![1]).to_line()).unwrap();
+        assert!(v.get("deadline_ms").is_none());
+    }
+
+    #[test]
+    fn parse_line_reads_retry_after_hint() {
+        let line = r#"{"error":{"code":"overloaded","message":"shed","retry_after_ms":120}}"#;
+        match parse_line(line).unwrap() {
+            Line::Reply(Err(e)) => {
+                assert_eq!(e.code, "overloaded");
+                assert_eq!(e.retry_after_ms, Some(120));
+                assert!(e.is_pre_admission());
+            }
+            _ => panic!("expected an error"),
+        }
+        match parse_line(r#"{"error":{"code":"bad_json","message":"x"}}"#).unwrap() {
+            Line::Reply(Err(e)) => {
+                assert_eq!(e.retry_after_ms, None);
+                assert!(!e.is_pre_admission());
+            }
+            _ => panic!("expected an error"),
+        }
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_capped_jittered_and_hint_honoring() {
+        let p = RetryPolicy { max_retries: 8, base_ms: 100, cap_ms: 1_000, seed: 7 };
+        // a server hint wins over the schedule (capped)
+        assert_eq!(p.delay(0, Some(120)), Duration::from_millis(120));
+        assert_eq!(p.delay(0, Some(10_000)), Duration::from_millis(1_000));
+        // deterministic for a fixed seed
+        assert_eq!(p.delay(3, None), p.delay(3, None));
+        // exponential-with-jitter stays within [0.75, 1.25] of base*2^n,
+        // and the cap bounds late attempts
+        for attempt in 0..8u32 {
+            let exp = (100u64 << attempt).min(1_000);
+            let d = p.delay(attempt, None).as_millis() as u64;
+            assert!(
+                d >= exp * 3 / 4 && d <= exp * 5 / 4,
+                "attempt {attempt}: {d}ms outside jitter window of {exp}ms"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Deterministic fault injection for the serve stack.
+//!
+//! Production failure handling is only trustworthy if the failures are
+//! *reproducible*: a chaos test that sometimes injects a panic and
+//! sometimes does not cannot pin the recovery behaviour. This module
+//! provides:
+//!
+//! * [`FaultPlan`] — a seeded, fully deterministic schedule of faults,
+//!   parsed from a compact spec string (`--fault-plan` /
+//!   `FAAR_FAULT_PLAN`), so the exact same chaos replays on every run.
+//! * [`FaultBackend`] — a wrapper over any [`StepBackend`] that executes
+//!   the plan: at scripted decode-tick indices it returns step errors,
+//!   typed [`KvExhausted`] errors, added latency, or panics outright —
+//!   exercising every unhappy path the scheduler claims to contain
+//!   (structured `backend` / `backend_panic` errors, KV release on
+//!   eviction, poisoned-lock recovery).
+//! * [`torn_chunks`] — a deterministic splitter test clients use to
+//!   simulate connection-level faults (torn writes, mid-frame stalls)
+//!   against the incremental frame decoder.
+//!
+//! The wrapper never perturbs the happy path: a tick with no scheduled
+//! fault forwards to the inner backend untouched, so bit-parity
+//! invariants (batched == sequential) hold for every token that is
+//! actually produced.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::{spin, CacheStats, DecodeSlot, StepBackend};
+use super::spec::{ModelQueueStats, SpecStats};
+use crate::infer::kv::KvExhausted;
+use crate::util::rng::Rng;
+
+/// One scheduled fault at a decode-tick index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// the backend call fails with an `anyhow` error (`backend` code)
+    StepError,
+    /// the backend call fails with a typed [`KvExhausted`] error — the
+    /// same error class a real pool-budget miss raises, so downcast-based
+    /// degrade paths fire exactly as they would in production
+    KvExhausted,
+    /// the backend call panics (`backend_panic` containment path)
+    Panic,
+    /// the backend call succeeds after busy-waiting this long (deadline
+    /// and overload paths)
+    Latency(Duration),
+}
+
+/// A deterministic, seeded fault schedule over decode-tick indices.
+///
+/// Parsed from a compact comma-separated spec, e.g.
+/// `seed=7,step_err=3+11,panic=20,kv=5,prefill_err=2,latency=4:8,err_rate=0.01`:
+///
+/// | key           | value                    | effect at tick *i*                     |
+/// |---------------|--------------------------|----------------------------------------|
+/// | `seed`        | u64                      | seeds the `err_rate` draw (default 0)  |
+/// | `step_err`    | `+`-separated tick list  | step returns an error                  |
+/// | `kv`          | `+`-separated tick list  | step returns typed [`KvExhausted`]     |
+/// | `panic`       | `+`-separated tick list  | step panics                            |
+/// | `latency`     | `tick:ms` (+-separated)  | step busy-waits `ms` first             |
+/// | `prefill_err` | `+`-separated call list  | the i-th `prefill_chunk` call errors   |
+/// | `err_rate`    | probability in \[0, 1\]  | unscripted ticks error at this rate    |
+///
+/// The `err_rate` draw is a pure function of `(seed, tick)` — no global
+/// RNG state — so the schedule is identical however the plan is queried.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// seed for the probabilistic `err_rate` draws
+    pub seed: u64,
+    /// probability that an unscripted tick fails with a step error
+    pub err_rate: f64,
+    step_errors: HashSet<u64>,
+    kv_exhausted: HashSet<u64>,
+    panics: HashSet<u64>,
+    latency: HashMap<u64, u64>,
+    prefill_errors: HashSet<u64>,
+}
+
+fn parse_ticks(key: &str, v: &str) -> Result<HashSet<u64>> {
+    v.split('+')
+        .map(|t| t.trim().parse::<u64>().with_context(|| format!("bad {key} tick '{t}'")))
+        .collect()
+}
+
+impl FaultPlan {
+    /// Parse a plan from its spec string (see the type docs for the
+    /// grammar). An empty string parses to the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for field in spec.split(',') {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let (key, value) = field
+                .split_once('=')
+                .with_context(|| format!("fault-plan field '{field}' is not key=value"))?;
+            match key.trim() {
+                "seed" => plan.seed = value.trim().parse().context("bad seed")?,
+                "err_rate" => {
+                    let p: f64 = value.trim().parse().context("bad err_rate")?;
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("err_rate {p} outside [0, 1]");
+                    }
+                    plan.err_rate = p;
+                }
+                "step_err" => plan.step_errors = parse_ticks("step_err", value)?,
+                "kv" => plan.kv_exhausted = parse_ticks("kv", value)?,
+                "panic" => plan.panics = parse_ticks("panic", value)?,
+                "prefill_err" => plan.prefill_errors = parse_ticks("prefill_err", value)?,
+                "latency" => {
+                    for item in value.split('+') {
+                        let (tick, ms) = item
+                            .split_once(':')
+                            .with_context(|| format!("latency item '{item}' is not tick:ms"))?;
+                        plan.latency.insert(
+                            tick.trim().parse().context("bad latency tick")?,
+                            ms.trim().parse().context("bad latency ms")?,
+                        );
+                    }
+                }
+                other => bail!("unknown fault-plan key '{other}'"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan schedules nothing (the wrapper is a pass-through).
+    pub fn is_empty(&self) -> bool {
+        self.err_rate == 0.0
+            && self.step_errors.is_empty()
+            && self.kv_exhausted.is_empty()
+            && self.panics.is_empty()
+            && self.latency.is_empty()
+            && self.prefill_errors.is_empty()
+    }
+
+    /// The fault (if any) scheduled at decode tick `idx`. Scripted ticks
+    /// win over the probabilistic `err_rate` draw; the draw itself is a
+    /// pure function of `(seed, idx)`.
+    pub fn fault_at(&self, idx: u64) -> Option<Fault> {
+        if self.panics.contains(&idx) {
+            return Some(Fault::Panic);
+        }
+        if self.kv_exhausted.contains(&idx) {
+            return Some(Fault::KvExhausted);
+        }
+        if self.step_errors.contains(&idx) {
+            return Some(Fault::StepError);
+        }
+        if let Some(&ms) = self.latency.get(&idx) {
+            return Some(Fault::Latency(Duration::from_millis(ms)));
+        }
+        if self.err_rate > 0.0 && Rng::new(self.seed).fork(idx).bernoulli(self.err_rate) {
+            return Some(Fault::StepError);
+        }
+        None
+    }
+
+    /// True when the `idx`-th `prefill_chunk` call is scheduled to fail.
+    pub fn prefill_fault_at(&self, idx: u64) -> bool {
+        self.prefill_errors.contains(&idx)
+    }
+}
+
+/// Executes a [`FaultPlan`] over any inner [`StepBackend`].
+///
+/// Decode ticks are counted once per scheduler step, whether the tick is
+/// served by the plain [`StepBackend::step`] path or a speculative
+/// [`StepBackend::spec_step`] takeover, so one plan drives chaos against
+/// single-model, multi-model, and draft-paired deployments alike. Every
+/// non-faulted call — and *all* bookkeeping calls (`release`,
+/// `bind_model`, stats) — forwards to the inner backend untouched, so KV
+/// accounting stays exact across injected failures.
+pub struct FaultBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    steps: AtomicU64,
+    prefills: AtomicU64,
+}
+
+impl<B: StepBackend> FaultBackend<B> {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: B, plan: FaultPlan) -> FaultBackend<B> {
+        FaultBackend { inner, plan, steps: AtomicU64::new(0), prefills: AtomicU64::new(0) }
+    }
+
+    /// The wrapped backend (chaos tests probe its KV accounting through
+    /// this after the server drains).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Decode ticks observed so far.
+    pub fn ticks(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Raise the scheduled failure for tick `idx`, if any. Latency is
+    /// paid here and reported as "no fault" so the caller proceeds.
+    fn raise(&self, idx: u64) -> Result<()> {
+        match self.plan.fault_at(idx) {
+            None => Ok(()),
+            Some(Fault::Latency(d)) => {
+                spin(d);
+                Ok(())
+            }
+            Some(Fault::StepError) => bail!("injected fault: step error at tick {idx}"),
+            Some(Fault::KvExhausted) => {
+                Err(anyhow::Error::new(KvExhausted { outstanding: 0 }))
+                    .with_context(|| format!("injected fault: kv exhaustion at tick {idx}"))
+            }
+            Some(Fault::Panic) => panic!("injected fault: panic at tick {idx}"),
+        }
+    }
+}
+
+impl<B: StepBackend> StepBackend for FaultBackend<B> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn step(&self, slots: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        let idx = self.steps.fetch_add(1, Ordering::Relaxed);
+        self.raise(idx)?;
+        self.inner.step(slots)
+    }
+
+    fn prefill_chunk(&self, slot: &DecodeSlot, max_tokens: usize) -> Result<usize> {
+        let idx = self.prefills.fetch_add(1, Ordering::Relaxed);
+        if self.plan.prefill_fault_at(idx) {
+            bail!("injected fault: prefill error at call {idx}");
+        }
+        self.inner.prefill_chunk(slot, max_tokens)
+    }
+
+    fn release(&self, slot: &DecodeSlot) {
+        self.inner.release(slot);
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.inner.cache_stats()
+    }
+
+    fn bind_model(&self, slot: &DecodeSlot, model: Option<&str>) -> Result<()> {
+        self.inner.bind_model(slot, model)
+    }
+
+    fn spec_step(&self, slots: &mut [DecodeSlot]) -> Option<Result<()>> {
+        // a speculative tick consumes the same counter as a plain one,
+        // but only if the inner backend actually takes the tick over —
+        // otherwise the scheduler falls through to `step`, which counts
+        // it (the scheduler thread is the only caller, so the
+        // load/store pair cannot race)
+        let idx = self.steps.load(Ordering::Relaxed);
+        match self.plan.fault_at(idx) {
+            Some(Fault::Latency(_)) | None => {}
+            Some(_) => {
+                self.steps.store(idx + 1, Ordering::Relaxed);
+                return Some(self.raise(idx).map(|_| ()));
+            }
+        }
+        let took = self.inner.spec_step(slots);
+        if took.is_some() {
+            self.steps.store(idx + 1, Ordering::Relaxed);
+        }
+        took
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        self.inner.spec_stats()
+    }
+
+    fn model_queue_stats(&self) -> Vec<ModelQueueStats> {
+        self.inner.model_queue_stats()
+    }
+}
+
+/// Split `bytes` into deterministic small chunks with per-chunk stall
+/// durations — the connection-level fault model. A chaos client writes
+/// each chunk, sleeps its stall, and writes the next, producing torn
+/// frames and mid-frame stalls the incremental decoder must survive.
+/// Chunk boundaries and stalls are pure functions of `seed`.
+pub fn torn_chunks(bytes: &[u8], seed: u64) -> Vec<(Vec<u8>, Duration)> {
+    let mut rng = Rng::new(seed ^ 0x7061_6c6c_6173);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let n = (1 + rng.below(7)).min(bytes.len() - i);
+        let stall = Duration::from_micros(rng.below(800) as u64);
+        out.push((bytes[i..i + n].to_vec(), stall));
+        i += n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batch::{generate_greedy, SyntheticBackend};
+
+    #[test]
+    fn plan_parses_and_schedules() {
+        let plan =
+            FaultPlan::parse("seed=7, step_err=3+11, panic=20, kv=5, latency=4:8, prefill_err=2")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.fault_at(3), Some(Fault::StepError));
+        assert_eq!(plan.fault_at(11), Some(Fault::StepError));
+        assert_eq!(plan.fault_at(20), Some(Fault::Panic));
+        assert_eq!(plan.fault_at(5), Some(Fault::KvExhausted));
+        assert_eq!(plan.fault_at(4), Some(Fault::Latency(Duration::from_millis(8))));
+        assert_eq!(plan.fault_at(6), None);
+        assert!(plan.prefill_fault_at(2));
+        assert!(!plan.prefill_fault_at(3));
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("err_rate=1.5").is_err());
+        assert!(FaultPlan::parse("step_err=x").is_err());
+    }
+
+    #[test]
+    fn err_rate_draw_is_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::parse("seed=9,err_rate=0.25").unwrap();
+        let hits = (0..4000).filter(|&i| plan.fault_at(i).is_some()).count();
+        let rate = hits as f64 / 4000.0;
+        assert!((0.18..=0.32).contains(&rate), "err_rate draw off: {rate}");
+        // pure function of (seed, idx): re-querying never changes the answer
+        for i in 0..64 {
+            assert_eq!(plan.fault_at(i), plan.fault_at(i));
+        }
+    }
+
+    #[test]
+    fn unfaulted_ticks_are_bit_transparent() {
+        let base = SyntheticBackend::new(32, 8, 42);
+        let wrapped =
+            FaultBackend::new(SyntheticBackend::new(32, 8, 42), FaultPlan::default());
+        let a = generate_greedy(&base, &[1, 2, 3], 12).unwrap();
+        let b = generate_greedy(&wrapped, &[1, 2, 3], 12).unwrap();
+        assert_eq!(a, b, "empty plan must not perturb tokens");
+    }
+
+    #[test]
+    fn scripted_errors_fire_at_their_ticks() {
+        let plan = FaultPlan::parse("step_err=1,kv=2").unwrap();
+        let b = FaultBackend::new(SyntheticBackend::new(32, 8, 42), plan);
+        let slot = crate::serve::batch::DecodeSlot::new(&[1], 8, 8).unwrap();
+        assert!(b.step(std::slice::from_ref(&slot)).is_ok());
+        assert!(b.step(std::slice::from_ref(&slot)).is_err());
+        let kv_err = b.step(std::slice::from_ref(&slot)).unwrap_err();
+        assert!(
+            kv_err.downcast_ref::<KvExhausted>().is_some(),
+            "kv fault must carry the typed error: {kv_err}"
+        );
+        assert!(b.step(std::slice::from_ref(&slot)).is_ok());
+        assert_eq!(b.ticks(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: panic at tick 0")]
+    fn scripted_panic_panics() {
+        let b = FaultBackend::new(
+            SyntheticBackend::new(32, 8, 42),
+            FaultPlan::parse("panic=0").unwrap(),
+        );
+        let slot = crate::serve::batch::DecodeSlot::new(&[1], 8, 8).unwrap();
+        let _ = b.step(std::slice::from_ref(&slot));
+    }
+
+    #[test]
+    fn torn_chunks_reassemble_exactly() {
+        let payload: Vec<u8> = (0..257u32).map(|i| (i % 251) as u8).collect();
+        let chunks = torn_chunks(&payload, 11);
+        assert!(chunks.len() > payload.len() / 7, "chunks too coarse");
+        let glued: Vec<u8> = chunks.iter().flat_map(|(c, _)| c.clone()).collect();
+        assert_eq!(glued, payload);
+        // deterministic: same seed, same schedule
+        let again = torn_chunks(&payload, 11);
+        assert_eq!(chunks.len(), again.len());
+        assert!(chunks.iter().zip(&again).all(|(a, b)| a == b));
+    }
+}

@@ -14,7 +14,13 @@
 //! * non-streaming → one `application/json` response, keep-alive,
 //!   status from the structured error code (`bad_*` → 400,
 //!   `oversized` → 413, `length_required` → 411, `not_found` → 404,
-//!   `method_not_allowed` → 405, `backend` → 500);
+//!   `method_not_allowed` → 405, `overloaded`/`shutting_down` → 503
+//!   with a `Retry-After` header, `deadline_exceeded` → 504,
+//!   `backend`/`backend_panic` → 500);
+//! * `GET /healthz` → 200 while the process is alive;
+//!   `GET /readyz` → 200 normally, 503 once a drain begins — both
+//!   answer through the writer's reorder queue so they stay in
+//!   request order with pipelined generate calls;
 //! * `"stream": true` → a `text/event-stream` response: one
 //!   `data: {"token":...}` event per token frame, then the terminal
 //!   response object as the last event, then connection close (the
@@ -62,6 +68,8 @@ pub(crate) fn status_for(result: &Result<Decoded, ServeError>) -> u16 {
             "oversized" => 413,
             "not_found" | "unknown_model" => 404,
             "method_not_allowed" => 405,
+            "overloaded" | "shutting_down" => 503,
+            "deadline_exceeded" => 504,
             _ => 500,
         },
     }
@@ -76,14 +84,36 @@ fn reason(status: u16) -> &'static str {
         411 => "Length Required",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Status",
     }
 }
 
 /// A complete keep-alive `application/json` response.
 pub(crate) fn json_response(status: u16, body: &str) -> Vec<u8> {
+    json_response_with(status, body, None)
+}
+
+/// A complete keep-alive `application/json` response for a terminal
+/// result: status from the structured error code, plus a `Retry-After`
+/// header (whole seconds, rounded up — the header's granularity) when
+/// the rejection carries a backoff hint.
+pub(crate) fn terminal_response(result: &Result<Decoded, ServeError>, body: &str) -> Vec<u8> {
+    let retry = match result {
+        Err(e) => e.retry_after_ms,
+        Ok(_) => None,
+    };
+    json_response_with(status_for(result), body, retry)
+}
+
+fn json_response_with(status: u16, body: &str, retry_after_ms: Option<u64>) -> Vec<u8> {
+    let retry = match retry_after_ms {
+        Some(ms) => format!("retry-after: {}\r\n", ms.div_ceil(1000).max(1)),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\n{retry}content-length: {}\r\n\r\n",
         reason(status),
         body.len()
     );
@@ -283,6 +313,36 @@ pub(crate) fn reader_loop(
             }
         };
         // ---- routing ----
+        // health endpoints answer without touching the scheduler, but
+        // still consume a sequence number and ride the writer's reorder
+        // queue so pipelined responses stay in request order
+        if head.method == "GET" && (head.path == "/healthz" || head.path == "/readyz") {
+            let this = seq;
+            seq += 1;
+            progress.issued.store(seq, Ordering::Release);
+            // liveness never flips (a responding process is alive);
+            // readiness goes 503 the moment a drain begins so load
+            // balancers stop routing new work here
+            let ready = head.path == "/healthz" || !opts.lifecycle.draining();
+            let (status, state) = if ready { (200, "ok") } else { (503, "draining") };
+            let body = format!("{{\"status\":\"{state}\"}}");
+            let resp = String::from_utf8(json_response(status, &body))
+                .expect("http responses are always UTF-8");
+            if w_tx.send(WriterMsg::Raw { seq: this, body: resp }).is_err() {
+                break 'conn;
+            }
+            if !skip_body(
+                &mut stream,
+                &mut carry,
+                progress,
+                peer,
+                head.content_length,
+                opts.max_line_bytes,
+            ) {
+                break 'conn;
+            }
+            continue;
+        }
         if head.chunked {
             respond_err(&mut seq, bad("chunked transfer encoding is not supported"));
             break 'conn;
@@ -372,7 +432,7 @@ pub(crate) fn reader_loop(
         seq += 1;
         progress.issued.store(seq, Ordering::Release);
         match outcome {
-            Ok(ParsedRequest { prompt, max_tokens, params, stream: sse, model }) => {
+            Ok(ParsedRequest { prompt, max_tokens, params, stream: sse, model, deadline_ms }) => {
                 // declare the framing mode first: writer-queue order
                 // guarantees the writer knows before any frame arrives
                 if w_tx.send(WriterMsg::Mode { seq: this, sse }).is_err() {
@@ -387,6 +447,7 @@ pub(crate) fn reader_loop(
                     params,
                     stream: sse,
                     model,
+                    deadline_ms,
                     enqueued: Instant::now(),
                 };
                 if req_tx.send(req).is_err() {
@@ -453,6 +514,28 @@ mod tests {
         assert_eq!(s("unknown_model"), 404);
         assert_eq!(s("method_not_allowed"), 405);
         assert_eq!(s("backend"), 500);
+        assert_eq!(s("backend_panic"), 500);
+        assert_eq!(s("overloaded"), 503);
+        assert_eq!(s("shutting_down"), 503);
+        assert_eq!(s("deadline_exceeded"), 504);
+    }
+
+    #[test]
+    fn retry_after_header_rounds_up_to_seconds() {
+        let shed: Result<Decoded, ServeError> =
+            Err(ServeError::new("overloaded", "shed").with_retry_after(1500));
+        let text = String::from_utf8(terminal_response(&shed, "{}")).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("retry-after: 2\r\n"), "{text}");
+        // sub-second hints still round up to the header's 1s floor
+        let shed: Result<Decoded, ServeError> =
+            Err(ServeError::new("overloaded", "shed").with_retry_after(10));
+        let text = String::from_utf8(terminal_response(&shed, "{}")).unwrap();
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        // no hint → no header
+        let plain: Result<Decoded, ServeError> = Err(ServeError::new("bad_json", "x"));
+        let text = String::from_utf8(terminal_response(&plain, "{}")).unwrap();
+        assert!(!text.contains("retry-after"), "{text}");
     }
 
     #[test]

@@ -30,6 +30,16 @@
 //! Responses on a connection always come back in request order, frames
 //! ordered within their request.
 //!
+//! Overload protection (see DESIGN.md §16): an optional v2
+//! `"deadline_ms"` field bounds a request's total time in the server
+//! (expired slots are evicted with code `deadline_exceeded`), queue
+//! waits past `--max-queue-wait-ms` shed at admission with code
+//! `overloaded` and a `retry_after_ms` hint (HTTP 503 + `Retry-After`),
+//! and SIGTERM flips the listener into a graceful drain (new requests
+//! get `shutting_down`, in-flight ones finish up to
+//! `--drain-timeout-ms`). `GET /healthz` / `GET /readyz` report
+//! liveness/readiness on the HTTP front end.
+//!
 //! Architecture (see DESIGN.md §8):
 //!
 //! ```text
@@ -61,6 +71,7 @@
 pub mod batch;
 pub mod client;
 pub mod codec;
+pub mod fault;
 pub mod http;
 pub mod sampling;
 pub mod scheduler;
@@ -81,8 +92,9 @@ pub use batch::{
 };
 pub use client::Client;
 pub use codec::CodecKind;
+pub use fault::{FaultBackend, FaultPlan};
 pub use sampling::{GenParams, Sampler};
-pub use scheduler::{Registry, SchedStats, ServeError, ServeOptions, Transport};
+pub use scheduler::{Lifecycle, Registry, SchedStats, ServeError, ServeOptions, Transport};
 pub use spec::{
     spec_generate, ModelEntry, ModelQueueStats, ModelRegistry, SpecDecoder, SpecModel, SpecStats,
 };
@@ -196,6 +208,10 @@ pub struct ParsedRequest {
     /// validated model name from the v2 `"model"` field (`None` routes
     /// to the server's default model)
     pub model: Option<String>,
+    /// total time budget in milliseconds, measured from enqueue: the
+    /// request's `"deadline_ms"` field, or the server default when the
+    /// field is absent (`None` = no deadline)
+    pub deadline_ms: Option<u64>,
 }
 
 /// Parse and validate one request line (v1 bare lines or v2 with
@@ -279,7 +295,25 @@ pub fn parse_request(
             Some(name.to_string())
         }
     };
-    Ok(ParsedRequest { prompt, max_tokens, params, stream, model })
+    // a request without the field inherits the server-wide default
+    // deadline (0 = none); an explicit field must be a positive integer
+    // — `"deadline_ms": 0` would be a request that can never complete
+    let deadline_ms = match req.get("deadline_ms") {
+        None => (opts.default_deadline_ms > 0).then_some(opts.default_deadline_ms),
+        Some(v) => {
+            let ms = v.as_usize().map_err(|_| {
+                ServeError::new("bad_request", "'deadline_ms' must be a positive integer")
+            })?;
+            if ms == 0 {
+                return Err(ServeError::new(
+                    "bad_request",
+                    "'deadline_ms' must be > 0 (omit it for no deadline)",
+                ));
+            }
+            Some(ms as u64)
+        }
+    };
+    Ok(ParsedRequest { prompt, max_tokens, params, stream, model, deadline_ms })
 }
 
 /// Parse a `{"cancel": N}` control frame (TCP transport): `N` is the
@@ -442,14 +476,18 @@ fn format_response(result: &std::result::Result<Decoded, ServeError>, tok: &Toke
             ("queue_ms", Json::Num(d.queue_ms)),
         ])
         .to_string(),
-        Err(e) => Json::obj(vec![(
-            "error",
-            Json::obj(vec![
+        Err(e) => {
+            let mut fields = vec![
                 ("code", Json::str(e.code)),
                 ("message", Json::str(e.message.as_str())),
-            ]),
-        )])
-        .to_string(),
+            ];
+            if let Some(ms) = e.retry_after_ms {
+                // machine-readable backoff hint (mirrored as the HTTP
+                // `Retry-After` header on that transport)
+                fields.push(("retry_after_ms", Json::num(ms as f64)));
+            }
+            Json::obj(vec![("error", Json::obj(fields))]).to_string()
+        }
     }
 }
 
@@ -567,14 +605,36 @@ fn accept_loop(
 ) {
     let mut served = 0usize;
     let mut next_conn = 0u64;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
+    // non-blocking accept so a drain signal can stop the acceptor even
+    // when no new connection ever arrives (a blocked `accept` would
+    // otherwise hold the request queue open past the drain deadline)
+    if let Err(e) = listener.set_nonblocking(true) {
+        crate::warn!("accept: set_nonblocking failed: {e}");
+    }
+    loop {
+        if opts.lifecycle.draining() {
+            crate::info!("acceptor: draining, no longer accepting connections");
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) => {
                 crate::warn!("accept: {e}");
+                std::thread::sleep(Duration::from_millis(10));
                 continue;
             }
         };
+        // the per-connection reader/writer threads use blocking reads
+        // (with the configured read timeout), not the listener's mode
+        if let Err(e) = stream.set_nonblocking(false) {
+            crate::warn!("accept: set_blocking failed: {e}");
+            continue;
+        }
         // admission control: at most `workers` connections in flight
         registry.wait_below(opts.workers);
         let conn = next_conn;
@@ -780,7 +840,7 @@ fn jsonl_reader_loop(
             seq += 1;
             progress.issued.store(seq, Ordering::Release);
             match outcome {
-                Ok(ParsedRequest { prompt, max_tokens, params, stream, model }) => {
+                Ok(ParsedRequest { prompt, max_tokens, params, stream, model, deadline_ms }) => {
                     let req = DecodeRequest {
                         conn,
                         seq: this,
@@ -789,6 +849,7 @@ fn jsonl_reader_loop(
                         params,
                         stream,
                         model,
+                        deadline_ms,
                         enqueued: Instant::now(),
                     };
                     if req_tx.send(req).is_err() {
@@ -838,11 +899,15 @@ fn jsonl_reader_loop(
 }
 
 /// One reorder-buffer entry: token frames buffered for a not-yet-current
-/// request, plus its terminal response once the scheduler produced it.
+/// request, plus its terminal response once the scheduler produced it —
+/// either a decode result to format, or a pre-rendered raw body
+/// (health-check responses bypass the protocol formatter but still ride
+/// the reorder queue so they answer in request order).
 #[derive(Default)]
 struct PendingResp {
     frames: Vec<(usize, i32)>,
     result: Option<std::result::Result<Decoded, ServeError>>,
+    raw: Option<String>,
 }
 
 /// How a connection's writer frames responses on the wire.
@@ -893,6 +958,13 @@ impl ConnWriter {
         self.stream.flush()
     }
 
+    /// Write a pre-rendered response verbatim (health-check endpoints:
+    /// the body is already a complete HTTP response).
+    fn write_raw(&mut self, body: &str) -> std::io::Result<()> {
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()
+    }
+
     /// Write request `seq`'s terminal response. Returns `false` when
     /// the connection must close afterwards (an SSE stream ends with
     /// `Connection: close`, mirroring the preamble's promise).
@@ -927,7 +999,7 @@ impl ConnWriter {
                     let _ = self.stream.shutdown(Shutdown::Both);
                     Ok(false)
                 } else {
-                    let resp = http::json_response(http::status_for(result), &body);
+                    let resp = http::terminal_response(result, &body);
                     self.stream.write_all(&resp)?;
                     self.stream.flush()?;
                     Ok(true)
@@ -991,41 +1063,54 @@ fn writer_loop(
             }
             WriterMsg::Resp { seq, result } => {
                 pending.entry(seq).or_default().result = Some(result);
-                // drain everything that is now writable, flushing each
-                // entry's buffered frames before its terminal response
-                while let Some(entry) = pending.get_mut(&next) {
-                    for (index, token) in std::mem::take(&mut entry.frames) {
-                        if w.write_frame(index, token).is_err() {
-                            break 'conn;
-                        }
-                    }
-                    let Some(result) = entry.result.take() else {
-                        // frames flushed but the request is still
-                        // decoding: it is now current, future frames
-                        // pass straight through
-                        break;
-                    };
-                    pending.remove(&next);
-                    let keep = match w.write_terminal(next, &result) {
-                        Ok(keep) => keep,
-                        Err(_) => break 'conn,
-                    };
-                    next += 1;
-                    progress.written.store(next, Ordering::Release);
-                    if !keep {
-                        // the SSE contract closes the connection after
-                        // the stream's terminal event
-                        break 'conn;
-                    }
-                }
-                if pending.len() > max_pending.max(1) {
-                    crate::warn!(
-                        "connection {conn}: {} requests buffered out of order; closing",
-                        pending.len()
-                    );
-                    break;
+            }
+            WriterMsg::Raw { seq, body } => {
+                pending.entry(seq).or_default().raw = Some(body);
+            }
+        }
+        // drain everything that is now writable, flushing each entry's
+        // buffered frames before its terminal response
+        while let Some(entry) = pending.get_mut(&next) {
+            for (index, token) in std::mem::take(&mut entry.frames) {
+                if w.write_frame(index, token).is_err() {
+                    break 'conn;
                 }
             }
+            if let Some(body) = entry.raw.take() {
+                // pre-rendered terminal (health endpoint): verbatim
+                pending.remove(&next);
+                if w.write_raw(&body).is_err() {
+                    break 'conn;
+                }
+                next += 1;
+                progress.written.store(next, Ordering::Release);
+                continue;
+            }
+            let Some(result) = entry.result.take() else {
+                // frames flushed but the request is still
+                // decoding: it is now current, future frames
+                // pass straight through
+                break;
+            };
+            pending.remove(&next);
+            let keep = match w.write_terminal(next, &result) {
+                Ok(keep) => keep,
+                Err(_) => break 'conn,
+            };
+            next += 1;
+            progress.written.store(next, Ordering::Release);
+            if !keep {
+                // the SSE contract closes the connection after
+                // the stream's terminal event
+                break 'conn;
+            }
+        }
+        if pending.len() > max_pending.max(1) {
+            crate::warn!(
+                "connection {conn}: {} requests buffered out of order; closing",
+                pending.len()
+            );
+            break;
         }
     }
     // the MAX sentinel stops the reader from waiting on us; unregistering
@@ -1177,6 +1262,51 @@ mod tests {
         // wrong type is a bad_request, not a routing miss
         let e = parse_request(r#"{"tokens":[1],"model":3}"#, &tok, 64, &hosted).unwrap_err();
         assert_eq!(e.code, "bad_request");
+    }
+
+    #[test]
+    fn parse_deadline_field_and_server_default() {
+        let tok = Tokenizer::new(64);
+        let o = opts();
+        let r = parse_request(r#"{"tokens":[1],"deadline_ms":250}"#, &tok, 64, &o).unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        // absent field, no server default → no deadline
+        let r = parse_request(r#"{"tokens":[1]}"#, &tok, 64, &o).unwrap();
+        assert_eq!(r.deadline_ms, None);
+        // absent field inherits the server default; an explicit field wins
+        let with_default = ServeOptions { default_deadline_ms: 400, ..opts() };
+        let r = parse_request(r#"{"tokens":[1]}"#, &tok, 64, &with_default).unwrap();
+        assert_eq!(r.deadline_ms, Some(400));
+        let r =
+            parse_request(r#"{"tokens":[1],"deadline_ms":90}"#, &tok, 64, &with_default).unwrap();
+        assert_eq!(r.deadline_ms, Some(90));
+        // zero / negative / fractional / non-numeric are rejected
+        for bad in [
+            r#"{"tokens":[1],"deadline_ms":0}"#,
+            r#"{"tokens":[1],"deadline_ms":-5}"#,
+            r#"{"tokens":[1],"deadline_ms":1.5}"#,
+            r#"{"tokens":[1],"deadline_ms":"soon"}"#,
+        ] {
+            let e = parse_request(bad, &tok, 64, &with_default).unwrap_err();
+            assert_eq!(e.code, "bad_request", "line {bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn error_response_carries_retry_after_hint() {
+        let tok = Tokenizer::new(64);
+        let err = format_response(
+            &Err(ServeError::new("overloaded", "queue full").with_retry_after(120)),
+            &tok,
+        );
+        let v = Json::parse(&err).unwrap();
+        let e = v.req("error").unwrap();
+        assert_eq!(e.req("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(e.req("retry_after_ms").unwrap().as_usize().unwrap(), 120);
+        // the hint is absent unless the rejection set one
+        let err = format_response(&Err(ServeError::new("bad_json", "nope")), &tok);
+        let v = Json::parse(&err).unwrap();
+        assert!(v.req("error").unwrap().get("retry_after_ms").is_none());
     }
 
     #[test]

@@ -36,9 +36,11 @@
 
 use std::collections::{HashMap, HashSet};
 use std::net::{Shutdown, TcpStream};
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -87,6 +89,55 @@ impl Transport {
     }
 }
 
+/// Shared server lifecycle state: the drain flag every layer watches.
+///
+/// One `Arc<Lifecycle>` is threaded through [`ServeOptions`] to the
+/// acceptor (stop accepting), the HTTP front end (`/readyz` flips to
+/// 503), the admission path (new work answers `shutting_down`), and the
+/// scheduler (in-flight slots get `--drain-timeout-ms` to finish, then
+/// evict with a structured error). `begin_drain` is safe to call from a
+/// signal handler's watcher thread or a test.
+#[derive(Debug, Default)]
+pub struct Lifecycle {
+    draining: AtomicBool,
+    /// when the drain began (set exactly once, by the first `begin_drain`)
+    since: Mutex<Option<Instant>>,
+}
+
+impl Lifecycle {
+    /// A fresh, non-draining lifecycle.
+    pub fn new() -> Lifecycle {
+        Lifecycle::default()
+    }
+
+    /// Flip the server into draining mode (idempotent): the acceptor
+    /// stops accepting, `/readyz` reports 503, and in-flight requests
+    /// get the configured drain timeout to finish.
+    pub fn begin_drain(&self) {
+        let mut since = self.since.lock().unwrap_or_else(|e| e.into_inner());
+        if since.is_none() {
+            *since = Some(Instant::now());
+        }
+        drop(since);
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// True once `begin_drain` has been called.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// When the drain began (`None` while the server is live).
+    pub fn drain_started(&self) -> Option<Instant> {
+        *self.since.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// How long the server has been draining (`None` while live).
+    pub fn drain_elapsed(&self) -> Option<Duration> {
+        self.drain_started().map(|t| t.elapsed())
+    }
+}
+
 /// Serving engine knobs (`faar serve --max-batch 16 --queue-depth 128 ...`).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
@@ -120,6 +171,22 @@ pub struct ServeOptions {
     /// field naming anything (the protocol layer rejects unknown names
     /// with a structured `unknown_model` error before admission)
     pub models: Vec<String>,
+    /// deadline applied to requests that carry no `"deadline_ms"` field
+    /// (`--default-deadline-ms`); 0 = no default deadline
+    pub default_deadline_ms: u64,
+    /// admission-time load shedding (`--max-queue-wait-ms`): a request
+    /// that waited longer than this in the bounded queue is rejected
+    /// with a structured `overloaded` error (HTTP 503 + `Retry-After`)
+    /// instead of decoding late; 0 disables shedding
+    pub max_queue_wait_ms: u64,
+    /// graceful-drain budget (`--drain-timeout-ms`): once draining,
+    /// in-flight requests get this long to finish before they are
+    /// evicted with a structured `shutting_down` error
+    pub drain_timeout_ms: u64,
+    /// shared lifecycle (drain) state; `Arc` so the acceptor, readers,
+    /// the HTTP health endpoints, the scheduler, and a signal-watcher
+    /// thread all observe one flag
+    pub lifecycle: Arc<Lifecycle>,
 }
 
 impl Default for ServeOptions {
@@ -136,6 +203,10 @@ impl Default for ServeOptions {
             transport: Transport::Tcp,
             codec: CodecKind::Line,
             models: Vec::new(),
+            default_deadline_ms: 0,
+            max_queue_wait_ms: 0,
+            drain_timeout_ms: 5_000,
+            lifecycle: Arc::new(Lifecycle::new()),
         }
     }
 }
@@ -171,12 +242,23 @@ pub struct ServeError {
     pub code: &'static str,
     /// human-readable detail
     pub message: String,
+    /// how long the client should wait before retrying, for pre-admission
+    /// rejections (`overloaded`); serialized into the error body and, on
+    /// HTTP, into a `Retry-After` header
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ServeError {
     /// A structured error from a code and message.
     pub fn new(code: &'static str, message: impl Into<String>) -> ServeError {
-        ServeError { code, message: message.into() }
+        ServeError { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// Attach a retry hint (pre-admission rejections only — a request
+    /// that may already have executed must never invite a retry).
+    pub fn with_retry_after(mut self, ms: u64) -> ServeError {
+        self.retry_after_ms = Some(ms);
+        self
     }
 }
 
@@ -202,6 +284,12 @@ pub struct DecodeRequest {
     pub model: Option<String>,
     /// when the reader enqueued the request (latency accounting)
     pub enqueued: Instant,
+    /// wall-clock budget from enqueue to completion, validated by the
+    /// protocol layer (request `"deadline_ms"` merged with the server's
+    /// `--default-deadline-ms`); `None` = no deadline. Expired requests
+    /// are rejected at admission or evicted mid-decode with a structured
+    /// `deadline_exceeded` error, their backend state released
+    pub deadline_ms: Option<u64>,
 }
 
 /// A finished decode, ready for the protocol layer to serialize.
@@ -256,6 +344,15 @@ pub enum WriterMsg {
         /// frame this request's output as an SSE event stream
         sse: bool,
     },
+    /// A pre-rendered response (the HTTP health endpoints) that must
+    /// still flow through the per-connection reorder queue so pipelined
+    /// requests are answered strictly in request order.
+    Raw {
+        /// reader-assigned per-connection sequence number
+        seq: u64,
+        /// the exact bytes to write (a full HTTP response)
+        body: String,
+    },
 }
 
 /// One registered connection: the writer queue plus a handle to force
@@ -278,30 +375,37 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// The connection map, with explicit poison recovery: a reader or
+    /// writer thread that panics while holding this lock (e.g. a bug in
+    /// a codec, or a chaos-injected panic crossing a channel) must not
+    /// wedge every other connection. Every critical section over the map
+    /// performs a single insert/remove/lookup, so the map is valid at
+    /// every panic point and recovering the guard is sound.
+    fn locked(&self) -> MutexGuard<'_, HashMap<u64, ConnEntry>> {
+        self.conns.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// `stream` (a clone of the connection socket) lets the scheduler
     /// force-disconnect a client whose writer queue stopped draining;
     /// `None` is fine for in-process tests.
     pub fn register(&self, conn: u64, tx: SyncSender<WriterMsg>, stream: Option<TcpStream>) {
-        self.conns
-            .lock()
-            .expect("registry poisoned")
-            .insert(conn, ConnEntry { tx, stream, cancels: HashSet::new() });
+        self.locked().insert(conn, ConnEntry { tx, stream, cancels: HashSet::new() });
     }
 
     /// Remove a connection (its in-flight slots cancel at the next step).
     pub fn unregister(&self, conn: u64) {
-        self.conns.lock().expect("registry poisoned").remove(&conn);
+        self.locked().remove(&conn);
         self.cv.notify_all();
     }
 
     /// True while `conn` is registered.
     pub fn contains(&self, conn: u64) -> bool {
-        self.conns.lock().expect("registry poisoned").contains_key(&conn)
+        self.locked().contains_key(&conn)
     }
 
     /// Live connection count.
     pub fn len(&self) -> usize {
-        self.conns.lock().expect("registry poisoned").len()
+        self.locked().len()
     }
 
     /// True when no connections are live.
@@ -316,7 +420,7 @@ impl Registry {
     /// otherwise. The per-connection set is capped so a client spamming
     /// cancel frames for never-issued seqs cannot grow memory unboundedly.
     pub fn request_cancel(&self, conn: u64, seq: u64) {
-        let mut conns = self.conns.lock().expect("registry poisoned");
+        let mut conns = self.locked();
         if let Some(e) = conns.get_mut(&conn) {
             if e.cancels.len() < 1024 {
                 e.cancels.insert(seq);
@@ -329,18 +433,18 @@ impl Registry {
     /// exactly-once: admission and the in-flight sweep both check, but
     /// only one of them can observe the entry.
     pub fn take_cancel(&self, conn: u64, seq: u64) -> bool {
-        let mut conns = self.conns.lock().expect("registry poisoned");
+        let mut conns = self.locked();
         conns.get_mut(&conn).map(|e| e.cancels.remove(&seq)).unwrap_or(false)
     }
 
     fn sender(&self, conn: u64) -> Option<SyncSender<WriterMsg>> {
-        self.conns.lock().expect("registry poisoned").get(&conn).map(|e| e.tx.clone())
+        self.locked().get(&conn).map(|e| e.tx.clone())
     }
 
     /// Unregister and shut the socket down, unblocking a writer stuck in
     /// `write_all` to a client that stopped reading.
     fn force_disconnect(&self, conn: u64) {
-        let entry = self.conns.lock().expect("registry poisoned").remove(&conn);
+        let entry = self.locked().remove(&conn);
         if let Some(e) = entry {
             if let Some(s) = e.stream {
                 let _ = s.shutdown(Shutdown::Both);
@@ -349,12 +453,27 @@ impl Registry {
         self.cv.notify_all();
     }
 
+    /// Drop every connection at once: the drain deadline passed and the
+    /// remaining clients already received their structured terminals (or
+    /// stopped reading). Socket shutdown unblocks any reader or writer
+    /// thread still parked in I/O so the process can exit.
+    fn force_disconnect_all(&self) {
+        let mut conns = self.locked();
+        for (_, e) in conns.drain() {
+            if let Some(s) = e.stream {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        drop(conns);
+        self.cv.notify_all();
+    }
+
     /// Block until fewer than `n` connections are live (the acceptor's
     /// `--workers` admission control).
     pub fn wait_below(&self, n: usize) {
-        let mut conns = self.conns.lock().expect("registry poisoned");
+        let mut conns = self.locked();
         while conns.len() >= n.max(1) {
-            conns = self.cv.wait(conns).expect("registry poisoned");
+            conns = self.cv.wait(conns).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -372,6 +491,18 @@ pub struct SchedStats {
     pub cancelled: u64,
     /// requests failed by a backend error
     pub errors: u64,
+    /// requests rejected at admission by overload shedding
+    /// (`--max-queue-wait-ms` exceeded, structured `overloaded`)
+    pub shed: u64,
+    /// requests rejected or evicted because their deadline expired
+    /// (structured `deadline_exceeded`)
+    pub deadline_evictions: u64,
+    /// requests rejected or evicted by the graceful drain (structured
+    /// `shutting_down`)
+    pub drain_evictions: u64,
+    /// backend panics caught and converted to structured `backend_panic`
+    /// errors (the scheduler survived each one)
+    pub backend_panics: u64,
     /// largest micro-batch seen
     pub peak_batch: usize,
     /// `prefill_chunk` calls issued by the chunked-prefill budget loop
@@ -431,6 +562,22 @@ struct SlotMeta {
     /// the chunked budget loop (`n` = prompt tokens the scheduler
     /// believes are missing); `None` once the slot decodes
     missing: Option<usize>,
+    /// absolute completion deadline (enqueue time + the request's
+    /// deadline budget); checked every step boundary
+    deadline: Option<Instant>,
+}
+
+/// Render a `catch_unwind` payload into the structured error message
+/// (panics carry a `&str` or `String` in practice; anything else is
+/// reported opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Run the scheduler until the request queue disconnects (all readers and
@@ -451,12 +598,24 @@ pub fn run<B: StepBackend + ?Sized>(
     let mut meta: Vec<SlotMeta> = Vec::new();
 
     loop {
-        // admit up to max_batch; block only when fully idle
+        // admit up to max_batch; block (with a short tick, so drain
+        // deadlines fire while idle) only when fully idle
         while slots.len() < max_batch {
             let req = if slots.is_empty() {
-                match rx.recv() {
+                match rx.recv_timeout(Duration::from_millis(25)) {
                     Ok(r) => r,
-                    Err(_) => {
+                    Err(RecvTimeoutError::Timeout) => {
+                        // nothing in flight: once the drain budget is
+                        // spent, shut the remaining idle connections so
+                        // their readers exit and the queue can close
+                        if let Some(elapsed) = opts.lifecycle.drain_elapsed() {
+                            if elapsed >= Duration::from_millis(opts.drain_timeout_ms) {
+                                registry.force_disconnect_all();
+                            }
+                        }
+                        break;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
                         // queue closed, nothing in flight
                         stats.cache = backend.cache_stats().unwrap_or_default();
                         stats.spec = backend.spec_stats().unwrap_or_default();
@@ -470,7 +629,7 @@ pub fn run<B: StepBackend + ?Sized>(
                     Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
                 }
             };
-            admit(backend, req, seq_len, chunk, registry, &mut slots, &mut meta, &mut stats);
+            admit(backend, req, seq_len, chunk, registry, opts, &mut slots, &mut meta, &mut stats);
         }
         stats.peak_batch = stats.peak_batch.max(slots.len());
 
@@ -496,6 +655,45 @@ pub fn run<B: StepBackend + ?Sized>(
                 stats.cancelled += 1;
             }
         }
+
+        // evict slots whose deadline expired mid-decode: the client gets
+        // a structured `deadline_exceeded` terminal and the backend
+        // releases the slot's pages here, exactly once (the same release
+        // path every other eviction takes)
+        let now = Instant::now();
+        for i in (0..slots.len()).rev() {
+            let Some(deadline) = meta[i].deadline else { continue };
+            if now < deadline {
+                continue;
+            }
+            let slot = slots.swap_remove(i);
+            release_contained(backend, &slot, &mut stats);
+            let m = meta.swap_remove(i);
+            let err = ServeError::new(
+                "deadline_exceeded",
+                format!("deadline expired after {} decoded tokens", slot.out.len()),
+            );
+            let _ = respond(registry, m.conn, m.seq, Err(err));
+            stats.deadline_evictions += 1;
+        }
+
+        // drain-timeout eviction: in-flight requests had their chance to
+        // finish; the rest end with a structured `shutting_down` so no
+        // client is left hanging when the process exits
+        if let Some(elapsed) = opts.lifecycle.drain_elapsed() {
+            if elapsed >= Duration::from_millis(opts.drain_timeout_ms) && !slots.is_empty() {
+                let err = ServeError::new(
+                    "shutting_down",
+                    "server draining: drain timeout reached before completion",
+                );
+                for (slot, m) in slots.drain(..).zip(meta.drain(..)) {
+                    release_contained(backend, &slot, &mut stats);
+                    let _ = respond(registry, m.conn, m.seq, Err(err.clone()));
+                    stats.drain_evictions += 1;
+                }
+                continue;
+            }
+        }
         if slots.is_empty() {
             continue;
         }
@@ -517,8 +715,11 @@ pub fn run<B: StepBackend + ?Sized>(
                 let Some(miss) = meta[i].missing else { continue };
                 offered = true;
                 stats.prefill_chunks += 1;
-                match backend.prefill_chunk(&slots[i], left) {
-                    Ok(now_missing) => {
+                let caught = catch_unwind(AssertUnwindSafe(|| {
+                    backend.prefill_chunk(&slots[i], left)
+                }));
+                match caught {
+                    Ok(Ok(now_missing)) => {
                         let consumed = miss.saturating_sub(now_missing).min(left);
                         left -= consumed;
                         stats.prefill_tokens += consumed as u64;
@@ -528,8 +729,24 @@ pub fn run<B: StepBackend + ?Sized>(
                             (now_missing > 0).then_some(now_missing)
                         };
                     }
-                    Err(e) => {
-                        fail = Some(e);
+                    Ok(Err(e)) => {
+                        fail = Some(ServeError::new(
+                            "backend",
+                            format!("prefill chunk failed: {e:#}"),
+                        ));
+                        break;
+                    }
+                    Err(payload) => {
+                        // a panicking backend is contained exactly like
+                        // an erroring one, just under its own code
+                        stats.backend_panics += 1;
+                        fail = Some(ServeError::new(
+                            "backend_panic",
+                            format!(
+                                "backend panicked in prefill_chunk: {}",
+                                panic_message(payload.as_ref())
+                            ),
+                        ));
                         break;
                     }
                 }
@@ -537,12 +754,11 @@ pub fn run<B: StepBackend + ?Sized>(
             if offered {
                 stats.budget_tokens += chunk as u64;
             }
-            if let Some(e) = fail {
+            if let Some(err) = fail {
                 // same isolation policy as a failed decode step: fail
                 // every in-flight request, keep serving
-                let err = ServeError::new("backend", format!("prefill chunk failed: {e:#}"));
                 for (slot, m) in slots.drain(..).zip(meta.drain(..)) {
-                    backend.release(&slot);
+                    release_contained(backend, &slot, &mut stats);
                     if respond(registry, m.conn, m.seq, Err(err.clone())) {
                         stats.errors += 1;
                     } else {
@@ -574,18 +790,39 @@ pub fn run<B: StepBackend + ?Sized>(
         }
         // backends that speculate (a registry hosting a draft-paired
         // model) advance every slot through their own draft/verify step;
-        // everything else takes the plain decode path
-        let stepped = match backend.spec_step(&mut slots[..active]) {
-            Some(r) => r,
-            None => decode_step(backend, &mut slots[..active]),
+        // everything else takes the plain decode path. Both run inside
+        // `catch_unwind`: a panicking backend must cost exactly the
+        // in-flight requests (structured `backend_panic`, pages
+        // released), never the scheduler thread — writers, readers, and
+        // the other hosted models keep serving
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            match backend.spec_step(&mut slots[..active]) {
+                Some(r) => r,
+                None => decode_step(backend, &mut slots[..active]),
+            }
+        }));
+        let failure = match caught {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => {
+                Some(ServeError::new("backend", format!("decode step failed: {e:#}")))
+            }
+            Err(payload) => {
+                stats.backend_panics += 1;
+                Some(ServeError::new(
+                    "backend_panic",
+                    format!(
+                        "backend panicked during decode step: {}",
+                        panic_message(payload.as_ref())
+                    ),
+                ))
+            }
         };
-        if let Err(e) = stepped {
+        if let Some(err) = failure {
             // fail the in-flight requests, keep the server up (each
             // request lands in exactly one of errors/cancelled); every
             // failed slot is released so backend state never outlives it
-            let err = ServeError::new("backend", format!("decode step failed: {e:#}"));
             for (slot, m) in slots.drain(..).zip(meta.drain(..)) {
-                backend.release(&slot);
+                release_contained(backend, &slot, &mut stats);
                 if respond(registry, m.conn, m.seq, Err(err.clone())) {
                     stats.errors += 1;
                 } else {
@@ -631,6 +868,21 @@ pub fn run<B: StepBackend + ?Sized>(
     }
 }
 
+/// Release a slot's backend state with the same panic containment the
+/// step path gets: a backend whose `release` panics (e.g. mid-poisoned
+/// internal state after an injected panic) must not take the scheduler
+/// down while it is cleaning up.
+fn release_contained<B: StepBackend + ?Sized>(
+    backend: &B,
+    slot: &DecodeSlot,
+    stats: &mut SchedStats,
+) {
+    if catch_unwind(AssertUnwindSafe(|| backend.release(slot))).is_err() {
+        stats.backend_panics += 1;
+        crate::warn!("backend panicked in release for slot {}", slot.id);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn admit<B: StepBackend + ?Sized>(
     backend: &B,
@@ -638,6 +890,7 @@ fn admit<B: StepBackend + ?Sized>(
     seq_len: usize,
     chunk: usize,
     registry: &Registry,
+    opts: &ServeOptions,
     slots: &mut Vec<DecodeSlot>,
     meta: &mut Vec<SlotMeta>,
     stats: &mut SchedStats,
@@ -649,6 +902,46 @@ fn admit<B: StepBackend + ?Sized>(
         let _ = respond(registry, req.conn, req.seq, Err(err));
         stats.cancelled += 1;
         return;
+    }
+    // graceful drain: work that arrived before the drain began is
+    // in-flight and gets its chance; anything enqueued after is
+    // rejected up front so clients fail over fast
+    if let Some(drain_start) = opts.lifecycle.drain_started() {
+        if req.enqueued >= drain_start {
+            let err =
+                ServeError::new("shutting_down", "server draining: not accepting new requests");
+            let _ = respond(registry, req.conn, req.seq, Err(err));
+            stats.drain_evictions += 1;
+            return;
+        }
+    }
+    // admission-time load shedding: a request that already waited past
+    // the queue-wait bound would only decode late and crowd out fresher
+    // work — reject it now with a retry hint instead
+    if opts.max_queue_wait_ms > 0 {
+        let waited = started.duration_since(req.enqueued);
+        if waited > Duration::from_millis(opts.max_queue_wait_ms) {
+            let err = ServeError::new(
+                "overloaded",
+                format!("request waited {}ms in queue (shed)", waited.as_millis()),
+            )
+            .with_retry_after(opts.max_queue_wait_ms.max(1));
+            let _ = respond(registry, req.conn, req.seq, Err(err));
+            stats.shed += 1;
+            return;
+        }
+    }
+    // deadline accounting starts at enqueue; a request whose budget is
+    // already spent never touches the backend
+    let deadline = req.deadline_ms.map(|ms| req.enqueued + Duration::from_millis(ms));
+    if let Some(d) = deadline {
+        if started >= d {
+            let err =
+                ServeError::new("deadline_exceeded", "deadline expired before admission");
+            let _ = respond(registry, req.conn, req.seq, Err(err));
+            stats.deadline_evictions += 1;
+            return;
+        }
     }
     if req.max_tokens == 0 {
         // nothing to decode; complete immediately (still a valid request)
@@ -693,6 +986,7 @@ fn admit<B: StepBackend + ?Sized>(
                 stream: req.stream,
                 sent: 0,
                 missing,
+                deadline,
             });
         }
         // the protocol layer validates first; this is the backstop
@@ -765,6 +1059,7 @@ mod tests {
             stream: false,
             model: None,
             enqueued: Instant::now(),
+            deadline_ms: None,
         }
     }
 
@@ -968,6 +1263,7 @@ mod tests {
             stream: true,
             model: None,
             enqueued: Instant::now(),
+            deadline_ms: None,
         })
         .unwrap();
         drop(tx);
@@ -1008,6 +1304,7 @@ mod tests {
             stream: false,
             model: None,
             enqueued: Instant::now(),
+            deadline_ms: None,
         })
         .unwrap();
         drop(tx);
@@ -1098,5 +1395,148 @@ mod tests {
             WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "bad_request"),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn panicking_backend_is_contained_and_slots_released() {
+        // a backend that panics on its first step must cost exactly the
+        // in-flight requests (structured backend_panic, slots released)
+        // — the scheduler itself survives and drains normally
+        struct PanicBackend(ReleaseProbe);
+        impl StepBackend for PanicBackend {
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn seq_len(&self) -> usize {
+                self.0.seq_len()
+            }
+            fn step(&self, _slots: &[DecodeSlot]) -> anyhow::Result<Vec<Vec<f32>>> {
+                panic!("injected: backend blew up");
+            }
+            fn release(&self, slot: &DecodeSlot) {
+                self.0.release(slot);
+            }
+        }
+        let backend = PanicBackend(ReleaseProbe::new(SyntheticBackend::new(16, 8, 1)));
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(2, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(2, 0, vec![3], 4)).unwrap();
+        drop(tx);
+        // silence the default panic hook for the injected panic; restore
+        // it afterwards so real test failures keep their backtraces
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        std::panic::set_hook(hook);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.backend_panics, 1);
+        assert_eq!(backend.0.released().len(), 1, "panicked slot was not released");
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => {
+                assert_eq!(e.code, "backend_panic");
+                assert!(e.message.contains("backend blew up"), "{}", e.message);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_deadline_rejects_at_admission() {
+        let backend = SyntheticBackend::new(16, 8, 1);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(4, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        let mut r = req(4, 0, vec![3], 8);
+        r.deadline_ms = Some(1);
+        r.enqueued = Instant::now() - std::time::Duration::from_millis(50);
+        tx.send(r).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.deadline_evictions, 1);
+        assert_eq!(stats.completed, 0);
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "deadline_exceeded"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slow_decode_evicted_mid_flight_by_deadline() {
+        // 2ms per step against a 20ms deadline and a 1000-token budget:
+        // the deadline sweep must evict mid-decode with pages released
+        let backend = ReleaseProbe::new(
+            SyntheticBackend::new(16, 8, 1)
+                .with_costs(std::time::Duration::from_millis(2), std::time::Duration::ZERO),
+        );
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(8);
+        registry.register(5, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        let mut r = req(5, 0, vec![3], 1000);
+        r.deadline_ms = Some(20);
+        tx.send(r).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &ServeOptions::default()).unwrap();
+        assert_eq!(stats.deadline_evictions, 1);
+        assert_eq!(backend.released().len(), 1, "evicted slot was not released");
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => assert_eq!(e.code, "deadline_exceeded"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_queue_wait_sheds_with_retry_hint() {
+        let backend = SyntheticBackend::new(16, 8, 1);
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(4);
+        registry.register(6, w_tx, None);
+        let (tx, rx) = sync_channel(4);
+        let mut r = req(6, 0, vec![3], 4);
+        // enqueued 80ms ago against a 10ms queue-wait bound: shed
+        r.enqueued = Instant::now() - std::time::Duration::from_millis(80);
+        tx.send(r).unwrap();
+        drop(tx);
+        let opts = ServeOptions { max_queue_wait_ms: 10, ..ServeOptions::default() };
+        let stats = run(&backend, rx, &registry, &opts).unwrap();
+        assert_eq!(stats.shed, 1);
+        match w_rx.recv().unwrap() {
+            WriterMsg::Resp { result: Err(e), .. } => {
+                assert_eq!(e.code, "overloaded");
+                assert_eq!(e.retry_after_ms, Some(10));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_rejects_new_requests_and_evicts_at_timeout() {
+        let backend = ReleaseProbe::new(
+            SyntheticBackend::new(16, 8, 1)
+                .with_costs(std::time::Duration::from_millis(1), std::time::Duration::ZERO),
+        );
+        let registry = Registry::default();
+        let (w_tx, w_rx) = sync_channel(8);
+        registry.register(7, w_tx, None);
+        let opts = ServeOptions { drain_timeout_ms: 15, ..ServeOptions::default() };
+        // a long request is in flight when the drain begins
+        let (tx, rx) = sync_channel(4);
+        tx.send(req(7, 0, vec![3], 100_000)).unwrap();
+        opts.lifecycle.begin_drain();
+        // this one is enqueued after the drain began: rejected up front
+        tx.send(req(7, 1, vec![4], 4)).unwrap();
+        drop(tx);
+        let stats = run(&backend, rx, &registry, &opts).unwrap();
+        assert_eq!(stats.drain_evictions, 2);
+        assert_eq!(stats.completed, 0);
+        assert_eq!(backend.released().len(), 1, "drained slot was not released");
+        let mut codes = vec![];
+        while let Ok(WriterMsg::Resp { result: Err(e), .. }) = w_rx.try_recv() {
+            codes.push(e.code);
+        }
+        assert_eq!(codes, vec!["shutting_down", "shutting_down"]);
     }
 }

@@ -337,7 +337,11 @@ struct QueueCounters {
 /// tokens).
 pub struct ModelRegistry<B> {
     entries: Vec<ModelEntry<B>>,
-    /// live slot → entry index, written at bind and dropped at release
+    /// live slot → entry index, written at bind and dropped at release.
+    /// All three locks recover from poisoning (`into_inner`): their
+    /// critical sections are single inserts/removes/counter bumps that
+    /// cannot be observed half-done, and a panicking backend must not
+    /// wedge routing for the other hosted models
     routes: Mutex<HashMap<u64, usize>>,
     stats: Mutex<SpecStats>,
     queues: Mutex<Vec<QueueCounters>>,
@@ -414,7 +418,7 @@ impl<B: SpecModel> ModelRegistry<B> {
     /// before the first step, so this is a belt-and-braces default, not
     /// a code path requests normally take.
     fn route_of(&self, slot_id: u64) -> usize {
-        self.routes.lock().expect("route table poisoned").get(&slot_id).copied().unwrap_or(0)
+        self.routes.lock().unwrap_or_else(|e| e.into_inner()).get(&slot_id).copied().unwrap_or(0)
     }
 
     /// The `spec_step` body: chunk the micro-batch into consecutive
@@ -435,7 +439,7 @@ impl<B: SpecModel> ModelRegistry<B> {
                     for slot in slots[i..j].iter_mut().filter(|s| !s.done()) {
                         sd.advance_slot(&entry.backend, slot, &mut round)?;
                     }
-                    self.stats.lock().expect("spec stats poisoned").add(&round);
+                    self.stats.lock().unwrap_or_else(|e| e.into_inner()).add(&round);
                 }
                 None => decode_step(&entry.backend, &mut slots[i..j])?,
             }
@@ -493,8 +497,8 @@ impl<B: SpecModel> StepBackend for ModelRegistry<B> {
 
     fn bind_model(&self, slot: &DecodeSlot, model: Option<&str>) -> Result<()> {
         let idx = self.resolve(model)?;
-        self.routes.lock().expect("route table poisoned").insert(slot.id, idx);
-        let mut queues = self.queues.lock().expect("queue counters poisoned");
+        self.routes.lock().unwrap_or_else(|e| e.into_inner()).insert(slot.id, idx);
+        let mut queues = self.queues.lock().unwrap_or_else(|e| e.into_inner());
         let q = &mut queues[idx];
         q.admitted += 1;
         q.depth += 1;
@@ -503,7 +507,7 @@ impl<B: SpecModel> StepBackend for ModelRegistry<B> {
     }
 
     fn release(&self, slot: &DecodeSlot) {
-        let route = self.routes.lock().expect("route table poisoned").remove(&slot.id);
+        let route = self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&slot.id);
         match route {
             Some(idx) => {
                 let entry = &self.entries[idx];
@@ -511,7 +515,7 @@ impl<B: SpecModel> StepBackend for ModelRegistry<B> {
                 if let Some(sd) = &entry.spec {
                     sd.draft.release(slot);
                 }
-                let mut queues = self.queues.lock().expect("queue counters poisoned");
+                let mut queues = self.queues.lock().unwrap_or_else(|e| e.into_inner());
                 let q = &mut queues[idx];
                 q.completed += 1;
                 q.depth = q.depth.saturating_sub(1);
@@ -555,11 +559,11 @@ impl<B: SpecModel> StepBackend for ModelRegistry<B> {
         self.entries
             .iter()
             .any(|e| e.spec.is_some())
-            .then(|| *self.stats.lock().expect("spec stats poisoned"))
+            .then(|| *self.stats.lock().unwrap_or_else(|e| e.into_inner()))
     }
 
     fn model_queue_stats(&self) -> Vec<ModelQueueStats> {
-        let queues = self.queues.lock().expect("queue counters poisoned");
+        let queues = self.queues.lock().unwrap_or_else(|e| e.into_inner());
         self.entries
             .iter()
             .zip(queues.iter())

@@ -1,0 +1,612 @@
+//! Chaos soak of the serving engine under deterministic fault
+//! injection: a seeded [`FaultPlan`] drives backend step errors, typed
+//! KV exhaustion, injected latency, and outright panics through the
+//! real TCP/HTTP front ends, and the suite pins the recovery contract:
+//!
+//! * every request resolves with a *structured* terminal — a completion
+//!   or an error whose code is machine-matchable — never silence, never
+//!   a wedged connection;
+//! * the scheduler survives every injected panic (`backend_panic`) and
+//!   keeps serving later requests bit-exactly;
+//! * after the server drains, the native backend reports
+//!   `kv_outstanding() == 0` — faults never leak KV pages;
+//! * deadlines, overload shedding (`overloaded` + `Retry-After`), and
+//!   graceful drain (`shutting_down`, `/readyz` flip) behave identically
+//!   over both transports;
+//! * torn client writes (byte-level chunking with mid-frame stalls)
+//!   decode exactly like a single clean write.
+//!
+//! The CI smoke tests run in seconds; the deep soak is `#[ignore]`d and
+//! run on demand (`cargo test --test chaos_serve -- --ignored`).
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use nvfp4_faar::formats::codec::FormatKind;
+use nvfp4_faar::infer::{
+    native_manifest, quantize_store, KvFormat, NativeBackend, NativeModel, NativeOptions,
+};
+use nvfp4_faar::serve::client::{Client, ClientRequest, RetryPolicy};
+use nvfp4_faar::serve::fault::torn_chunks;
+use nvfp4_faar::serve::{
+    generate_greedy, serve_on, CodecKind, FaultBackend, FaultPlan, ModelEntry, ModelRegistry,
+    ServeOptions, SpecDecoder, SyntheticBackend, Transport,
+};
+use nvfp4_faar::train::ParamStore;
+use nvfp4_faar::util::json::Json;
+
+const VOCAB: usize = 96;
+const SEQ_LEN: usize = 16;
+
+fn backend() -> SyntheticBackend {
+    SyntheticBackend::new(VOCAB, SEQ_LEN, 1234)
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect("fault plan")
+}
+
+/// tests must fail, not hang, if the server wedges
+fn tcp_client(addr: SocketAddr) -> Client {
+    Client::connect_timeout(addr, Duration::from_secs(30)).expect("connect")
+}
+
+fn http_client(addr: SocketAddr) -> Client {
+    Client::connect_http_timeout(addr, Duration::from_secs(30)).expect("connect http")
+}
+
+/// Every chaos reply must be a structured terminal: a completion, or an
+/// error carrying one of the codes the failure model documents.
+fn assert_structured(reply: &nvfp4_faar::serve::client::Reply) {
+    if let Err(e) = reply {
+        assert!(
+            matches!(e.code.as_str(), "backend" | "backend_panic"),
+            "unstructured chaos terminal: {e:?}"
+        );
+        assert!(e.message.contains("injected fault"), "fault origin lost: {e:?}");
+    }
+}
+
+/// Scripted faults against the TCP-JSONL front end. With one ping-pong
+/// client and `max_batch` irrelevant (one request in flight at a time),
+/// the decode-tick arithmetic is exact: ticks 0.. are consumed one per
+/// step, a faulted tick aborts exactly the in-flight request, and every
+/// later request decodes bit-exactly as if no fault ever happened.
+#[test]
+fn chaos_tcp_scripted_faults_structured_and_bit_exact_after() {
+    // r0 dies at tick 2 (step error), r1 survives the 2ms latency at
+    // tick 3 then dies at tick 5 (typed KV exhaustion), r2 dies at its
+    // final tick 9, r3 panics at tick 12; r4..r7 decode clean
+    let fault = FaultBackend::new(backend(), plan("step_err=2+9,kv=5,panic=12,latency=3:2"));
+    let reference = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let (stats, replies) = std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            (0..8u64)
+                .map(|i| {
+                    let prompt = vec![(i % 7) as i32 + 1, 2];
+                    let req = ClientRequest::tokens(prompt.clone()).max_tokens(4);
+                    (prompt, cl.request(&req).expect("transport"))
+                })
+                .collect::<Vec<_>>()
+        });
+        let stats = serve_on(&fault, listener, Some(1), ServeOptions::default()).unwrap();
+        (stats, cl.join().unwrap())
+    });
+
+    for (_, reply) in &replies {
+        assert_structured(reply);
+    }
+    let codes: Vec<&str> = replies
+        .iter()
+        .map(|(_, r)| r.as_ref().err().map(|e| e.code.as_str()).unwrap_or("ok"))
+        .collect();
+    assert_eq!(
+        codes,
+        ["backend", "backend", "backend", "backend_panic", "ok", "ok", "ok", "ok"],
+        "fault schedule did not land on the scripted ticks"
+    );
+    assert_eq!(stats.errors, 4);
+    assert_eq!(stats.backend_panics, 1);
+    assert_eq!(stats.completed, 4);
+    // the KV fault carries the typed error's context through the wire
+    assert!(replies[1].1.as_ref().unwrap_err().message.contains("kv exhaustion"));
+    // survivors are bit-exact: an injected fault only removes work, it
+    // never perturbs the tokens of requests that complete
+    for (prompt, reply) in &replies {
+        if let Ok(c) = reply {
+            let expect = generate_greedy(&reference, prompt, 4).unwrap();
+            assert_eq!(&c.tokens, &expect, "post-fault decode diverged for {prompt:?}");
+        }
+    }
+}
+
+/// The same failure model over HTTP: injected faults surface as 500s
+/// with the structured code in the body, the connection stays usable
+/// (keep-alive), and clean requests still answer 200 with exact tokens.
+#[test]
+fn chaos_http_faults_map_to_500_and_connection_survives() {
+    // r0 (ticks 0,1) panics at tick 1; r1 (ticks 2,3,4) errors at tick
+    // 4; r2 decodes clean
+    let fault = FaultBackend::new(backend(), plan("panic=1,step_err=4"));
+    let reference = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { transport: Transport::Http, ..ServeOptions::default() };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = http_client(addr);
+            let mut out = Vec::new();
+            for i in 0..3 {
+                let reply =
+                    cl.request(&ClientRequest::tokens(vec![i + 1, 2]).max_tokens(3)).unwrap();
+                out.push((reply, cl.last_status()));
+            }
+            out
+        });
+        let stats = serve_on(&fault, listener, Some(1), opts).unwrap();
+        let out = cl.join().unwrap();
+
+        assert_eq!(stats.backend_panics, 1);
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(out[0].0.as_ref().unwrap_err().code, "backend_panic");
+        assert_eq!(out[0].1, Some(500), "backend_panic must map to 500");
+        assert_eq!(out[1].0.as_ref().unwrap_err().code, "backend");
+        assert_eq!(out[1].1, Some(500), "backend must map to 500");
+        let clean = out[2].0.as_ref().expect("clean request after two 500s");
+        assert_eq!(out[2].1, Some(200));
+        assert_eq!(clean.tokens, generate_greedy(&reference, &[3, 2], 3).unwrap());
+    });
+}
+
+fn native_backend() -> NativeBackend {
+    let manifest = native_manifest("nano").expect("nano preset");
+    let fp = ParamStore::init(&manifest, 42);
+    let store = quantize_store(&manifest, &fp, FormatKind::Nvfp4).expect("quantize");
+    let model = NativeModel::new(&manifest.config, &store, true).expect("model");
+    let mut opts = NativeOptions { use_cache: true, ..NativeOptions::default() };
+    if let Ok(name) = std::env::var("FAAR_TEST_KV_FORMAT") {
+        opts.kv_format = KvFormat::parse(&name)
+            .unwrap_or_else(|| panic!("unknown FAAR_TEST_KV_FORMAT '{name}'"));
+    }
+    NativeBackend::new(model, opts)
+}
+
+/// The drain invariant on the real pure-rust backend: step errors, KV
+/// exhaustion, and a mid-serve panic must all release their slots'
+/// pages — after the server drains, zero KV pages remain outstanding.
+#[test]
+fn chaos_native_faults_drain_to_zero_kv_outstanding() {
+    let fault = FaultBackend::new(native_backend(), plan("step_err=1,panic=3,kv=6"));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let (stats, replies) = std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            (0..5i32)
+                .map(|i| {
+                    let req = ClientRequest::tokens(vec![i * 31 + 1, 7]).max_tokens(3);
+                    cl.request(&req).expect("transport")
+                })
+                .collect::<Vec<_>>()
+        });
+        let stats = serve_on(&fault, listener, Some(1), ServeOptions::default()).unwrap();
+        (stats, cl.join().unwrap())
+    });
+
+    for reply in &replies {
+        assert_structured(reply);
+    }
+    assert!(stats.errors >= 3, "three scripted faults must fail requests: {stats:?}");
+    assert_eq!(stats.backend_panics, 1);
+    assert!(stats.completed >= 1, "requests after the fault window must complete");
+    let native = fault.inner();
+    assert_eq!(native.kv_outstanding(), 0, "injected faults leaked KV pages");
+    assert_eq!(native.cached_slots(), 0, "injected faults leaked slot cache entries");
+}
+
+/// Multi-model + speculative decoding under scripted faults: exactly
+/// two requests die (one `backend`, one `backend_panic`), the registry
+/// keeps routing afterwards, and every surviving completion — the
+/// draft-paired model's included — is bit-identical to its own model's
+/// sequential reference. A speculative round that is aborted mid-fault
+/// must roll back cleanly rather than leave half-verified tokens.
+#[test]
+fn chaos_multi_model_spec_survivors_stay_bit_exact() {
+    let registry = ModelRegistry::new(vec![
+        ModelEntry {
+            name: "alpha".into(),
+            backend: SyntheticBackend::new(VOCAB, SEQ_LEN, 1111),
+            spec: None,
+        },
+        ModelEntry {
+            name: "beta".into(),
+            backend: SyntheticBackend::new(VOCAB, SEQ_LEN, 2222),
+            spec: Some(SpecDecoder::new(
+                SyntheticBackend::new(VOCAB, SEQ_LEN, 2222).with_divergence(0.25, 9),
+                3,
+            )),
+        },
+    ])
+    .unwrap();
+    let fault = FaultBackend::new(registry, plan("step_err=1,panic=4"));
+    let alpha_ref = SyntheticBackend::new(VOCAB, SEQ_LEN, 1111);
+    let beta_ref = SyntheticBackend::new(VOCAB, SEQ_LEN, 2222);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        models: vec!["alpha".into(), "beta".into()],
+        ..ServeOptions::default()
+    };
+
+    let (stats, replies) = std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            (0..6usize)
+                .map(|i| {
+                    let model = if i % 2 == 0 { "alpha" } else { "beta" };
+                    let prompt = vec![(i * 13 % VOCAB) as i32 + 1, 5];
+                    let req =
+                        ClientRequest::tokens(prompt.clone()).max_tokens(4).model(model);
+                    (model, prompt, cl.request(&req).expect("transport"))
+                })
+                .collect::<Vec<_>>()
+        });
+        let stats = serve_on(&fault, listener, Some(1), opts).unwrap();
+        (stats, cl.join().unwrap())
+    });
+
+    for (_, _, reply) in &replies {
+        assert_structured(reply);
+    }
+    // two fault ticks, one in-flight request each: exactly two casualties
+    assert_eq!(stats.errors, 2, "scripted ticks must abort exactly two requests");
+    assert_eq!(stats.backend_panics, 1);
+    assert_eq!(stats.completed, 4);
+    let mut survivors = 0;
+    for (model, prompt, reply) in &replies {
+        if let Ok(c) = reply {
+            survivors += 1;
+            let reference: &SyntheticBackend =
+                if *model == "beta" { &beta_ref } else { &alpha_ref };
+            let expect = generate_greedy(reference, prompt, 4).unwrap();
+            assert_eq!(
+                &c.tokens, &expect,
+                "model {model} diverged after faults for {prompt:?}"
+            );
+        }
+    }
+    assert_eq!(survivors, 4);
+}
+
+/// Overload protection end to end: a burst past capacity sheds the
+/// stale tail with structured `overloaded` + a `retry_after_ms` hint,
+/// and a second client riding `request_with_retry` keeps backing off on
+/// the hint until the burst clears — completing without ever risking a
+/// double execution (only pre-admission rejections retry).
+#[test]
+fn chaos_overload_sheds_tail_and_retry_recovers() {
+    // ~2ms per step * 8 tokens = ~16ms per request; 30 pipelined
+    // requests are ~480ms of work against a 60ms queue-wait bound, so
+    // the head completes and the tail sheds
+    let b = backend().with_costs(Duration::from_millis(2), Duration::ZERO);
+    let reference = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        max_batch: 1,
+        max_queue_wait_ms: 60,
+        ..ServeOptions::default()
+    };
+    const BURST: usize = 30;
+
+    let (stats, burst_replies, retried) = std::thread::scope(|s| {
+        let burst = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            for i in 0..BURST {
+                cl.send(&ClientRequest::tokens(vec![(i % 9) as i32 + 1]).max_tokens(8))
+                    .expect("send");
+            }
+            (0..BURST).map(|_| cl.read_reply().expect("transport")).collect::<Vec<_>>()
+        });
+        let retrier = s.spawn(move || {
+            // join mid-burst: the first attempt sheds, the hint-driven
+            // backoff retries until the queue clears
+            std::thread::sleep(Duration::from_millis(100));
+            let mut cl = tcp_client(addr);
+            let policy = RetryPolicy { max_retries: 40, base_ms: 20, cap_ms: 500, seed: 7 };
+            cl.request_with_retry(&ClientRequest::tokens(vec![2, 3]).max_tokens(4), &policy)
+                .expect("transport")
+        });
+        let stats = serve_on(&b, listener, Some(2), opts).unwrap();
+        (stats, burst.join().unwrap(), retrier.join().unwrap())
+    });
+
+    let shed: Vec<_> = burst_replies.iter().filter_map(|r| r.as_ref().err()).collect();
+    let completed = burst_replies.iter().filter(|r| r.is_ok()).count();
+    assert!(completed >= 1, "the head of the burst must complete");
+    assert!(!shed.is_empty(), "the tail of the burst must shed");
+    for e in &shed {
+        assert_eq!(e.code, "overloaded", "sheds must be structured: {e:?}");
+        assert_eq!(e.retry_after_ms, Some(60), "sheds must carry the retry hint");
+    }
+    // the retrier's own shed attempts count too, so >=, not ==
+    assert!(stats.shed as usize >= shed.len(), "server-side shed accounting: {stats:?}");
+    // the first burst request never waited: it must not have shed
+    assert!(burst_replies[0].is_ok(), "head request wrongly shed");
+    let got = retried.expect("retry must recover once the burst clears");
+    assert_eq!(got.tokens, generate_greedy(&reference, &[2, 3], 4).unwrap());
+}
+
+/// Deadlines over the wire: a request-level `deadline_ms` and the
+/// server-wide `--default-deadline-ms` both evict slow decodes with a
+/// structured `deadline_exceeded` (HTTP 504), mid-flight.
+#[test]
+fn chaos_deadlines_evict_over_both_transports() {
+    // per-request deadline over TCP
+    {
+        let b = backend().with_costs(Duration::from_millis(2), Duration::ZERO);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let cl = s.spawn(move || {
+                let mut cl = tcp_client(addr);
+                let req = ClientRequest::tokens(vec![3]).max_tokens(1000).deadline_ms(25);
+                cl.request(&req).expect("transport")
+            });
+            let stats = serve_on(&b, listener, Some(1), ServeOptions::default()).unwrap();
+            let reply = cl.join().unwrap();
+            assert_eq!(reply.unwrap_err().code, "deadline_exceeded");
+            assert_eq!(stats.deadline_evictions, 1);
+        });
+    }
+    // server default deadline over HTTP: 504 with the structured code
+    {
+        let b = backend().with_costs(Duration::from_millis(2), Duration::ZERO);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = ServeOptions {
+            transport: Transport::Http,
+            default_deadline_ms: 25,
+            ..ServeOptions::default()
+        };
+        std::thread::scope(|s| {
+            let cl = s.spawn(move || {
+                let mut cl = http_client(addr);
+                let reply = cl
+                    .request(&ClientRequest::tokens(vec![3]).max_tokens(1000))
+                    .expect("transport");
+                (reply, cl.last_status())
+            });
+            let stats = serve_on(&b, listener, Some(1), opts).unwrap();
+            let (reply, status) = cl.join().unwrap();
+            assert_eq!(reply.unwrap_err().code, "deadline_exceeded");
+            assert_eq!(status, Some(504), "deadline_exceeded must map to 504");
+            assert_eq!(stats.deadline_evictions, 1);
+        });
+    }
+}
+
+/// Writes raw bytes and collects every `HTTP/1.1` status code read back
+/// until the server closes the connection.
+fn read_http_statuses(stream: TcpStream) -> Vec<u16> {
+    let mut reader = BufReader::new(stream);
+    let mut statuses = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            return statuses;
+        }
+        if let Some(rest) = line.strip_prefix("HTTP/1.1 ") {
+            statuses.push(rest.split_whitespace().next().unwrap().parse().expect("status"));
+        }
+    }
+}
+
+/// `GET /healthz` and `GET /readyz` both answer 200 on a live server.
+#[test]
+fn chaos_health_endpoints_report_live() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { transport: Transport::Http, ..ServeOptions::default() };
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+            stream
+                .write_all(
+                    b"GET /healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n\
+                      GET /readyz HTTP/1.1\r\ncontent-length: 0\r\n\r\n",
+                )
+                .expect("write");
+            let _ = stream.shutdown(std::net::Shutdown::Write);
+            read_http_statuses(stream)
+        });
+        serve_on(&b, listener, Some(1), opts).unwrap();
+        assert_eq!(cl.join().unwrap(), [200, 200]);
+    });
+}
+
+/// Graceful drain end to end: once `begin_drain` fires, `/readyz`
+/// flips to 503 while `/healthz` stays 200, requests enqueued after the
+/// flip are refused with `shutting_down`, the in-flight request is
+/// evicted when the drain budget expires, and the server exits.
+#[test]
+fn chaos_drain_flips_readiness_and_evicts_in_flight() {
+    let b = backend().with_costs(Duration::from_millis(2), Duration::ZERO);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        transport: Transport::Auto,
+        drain_timeout_ms: 200,
+        ..ServeOptions::default()
+    };
+    let lifecycle = opts.lifecycle.clone();
+
+    std::thread::scope(|s| {
+        // in-flight long decode: admitted before the drain, evicted when
+        // the drain budget expires
+        let in_flight = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            cl.request(&ClientRequest::tokens(vec![3]).max_tokens(100_000)).expect("transport")
+        });
+        // health probe: connects while live, sends only after the flip
+        let probe_lc = lifecycle.clone();
+        let probe = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+            while !probe_lc.draining() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            stream
+                .write_all(
+                    b"GET /healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n\
+                      GET /readyz HTTP/1.1\r\ncontent-length: 0\r\n\r\n",
+                )
+                .expect("write");
+            let _ = stream.shutdown(std::net::Shutdown::Write);
+            read_http_statuses(stream)
+        });
+        // late client: connects while live, submits only after the flip
+        let late_lc = lifecycle.clone();
+        let late = s.spawn(move || {
+            let mut cl = tcp_client(addr);
+            while !late_lc.draining() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            cl.request(&ClientRequest::tokens(vec![4]).max_tokens(2)).expect("transport")
+        });
+        let trigger_lc = lifecycle.clone();
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            trigger_lc.begin_drain();
+        });
+
+        let stats = serve_on(&b, listener, Some(3), opts).unwrap();
+
+        assert_eq!(
+            probe.join().unwrap(),
+            [200, 503],
+            "liveness must stay 200 while readiness flips to 503"
+        );
+        let late_err = late.join().unwrap().unwrap_err();
+        assert_eq!(late_err.code, "shutting_down", "post-drain request not refused");
+        let in_flight_err = in_flight.join().unwrap().unwrap_err();
+        assert_eq!(in_flight_err.code, "shutting_down", "in-flight decode not evicted");
+        assert!(stats.drain_evictions >= 2, "drain accounting: {stats:?}");
+        assert_eq!(stats.completed, 0);
+    });
+}
+
+fn read_json_line(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("read line");
+    Json::parse(&line).expect("reply is JSON")
+}
+
+/// Torn client writes: the request bytes arrive in deterministic 1-7
+/// byte chunks with mid-frame stalls, under the incremental decoder —
+/// the decode must be byte-for-byte identical to a clean single write.
+#[test]
+fn chaos_torn_writes_decode_exactly() {
+    let b = backend();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions { codec: CodecKind::Incremental, ..ServeOptions::default() };
+    let line = "{\"tokens\":[3,4],\"max_tokens\":5}\n";
+
+    std::thread::scope(|s| {
+        let cl = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+            let _ = stream.set_nodelay(true);
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for (chunk, stall) in torn_chunks(line.as_bytes(), 5) {
+                stream.write_all(&chunk).expect("write");
+                stream.flush().expect("flush");
+                std::thread::sleep(stall);
+            }
+            let reply = read_json_line(&mut reader);
+            drop(reader);
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            reply
+                .req("tokens")
+                .expect("tokens field")
+                .as_arr()
+                .expect("tokens array")
+                .iter()
+                .map(|t| t.as_f64().expect("token id") as i32)
+                .collect::<Vec<i32>>()
+        });
+        let stats = serve_on(&b, listener, Some(1), opts).unwrap();
+        let got = cl.join().unwrap();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(
+            got,
+            generate_greedy(&b, &[3, 4], 5).unwrap(),
+            "torn writes changed the decode"
+        );
+    });
+}
+
+/// Deep soak (run with `--ignored`): six concurrent clients, thirty
+/// requests each, against a 3% probabilistic error rate plus scripted
+/// panics — every single request must resolve with a structured
+/// terminal, the accounting must balance exactly, and the server must
+/// drain cleanly at the end.
+#[test]
+#[ignore = "deep soak; run on demand with --ignored"]
+fn chaos_soak_err_rate_all_requests_resolve() {
+    let fault = FaultBackend::new(
+        backend().with_costs(Duration::from_micros(200), Duration::from_micros(5)),
+        plan("seed=31,err_rate=0.03,panic=50+333,latency=17:3+171:5"),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    const N: usize = 6;
+    const REQS: usize = 30;
+    let opts = ServeOptions { max_batch: 4, ..ServeOptions::default() };
+
+    let (stats, replies) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut cl = tcp_client(addr);
+                    (0..REQS)
+                        .map(|r| {
+                            let prompt = vec![((c * 17 + r * 3) % VOCAB) as i32, 1];
+                            let req = ClientRequest::tokens(prompt)
+                                .max_tokens(3 + (c + r) % 5);
+                            cl.request(&req).expect("transport")
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let stats = serve_on(&fault, listener, Some(N), opts).unwrap();
+        let replies: Vec<_> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        (stats, replies)
+    });
+
+    assert_eq!(replies.len(), N * REQS, "every request must resolve");
+    for reply in &replies {
+        assert_structured(reply);
+    }
+    let failed = replies.iter().filter(|r| r.is_err()).count() as u64;
+    assert_eq!(stats.errors, failed);
+    assert_eq!(stats.completed, (N * REQS) as u64 - failed);
+    assert_eq!(stats.cancelled, 0, "ping-pong clients never cancel");
+    assert!(stats.errors > 0, "3% error rate over ~700 ticks must fire");
+    assert!(stats.completed > 0, "chaos must not starve all requests");
+    assert!(stats.backend_panics >= 2, "scripted panics must both fire and be contained");
+}
